@@ -1,0 +1,80 @@
+//! Quickstart: build a mixed task group, predict its execution with the
+//! temporal model, find a near-optimal order with the Batch Reordering
+//! heuristic, and verify the win on the virtual device.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use oclcc::config::profile_by_name;
+use oclcc::device::{SpinExecutor, VirtualDevice};
+use oclcc::model::timeline::Timeline;
+use oclcc::model::{simulate, EngineState, SimOptions};
+use oclcc::sched::bruteforce::OrderStats;
+use oclcc::sched::heuristic::batch_reorder;
+use oclcc::task::synthetic::synthetic_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a device profile (paper Table 1) and a benchmark (Table 3).
+    let profile = profile_by_name("amd_r9")?;
+    let group = synthetic_benchmark("BK25", &profile, 1.0)?;
+    println!(
+        "BK25 on {}: tasks {:?}",
+        profile.name,
+        group.tasks.iter().map(|t| t.name.as_str()).collect::<Vec<_>>()
+    );
+
+    // 2. Predict the submission order the workers happened to use...
+    let fifo = simulate(
+        &group.tasks,
+        &profile,
+        EngineState::default(),
+        SimOptions { record_timeline: true },
+    );
+    println!("\nFIFO order (predicted):");
+    print!("{}", Timeline(&fifo.timeline).gantt(64));
+
+    // 3. ...then let the heuristic pick a near-optimal order.
+    let order = batch_reorder(&group.tasks, &profile, EngineState::default());
+    let reordered: Vec<TaskSpec> =
+        order.iter().map(|&i| group.tasks[i].clone()).collect();
+    let heur = simulate(
+        &reordered,
+        &profile,
+        EngineState::default(),
+        SimOptions { record_timeline: true },
+    );
+    println!(
+        "\nHeuristic order {:?} (predicted):",
+        order.iter().map(|&i| group.tasks[i].name.as_str()).collect::<Vec<_>>()
+    );
+    print!("{}", Timeline(&heur.timeline).gantt(64));
+
+    // 4. Compare against the full permutation distribution (4! = 24).
+    let mut rng = Pcg64::seeded(1);
+    let st = OrderStats::exhaustive(&group.tasks, &profile, 24, &mut rng);
+    println!(
+        "\npermutations: best {:.3} ms | mean {:.3} | worst {:.3}",
+        st.best * 1e3,
+        st.mean * 1e3,
+        st.worst * 1e3
+    );
+    println!(
+        "heuristic:    {:.3} ms -> {:.3}x vs worst ({}% of best improvement)",
+        heur.makespan * 1e3,
+        st.worst / heur.makespan,
+        (((st.worst - heur.makespan) / (st.worst - st.best)) * 100.0) as i32
+    );
+
+    // 5. Verify on the virtual device (real threads, paced transfers).
+    let device = VirtualDevice::new(profile.clone(), Arc::new(SpinExecutor));
+    let run = device.run_group(&reordered);
+    println!(
+        "measured on virtual device: {:.3} ms (prediction error {:.2}%)",
+        run.makespan * 1e3,
+        (run.makespan - heur.makespan).abs() / run.makespan * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+"""AOT pipeline: lower every L2 variant to HLO *text* + a JSON manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and DESIGN.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+`make artifacts` is a no-op when artifacts are newer than their inputs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant) -> str:
+    lowered = jax.jit(variant.fn).lower(*variant.abstract_inputs())
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(variant, hlo_file: str) -> dict:
+    out_shapes = [
+        list(o.shape)
+        for o in jax.eval_shape(variant.fn, *variant.abstract_inputs())
+    ]
+    return {
+        "name": variant.name,
+        "kernel": variant.kernel,
+        "file": hlo_file,
+        "dominance": variant.dominance,
+        "inputs": [{"shape": list(s), "dtype": "f32"} for s in variant.in_shapes],
+        "outputs": [{"shape": s, "dtype": "f32"} for s in out_shapes],
+        "htd_bytes": variant.htd_bytes,
+        "dth_bytes": sum(4 * int(jax_numel(s)) for s in out_shapes),
+    }
+
+
+def jax_numel(shape):
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated variant names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(model.VARIANTS) if args.only is None else args.only.split(",")
+    manifest = {}
+    for name in names:
+        variant = model.VARIANTS[name]
+        hlo_file = f"{name}.hlo.txt"
+        text = lower_variant(variant)
+        path = os.path.join(args.out, hlo_file)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = manifest_entry(variant, hlo_file)
+        print(f"  aot: {name:>10} -> {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  aot: wrote manifest with {len(manifest)} variants")
+
+
+if __name__ == "__main__":
+    main()

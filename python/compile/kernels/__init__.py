@@ -1,0 +1,30 @@
+"""L1 — Pallas kernels for the eight real-benchmark tasks (paper Table 4)
+plus the synthetic kernel (paper Listing 1).
+
+Every kernel is written with `pl.pallas_call(..., interpret=True)`: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness/lowering path (see DESIGN.md §Hardware-Adaptation). Pure-jnp
+oracles live in `ref.py`; pytest compares them element-wise.
+"""
+
+from .matmul import matmul
+from .black_scholes import black_scholes
+from .fwt import fwt
+from .floyd_warshall import floyd_warshall
+from .conv_sep import conv_sep
+from .vecadd import vecadd
+from .transpose import transpose
+from .dct import dct8x8
+from .synthetic import synthetic
+
+__all__ = [
+    "matmul",
+    "black_scholes",
+    "fwt",
+    "floyd_warshall",
+    "conv_sep",
+    "vecadd",
+    "transpose",
+    "dct8x8",
+    "synthetic",
+]

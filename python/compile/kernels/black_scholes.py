@@ -1,0 +1,78 @@
+"""BS — Black-Scholes European option pricing (paper Table 4, dominant-kernel).
+
+Element-wise kernel: each grid step prices a 1-D chunk of options held in
+VMEM (3 input vectors + 2 output vectors per chunk; 8K-option chunks are
+~160 KB of VMEM). The transcendental-heavy body maps onto the VPU; there is
+no MXU work, matching the paper's classification of BS as compute-dominant
+through sheer arithmetic intensity, not matmul shape.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_RISKFREE = 0.02
+_VOLATILITY = 0.30
+_INV_SQRT2 = 0.7071067811865476
+
+
+def _erf(x):
+    # Abramowitz & Stegun 7.1.26 rational approximation (|err| <= 1.5e-7).
+    # Written out in basic ops: the xla_extension 0.5.1 HLO text parser the
+    # Rust runtime links predates the dedicated `erf` opcode, so the kernel
+    # must lower to add/mul/exp only.
+    a = (0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429)
+    p = 0.3275911
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = t * (a[0] + t * (a[1] + t * (a[2] + t * (a[3] + t * a[4]))))
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _cnd(d):
+    # Standard normal CDF via the polynomial erf above.
+    return 0.5 * (1.0 + _erf(d * _INV_SQRT2))
+
+
+def _bs_kernel(price_ref, strike_ref, years_ref, call_ref, put_ref):
+    s = price_ref[...]
+    x = strike_ref[...]
+    t = years_ref[...]
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / x) + (_RISKFREE + 0.5 * _VOLATILITY**2) * t) / (
+        _VOLATILITY * sqrt_t
+    )
+    d2 = d1 - _VOLATILITY * sqrt_t
+    expr = jnp.exp(-_RISKFREE * t)
+    call = s * _cnd(d1) - x * expr * _cnd(d2)
+    put = x * expr * _cnd(-d2) - s * _cnd(-d1)
+    call_ref[...] = call
+    put_ref[...] = put
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def black_scholes(price, strike, years, *, chunk: int = 8192):
+    """Price calls and puts for f32[N] option batches.
+
+    Returns (call: f32[N], put: f32[N]). N must be divisible by ``chunk``
+    (or smaller than it).
+    """
+    (n,) = price.shape
+    chunk = min(chunk, n)
+    assert n % chunk == 0, (n, chunk)
+    grid = (n // chunk,)
+    spec = pl.BlockSpec((chunk,), lambda i: (i,))
+    return pl.pallas_call(
+        _bs_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), price.dtype),
+            jax.ShapeDtypeStruct((n,), price.dtype),
+        ],
+        interpret=True,
+    )(price, strike, years)

@@ -1,0 +1,60 @@
+"""CONV — separable 2-D convolution (paper Table 4, dominant-kernel).
+
+Row pass then column pass with a static tap count, as in the OpenCL SDK
+SeparableConvolution sample. Each grid step convolves one (bm + 2R, W + 2R)
+halo row-band: the padded image stays in (interpreter-)VMEM and the band is
+dynamically sliced per step, because overlapping halo reads cannot be
+expressed with plain Blocked BlockSpecs. The taps are unrolled at trace time
+so the body is a chain of shifted multiply-adds the VPU vectorizes cleanly.
+VMEM per band: (bm + 2R) * (W + 2R) * 4 B — bm=64, R<=8, W<=1024 -> <=330 KB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv1d_valid(x, taps, axis):
+    """'valid' 1-D correlation along ``axis`` with statically unrolled taps."""
+    r = len(taps)
+    n = x.shape[axis] - r + 1
+    acc = None
+    for i, t in enumerate(taps):
+        sl = jax.lax.slice_in_dim(x, i, i + n, axis=axis)
+        acc = sl * t if acc is None else acc + sl * t
+    return acc
+
+
+def _conv_kernel(x_ref, o_ref, *, taps, bm):
+    i = pl.program_id(0)
+    r = len(taps) // 2
+    w2 = x_ref.shape[1]
+    band = jax.lax.dynamic_slice(x_ref[...], (i * bm, 0), (bm + 2 * r, w2))
+    y = _conv1d_valid(band, taps, axis=1)  # row pass
+    o_ref[...] = _conv1d_valid(y, taps, axis=0)  # column pass
+
+
+@functools.partial(jax.jit, static_argnames=("taps", "bm"))
+def conv_sep(img, *, taps=(0.05, 0.1, 0.2, 0.3, 0.2, 0.1, 0.05), bm: int = 64):
+    """Separable 2-D convolution of f32[H, W] with a symmetric tap vector.
+
+    Uses zero ('same') padding; H must be divisible by ``bm``.
+    """
+    taps = tuple(float(t) for t in taps)
+    r = len(taps) // 2
+    h, w = img.shape
+    bm = min(bm, h)
+    assert h % bm == 0, (h, bm)
+    padded = jnp.pad(img, ((r, r), (r, r)))
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, taps=taps, bm=bm),
+        grid=(h // bm,),
+        in_specs=[
+            pl.BlockSpec(padded.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), img.dtype),
+        interpret=True,
+    )(padded)

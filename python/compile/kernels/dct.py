@@ -1,0 +1,57 @@
+"""DCT — 8x8 blocked discrete cosine transform (paper Table 4, DT/DK).
+
+JPEG-style: the image is partitioned into 8x8 blocks and each block B is
+replaced by D @ B @ D^T with the type-II DCT basis D. On TPU this is two
+batched 8x8 matmuls per block — small MXU work per byte moved, which is why
+the paper observes DCT flipping between dominant-transfer (R9/K20c) and
+dominant-kernel (Xeon Phi). Each grid step transforms a (bm, W) row-band of
+blocks in VMEM (bm=64, W<=1024 -> <=256 KB).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dct_basis():
+    d = [
+        [
+            math.sqrt((1.0 if k == 0 else 2.0) / 8.0)
+            * math.cos((2 * n + 1) * k * math.pi / 16.0)
+            for n in range(8)
+        ]
+        for k in range(8)
+    ]
+    return jnp.asarray(d, dtype=jnp.float32)
+
+
+def _dct_kernel(x_ref, d_ref, o_ref):
+    x = x_ref[...]
+    bm, w = x.shape
+    d = d_ref[...]
+    # (bm//8, 8, w//8, 8) -> batched D @ B @ D^T over the two 8-axes.
+    blocks = x.reshape(bm // 8, 8, w // 8, 8)
+    y = jnp.einsum("ki,aibj,lj->akbl", d, blocks, d)
+    o_ref[...] = y.reshape(bm, w)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def dct8x8(img, *, bm: int = 64):
+    """8x8 blocked type-II DCT of f32[H, W]; H, W divisible by 8, H % bm == 0."""
+    h, w = img.shape
+    bm = min(bm, h)
+    assert h % 8 == 0 and w % 8 == 0 and h % bm == 0 and bm % 8 == 0
+    return pl.pallas_call(
+        _dct_kernel,
+        grid=(h // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),  # basis, same every step
+        ],
+        out_specs=pl.BlockSpec((bm, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), img.dtype),
+        interpret=True,
+    )(img, _dct_basis())

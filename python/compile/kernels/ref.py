@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every L1 kernel — the CORE correctness signal.
+
+Each function mirrors the public signature of its Pallas counterpart but is
+written with stock jax.numpy only (no pallas), so pytest can compare the two
+element-wise under `assert_allclose`.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_RISKFREE = 0.02
+_VOLATILITY = 0.30
+
+
+def matmul(x, y):
+    return x @ y
+
+
+def black_scholes(price, strike, years):
+    sqrt_t = jnp.sqrt(years)
+    d1 = (
+        jnp.log(price / strike)
+        + (_RISKFREE + 0.5 * _VOLATILITY**2) * years
+    ) / (_VOLATILITY * sqrt_t)
+    d2 = d1 - _VOLATILITY * sqrt_t
+    cnd = lambda d: 0.5 * (1.0 + jax.lax.erf(d / jnp.sqrt(2.0)))
+    expr = jnp.exp(-_RISKFREE * years)
+    call = price * cnd(d1) - strike * expr * cnd(d2)
+    put = strike * expr * cnd(-d2) - price * cnd(-d1)
+    return call, put
+
+
+def fwt(x):
+    """O(N^2) Walsh-Hadamard via the explicit Hadamard matrix (natural order)."""
+    n = x.shape[0]
+    k = int(math.log2(n))
+    h = jnp.asarray([[1.0]], dtype=x.dtype)
+    for _ in range(k):
+        h = jnp.block([[h, h], [h, -h]])
+    return h @ x
+
+
+def floyd_warshall(dist):
+    n = dist.shape[0]
+    d = dist
+    for k in range(n):
+        d = jnp.minimum(d, d[:, k : k + 1] + d[k : k + 1, :])
+    return d
+
+
+def conv_sep(img, taps=(0.05, 0.1, 0.2, 0.3, 0.2, 0.1, 0.05)):
+    taps = jnp.asarray(taps, dtype=img.dtype)
+    r = taps.shape[0] // 2
+    padded = jnp.pad(img, ((r, r), (r, r)))
+    # Row pass ('same' with zero padding): (h + 2r, w + 2r) -> (h + 2r, w).
+    rows = sum(
+        padded[:, i : i + img.shape[1]] * taps[i] for i in range(taps.shape[0])
+    )
+    # rows still carries the row halo; column pass consumes it.
+    cols = sum(
+        rows[i : i + img.shape[0], :] * taps[i] for i in range(taps.shape[0])
+    )
+    return cols
+
+
+def vecadd(a, b):
+    return a + b
+
+
+def transpose(x):
+    return x.T
+
+
+def _dct_basis(dtype=jnp.float32):
+    d = [
+        [
+            math.sqrt((1.0 if k == 0 else 2.0) / 8.0)
+            * math.cos((2 * n + 1) * k * math.pi / 16.0)
+            for n in range(8)
+        ]
+        for k in range(8)
+    ]
+    return jnp.asarray(d, dtype=dtype)
+
+
+def dct8x8(img):
+    h, w = img.shape
+    d = _dct_basis(img.dtype)
+    blocks = img.reshape(h // 8, 8, w // 8, 8)
+    return jnp.einsum("ki,aibj,lj->akbl", d, blocks, d).reshape(h, w)
+
+
+def synthetic(x, num_iterations=64, factor=1.0000001):
+    # The oracle may use the closed form; only the Pallas kernel must burn
+    # the iterations for real.
+    return x * jnp.float32(factor) ** num_iterations

@@ -1,0 +1,41 @@
+"""Synthetic kernel (paper Listing 1): ``input[idx] *= factor`` repeated
+``num_iterations`` times.
+
+The paper uses this to dial kernel duration independently of transfer size:
+the array size fixes HtD/DtH time, ``num_iterations`` fixes K time. The loop
+must actually execute (a closed form ``x * factor**iters`` would be constant
+time), so it is a `fori_loop` carried in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _syn_kernel(x_ref, o_ref, *, num_iterations, factor):
+    def body(_, v):
+        return v * factor
+
+    o_ref[...] = jax.lax.fori_loop(0, num_iterations, body, x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("num_iterations", "factor", "chunk"))
+def synthetic(x, *, num_iterations: int = 64, factor: float = 1.0000001,
+              chunk: int = 65536):
+    """Iteratively scale f32[N] in place ``num_iterations`` times."""
+    (n,) = x.shape
+    chunk = min(chunk, n)
+    assert n % chunk == 0, (n, chunk)
+    spec = pl.BlockSpec((chunk,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(
+            _syn_kernel, num_iterations=num_iterations, factor=factor
+        ),
+        grid=(n // chunk,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,33 @@
+"""MT — tiled matrix transposition (paper Table 4, dominant-transfer).
+
+The OpenCL SDK version stages 16x16 tiles through shared memory to coalesce
+both the load and the store; the TPU analogue stages (bm, bn) tiles through
+VMEM with swapped output indexing, expressed entirely in the BlockSpec
+index maps. VMEM per step: 2 * bm * bn * 4 B (128x128 tiles -> 128 KB).
+"""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _mt_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def transpose(x, *, bm: int = 128, bn: int = 128):
+    """Transpose f32[M, N] -> f32[N, M]; M % bm == 0, N % bn == 0."""
+    m, n = x.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    return pl.pallas_call(
+        _mt_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x)

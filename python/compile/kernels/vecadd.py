@@ -1,0 +1,34 @@
+"""VA — vector addition (paper Table 4, dominant-transfer).
+
+The canonical bandwidth-bound task: two HtD streams in, one DtH stream out,
+one add per element. Chunked so each grid step streams 3 * chunk * 4 B
+through VMEM; compute is negligible, which is exactly why the paper
+classifies VA as dominant-transfer on every device.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _va_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def vecadd(a, b, *, chunk: int = 65536):
+    """Element-wise f32[N] + f32[N]; N divisible by ``chunk`` (or < chunk)."""
+    (n,) = a.shape
+    chunk = min(chunk, n)
+    assert n % chunk == 0, (n, chunk)
+    spec = pl.BlockSpec((chunk,), lambda i: (i,))
+    return pl.pallas_call(
+        _va_kernel,
+        grid=(n // chunk,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,157 @@
+"""L2 — task-level JAX compute graphs (paper Table 4 + Listing 1).
+
+Each *task* in the paper is a HtD -> K -> DtH chain; this module defines the
+K stage of every task as a jitted JAX function over explicit array inputs,
+calling the L1 Pallas kernels. `VARIANTS` enumerates the (kernel x data-size)
+grid the paper uses ("each task has been executed using several data sizes",
+Table 5); `aot.py` lowers every variant to an HLO-text artifact the Rust
+runtime executes via PJRT.
+
+All dtypes are f32 so the Rust side needs a single literal builder.
+"""
+
+import dataclasses
+import functools
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled (kernel, size) point.
+
+    Attributes:
+      name: artifact stem, e.g. ``mm_256``.
+      kernel: kernel family name (matches `kernels.__all__`).
+      fn: the K-stage function; positional f32 array args only.
+      ref_fn: pure-jnp oracle with the same signature.
+      in_shapes: input shapes (all f32).
+      n_outputs: number of outputs (lowered with return_tuple=True).
+      dominance: 'DK' or 'DT' per paper Table 4 (device-independent label;
+        DCT/FWT flip per device — we tag their *majority* class and the Rust
+        task catalog re-derives dominance from measured times anyway).
+    """
+
+    name: str
+    kernel: str
+    fn: Callable
+    ref_fn: Callable
+    in_shapes: Tuple[Tuple[int, ...], ...]
+    n_outputs: int
+    dominance: str
+
+    @property
+    def htd_bytes(self) -> int:
+        return sum(4 * _numel(s) for s in self.in_shapes)
+
+    def example_inputs(self, seed: int = 0) -> Sequence[jax.Array]:
+        """Deterministic, numerically safe inputs (positive, O(1) magnitude)."""
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(self.in_shapes))
+        return [
+            jax.random.uniform(k, s, jnp.float32, 0.5, 1.5)
+            for k, s in zip(keys, self.in_shapes)
+        ]
+
+    def abstract_inputs(self):
+        return [jax.ShapeDtypeStruct(s, jnp.float32) for s in self.in_shapes]
+
+
+def _numel(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _tuple_fn(fn):
+    """Wrap so every variant returns a tuple (uniform Rust-side unpacking)."""
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def _bs(price, strike, years):
+    return kernels.black_scholes(price, strike, years)
+
+
+def _syn(iters):
+    def fn(x):
+        return kernels.synthetic(x, num_iterations=iters)
+
+    def rf(x):
+        return ref.synthetic(x, num_iterations=iters)
+
+    return fn, rf
+
+
+def _variants():
+    v = []
+
+    def add(name, kernel, fn, ref_fn, in_shapes, n_outputs, dom):
+        v.append(
+            Variant(
+                name=name,
+                kernel=kernel,
+                fn=_tuple_fn(fn),
+                ref_fn=_tuple_fn(ref_fn),
+                in_shapes=tuple(tuple(s) for s in in_shapes),
+                n_outputs=n_outputs,
+                dominance=dom,
+            )
+        )
+
+    # MM — dominant kernel.
+    for n in (256, 384, 512):
+        add(f"mm_{n}", "matmul", kernels.matmul, ref.matmul,
+            [(n, n), (n, n)], 1, "DK")
+    # BS — dominant kernel (arithmetic intensity).
+    for n, tag in ((1 << 16, "64k"), (1 << 18, "256k")):
+        add(f"bs_{tag}", "black_scholes", _bs, ref.black_scholes,
+            [(n,), (n,), (n,)], 2, "DK")
+    # FWT — DT/DK per device.
+    for n, tag in ((1 << 14, "16k"), (1 << 16, "64k")):
+        add(f"fwt_{tag}", "fwt", kernels.fwt, ref.fwt, [(n,)], 1, "DT")
+    # FLW — dominant kernel (O(n^3) on O(n^2) bytes).
+    for n in (128, 192):
+        add(f"flw_{n}", "floyd_warshall", kernels.floyd_warshall,
+            ref.floyd_warshall, [(n, n)], 1, "DK")
+    # CONV — dominant kernel.
+    for n in (512, 1024):
+        add(f"conv_{n}", "conv_sep", kernels.conv_sep, ref.conv_sep,
+            [(n, n)], 1, "DK")
+    # VA — dominant transfer.
+    for n, tag in ((1 << 18, "256k"), (1 << 20, "1m")):
+        add(f"va_{tag}", "vecadd", kernels.vecadd, ref.vecadd,
+            [(n,), (n,)], 1, "DT")
+    # MT — dominant transfer.
+    for n in (512, 1024):
+        add(f"mt_{n}", "transpose", kernels.transpose, ref.transpose,
+            [(n, n)], 1, "DT")
+    # DCT — DT/DK per device.
+    for n in (256, 512):
+        add(f"dct_{n}", "dct8x8", kernels.dct8x8, ref.dct8x8, [(n, n)], 1, "DT")
+    # Synthetic (Listing 1): array size fixes transfers, iters fixes K time.
+    for iters in (16, 128, 1024):
+        fn, rf = _syn(iters)
+        add(f"syn_i{iters}", "synthetic", fn, rf, [(1 << 16,)], 1,
+            "DT" if iters <= 16 else "DK")
+    return {x.name: x for x in v}
+
+
+VARIANTS = _variants()
+
+
+def small_variants():
+    """Cheap-to-execute subset used by interpret-mode pytest sweeps."""
+    names = ["mm_256", "bs_64k", "fwt_16k", "flw_128", "conv_512",
+             "va_256k", "mt_512", "dct_256", "syn_i16"]
+    return {k: VARIANTS[k] for k in names}

@@ -1,0 +1,137 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Every L1 kernel is compared element-wise against `kernels.ref` on the small
+variant grid, plus targeted shape/edge cases per kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels, model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, lo=0.5, hi=1.5):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+@pytest.mark.parametrize("name", sorted(model.small_variants()))
+def test_variant_matches_ref(name):
+    v = model.VARIANTS[name]
+    inputs = v.example_inputs(seed=42)
+    got = v.fn(*inputs)
+    want = v.ref_fn(*inputs)
+    assert len(got) == len(want) == v.n_outputs
+    # f32: butterfly vs dense-matmul orderings differ by O(log n) roundings.
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=6e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn", [
+    (128, 128, 128, 128, 128),   # single block
+    (256, 128, 256, 128, 128),   # 2x2 grid
+    (256, 64, 128, 64, 32),      # non-square blocks
+    (64, 256, 64, 64, 64),       # deep K
+])
+def test_matmul_shapes(m, k, n, bm, bn):
+    kx, ky = jax.random.split(jax.random.PRNGKey(m * n))
+    x = _rand(kx, (m, k), -1.0, 1.0)
+    y = _rand(ky, (k, n), -1.0, 1.0)
+    got = kernels.matmul(x, y, bm=bm, bn=bn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ y),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 1024, 4096])
+def test_fwt_sizes(n):
+    x = _rand(jax.random.PRNGKey(n), (n,), -1.0, 1.0)
+    got = kernels.fwt(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.fwt(x)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fwt_involution():
+    # H H x = n x for the unnormalized transform.
+    n = 256
+    x = _rand(jax.random.PRNGKey(0), (n,), -1.0, 1.0)
+    twice = kernels.fwt(kernels.fwt(x))
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(x) * n,
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_floyd_warshall_triangle_inequality():
+    n = 32
+    key = jax.random.PRNGKey(7)
+    d0 = jax.random.uniform(key, (n, n), jnp.float32, 1.0, 10.0)
+    d0 = d0.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    d = np.asarray(kernels.floyd_warshall(d0))
+    # Closure: d[i,j] <= d[i,k] + d[k,j] for all k.
+    for k in range(n):
+        assert (d <= d[:, k:k+1] + d[k:k+1, :] + 1e-4).all()
+    np.testing.assert_allclose(d, np.asarray(ref.floyd_warshall(d0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_transpose_roundtrip():
+    x = _rand(jax.random.PRNGKey(1), (256, 128), -1.0, 1.0)
+    tt = kernels.transpose(kernels.transpose(x, bm=128, bn=128), bm=128, bn=128)
+    np.testing.assert_array_equal(np.asarray(tt), np.asarray(x))
+
+
+def test_dct_energy_preservation():
+    # Orthonormal basis: Frobenius norm is preserved.
+    x = _rand(jax.random.PRNGKey(3), (64, 64), -1.0, 1.0)
+    y = kernels.dct8x8(x)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-4)
+
+
+def test_dct_constant_block_is_dc_only():
+    x = jnp.ones((8, 8), jnp.float32)
+    y = np.asarray(kernels.dct8x8(x))
+    assert abs(y[0, 0] - 8.0) < 1e-4  # DC = 8 * mean for orthonormal type-II
+    mask = np.ones_like(y, bool)
+    mask[0, 0] = False
+    assert np.abs(y[mask]).max() < 1e-4
+
+
+def test_synthetic_iterations_applied():
+    x = jnp.full((1024,), 2.0, jnp.float32)
+    got = np.asarray(kernels.synthetic(x, num_iterations=10, factor=1.01,
+                                       chunk=256))
+    np.testing.assert_allclose(got, 2.0 * 1.01**10, rtol=1e-5)
+
+
+def test_black_scholes_put_call_parity():
+    n = 4096
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    s = _rand(k1, (n,), 20.0, 100.0)
+    x = _rand(k2, (n,), 20.0, 100.0)
+    t = _rand(k3, (n,), 0.2, 5.0)
+    call, put = kernels.black_scholes(s, x, t, chunk=1024)
+    # C - P = S - X e^{-rT}
+    lhs = np.asarray(call - put)
+    rhs = np.asarray(s - x * jnp.exp(-0.02 * t))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-2)
+
+
+def test_conv_sep_impulse_response():
+    taps = (0.25, 0.5, 0.25)
+    img = jnp.zeros((64, 64), jnp.float32).at[32, 32].set(1.0)
+    out = np.asarray(kernels.conv_sep(img, taps=taps, bm=32))
+    want = np.outer([0.25, 0.5, 0.25], [0.25, 0.5, 0.25])
+    np.testing.assert_allclose(out[31:34, 31:34], want, atol=1e-6)
+    assert abs(out.sum() - 1.0) < 1e-5
+
+
+def test_vecadd_chunk_edge():
+    # N smaller than the chunk exercises the clamping path.
+    a = _rand(jax.random.PRNGKey(4), (100,), -1.0, 1.0)
+    b = _rand(jax.random.PRNGKey(5), (100,), -1.0, 1.0)
+    np.testing.assert_allclose(np.asarray(kernels.vecadd(a, b)),
+                               np.asarray(a + b), rtol=1e-6)

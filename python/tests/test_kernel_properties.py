@@ -1,0 +1,81 @@
+"""Hypothesis property sweeps over kernel shapes/values vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(seed, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32,
+                              lo, hi)
+
+
+@settings(**_SETTINGS)
+@given(n=st.sampled_from([64, 128, 256, 512]),
+       chunk=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 2**16))
+def test_vecadd_any_chunking(n, chunk, seed):
+    a = _arr(seed, (n,))
+    b = _arr(seed + 1, (n,))
+    got = kernels.vecadd(a, b, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a + b), rtol=1e-6)
+
+
+@settings(**_SETTINGS)
+@given(logn=st.integers(1, 10), seed=st.integers(0, 2**16))
+def test_fwt_linearity_and_ref(logn, seed):
+    n = 1 << logn
+    x = _arr(seed, (n,))
+    y = _arr(seed + 1, (n,))
+    fx = np.asarray(kernels.fwt(x))
+    fy = np.asarray(kernels.fwt(y))
+    fxy = np.asarray(kernels.fwt(x + y))
+    np.testing.assert_allclose(fxy, fx + fy, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(fx, np.asarray(ref.fwt(x)), rtol=1e-3,
+                               atol=1e-3)
+
+
+@settings(**_SETTINGS)
+@given(m=st.sampled_from([32, 64, 128]), n=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 2**16))
+def test_transpose_any_shape(m, n, seed):
+    x = _arr(seed, (m, n))
+    got = kernels.transpose(x, bm=32, bn=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x).T)
+
+
+@settings(**_SETTINGS)
+@given(m=st.sampled_from([32, 64]), k=st.sampled_from([32, 64, 96]),
+       n=st.sampled_from([32, 64]), seed=st.integers(0, 2**16))
+def test_matmul_any_shape(m, k, n, seed):
+    x = _arr(seed, (m, k))
+    y = _arr(seed + 1, (k, n))
+    got = kernels.matmul(x, y, bm=32, bn=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ y),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(**_SETTINGS)
+@given(iters=st.integers(0, 64), seed=st.integers(0, 2**16))
+def test_synthetic_matches_closed_form(iters, seed):
+    x = _arr(seed, (512,), 0.5, 1.5)
+    got = kernels.synthetic(x, num_iterations=iters, factor=1.001, chunk=512)
+    want = ref.synthetic(x, num_iterations=iters, factor=1.001)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+@settings(**_SETTINGS)
+@given(n=st.sampled_from([8, 16, 24, 32]), seed=st.integers(0, 2**16))
+def test_floyd_warshall_idempotent(n, seed):
+    d0 = _arr(seed, (n, n), 1.0, 10.0)
+    d0 = d0.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    once = kernels.floyd_warshall(d0)
+    twice = kernels.floyd_warshall(once)
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once),
+                               rtol=1e-5, atol=1e-5)

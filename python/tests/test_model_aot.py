@@ -1,0 +1,55 @@
+"""L2 model registry + AOT lowering sanity (shapes, manifest, HLO text)."""
+
+import json
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+def test_variant_registry_complete():
+    # Every kernel family from paper Table 4 + the synthetic kernel.
+    families = {v.kernel for v in model.VARIANTS.values()}
+    assert families == {
+        "matmul", "black_scholes", "fwt", "floyd_warshall", "conv_sep",
+        "vecadd", "transpose", "dct8x8", "synthetic",
+    }
+    # Multiple sizes per family (paper: "several data sizes").
+    for fam in families:
+        assert sum(v.kernel == fam for v in model.VARIANTS.values()) >= 2, fam
+
+
+def test_variant_shapes_consistent():
+    for v in model.VARIANTS.values():
+        outs = jax.eval_shape(v.fn, *v.abstract_inputs())
+        assert len(outs) == v.n_outputs, v.name
+        assert v.htd_bytes == sum(
+            4 * aot.jax_numel(s) for s in v.in_shapes), v.name
+
+
+def test_dominance_labels():
+    assert model.VARIANTS["mm_256"].dominance == "DK"
+    assert model.VARIANTS["va_1m"].dominance == "DT"
+    assert model.VARIANTS["syn_i16"].dominance == "DT"
+    assert model.VARIANTS["syn_i1024"].dominance == "DK"
+
+
+@pytest.mark.parametrize("name", ["mm_256", "va_256k", "syn_i16"])
+def test_lowering_produces_hlo_text(name):
+    v = model.VARIANTS[name]
+    text = aot.lower_variant(v)
+    assert text.startswith("HloModule"), text[:80]
+    # return_tuple=True: root must be a tuple for uniform Rust unpacking.
+    assert "tuple(" in text or ") tuple" in text, text[:400]
+
+
+def test_manifest_entry_roundtrips(tmp_path):
+    v = model.VARIANTS["bs_64k"]
+    entry = aot.manifest_entry(v, "bs_64k.hlo.txt")
+    s = json.dumps(entry)
+    back = json.loads(s)
+    assert back["name"] == "bs_64k"
+    assert back["htd_bytes"] == 3 * 4 * (1 << 16)
+    assert back["dth_bytes"] == 2 * 4 * (1 << 16)
+    assert len(back["inputs"]) == 3 and len(back["outputs"]) == 2

@@ -1,0 +1,38 @@
+//! `cargo bench` — end-to-end coordinator throughput on the virtual
+//! device (spin backend, compressed time scale): NoReorder vs Heuristic.
+
+use std::sync::Arc;
+
+use oclcc::config::profile_by_name;
+use oclcc::coordinator::{Coordinator, Policy};
+use oclcc::device::{SpinExecutor, VirtualDevice};
+use oclcc::task::real::real_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::bench::Bencher;
+use oclcc::util::rng::Pcg64;
+
+fn main() {
+    let profile = profile_by_name("amd_r9").unwrap();
+    let device = Arc::new(VirtualDevice::new(
+        profile.clone(),
+        Arc::new(SpinExecutor),
+    ));
+    let mut rng = Pcg64::seeded(0xE2E);
+    let g = real_benchmark("BK50", "amd_r9", &profile, 8, &mut rng, 0.2).unwrap();
+    let batches: Vec<Vec<TaskSpec>> = (0..4)
+        .map(|w| (0..2).map(|r| g.tasks[w * 2 + r].clone()).collect())
+        .collect();
+    let mut b = Bencher::new(3.0, 30);
+    for (name, policy) in
+        [("noreorder", Policy::NoReorder), ("heuristic", Policy::Heuristic)]
+    {
+        let device = device.clone();
+        let batches = batches.clone();
+        let r = b.bench(&format!("coordinator 4x2 {name}"), move || {
+            Coordinator::new(device.clone(), policy).run(batches.clone())
+        });
+        println!("  -> {:.1} tasks/s", 8.0 / r.median);
+    }
+    println!("== e2e coordinator bench (time-scale 0.2) ==");
+    print!("{}", b.report());
+}

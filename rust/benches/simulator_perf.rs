@@ -1,0 +1,45 @@
+//! `cargo bench` — throughput of the event-driven simulator (the
+//! heuristic's inner loop; DESIGN.md §Perf targets >= 1e5 sims/s at T=8).
+
+use oclcc::config::profile_by_name;
+use oclcc::model::{simulate, EngineState, SimOptions};
+use oclcc::task::real::real_benchmark;
+use oclcc::util::bench::Bencher;
+use oclcc::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new(1.0, 10_000);
+    for dev in ["amd_r9", "xeon_phi"] {
+        let profile = profile_by_name(dev).unwrap();
+        for t in [4usize, 8, 16] {
+            let mut rng = Pcg64::seeded(0x51A + t as u64);
+            let g = real_benchmark("BK50", dev, &profile, t, &mut rng, 1.0)
+                .unwrap();
+            let r = b.bench(&format!("simulate {dev} T={t}"), || {
+                simulate(
+                    &g.tasks,
+                    &profile,
+                    EngineState::default(),
+                    SimOptions::default(),
+                )
+            });
+            println!(
+                "  -> {:.0} simulations/s",
+                1.0 / r.median.max(1e-12)
+            );
+        }
+        // With timeline recording (reporting path, not the hot path).
+        let mut rng = Pcg64::seeded(0x51B);
+        let g = real_benchmark("BK50", dev, &profile, 8, &mut rng, 1.0).unwrap();
+        b.bench(&format!("simulate {dev} T=8 +timeline"), || {
+            simulate(
+                &g.tasks,
+                &profile,
+                EngineState::default(),
+                SimOptions { record_timeline: true },
+            )
+        });
+    }
+    println!("== simulator micro-bench ==");
+    print!("{}", b.report());
+}

@@ -1,0 +1,27 @@
+//! `cargo bench` — Table 6: CPU cost of the Batch Reordering heuristic
+//! for T = 4/6/8, plus the width-1 (pure Algorithm-1) variant.
+
+use oclcc::config::profile_by_name;
+use oclcc::model::EngineState;
+use oclcc::sched::heuristic::{batch_reorder, batch_reorder_beam};
+use oclcc::task::real::real_benchmark;
+use oclcc::util::bench::Bencher;
+use oclcc::util::rng::Pcg64;
+
+fn main() {
+    let profile = profile_by_name("k20c").unwrap();
+    let mut b = Bencher::new(1.0, 400);
+    for t in [4usize, 6, 8] {
+        let mut rng = Pcg64::seeded(0xBE6C + t as u64);
+        let g = real_benchmark("BK50", "k20c", &profile, t, &mut rng, 1.0).unwrap();
+        b.bench(&format!("batch_reorder T={t} (beam 3)"), || {
+            batch_reorder(&g.tasks, &profile, EngineState::default())
+        });
+        b.bench(&format!("batch_reorder T={t} (beam 1)"), || {
+            batch_reorder_beam(&g.tasks, &profile, EngineState::default(), 1)
+        });
+    }
+    println!("== Table 6 counterpart: heuristic CPU time ==");
+    print!("{}", b.report());
+    println!("paper budget (K20c, Core 2 Quad): 0.06 / 0.10 / 0.22 ms for T=4/6/8");
+}

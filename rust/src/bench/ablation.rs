@@ -1,0 +1,95 @@
+//! Ablation — design choices DESIGN.md calls out:
+//!
+//! 1. Beam width (1 = paper's pure Algorithm-1 greedy vs wider beams).
+//! 2. Baseline orderings (FIFO / random / SJF / longest-kernel-first /
+//!    alternate-dominance) vs the model-guided heuristic.
+//!
+//! Reported as the fraction of the best ordering's improvement captured,
+//! averaged over synthetic + real benchmarks on every device.
+
+use crate::config::profile_by_name;
+use crate::model::simulator::makespan_of_order;
+use crate::model::EngineState;
+use crate::sched::baselines;
+use crate::sched::bruteforce::OrderStats;
+use crate::sched::heuristic::batch_reorder_beam;
+use crate::task::real::real_benchmark;
+use crate::task::synthetic::{benchmark_labels, synthetic_benchmark};
+use crate::task::TaskSpec;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let trials = args.opt_usize("trials", 6);
+    let t_tasks = args.opt_usize("t", 5);
+    println!("== Ablation: ordering policies, capture of best improvement ==");
+
+    let policies: Vec<&str> = vec![
+        "fifo", "random", "sjf", "lkf", "alternate", "beam1", "beam2",
+        "beam3(default)", "beam6",
+    ];
+    let mut capture: std::collections::BTreeMap<&str, Vec<f64>> =
+        policies.iter().map(|&p| (p, Vec::new())).collect();
+
+    for dev in ["amd_r9", "k20c", "xeon_phi"] {
+        let profile = profile_by_name(dev)?;
+        let mut groups: Vec<Vec<TaskSpec>> = Vec::new();
+        for label in benchmark_labels() {
+            groups.push(synthetic_benchmark(label, &profile, 1.0)?.tasks);
+            for trial in 0..trials {
+                let mut rng = Pcg64::new(0xAB1 + trial as u64, label.len() as u64);
+                groups.push(
+                    real_benchmark(label, dev, &profile, t_tasks, &mut rng, 1.0)?
+                        .tasks,
+                );
+            }
+        }
+        for tasks in &groups {
+            let mut rng = Pcg64::seeded(0xC0);
+            let st = OrderStats::exhaustive(tasks, &profile, 720, &mut rng);
+            let gain = (st.worst - st.best).max(1e-12);
+            let mut eval = |name: &str, order: Vec<usize>| {
+                let m = makespan_of_order(tasks, &order, &profile);
+                capture
+                    .get_mut(name)
+                    .unwrap()
+                    .push(((st.worst - m) / gain).clamp(0.0, 1.0));
+            };
+            eval("fifo", baselines::fifo(tasks));
+            eval("random", baselines::random(tasks, &mut rng));
+            eval("sjf", baselines::sjf(tasks, &profile));
+            eval("lkf", baselines::longest_kernel_first(tasks, &profile));
+            eval("alternate", baselines::alternate_dominance(tasks, &profile));
+            for (name, w) in
+                [("beam1", 1), ("beam2", 2), ("beam3(default)", 3), ("beam6", 6)]
+            {
+                eval(
+                    name,
+                    batch_reorder_beam(tasks, &profile, EngineState::default(), w),
+                );
+            }
+        }
+    }
+
+    let mut table = Table::new(&["policy", "capture (mean)", "capture (p10)"]);
+    let mut json_rows = Vec::new();
+    for p in &policies {
+        let xs = &capture[p];
+        table.row(vec![
+            p.to_string(),
+            f(stats::mean(xs), 3),
+            f(stats::percentile(xs, 10.0), 3),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("policy", Json::str(p)),
+            ("capture_mean", Json::num(stats::mean(xs))),
+            ("capture_p10", Json::num(stats::percentile(xs, 10.0))),
+        ]));
+    }
+    table.print();
+    crate::bench::save_results("ablation", &Json::arr(json_rows))?;
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Fig. 10 — speedups on the *real-task* benchmarks: T*N tasks drawn from
+//! the Table-5 catalog with the benchmark's DK/DT mix, random data sizes.
+
+use crate::bench::fig9::run_grid;
+use crate::bench::speedup::paper_grid;
+use crate::task::real::real_benchmark;
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let scale = args.opt_f64("scale", 1.0);
+    let seed = args.opt_u64("seed", 0xA10);
+    let measured_reps = args.opt_usize("measured-reps", 0);
+    let grid: Vec<(usize, usize, usize)> = if quick {
+        vec![(4, 1, 24), (4, 2, 24), (6, 1, 120)]
+    } else {
+        paper_grid()
+    };
+    println!("== Fig 10: real-task benchmark speedups vs worst permutation ==");
+    run_grid(
+        &grid,
+        scale,
+        seed,
+        measured_reps,
+        "fig10",
+        |label, profile, t, n, rng| {
+            let g = real_benchmark(label, &profile.name, profile, t * n, rng, scale)?;
+            // Column-split the T*N tasks into worker batches.
+            Ok((0..t)
+                .map(|w| (0..n).map(|r| g.tasks[w * n + r].clone()).collect())
+                .collect())
+        },
+    )
+}

@@ -1,0 +1,73 @@
+//! Fig. 11 — geometric mean of Maximum / Average / Heuristic speedups over
+//! all real-task experiments per device, plus the "% of best improvement"
+//! headline (paper: R9 1.23/1.24 = 96%, Phi 84%, K20c 87%).
+
+use crate::bench::speedup::{paper_grid, speedup_experiment};
+use crate::config::profile_by_name;
+use crate::task::real::real_benchmark;
+use crate::task::TaskSpec;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::table::{f, pct, Table};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let scale = args.opt_f64("scale", 1.0);
+    let seed = args.opt_u64("seed", 0xF11);
+    let grid: Vec<(usize, usize, usize)> = if quick {
+        vec![(4, 1, 24), (4, 2, 24), (6, 1, 120)]
+    } else {
+        paper_grid()
+    };
+    let labels = ["BK0", "BK25", "BK50", "BK75", "BK100"];
+    println!("== Fig 11: geomean speedups over all real-task experiments ==");
+    let mut table = Table::new(&[
+        "device", "max x (gm)", "avg x (gm)", "heuristic x (gm)", "% of best",
+    ]);
+    let mut json_rows = Vec::new();
+    for dev in ["amd_r9", "k20c", "xeon_phi"] {
+        let profile = profile_by_name(dev)?;
+        let mut maxes = Vec::new();
+        let mut means = Vec::new();
+        let mut heus = Vec::new();
+        for label in labels {
+            for &(t, n, cap) in &grid {
+                let mut rng =
+                    Pcg64::new(seed ^ (t * 10 + n) as u64, label.len() as u64);
+                let g = real_benchmark(label, dev, &profile, t * n, &mut rng, scale)?;
+                let batches: Vec<Vec<TaskSpec>> = (0..t)
+                    .map(|w| (0..n).map(|r| g.tasks[w * n + r].clone()).collect())
+                    .collect();
+                let out =
+                    speedup_experiment(&batches, &profile, cap, 0, &mut rng);
+                maxes.push(out.max_speedup());
+                means.push(out.mean_speedup());
+                heus.push(out.heuristic_speedup());
+            }
+        }
+        let gm_max = stats::geomean(&maxes);
+        let gm_mean = stats::geomean(&means);
+        let gm_heu = stats::geomean(&heus);
+        let capture = (gm_heu - 1.0) / (gm_max - 1.0).max(1e-9);
+        table.row(vec![
+            dev.to_string(),
+            f(gm_max, 3),
+            f(gm_mean, 3),
+            f(gm_heu, 3),
+            pct(capture.min(1.0), 0),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("device", Json::str(dev)),
+            ("gm_max", Json::num(gm_max)),
+            ("gm_mean", Json::num(gm_mean)),
+            ("gm_heuristic", Json::num(gm_heu)),
+            ("capture", Json::num(capture)),
+        ]));
+    }
+    table.print();
+    println!("paper: amd_r9 1.24/~/1.23 (96%), k20c 1.27 (87%), xeon_phi 1.16 (84%)");
+    crate::bench::save_results("fig11", &Json::arr(json_rows))?;
+    Ok(())
+}

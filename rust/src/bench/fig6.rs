@@ -1,0 +1,120 @@
+//! Fig. 6 — relative error of bidirectional transfer-time prediction.
+//!
+//! Protocol (paper §4.2.1): one CQ runs a HtD transfer while another
+//! launches a DtH transfer overlapping 0/25/50/75/100% of it, for several
+//! transfer sizes. The measured pair-completion time is compared against
+//! three predictors: non-overlapped, fully-overlapped and the paper's
+//! partially-overlapped model. Expectation (paper): the partial model
+//! stays under ~2% at every overlap degree; the strawmen blow up at one
+//! end of the sweep each.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::profile_by_name;
+use crate::device::bus::Bus;
+use crate::model::transfer::{predict_pair, OverlapModel};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::{pct, Table};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let device = args.opt_or("device", "amd_r9");
+    let profile = Arc::new(profile_by_name(&device)?);
+    // Paper sizes: 16-512 MB. The virtual bus replays the same bandwidth,
+    // so we default to a compressed ladder unless --full is given.
+    let sizes_mb: Vec<u64> = if args.flag("full") {
+        vec![16, 32, 64, 128, 256, 512]
+    } else {
+        vec![8, 16, 32, 64]
+    };
+    let overlaps = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let reps = args.opt_usize("reps", 3);
+
+    println!("== Fig 6: bidirectional transfer prediction error ({device}) ==");
+    println!(
+        "   sizes {sizes_mb:?} MB, overlap degrees {overlaps:?}, {reps} reps"
+    );
+    let models = [
+        ("non-overlapped", OverlapModel::NonOverlapped),
+        ("full-overlapped", OverlapModel::FullOverlap),
+        ("partial (ours)", OverlapModel::PartialOverlap),
+    ];
+    let mut table = Table::new(&[
+        "overlap",
+        "err non-overlapped",
+        "err full-overlapped",
+        "err partial (ours)",
+    ]);
+    let mut json_rows = Vec::new();
+
+    for &ov in &overlaps {
+        let mut errs = [Vec::new(), Vec::new(), Vec::new()];
+        for &mb in &sizes_mb {
+            let bytes = mb * 1024 * 1024;
+            let solo_h = profile.htd.transfer_secs(bytes);
+            // DtH starts so that it overlaps `ov` of the HtD transfer.
+            let dth_start = (1.0 - ov) * solo_h;
+            let mut measured = Vec::new();
+            for _ in 0..reps {
+                measured.push(measure_pair(&profile, bytes, dth_start));
+            }
+            let meas = stats::median(&measured);
+            for (i, (_, m)) in models.iter().enumerate() {
+                let pred =
+                    predict_pair(*m, &profile, bytes, bytes, dth_start)
+                        .makespan();
+                errs[i].push(stats::rel_err(pred, meas));
+            }
+        }
+        table.row(vec![
+            pct(ov, 0),
+            pct(stats::mean(&errs[0]), 2),
+            pct(stats::mean(&errs[1]), 2),
+            pct(stats::mean(&errs[2]), 2),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("overlap", Json::num(ov)),
+            ("err_non_overlapped", Json::num(stats::mean(&errs[0]))),
+            ("err_full_overlapped", Json::num(stats::mean(&errs[1]))),
+            ("err_partial", Json::num(stats::mean(&errs[2]))),
+        ]));
+    }
+    table.print();
+    crate::bench::save_results("fig6", &Json::arr(json_rows))?;
+    Ok(())
+}
+
+/// Measure one HtD/DtH pair on the live bus; returns pair makespan (s).
+/// Both "command queues" (threads) are spawned first and released through
+/// a barrier so thread-creation skew does not pollute the measurement.
+fn measure_pair(
+    profile: &Arc<crate::config::DeviceProfile>,
+    bytes: u64,
+    dth_start: f64,
+) -> f64 {
+    let bus = Bus::new(profile.clone());
+    let barrier = Arc::new(std::sync::Barrier::new(3));
+
+    let bus_h = bus.clone();
+    let b_h = barrier.clone();
+    let htd = std::thread::spawn(move || {
+        b_h.wait();
+        let _g = bus_h.begin_transfer(true);
+        bus_h.pace(true, bytes);
+    });
+    let bus_d = bus.clone();
+    let b_d = barrier.clone();
+    let dth = std::thread::spawn(move || {
+        b_d.wait();
+        crate::util::timing::precise_wait(Duration::from_secs_f64(dth_start));
+        let _g = bus_d.begin_transfer(false);
+        bus_d.pace(false, bytes);
+    });
+    barrier.wait();
+    let t0 = Instant::now();
+    htd.join().unwrap();
+    dth.join().unwrap();
+    t0.elapsed().as_secs_f64()
+}

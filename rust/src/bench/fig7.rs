@@ -1,0 +1,70 @@
+//! Fig. 7 — temporal-model validation: average prediction error over all
+//! task permutations of each synthetic benchmark, per device.
+//!
+//! The paper reports geomean errors below 1% (R9/K20c) and 1.12% (Phi).
+//! Here the measurement substrate is the virtual device; errors reflect
+//! real thread asynchrony + pacing granularity.
+
+use std::sync::Arc;
+
+use crate::config::profile_by_name;
+use crate::device::executor::SpinExecutor;
+use crate::device::vdev::VirtualDevice;
+use crate::model::{simulate, EngineState, SimOptions};
+use crate::sched::bruteforce::permutation_sample;
+use crate::task::synthetic::{benchmark_labels, synthetic_benchmark};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::table::{pct, Table};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let scale = args.opt_f64("scale", 1.0);
+    let cap = args.opt_usize("perms", if args.flag("full") { 24 } else { 8 });
+    let devices = ["amd_r9", "k20c", "xeon_phi"];
+    println!("== Fig 7: model prediction error, all permutations ==");
+    println!("   time-unit scale {scale}, permutations per benchmark {cap}");
+
+    let mut table = Table::new(&["device", "BK0", "BK25", "BK50", "BK75", "BK100", "geomean"]);
+    let mut json_rows = Vec::new();
+    for dev in devices {
+        let profile = profile_by_name(dev)?;
+        let device = VirtualDevice::new(profile.clone(), Arc::new(SpinExecutor));
+        let mut cells = vec![dev.to_string()];
+        let mut per_bench = Vec::new();
+        for label in benchmark_labels() {
+            let g = synthetic_benchmark(label, &profile, scale)?;
+            let mut rng = Pcg64::seeded(0xF16 + label.len() as u64);
+            let orders = permutation_sample(g.len(), cap, &mut rng);
+            let mut errs = Vec::new();
+            for order in &orders {
+                let tasks = g.reordered(order).tasks;
+                let pred = simulate(
+                    &tasks,
+                    &profile,
+                    EngineState::default(),
+                    SimOptions::default(),
+                )
+                .makespan;
+                let meas = device.run_group(&tasks).makespan;
+                errs.push(stats::rel_err(pred, meas));
+            }
+            let mean_err = stats::mean(&errs);
+            per_bench.push(mean_err);
+            cells.push(pct(mean_err, 2));
+            json_rows.push(Json::obj(vec![
+                ("device", Json::str(dev)),
+                ("benchmark", Json::str(label)),
+                ("mean_error", Json::num(mean_err)),
+            ]));
+        }
+        let gm = stats::geomean(&per_bench);
+        cells.push(pct(gm, 2));
+        table.row(cells);
+        println!("   {dev}: geomean error {}", pct(gm, 2));
+    }
+    table.print();
+    crate::bench::save_results("fig7", &Json::arr(json_rows))?;
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Fig. 9 — speedups on the *synthetic* benchmarks (BK0..BK100) for every
+//! device and (T, N) point of the paper grid: maximum (best permutation),
+//! mean, and heuristic speedup, all relative to the worst permutation.
+
+use crate::bench::speedup::{paper_grid, speedup_experiment};
+use crate::config::profile_by_name;
+use crate::task::synthetic::{benchmark_labels, synthetic_benchmark};
+use crate::task::TaskSpec;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::table::{f, Table};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let scale = args.opt_f64("scale", 1.0);
+    let seed = args.opt_u64("seed", 0x519);
+    let measured_reps =
+        args.opt_usize("measured-reps", 0); // 0 = model-evaluated (default)
+    let grid: Vec<(usize, usize, usize)> = if quick {
+        vec![(4, 1, 24), (4, 2, 24), (6, 1, 120)]
+    } else {
+        paper_grid()
+    };
+    println!("== Fig 9: synthetic-benchmark speedups vs worst permutation ==");
+    run_grid(
+        &grid,
+        scale,
+        seed,
+        measured_reps,
+        "fig9",
+        |label, profile, t, n, rng| {
+            let g = synthetic_benchmark(label, profile, scale)?;
+            // T*N tasks randomly drawn from the benchmark's 4 tasks (§6.2).
+            Ok((0..t)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| {
+                            g.tasks[rng.below(4) as usize].clone()
+                        })
+                        .collect()
+                })
+                .collect())
+        },
+    )
+}
+
+/// Shared driver for Figs. 9 and 10 (synthetic vs real task sources).
+pub fn run_grid(
+    grid: &[(usize, usize, usize)],
+    _scale: f64,
+    seed: u64,
+    measured_reps: usize,
+    result_name: &str,
+    mut make_batches: impl FnMut(
+        &str,
+        &crate::config::DeviceProfile,
+        usize,
+        usize,
+        &mut Pcg64,
+    ) -> anyhow::Result<Vec<Vec<TaskSpec>>>,
+) -> anyhow::Result<()> {
+    let devices = ["amd_r9", "k20c", "xeon_phi"];
+    let mut json_rows = Vec::new();
+    for dev in devices {
+        let profile = profile_by_name(dev)?;
+        let mut table = Table::new(&[
+            "benchmark", "T", "N", "max x", "mean x", "heuristic x", "capture",
+        ]);
+        println!("-- {dev} --");
+        for label in benchmark_labels() {
+            for &(t, n, cap) in grid {
+                let mut rng =
+                    Pcg64::new(seed ^ (t * 100 + n) as u64, label.len() as u64);
+                let batches = make_batches(label, &profile, t, n, &mut rng)?;
+                let out = speedup_experiment(
+                    &batches,
+                    &profile,
+                    cap,
+                    measured_reps,
+                    &mut rng,
+                );
+                table.row(vec![
+                    label.to_string(),
+                    t.to_string(),
+                    n.to_string(),
+                    f(out.max_speedup(), 3),
+                    f(out.mean_speedup(), 3),
+                    f(out.heuristic_speedup(), 3),
+                    crate::util::table::pct(out.improvement_fraction(), 0),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("device", Json::str(dev)),
+                    ("benchmark", Json::str(label)),
+                    ("t", Json::num(t as f64)),
+                    ("n", Json::num(n as f64)),
+                    ("max_speedup", Json::num(out.max_speedup())),
+                    ("mean_speedup", Json::num(out.mean_speedup())),
+                    ("heuristic_speedup", Json::num(out.heuristic_speedup())),
+                    ("capture", Json::num(out.improvement_fraction())),
+                    (
+                        "measured_heuristic",
+                        out.measured_heuristic.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                ]));
+            }
+        }
+        table.print();
+    }
+    crate::bench::save_results(result_name, &Json::arr(json_rows))?;
+    Ok(())
+}

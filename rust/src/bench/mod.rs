@@ -1,0 +1,32 @@
+//! Paper-figure/table regeneration harnesses (`oclcc bench <exp>`).
+//!
+//! Each submodule regenerates one experiment from the paper's evaluation:
+//! the same workloads, the same sweep axes, the same reported rows/series
+//! (absolute numbers differ — the substrate is the virtual device, not the
+//! authors' testbed; shapes and ratios are the reproduction target).
+//! Results print as ASCII tables and are archived as JSON under
+//! `results/`.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig11;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod speedup;
+pub mod table5;
+pub mod table6;
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Write a result JSON under `results/<name>.json`.
+pub fn save_results(name: &str, json: &Json) -> anyhow::Result<()> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.to_string())?;
+    println!("  [saved {}]", path.display());
+    Ok(())
+}

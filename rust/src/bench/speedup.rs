@@ -1,0 +1,212 @@
+//! Shared harness for the speedup experiments (Figs. 9-11): the NoReorder
+//! permutation distribution vs the heuristic ordering, for T workers
+//! submitting N dependent tasks each.
+//!
+//! Tasks are organised as `batch[w][r]`: worker w's r-th task. Batch
+//! dependencies serialize rounds, so the group scheduled at round r is
+//! {batch[w][r] | w}. The NoReorder setup permutes within each round
+//! ((T!)^N joint orderings — evaluated per-round and summed, which is
+//! exact under round serialization); the Heuristic setup reorders each
+//! round with Algorithm 1.
+//!
+//! `measured = false` evaluates orderings with the temporal model (valid
+//! per Fig. 7's <2% error, and how the paper's own heuristic reasons);
+//! `measured = true` replays the key orderings (worst/best/heuristic) on
+//! the virtual device with repetitions, like the paper's 15-rep medians.
+
+use std::sync::Arc;
+
+use crate::config::DeviceProfile;
+use crate::device::executor::SpinExecutor;
+use crate::device::vdev::VirtualDevice;
+use crate::model::{EngineState, SimOptions};
+use crate::sched::bruteforce::{permutation_sample, OrderStats};
+use crate::sched::heuristic::batch_reorder;
+use crate::task::TaskSpec;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct SpeedupOutcome {
+    /// NoReorder distribution (summed over rounds).
+    pub worst: f64,
+    pub best: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Heuristic total.
+    pub heuristic: f64,
+    /// Device-measured totals for worst/best/heuristic orders (if any).
+    pub measured_worst: Option<f64>,
+    pub measured_best: Option<f64>,
+    pub measured_heuristic: Option<f64>,
+}
+
+impl SpeedupOutcome {
+    /// Speedups w.r.t. the worst ordering (the paper's normalization).
+    pub fn max_speedup(&self) -> f64 {
+        self.worst / self.best
+    }
+
+    pub fn mean_speedup(&self) -> f64 {
+        self.worst / self.mean
+    }
+
+    pub fn median_speedup(&self) -> f64 {
+        self.worst / self.median
+    }
+
+    pub fn heuristic_speedup(&self) -> f64 {
+        self.worst / self.heuristic
+    }
+
+    /// Fraction of the best ordering's improvement the heuristic captured
+    /// (the paper's 84-96% headline metric).
+    pub fn improvement_fraction(&self) -> f64 {
+        let best_gain = self.worst - self.best;
+        if best_gain <= 0.0 {
+            return 1.0;
+        }
+        ((self.worst - self.heuristic) / best_gain).min(1.0)
+    }
+}
+
+/// Run one speedup experiment over `batches[w][r]`.
+pub fn speedup_experiment(
+    batches: &[Vec<TaskSpec>],
+    profile: &DeviceProfile,
+    perm_cap: usize,
+    measured_reps: usize,
+    rng: &mut Pcg64,
+) -> SpeedupOutcome {
+    let t = batches.len();
+    let n = batches[0].len();
+    assert!(batches.iter().all(|b| b.len() == n));
+
+    let mut worst = 0.0;
+    let mut best = 0.0;
+    let mut mean = 0.0;
+    let mut median = 0.0;
+    let mut heuristic = 0.0;
+    let mut worst_orders: Vec<Vec<usize>> = Vec::new();
+    let mut best_orders: Vec<Vec<usize>> = Vec::new();
+    let mut heur_orders: Vec<Vec<usize>> = Vec::new();
+
+    for r in 0..n {
+        let round: Vec<TaskSpec> =
+            (0..t).map(|w| batches[w][r].clone()).collect();
+        let orders = permutation_sample(t, perm_cap, rng);
+        let st = OrderStats::evaluate(&round, &orders, profile);
+        worst += st.worst;
+        best += st.best;
+        mean += st.mean;
+        median += st.median;
+        let h_order = batch_reorder(&round, profile, EngineState::default());
+        heuristic += crate::model::simulator::simulate_order(
+            &round,
+            &h_order,
+            profile,
+            EngineState::default(),
+            SimOptions::default(),
+        )
+        .makespan;
+        worst_orders.push(st.worst_order);
+        best_orders.push(st.best_order);
+        heur_orders.push(h_order);
+    }
+
+    let (measured_worst, measured_best, measured_heuristic) =
+        if measured_reps > 0 {
+            let dev =
+                VirtualDevice::new(profile.clone(), Arc::new(SpinExecutor));
+            let measure = |orders: &[Vec<usize>]| -> f64 {
+                let mut total = 0.0;
+                for r in 0..n {
+                    let round: Vec<TaskSpec> = orders[r]
+                        .iter()
+                        .map(|&i| batches[i][r].clone())
+                        .collect();
+                    let mut runs = Vec::new();
+                    for _ in 0..measured_reps {
+                        runs.push(dev.run_group(&round).makespan);
+                    }
+                    total += stats::median(&runs);
+                }
+                total
+            };
+            (
+                Some(measure(&worst_orders)),
+                Some(measure(&best_orders)),
+                Some(measure(&heur_orders)),
+            )
+        } else {
+            (None, None, None)
+        };
+
+    SpeedupOutcome {
+        worst,
+        best,
+        mean,
+        median,
+        heuristic,
+        measured_worst,
+        measured_best,
+        measured_heuristic,
+    }
+}
+
+/// The paper's (T, N) grid: all permutations at T=4; subsets where the
+/// space explodes, exactly as §6.2 describes.
+pub fn paper_grid() -> Vec<(usize, usize, usize)> {
+    // (T, N, perm_cap)
+    vec![
+        (4, 1, 24),
+        (4, 2, 24),
+        (4, 4, 24),
+        (6, 1, 720),
+        (6, 2, 36), // 5% of 720 per round
+        (8, 1, 400),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    fn batches(t: usize, n: usize) -> Vec<Vec<TaskSpec>> {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        (0..t)
+            .map(|w| (0..n).map(|r| g.tasks[(w + r) % 4].clone()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn outcome_orderings_consistent() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut rng = Pcg64::seeded(5);
+        let out = speedup_experiment(&batches(4, 2), &p, 24, 0, &mut rng);
+        assert!(out.best <= out.median && out.median <= out.worst);
+        assert!(out.heuristic <= out.mean + 1e-9, "paper claim");
+        assert!(out.max_speedup() >= out.heuristic_speedup() - 0.05);
+        assert!(out.improvement_fraction() >= 0.5);
+    }
+
+    #[test]
+    fn measured_mode_returns_values() {
+        let _t = crate::util::timing::timing_test_lock();
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut rng = Pcg64::seeded(6);
+        let small: Vec<Vec<TaskSpec>> = {
+            let g = synthetic_benchmark("BK25", &p, 0.1).unwrap();
+            (0..3).map(|w| vec![g.tasks[w].clone()]).collect()
+        };
+        let out = speedup_experiment(&small, &p, 6, 1, &mut rng);
+        let mw = out.measured_worst.unwrap();
+        let mh = out.measured_heuristic.unwrap();
+        assert!(mw > 0.0 && mh > 0.0);
+        // Measured heuristic should not be wildly slower than worst.
+        assert!(mh <= mw * 1.25, "mh {mh} mw {mw}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Tables 1-5 — catalog dumps plus, when AOT artifacts are present, a
+//! live-measured "Table 5" for the `cpu_live` device: per-kernel-family
+//! command time ranges measured over the size variants on the PJRT
+//! runtime with paced transfers.
+
+use crate::config::{builtin_profiles, profile_by_name};
+use crate::runtime::manifest::default_artifact_dir;
+use crate::runtime::service::PjrtService;
+use crate::task::real::{table5, FAMILIES};
+use crate::task::synthetic::TABLE2;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    // Table 1.
+    println!("== Table 1: device profiles ==");
+    let mut t1 = Table::new(&[
+        "device", "DMA engines", "HtD GB/s", "DtH GB/s", "sigma", "launch (us)",
+    ]);
+    for p in builtin_profiles() {
+        t1.row(vec![
+            p.name.clone(),
+            p.dma_engines.to_string(),
+            f(p.htd.bytes_per_sec / 1e9, 2),
+            f(p.dth.bytes_per_sec / 1e9, 2),
+            f(p.duplex_slowdown, 2),
+            f(p.kernel_launch_overhead * 1e6, 0),
+        ]);
+    }
+    t1.print();
+
+    // Table 2.
+    println!("\n== Table 2: synthetic tasks (fractions of the 10 ms unit) ==");
+    let mut t2 = Table::new(&["task", "HtD", "K", "DtH", "class"]);
+    for (i, (h, k, d)) in TABLE2.iter().enumerate() {
+        t2.row(vec![
+            format!("T{i}"),
+            f(*h, 1),
+            f(*k, 1),
+            f(*d, 1),
+            if h + d <= *k { "DK".into() } else { "DT".into() },
+        ]);
+    }
+    t2.print();
+
+    // Table 5 per device.
+    for dev in ["amd_r9", "xeon_phi", "k20c"] {
+        println!("\n== Table 5: real-task command time ranges ({dev}, ms) ==");
+        let mut t5 = Table::new(&["kernel", "HtD", "K", "DtH", "class"]);
+        let profile = profile_by_name(dev)?;
+        for row in table5(dev)? {
+            let dk = row.k.mid_secs() >= row.htd.mid_secs() + row.dth.mid_secs();
+            t5.row(vec![
+                row.family.to_string(),
+                format!("{:.2}-{:.2}", row.htd.0, row.htd.1),
+                format!("{:.2}-{:.2}", row.k.0, row.k.1),
+                format!("{:.2}-{:.2}", row.dth.0, row.dth.1),
+                if dk { "DK".into() } else { "DT".into() },
+            ]);
+        }
+        t5.print();
+        let _ = profile;
+    }
+
+    // Live Table 5 on PJRT (optional: needs artifacts).
+    if !args.flag("no-live") {
+        match PjrtService::start(default_artifact_dir()) {
+            Ok(service) => live_table5(&service)?,
+            Err(e) => println!("\n(live Table 5 skipped: {e})"),
+        }
+    }
+    Ok(())
+}
+
+fn live_table5(service: &PjrtService) -> anyhow::Result<()> {
+    use crate::runtime::manifest::Manifest;
+    println!("\n== Table 5 (live): PJRT-CPU kernel times per variant ==");
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let profile = profile_by_name("cpu_live")?;
+    let mut t = Table::new(&[
+        "variant", "kernel", "HtD (ms)", "K measured (ms)", "DtH (ms)", "class",
+    ]);
+    let mut json_rows = Vec::new();
+    // Family -> variant mapping mirrors Table 4's eight kernels.
+    fn fam_of(k: &str) -> &str {
+        match k {
+        "matmul" => "MM",
+        "black_scholes" => "BS",
+        "fwt" => "FWT",
+        "floyd_warshall" => "FLW",
+        "conv_sep" => "CONV",
+        "vecadd" => "VA",
+        "transpose" => "MT",
+        "dct8x8" => "DCT",
+            other => other,
+        }
+    }
+    let _ = FAMILIES;
+    for (name, meta) in &manifest.variants {
+        service.warmup(name)?;
+        let mut samples = Vec::new();
+        for _ in 0..3 {
+            samples.push(service.execute(name)?.exec_secs);
+        }
+        let k_ms = crate::util::stats::median(&samples) * 1e3;
+        let htd_ms = profile.htd.transfer_secs(meta.htd_bytes) * 1e3;
+        let dth_ms = profile.dth.transfer_secs(meta.dth_bytes) * 1e3;
+        let dk = k_ms >= htd_ms + dth_ms;
+        t.row(vec![
+            name.clone(),
+            fam_of(&meta.kernel).to_string(),
+            f(htd_ms, 3),
+            f(k_ms, 3),
+            f(dth_ms, 3),
+            if dk { "DK".into() } else { "DT".into() },
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("variant", Json::str(name)),
+            ("htd_ms", Json::num(htd_ms)),
+            ("k_ms", Json::num(k_ms)),
+            ("dth_ms", Json::num(dth_ms)),
+        ]));
+    }
+    t.print();
+    crate::bench::save_results("table5_live", &Json::arr(json_rows))?;
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Table 6 — scheduling overhead of the host proxy: average CPU time of
+//! the Batch Reordering heuristic for T = 4/6/8 concurrent tasks, against
+//! the average device execution time of the reordered group (paper:
+//! 0.06 / 0.10 / 0.22 ms vs 28 / 38 / 50 ms on a K20c — i.e. < 0.4%).
+
+use std::time::Instant;
+
+use crate::config::profile_by_name;
+use crate::model::{simulate, EngineState, SimOptions};
+use crate::sched::heuristic::batch_reorder;
+use crate::task::real::real_benchmark;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::{f, pct, Table};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let reps = args.opt_usize("reps", 50);
+    let profile = profile_by_name(&args.opt_or("device", "k20c"))?;
+    println!("== Table 6: heuristic scheduling overhead ({}) ==", profile.name);
+    let mut table = Table::new(&[
+        "T (concurrent tasks)",
+        "avg CPU scheduling time (ms)",
+        "avg device execution time (ms)",
+        "overhead",
+    ]);
+    let mut json_rows = Vec::new();
+    for t in [4usize, 6, 8] {
+        let mut sched_times = Vec::new();
+        let mut dev_times = Vec::new();
+        for rep in 0..reps {
+            let mut rng = crate::util::rng::Pcg64::new(0x7AB6 + rep as u64, t as u64);
+            let g = real_benchmark("BK50", &profile.name, &profile, t, &mut rng, 1.0)?;
+            let t0 = Instant::now();
+            let order = batch_reorder(&g.tasks, &profile, EngineState::default());
+            sched_times.push(t0.elapsed().as_secs_f64());
+            let ordered: Vec<_> =
+                order.iter().map(|&i| g.tasks[i].clone()).collect();
+            dev_times.push(
+                simulate(
+                    &ordered,
+                    &profile,
+                    EngineState::default(),
+                    SimOptions::default(),
+                )
+                .makespan,
+            );
+        }
+        let sched_ms = stats::mean(&sched_times) * 1e3;
+        let dev_ms = stats::mean(&dev_times) * 1e3;
+        table.row(vec![
+            t.to_string(),
+            f(sched_ms, 3),
+            f(dev_ms, 2),
+            pct(sched_ms / dev_ms, 2),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("t", Json::num(t as f64)),
+            ("sched_ms", Json::num(sched_ms)),
+            ("device_ms", Json::num(dev_ms)),
+        ]));
+    }
+    table.print();
+    println!("paper (K20c): 0.06 / 0.10 / 0.22 ms vs 28.04 / 37.82 / 49.78 ms");
+    crate::bench::save_results("table6", &Json::arr(json_rows))?;
+    Ok(())
+}

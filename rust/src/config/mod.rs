@@ -1,0 +1,6 @@
+//! Configuration: device profiles (paper Table 1 + LogGP link parameters)
+//! and experiment settings, with JSON load/save and built-in defaults.
+
+pub mod profile;
+
+pub use profile::{DeviceProfile, LinkParams, builtin_profiles, profile_by_name};

@@ -1,0 +1,170 @@
+//! The shared submission buffer between worker threads and the host proxy
+//! (paper Fig. 8): workers write intercepted "OpenCL API calls" (task
+//! submissions); the proxy polls, drains a task group, reorders and
+//! submits it to the device queues.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::queue::event::Event;
+use crate::task::TaskSpec;
+
+/// One intercepted task submission.
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub worker: usize,
+    /// Position within the worker's dependent batch (0..N).
+    pub batch_seq: usize,
+    pub task: TaskSpec,
+    /// Completed (with the device timestamp) when the task finishes; the
+    /// worker blocks on this before submitting its next batch entry.
+    pub done: Event,
+    /// Wall-clock submission time (secs since coordinator epoch).
+    pub submitted_at: f64,
+}
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<Submission>,
+    closed: bool,
+}
+
+/// MPSC buffer with blocking drain.
+#[derive(Clone, Default)]
+pub struct SharedBuffer {
+    inner: Arc<(Mutex<State>, Condvar)>,
+}
+
+impl SharedBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&self, s: Submission) {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        assert!(!g.closed, "push after close");
+        g.queue.push_back(s);
+        cv.notify_all();
+    }
+
+    /// Declare no further submissions will arrive.
+    pub fn close(&self) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    /// Blocking drain: waits until at least one submission is available
+    /// (returning up to `max`) or the buffer is closed and empty (None).
+    /// `settle` emulates the proxy's polling window: once something is
+    /// available, wait this long for stragglers before draining — this is
+    /// what lets all T workers land in the same task group.
+    pub fn drain(&self, max: usize, settle: Duration) -> Option<Vec<Submission>> {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            if !g.queue.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = cv.wait(g).unwrap();
+        }
+        if !settle.is_zero() {
+            // Give other workers a window to join this TG.
+            let deadline = std::time::Instant::now() + settle;
+            while g.queue.len() < max {
+                let left = match deadline.checked_duration_since(std::time::Instant::now()) {
+                    Some(d) => d,
+                    None => break,
+                };
+                let (ng, timeout) = cv.wait_timeout(g, left).unwrap();
+                g = ng;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        let take = g.queue.len().min(max);
+        Some(g.queue.drain(..take).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::KernelSpec;
+
+    fn sub(worker: usize, seq: usize) -> Submission {
+        Submission {
+            worker,
+            batch_seq: seq,
+            task: TaskSpec::simple(
+                "t",
+                10,
+                KernelSpec::Timed { secs: 1e-4 },
+                10,
+            ),
+            done: Event::new(),
+            submitted_at: 0.0,
+        }
+    }
+
+    #[test]
+    fn push_drain_fifo() {
+        let b = SharedBuffer::new();
+        b.push(sub(0, 0));
+        b.push(sub(1, 0));
+        b.push(sub(2, 0));
+        let got = b.drain(2, Duration::ZERO).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].worker, 0);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn drain_blocks_until_push() {
+        let b = SharedBuffer::new();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.drain(4, Duration::ZERO));
+        std::thread::sleep(Duration::from_millis(5));
+        b.push(sub(3, 1));
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got[0].worker, 3);
+    }
+
+    #[test]
+    fn close_unblocks_with_none() {
+        let b = SharedBuffer::new();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.drain(4, Duration::ZERO));
+        std::thread::sleep(Duration::from_millis(5));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn settle_window_gathers_stragglers() {
+        let b = SharedBuffer::new();
+        b.push(sub(0, 0));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(3));
+            b2.push(sub(1, 0));
+        });
+        let got = b.drain(4, Duration::from_millis(50)).unwrap();
+        h.join().unwrap();
+        assert_eq!(got.len(), 2, "straggler should join the TG");
+    }
+}

@@ -1,0 +1,10 @@
+//! The §6.2 multi-worker runtime: worker threads offload dependent task
+//! batches through a shared buffer; a host proxy thread forms task groups,
+//! reorders them with the Batch Reordering heuristic and drives the
+//! virtual device.
+
+pub mod buffer;
+pub mod runner;
+
+pub use buffer::{SharedBuffer, Submission};
+pub use runner::{CoordMetrics, Coordinator, Policy};

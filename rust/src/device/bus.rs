@@ -1,0 +1,193 @@
+//! The shared host<->device interconnect: tracks which directions are in
+//! flight and serves the current per-direction rate. A generation counter
+//! bumps on every change so paced transfers re-plan immediately — the
+//! real-time analogue of the simulator's end-time re-estimation.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::DeviceProfile;
+
+#[derive(Debug, Default)]
+struct BusState {
+    active_htd: usize,
+    active_dth: usize,
+    generation: u64,
+}
+
+/// Cloneable handle to the interconnect state.
+#[derive(Clone)]
+pub struct Bus {
+    profile: Arc<DeviceProfile>,
+    state: Arc<(Mutex<BusState>, Condvar)>,
+}
+
+impl Bus {
+    pub fn new(profile: Arc<DeviceProfile>) -> Self {
+        Bus { profile, state: Arc::new((Mutex::new(BusState::default()), Condvar::new())) }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// Register an in-flight transfer; returns a guard that deregisters.
+    pub fn begin_transfer(&self, htd: bool) -> TransferGuard {
+        let (m, cv) = &*self.state;
+        let mut g = m.lock().unwrap();
+        if htd {
+            g.active_htd += 1;
+        } else {
+            g.active_dth += 1;
+        }
+        g.generation += 1;
+        cv.notify_all();
+        TransferGuard { bus: self.clone(), htd }
+    }
+
+    fn end_transfer(&self, htd: bool) {
+        let (m, cv) = &*self.state;
+        let mut g = m.lock().unwrap();
+        if htd {
+            g.active_htd -= 1;
+        } else {
+            g.active_dth -= 1;
+        }
+        g.generation += 1;
+        cv.notify_all();
+    }
+
+    /// Current (rate for `htd` direction, generation).
+    pub fn rate(&self, htd: bool) -> (f64, u64) {
+        let (m, _) = &*self.state;
+        let g = m.lock().unwrap();
+        let opposite = if htd { g.active_dth > 0 } else { g.active_htd > 0 };
+        (self.profile.rate(htd, opposite), g.generation)
+    }
+
+    /// Pace `bytes` through the bus in direction `htd`, fluidly adapting
+    /// to contention changes; blocks for the (real) transfer duration.
+    /// Returns when the last byte would have arrived.
+    pub fn pace(&self, htd: bool, bytes: u64) {
+        // Fixed per-transfer latency first (uncontended overhead).
+        crate::util::timing::precise_wait(Duration::from_secs_f64(
+            self.profile.link(htd).latency,
+        ));
+        let mut remaining = bytes as f64;
+        let (m, cv) = &*self.state;
+        while remaining > 1.0 {
+            let (rate, gen) = self.rate(htd);
+            let eta = remaining / rate;
+            let started = Instant::now();
+            if eta > 200e-6 {
+                // Sleep on the condvar: wake early if the active set
+                // changes, otherwise up to ~eta (leave a spin tail).
+                let budget = Duration::from_secs_f64(eta - 120e-6);
+                let g = m.lock().unwrap();
+                let _unused = cv
+                    .wait_timeout_while(g, budget, |s| s.generation == gen)
+                    .unwrap();
+            } else {
+                // Short tail: spin to the deadline, accept a potentially
+                // stale rate for <=200 us.
+                crate::util::timing::precise_wait_until(
+                    started + Duration::from_secs_f64(eta),
+                );
+            }
+            let elapsed = started.elapsed().as_secs_f64();
+            remaining -= elapsed * rate;
+        }
+    }
+
+    /// Snapshot (active_htd, active_dth) — used by tests.
+    pub fn active(&self) -> (usize, usize) {
+        let (m, _) = &*self.state;
+        let g = m.lock().unwrap();
+        (g.active_htd, g.active_dth)
+    }
+}
+
+/// RAII registration of an in-flight transfer.
+pub struct TransferGuard {
+    bus: Bus,
+    htd: bool,
+}
+
+impl Drop for TransferGuard {
+    fn drop(&mut self) {
+        self.bus.end_transfer(self.htd);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+
+    fn bus(name: &str) -> Bus {
+        Bus::new(Arc::new(profile_by_name(name).unwrap()))
+    }
+
+    #[test]
+    fn registration_changes_rate() {
+        let b = bus("amd_r9");
+        let (solo, _) = b.rate(true);
+        let _g = b.begin_transfer(false);
+        let (contended, _) = b.rate(true);
+        assert!(contended < solo);
+        assert!((solo / contended - b.profile().duplex_slowdown).abs() < 1e-9);
+    }
+
+    #[test]
+    fn guard_drop_restores() {
+        let b = bus("amd_r9");
+        {
+            let _g = b.begin_transfer(true);
+            assert_eq!(b.active(), (1, 0));
+        }
+        assert_eq!(b.active(), (0, 0));
+    }
+
+    #[test]
+    fn pace_matches_loggp_solo() {
+        let _t = crate::util::timing::timing_test_lock();
+        let b = bus("cpu_live");
+        let bytes = 16_000_000; // 2 ms at 8 GB/s
+        let want = b.profile().htd.transfer_secs(bytes);
+        let t0 = Instant::now();
+        let _g = b.begin_transfer(true);
+        b.pace(true, bytes);
+        let got = t0.elapsed().as_secs_f64();
+        assert!(
+            (got - want).abs() / want < 0.08,
+            "paced {got:.6}s vs model {want:.6}s"
+        );
+    }
+
+    #[test]
+    fn contended_pace_stretches() {
+        let _t = crate::util::timing::timing_test_lock();
+        let b = bus("amd_r9");
+        let bytes = 12_400_000; // 2 ms solo HtD on r9
+        let solo = b.profile().htd.transfer_secs(bytes);
+        let b2 = b.clone();
+        let other = std::thread::spawn(move || {
+            let _g = b2.begin_transfer(false);
+            // Hold DtH active longer than the HtD transfer.
+            std::thread::sleep(Duration::from_millis(8));
+        });
+        std::thread::sleep(Duration::from_millis(1));
+        let t0 = Instant::now();
+        let _g = b.begin_transfer(true);
+        b.pace(true, bytes);
+        let got = t0.elapsed().as_secs_f64();
+        other.join().unwrap();
+        let want = b.profile().htd.latency
+            + bytes as f64
+                / (b.profile().htd.bytes_per_sec / b.profile().duplex_slowdown);
+        assert!(
+            (got - want).abs() / want < 0.12,
+            "contended pace {got:.6}s vs {want:.6}s (solo {solo:.6}s)"
+        );
+    }
+}

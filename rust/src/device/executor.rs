@@ -1,0 +1,47 @@
+//! Kernel execution backends for the virtual device's compute engine.
+//!
+//! `SpinExecutor` burns the calibrated duration with precise waiting —
+//! used by the three paper-device profiles where kernel times come from
+//! Table 2/Table 5. The PJRT-backed executor (in `runtime::PjrtExecutor`)
+//! runs real AOT artifacts on the CPU client for the `cpu_live` profile.
+
+use std::time::Duration;
+
+use crate::task::KernelSpec;
+use crate::util::timing;
+
+/// A compute-engine backend.
+pub trait KernelExecutor: Send + Sync {
+    /// Execute one kernel command; blocks for its (real) duration.
+    /// `launch_overhead` is the device's fixed invocation cost.
+    fn execute(&self, spec: &KernelSpec, launch_overhead: f64) -> anyhow::Result<()>;
+}
+
+/// Burn exactly the estimated duration.
+#[derive(Default)]
+pub struct SpinExecutor;
+
+impl KernelExecutor for SpinExecutor {
+    fn execute(&self, spec: &KernelSpec, launch_overhead: f64) -> anyhow::Result<()> {
+        let secs = spec.est_secs() + launch_overhead;
+        timing::precise_wait(Duration::from_secs_f64(secs));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn spin_executor_burns_duration() {
+        let _t = crate::util::timing::timing_test_lock();
+        let ex = SpinExecutor;
+        let spec = KernelSpec::Timed { secs: 2e-3 };
+        let t0 = Instant::now();
+        ex.execute(&spec, 100e-6).unwrap();
+        let got = t0.elapsed().as_secs_f64();
+        assert!((got - 2.1e-3).abs() < 200e-6, "{got}");
+    }
+}

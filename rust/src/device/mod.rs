@@ -1,0 +1,22 @@
+//! The virtual accelerator — the hardware-substitution substrate
+//! (DESIGN.md §Hardware-substitution).
+//!
+//! Real OS threads play the device engines: one thread per DMA engine and
+//! one compute thread. Transfers are *paced* against the profile's LogGP
+//! link with cross-direction contention applied fluidly (a bus generation
+//! counter wakes in-flight transfers whenever the active set changes, so
+//! rates re-integrate exactly like the model's re-estimation — but in real
+//! time, with real scheduling jitter). Kernels either spin for their
+//! calibrated duration or execute an AOT artifact on PJRT-CPU.
+//!
+//! The device is intentionally *not* the model: prediction error measured
+//! against it (Fig. 7) reflects genuine asynchrony, jitter and pacing
+//! granularity, as the paper measures against real hardware.
+
+pub mod bus;
+pub mod executor;
+pub mod vdev;
+
+pub use bus::Bus;
+pub use executor::{KernelExecutor, SpinExecutor};
+pub use vdev::{DeviceRun, VirtualDevice};

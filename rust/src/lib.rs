@@ -1,0 +1,38 @@
+//! # oclcc — task-throughput scheduling via command concurrency
+//!
+//! Production-grade reproduction of *"Improving tasks throughput on
+//! accelerators using OpenCL command concurrency"* (Lázaro-Muñoz,
+//! González-Linares, Gómez-Luna, Guil — 2018).
+//!
+//! The crate provides, in dependency order:
+//!
+//! * [`util`] — RNG / stats / JSON / CLI / bench substrate (offline build).
+//! * [`config`] — device profiles (paper Table 1 + LogGP constants).
+//! * [`task`] — tasks, task groups, and the synthetic (Tables 2-3) and
+//!   real (Tables 4-5) catalogs.
+//! * [`model`] — the §4 temporal execution model: transfer models
+//!   (Fig. 6), the linear kernel model (Eq. 1) and the event-driven
+//!   simulator (Figs. 4-5).
+//! * [`sched`] — the §5 Batch Reordering heuristic plus brute-force and
+//!   baseline orderings.
+//! * [`queue`] — OpenCL-style command queues and events (§3.2 submission
+//!   schemes).
+//! * [`device`] — the virtual accelerator: DMA-engine/compute threads
+//!   with paced transfers and optional live PJRT kernel execution.
+//! * [`runtime`] — PJRT artifact registry (HLO text -> compiled
+//!   executables) over the `xla` crate.
+//! * [`coordinator`] — the §6.2 multi-worker proxy-thread runtime.
+//! * [`profiling`] — LogGP / Eq. 1 calibration against the virtual device.
+//! * [`bench`] — harnesses regenerating every paper table and figure.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod model;
+pub mod profiling;
+pub mod queue;
+pub mod runtime;
+pub mod sched;
+pub mod task;
+pub mod util;

@@ -1,0 +1,295 @@
+//! `oclcc` — launcher CLI for the command-concurrency scheduling stack.
+//!
+//! Subcommands:
+//!   devices                      list device profiles (Table 1)
+//!   tasks [--device D]           print task catalogs (Tables 2-5)
+//!   simulate --benchmark BK50    model a group; print timeline + Gantt
+//!   schedule --benchmark BK50    heuristic order + predicted speedup
+//!   run --benchmark BK50         execute on the virtual device
+//!   serve                        multi-worker proxy runtime (§6.2)
+//!   profile [--loggp|--kernels]  calibrate link/kernel constants
+//!   bench <fig6|fig7|fig9|fig10|fig11|table5|table6|ablation|all>
+//!
+//! Common options: --device <amd_r9|k20c|xeon_phi|cpu_live>, --scale S,
+//! --seed N, --quick, --real (sample real tasks instead of synthetic).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use oclcc::bench;
+use oclcc::config::{builtin_profiles, profile_by_name};
+use oclcc::coordinator::{Coordinator, Policy};
+use oclcc::device::{SpinExecutor, VirtualDevice};
+use oclcc::model::timeline::Timeline;
+use oclcc::model::{simulate, EngineState, SimOptions};
+use oclcc::runtime::manifest::default_artifact_dir;
+use oclcc::runtime::{PjrtExecutor, PjrtService};
+use oclcc::sched::bruteforce::OrderStats;
+use oclcc::sched::heuristic::batch_reorder;
+use oclcc::task::real::real_benchmark;
+use oclcc::task::synthetic::synthetic_benchmark;
+use oclcc::task::{TaskGroup, TaskSpec};
+use oclcc::util::cli::Args;
+use oclcc::util::rng::Pcg64;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(argv.into_iter().skip(1));
+    let result = match cmd.as_str() {
+        "devices" => cmd_devices(),
+        "tasks" => cmd_tasks(&args),
+        "simulate" => cmd_simulate(&args),
+        "schedule" => cmd_schedule(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
+        "bench" => cmd_bench(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: oclcc <devices|tasks|simulate|schedule|run|serve|profile|bench> [options]\n\
+         see `oclcc help` and README.md"
+    );
+}
+
+/// Resolve the task group named by --benchmark on --device.
+fn group_from_args(args: &Args) -> Result<(oclcc::config::DeviceProfile, TaskGroup)> {
+    let device = args.opt_or("device", "amd_r9");
+    let profile = profile_by_name(&device)?;
+    let label = args.opt_or("benchmark", "BK50");
+    let scale = args.opt_f64("scale", 1.0);
+    let group = if args.flag("real") {
+        let t = args.opt_usize("t", 4);
+        let mut rng = Pcg64::seeded(args.opt_u64("seed", 7));
+        let table_dev = if device == "cpu_live" { "amd_r9" } else { &device };
+        real_benchmark(&label, table_dev, &profile, t, &mut rng, scale)?
+    } else {
+        synthetic_benchmark(&label, &profile, scale)?
+    };
+    Ok((profile, group))
+}
+
+fn cmd_devices() -> Result<()> {
+    let mut t = oclcc::util::table::Table::new(&[
+        "name", "DMA", "HtD GB/s", "DtH GB/s", "sigma", "kernel backend",
+    ]);
+    for p in builtin_profiles() {
+        t.row(vec![
+            p.name.clone(),
+            p.dma_engines.to_string(),
+            format!("{:.1}", p.htd.bytes_per_sec / 1e9),
+            format!("{:.1}", p.dth.bytes_per_sec / 1e9),
+            format!("{:.2}", p.duplex_slowdown),
+            if p.name == "cpu_live" {
+                "PJRT artifacts".into()
+            } else {
+                "calibrated spin".into()
+            },
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_tasks(args: &Args) -> Result<()> {
+    bench::table5::run(args)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (profile, group) = group_from_args(args)?;
+    let r = simulate(
+        &group.tasks,
+        &profile,
+        EngineState::default(),
+        SimOptions { record_timeline: true },
+    );
+    println!("device {} / {} tasks", profile.name, group.len());
+    print!("{}", Timeline(&r.timeline).gantt(72));
+    println!("predicted makespan: {:.3} ms", r.makespan * 1e3);
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let (profile, group) = group_from_args(args)?;
+    let mut rng = Pcg64::seeded(args.opt_u64("seed", 7));
+    let st = OrderStats::exhaustive(&group.tasks, &profile, 720, &mut rng);
+    let order = batch_reorder(&group.tasks, &profile, EngineState::default());
+    let h_tasks: Vec<TaskSpec> =
+        order.iter().map(|&i| group.tasks[i].clone()).collect();
+    let h = simulate(&h_tasks, &profile, EngineState::default(), SimOptions::default())
+        .makespan;
+    println!("device {}: {} tasks", profile.name, group.len());
+    println!(
+        "heuristic order: {:?}",
+        order
+            .iter()
+            .map(|&i| group.tasks[i].name.as_str())
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "predicted: heuristic {:.3} ms | best {:.3} | mean {:.3} | worst {:.3}",
+        h * 1e3,
+        st.best * 1e3,
+        st.mean * 1e3,
+        st.worst * 1e3
+    );
+    println!(
+        "speedup vs worst: {:.3}x (best possible {:.3}x)",
+        st.worst / h,
+        st.worst / st.best
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (profile, group) = group_from_args(args)?;
+    let device = make_device(&profile)?;
+    let order = if args.opt_or("policy", "heuristic") == "heuristic" {
+        batch_reorder(&group.tasks, &profile, EngineState::default())
+    } else {
+        (0..group.len()).collect()
+    };
+    let ordered: Vec<TaskSpec> =
+        order.iter().map(|&i| group.tasks[i].clone()).collect();
+    let pred = simulate(&ordered, &profile, EngineState::default(), SimOptions::default())
+        .makespan;
+    let run = device.run_group(&ordered);
+    print!("{}", Timeline(&run.timeline).gantt(72));
+    println!(
+        "measured {:.3} ms | predicted {:.3} ms | error {:.2}%",
+        run.makespan * 1e3,
+        pred * 1e3,
+        (run.makespan - pred).abs() / run.makespan * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (profile, group) = group_from_args(args)?;
+    let t = args.opt_usize("t", 4);
+    let n = args.opt_usize("n", 2);
+    let device = Arc::new(make_device(&profile)?);
+    let mut rng = Pcg64::seeded(args.opt_u64("seed", 7));
+    let batches: Vec<Vec<TaskSpec>> = (0..t)
+        .map(|_| {
+            (0..n)
+                .map(|_| group.tasks[rng.below(group.len() as u64) as usize].clone())
+                .collect()
+        })
+        .collect();
+    for policy in [Policy::NoReorder, Policy::Heuristic] {
+        let coord = Coordinator::new(device.clone(), policy);
+        let m = coord.run(batches.clone());
+        println!(
+            "{policy:?}: {} tasks in {:.1} ms -> {:.1} tasks/s, mean latency {:.2} ms, sched overhead {:.3} ms",
+            m.n_tasks,
+            m.total_secs * 1e3,
+            m.tasks_per_sec,
+            m.mean_latency() * 1e3,
+            m.sched_overhead_secs * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let device = args.opt_or("device", "cpu_live");
+    let profile = profile_by_name(&device)?;
+    if args.flag("loggp") || !args.flag("kernels") {
+        let sizes: Vec<u64> = vec![4, 8, 12, 16]
+            .into_iter()
+            .map(|mb: u64| mb * 1_000_000)
+            .collect();
+        let cal = oclcc::profiling::calibrate_link(&profile, &sizes);
+        println!(
+            "link calibration ({device}): HtD {:.2} GB/s lat {:.0} us | DtH {:.2} GB/s lat {:.0} us | sigma {:.3}",
+            cal.htd.bytes_per_sec / 1e9,
+            cal.htd.latency * 1e6,
+            cal.dth.bytes_per_sec / 1e9,
+            cal.dth.latency * 1e6,
+            cal.duplex_slowdown
+        );
+    }
+    if args.flag("kernels") || !args.flag("loggp") {
+        let runtime = oclcc::runtime::PjrtRuntime::new(&default_artifact_dir())?;
+        println!("PJRT platform: {}", runtime.platform());
+        let cal =
+            oclcc::profiling::calibrate_kernels(&runtime, args.opt_usize("reps", 3))?;
+        let mut t = oclcc::util::table::Table::new(&["variant", "median (ms)"]);
+        for (name, secs) in &cal.variant_secs {
+            t.row(vec![name.clone(), format!("{:.3}", secs * 1e3)]);
+        }
+        t.print();
+        let mut t2 =
+            oclcc::util::table::Table::new(&["family", "eta (ns/B)", "gamma (us)"]);
+        for (fam, m) in &cal.models {
+            t2.row(vec![
+                fam.clone(),
+                format!("{:.3}", m.eta * 1e9),
+                format!("{:.1}", m.gamma * 1e6),
+            ]);
+        }
+        t2.print();
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "fig6" => bench::fig6::run(args),
+        "fig7" => bench::fig7::run(args),
+        "fig9" => bench::fig9::run(args),
+        "fig10" => bench::fig10::run(args),
+        "fig11" => bench::fig11::run(args),
+        "table5" => bench::table5::run(args),
+        "table6" => bench::table6::run(args),
+        "ablation" => bench::ablation::run(args),
+        "all" => {
+            bench::fig6::run(args)?;
+            bench::fig7::run(args)?;
+            bench::fig9::run(args)?;
+            bench::fig10::run(args)?;
+            bench::fig11::run(args)?;
+            bench::table5::run(args)?;
+            bench::table6::run(args)?;
+            bench::ablation::run(args)
+        }
+        other => anyhow::bail!("unknown bench '{other}'"),
+    }
+}
+
+/// Device factory: the three paper profiles spin their calibrated kernel
+/// durations; `cpu_live` executes real AOT artifacts via PJRT.
+fn make_device(profile: &oclcc::config::DeviceProfile) -> Result<VirtualDevice> {
+    if profile.name == "cpu_live" {
+        let service = PjrtService::start(default_artifact_dir())?;
+        Ok(VirtualDevice::new(
+            profile.clone(),
+            Arc::new(PjrtExecutor::new(service)),
+        ))
+    } else {
+        Ok(VirtualDevice::new(profile.clone(), Arc::new(SpinExecutor)))
+    }
+}

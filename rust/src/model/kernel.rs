@@ -1,0 +1,81 @@
+//! Linear kernel-time model `T = eta * m + gamma` (paper Eq. 1, after Liu
+//! et al. [13]): `eta` is the computing rate (seconds per unit data),
+//! `gamma` the kernel invocation latency. Calibrated offline per kernel by
+//! least squares over (size, time) observations — `oclcc profile` collects
+//! them on the live PJRT device, mirroring the paper's offline profiling.
+
+use crate::util::stats;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearKernelModel {
+    /// Seconds per unit of data size.
+    pub eta: f64,
+    /// Invocation latency (seconds).
+    pub gamma: f64,
+}
+
+impl LinearKernelModel {
+    pub fn new(eta: f64, gamma: f64) -> Self {
+        LinearKernelModel { eta, gamma }
+    }
+
+    /// Least-squares fit over (size m, measured seconds) pairs.
+    /// Negative intercepts are clamped to zero (a kernel cannot launch in
+    /// negative time; noise on two close sizes can otherwise produce one).
+    pub fn fit(sizes: &[f64], times: &[f64]) -> Self {
+        let (eta, gamma) = stats::linfit(sizes, times);
+        LinearKernelModel { eta, gamma: gamma.max(0.0) }
+    }
+
+    /// Predicted execution time for input size `m`.
+    pub fn predict(&self, m: f64) -> f64 {
+        self.eta * m + self.gamma
+    }
+
+    /// Mean relative error of the fit over a validation set.
+    pub fn validation_error(&self, sizes: &[f64], times: &[f64]) -> f64 {
+        assert_eq!(sizes.len(), times.len());
+        let errs: Vec<f64> = sizes
+            .iter()
+            .zip(times)
+            .map(|(&m, &t)| stats::rel_err(self.predict(m), t))
+            .collect();
+        stats::mean(&errs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn fit_recovers_eta_gamma() {
+        let sizes: Vec<f64> = (1..20).map(|i| (i * 1024) as f64).collect();
+        let times: Vec<f64> =
+            sizes.iter().map(|m| 2e-9 * m + 30e-6).collect();
+        let model = LinearKernelModel::fit(&sizes, &times);
+        assert!((model.eta - 2e-9).abs() < 1e-13);
+        assert!((model.gamma - 30e-6).abs() < 1e-9);
+        assert!(model.validation_error(&sizes, &times) < 1e-9);
+    }
+
+    #[test]
+    fn fit_with_noise_stays_close() {
+        let mut rng = Pcg64::seeded(2);
+        let sizes: Vec<f64> = (1..100).map(|i| (i * 4096) as f64).collect();
+        let times: Vec<f64> = sizes
+            .iter()
+            .map(|m| (1e-9 * m + 50e-6) * rng.uniform(0.98, 1.02))
+            .collect();
+        let model = LinearKernelModel::fit(&sizes, &times);
+        assert!(model.validation_error(&sizes, &times) < 0.03);
+    }
+
+    #[test]
+    fn gamma_clamped_nonnegative() {
+        // Two points implying a negative intercept.
+        let model = LinearKernelModel::fit(&[10.0, 20.0], &[0.5e-3, 1.5e-3]);
+        assert!(model.gamma >= 0.0);
+    }
+}

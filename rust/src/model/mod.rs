@@ -1,0 +1,21 @@
+//! The paper's §4 temporal execution model.
+//!
+//! * `transfer` — PCIe transfer-time models: LogGP solo times plus the
+//!   three bidirectional-overlap predictors compared in Fig. 6
+//!   (non-overlapped, fully-overlapped, and the paper's partially
+//!   overlapped model).
+//! * `kernel` — the linear kernel-time model `T = eta * m + gamma` (Eq. 1)
+//!   with least-squares calibration.
+//! * `simulator` — the event-driven simulator over three FIFO command
+//!   queues (Figs. 4-5) that predicts the makespan of an ordered task
+//!   group, with overlap re-estimation at every step.
+//! * `timeline` — per-command records, ASCII Gantt rendering and overlap
+//!   metrics used by reports and tests.
+
+pub mod kernel;
+pub mod simulator;
+pub mod timeline;
+pub mod transfer;
+
+pub use simulator::{simulate, EngineState, SimOptions, SimResult};
+pub use timeline::{CmdKind, CmdRecord};

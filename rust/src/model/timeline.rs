@@ -1,0 +1,147 @@
+//! Per-command execution records (the paper's "time counter structures",
+//! Fig. 5), ASCII Gantt rendering, and overlap/idleness metrics.
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CmdKind {
+    HtD,
+    Kernel,
+    DtH,
+}
+
+impl fmt::Display for CmdKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CmdKind::HtD => write!(f, "HtD"),
+            CmdKind::Kernel => write!(f, "K"),
+            CmdKind::DtH => write!(f, "DtH"),
+        }
+    }
+}
+
+/// One executed (or simulated) command occurrence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CmdRecord {
+    /// Index of the task within the submitted group (submission order).
+    pub task: usize,
+    pub kind: CmdKind,
+    /// Command index within its stage (multi-command stages).
+    pub seq: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl CmdRecord {
+    pub fn dur(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Aggregate view of a command timeline.
+pub struct Timeline<'a>(pub &'a [CmdRecord]);
+
+impl<'a> Timeline<'a> {
+    pub fn makespan(&self) -> f64 {
+        self.0.iter().map(|r| r.end).fold(0.0, f64::max)
+    }
+
+    /// Sum of command durations: the zero-overlap serial floor.
+    pub fn busy_sum(&self) -> f64 {
+        self.0.iter().map(CmdRecord::dur).sum()
+    }
+
+    /// Overlap win: serial floor minus makespan (>= 0 when any commands
+    /// ran concurrently).
+    pub fn overlap_gain(&self) -> f64 {
+        self.busy_sum() - self.makespan()
+    }
+
+    /// Busy time of one command kind (per-engine utilization numerator).
+    pub fn busy_of(&self, kind: CmdKind) -> f64 {
+        self.0.iter().filter(|r| r.kind == kind).map(CmdRecord::dur).sum()
+    }
+
+    /// Render an ASCII Gantt: one row per (task, kind), `width` chars wide.
+    pub fn gantt(&self, width: usize) -> String {
+        let span = self.makespan();
+        if span <= 0.0 || self.0.is_empty() {
+            return String::from("(empty timeline)\n");
+        }
+        let ntasks = self.0.iter().map(|r| r.task).max().unwrap_or(0) + 1;
+        let mut out = String::new();
+        for task in 0..ntasks {
+            for kind in [CmdKind::HtD, CmdKind::Kernel, CmdKind::DtH] {
+                let recs: Vec<&CmdRecord> = self
+                    .0
+                    .iter()
+                    .filter(|r| r.task == task && r.kind == kind)
+                    .collect();
+                if recs.is_empty() {
+                    continue;
+                }
+                let mut row = vec![b' '; width];
+                for r in &recs {
+                    let a = ((r.start / span) * width as f64) as usize;
+                    let b = (((r.end / span) * width as f64).ceil() as usize)
+                        .min(width);
+                    let ch = match kind {
+                        CmdKind::HtD => b'>',
+                        CmdKind::Kernel => b'#',
+                        CmdKind::DtH => b'<',
+                    };
+                    for c in row.iter_mut().take(b).skip(a) {
+                        *c = ch;
+                    }
+                }
+                out.push_str(&format!(
+                    "T{task:<2} {kind:<3} |{}|\n",
+                    String::from_utf8(row).unwrap()
+                ));
+            }
+        }
+        out.push_str(&format!("makespan = {:.3} ms\n", span * 1e3));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(task: usize, kind: CmdKind, start: f64, end: f64) -> CmdRecord {
+        CmdRecord { task, kind, seq: 0, start, end }
+    }
+
+    #[test]
+    fn metrics() {
+        let recs = vec![
+            rec(0, CmdKind::HtD, 0.0, 1.0),
+            rec(0, CmdKind::Kernel, 1.0, 3.0),
+            rec(1, CmdKind::HtD, 1.0, 2.0), // overlaps task 0's kernel
+            rec(0, CmdKind::DtH, 3.0, 4.0),
+        ];
+        let t = Timeline(&recs);
+        assert_eq!(t.makespan(), 4.0);
+        assert_eq!(t.busy_sum(), 5.0);
+        assert_eq!(t.overlap_gain(), 1.0);
+        assert_eq!(t.busy_of(CmdKind::HtD), 2.0);
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let recs = vec![
+            rec(0, CmdKind::HtD, 0.0, 0.5),
+            rec(0, CmdKind::Kernel, 0.5, 1.0),
+        ];
+        let g = Timeline(&recs).gantt(40);
+        assert!(g.contains("T0  HtD"), "{g}");
+        assert!(g.contains('#') && g.contains('>'), "{g}");
+        assert!(g.contains("makespan"), "{g}");
+    }
+
+    #[test]
+    fn empty_timeline() {
+        assert!(Timeline(&[]).gantt(10).contains("empty"));
+    }
+}

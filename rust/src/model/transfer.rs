@@ -1,0 +1,233 @@
+//! Bidirectional PCIe transfer-time models (paper §4.2.1, Fig. 6).
+//!
+//! Solo transfers follow the reduced LogGP form `t = latency + bytes/bw`
+//! (van Werkhoven et al. [21]). For two transfers in *opposite* directions
+//! whose executions overlap, three predictors are compared:
+//!
+//! * **NonOverlapped** — pretends the engines serialize: the second
+//!   transfer only starts when the first ends. Accurate at 0% overlap,
+//!   pessimistic elsewhere.
+//! * **FullOverlap** — pretends both directions run at full bandwidth.
+//!   Accurate at 0% and optimistic at high overlap on real buses, where
+//!   duplex traffic contends for protocol/host-memory bandwidth.
+//! * **PartialOverlap** (the paper's model) — while both directions are
+//!   active each link runs at `bw / sigma` with a measured slowdown
+//!   `sigma >= 1`; rates integrate piecewise. Accurate at any degree.
+
+use crate::config::DeviceProfile;
+
+/// Which bidirectional predictor to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapModel {
+    NonOverlapped,
+    FullOverlap,
+    PartialOverlap,
+}
+
+/// Prediction for a HtD/DtH pair: completion times of both transfers,
+/// measured from the start of the first (HtD) transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PairPrediction {
+    /// HtD completion time (s).
+    pub t_htd: f64,
+    /// DtH completion time (s), absolute (includes its start offset).
+    pub t_dth: f64,
+}
+
+impl PairPrediction {
+    pub fn makespan(&self) -> f64 {
+        self.t_htd.max(self.t_dth)
+    }
+}
+
+/// Predict an HtD transfer of `htd_bytes` starting at t=0 and a DtH
+/// transfer of `dth_bytes` starting at `dth_start >= 0`, on `profile`.
+pub fn predict_pair(
+    model: OverlapModel,
+    profile: &DeviceProfile,
+    htd_bytes: u64,
+    dth_bytes: u64,
+    dth_start: f64,
+) -> PairPrediction {
+    let solo_h = profile.htd.transfer_secs(htd_bytes);
+    let solo_d = profile.dth.transfer_secs(dth_bytes);
+    // One DMA engine cannot overlap at all: every model degenerates to
+    // serialization on such devices.
+    if profile.dma_engines < 2 {
+        let dth_begin = dth_start.max(solo_h);
+        return PairPrediction { t_htd: solo_h, t_dth: dth_begin + solo_d };
+    }
+    match model {
+        OverlapModel::NonOverlapped => {
+            let dth_begin = dth_start.max(solo_h);
+            PairPrediction { t_htd: solo_h, t_dth: dth_begin + solo_d }
+        }
+        OverlapModel::FullOverlap => {
+            PairPrediction { t_htd: solo_h, t_dth: dth_start + solo_d }
+        }
+        OverlapModel::PartialOverlap => {
+            predict_partial(profile, htd_bytes, dth_bytes, dth_start)
+        }
+    }
+}
+
+/// Piecewise-rate integration of the partially overlapped pair.
+fn predict_partial(
+    profile: &DeviceProfile,
+    htd_bytes: u64,
+    dth_bytes: u64,
+    dth_start: f64,
+) -> PairPrediction {
+    let sigma = profile.duplex_slowdown;
+    let bw_h = profile.htd.bytes_per_sec;
+    let bw_d = profile.dth.bytes_per_sec;
+
+    // Phase 0: HtD alone until dth_start (latency first, then bytes).
+    let mut h_lat = profile.htd.latency;
+    let mut h_bytes = htd_bytes as f64;
+    let mut t = 0.0;
+    let solo_end_h;
+
+    // Advance HtD alone to dth_start.
+    let alone = dth_start - t;
+    let (lat_used, bytes_time) = advance(h_lat, h_bytes, bw_h, alone);
+    h_lat -= lat_used;
+    h_bytes -= bytes_time * bw_h;
+    t = dth_start;
+    if h_lat <= 1e-15 && h_bytes <= 1e-9 {
+        // HtD finished before DtH began: no overlap at all.
+        solo_end_h = profile.htd.transfer_secs(htd_bytes);
+        return PairPrediction {
+            t_htd: solo_end_h,
+            t_dth: dth_start + profile.dth.transfer_secs(dth_bytes),
+        };
+    }
+
+    // Phase 1: both active; each at bw/sigma (latency burns in real time).
+    let mut d_lat = profile.dth.latency;
+    let mut d_bytes = dth_bytes as f64;
+    let rem_h = h_lat + h_bytes / (bw_h / sigma);
+    let rem_d = d_lat + d_bytes / (bw_d / sigma);
+    if rem_h <= rem_d {
+        // HtD ends first; DtH continues at full rate.
+        let t_htd = t + rem_h;
+        let (lu, bt) = advance(d_lat, d_bytes, bw_d / sigma, rem_h);
+        d_lat -= lu;
+        d_bytes -= bt * (bw_d / sigma);
+        let t_dth = t_htd + d_lat + d_bytes / bw_d;
+        PairPrediction { t_htd, t_dth }
+    } else {
+        let t_dth = t + rem_d;
+        let (lu, bt) = advance(h_lat, h_bytes, bw_h / sigma, rem_d);
+        h_lat -= lu;
+        h_bytes -= bt * (bw_h / sigma);
+        let t_htd = t_dth + h_lat + h_bytes / bw_h;
+        PairPrediction { t_htd, t_dth }
+    }
+}
+
+/// Burn `dt` seconds of a (latency, bytes@rate) transfer; returns
+/// (latency consumed, seconds spent moving bytes).
+fn advance(lat: f64, bytes: f64, rate: f64, dt: f64) -> (f64, f64) {
+    if dt <= 0.0 {
+        return (0.0, 0.0);
+    }
+    if dt <= lat {
+        return (dt, 0.0);
+    }
+    let bytes_time = (dt - lat).min(bytes / rate);
+    (lat, bytes_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+
+    fn r9() -> DeviceProfile {
+        profile_by_name("amd_r9").unwrap()
+    }
+
+    #[test]
+    fn all_models_agree_at_zero_overlap() {
+        let p = r9();
+        let b = 32 * 1024 * 1024;
+        let solo_h = p.htd.transfer_secs(b);
+        for m in [
+            OverlapModel::NonOverlapped,
+            OverlapModel::FullOverlap,
+            OverlapModel::PartialOverlap,
+        ] {
+            // DtH starts exactly when HtD finishes: no overlap.
+            let pred = predict_pair(m, &p, b, b, solo_h);
+            assert!((pred.t_htd - solo_h).abs() < 1e-9, "{m:?}");
+            assert!(
+                (pred.t_dth - (solo_h + p.dth.transfer_secs(b))).abs() < 1e-9,
+                "{m:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_sits_between_extremes() {
+        let p = r9();
+        let b = 64 * 1024 * 1024;
+        for frac in [0.0, 0.25, 0.5, 0.75] {
+            let start = frac * p.htd.transfer_secs(b);
+            let non = predict_pair(OverlapModel::NonOverlapped, &p, b, b, start);
+            let full = predict_pair(OverlapModel::FullOverlap, &p, b, b, start);
+            let ours = predict_pair(OverlapModel::PartialOverlap, &p, b, b, start);
+            assert!(
+                ours.makespan() <= non.makespan() + 1e-9,
+                "frac={frac}: ours {} vs non {}",
+                ours.makespan(),
+                non.makespan()
+            );
+            assert!(
+                ours.makespan() >= full.makespan() - 1e-9,
+                "frac={frac}: ours {} vs full {}",
+                ours.makespan(),
+                full.makespan()
+            );
+        }
+    }
+
+    #[test]
+    fn partial_full_overlap_slowdown() {
+        // Simultaneous start, equal sizes, near-symmetric links: both see
+        // ~sigma slowdown while overlapped.
+        let mut p = r9();
+        p.htd.bytes_per_sec = 6e9;
+        p.dth.bytes_per_sec = 6e9;
+        p.htd.latency = 0.0;
+        p.dth.latency = 0.0;
+        let b = 60_000_000; // 10 ms solo
+        let ours = predict_pair(OverlapModel::PartialOverlap, &p, b, b, 0.0);
+        let solo = 0.01;
+        assert!((ours.t_htd - solo * p.duplex_slowdown).abs() < 1e-4);
+        assert!((ours.t_dth - solo * p.duplex_slowdown).abs() < 1e-4);
+    }
+
+    #[test]
+    fn single_dma_always_serializes() {
+        let p = profile_by_name("xeon_phi").unwrap();
+        let b = 16 * 1024 * 1024;
+        let pred = predict_pair(OverlapModel::FullOverlap, &p, b, b, 0.0);
+        let solo_h = p.htd.transfer_secs(b);
+        assert!((pred.t_dth - (solo_h + p.dth.transfer_secs(b))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_finisher_frees_bandwidth() {
+        let p = r9();
+        // Small DtH overlapping a large HtD: after DtH ends, HtD should run
+        // at full speed again -> total < fully-contended estimate.
+        let big = 128 * 1024 * 1024;
+        let small = 8 * 1024 * 1024;
+        let ours = predict_pair(OverlapModel::PartialOverlap, &p, big, small, 0.0);
+        let fully_contended =
+            p.htd.latency + big as f64 / (p.htd.bytes_per_sec / p.duplex_slowdown);
+        assert!(ours.t_htd < fully_contended);
+        assert!(ours.t_htd > p.htd.transfer_secs(big));
+    }
+}

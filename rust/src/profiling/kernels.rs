@@ -1,0 +1,87 @@
+//! Eq. 1 calibration on the live PJRT runtime: time each artifact variant,
+//! fit `T = eta * m + gamma` per kernel family, and hand back per-variant
+//! duration estimates for the scheduler's model (the paper keeps exactly
+//! these two parameters per kernel from an offline run).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::kernel::LinearKernelModel;
+use crate::runtime::engine::PjrtRuntime;
+use crate::util::stats;
+
+/// Calibration output.
+#[derive(Clone, Debug, Default)]
+pub struct KernelCalibration {
+    /// Per-family linear model over htd_bytes as the size proxy.
+    pub models: BTreeMap<String, LinearKernelModel>,
+    /// Median measured seconds per variant.
+    pub variant_secs: BTreeMap<String, f64>,
+}
+
+impl KernelCalibration {
+    /// Model-estimated seconds for a variant (fall back to measurement).
+    pub fn estimate(&self, runtime: &PjrtRuntime, variant: &str) -> Option<f64> {
+        if let Some(&t) = self.variant_secs.get(variant) {
+            return Some(t);
+        }
+        let meta = runtime.manifest().get(variant).ok()?;
+        self.models.get(&meta.kernel).map(|m| m.predict(meta.htd_bytes as f64))
+    }
+}
+
+/// Time every variant `reps` times (after one warmup) and fit per-family
+/// linear models.
+pub fn calibrate_kernels(runtime: &PjrtRuntime, reps: usize) -> Result<KernelCalibration> {
+    let mut cal = KernelCalibration::default();
+    let names: Vec<String> =
+        runtime.manifest().variants.keys().cloned().collect();
+    for name in &names {
+        runtime.warmup(name)?;
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            samples.push(runtime.execute(name)?.exec_secs);
+        }
+        cal.variant_secs.insert(name.clone(), stats::median(&samples));
+    }
+    // Per-family fits over (htd_bytes, time).
+    let families: std::collections::BTreeSet<String> = runtime
+        .manifest()
+        .variants
+        .values()
+        .map(|v| v.kernel.clone())
+        .collect();
+    for fam in families {
+        let pts: Vec<(f64, f64)> = runtime
+            .manifest()
+            .family(&fam)
+            .iter()
+            .map(|v| (v.htd_bytes as f64, cal.variant_secs[&v.name]))
+            .collect();
+        if pts.len() >= 2 {
+            let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+            let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+            cal.models.insert(fam, LinearKernelModel::fit(&xs, &ys));
+        }
+    }
+    Ok(cal)
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs.
+    use super::*;
+
+    #[test]
+    fn estimate_prefers_measurement() {
+        let mut cal = KernelCalibration::default();
+        cal.variant_secs.insert("mm_256".into(), 1.5e-3);
+        cal.models.insert(
+            "matmul".into(),
+            LinearKernelModel::new(1e-9, 1e-4),
+        );
+        // No runtime needed when the variant was measured directly.
+        assert_eq!(cal.variant_secs.get("mm_256"), Some(&1.5e-3));
+    }
+}

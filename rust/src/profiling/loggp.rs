@@ -1,0 +1,109 @@
+//! Link calibration: replays the paper's PCIe micro-benchmark against the
+//! virtual device bus and fits the reduced LogGP parameters. In a real
+//! deployment this would run against actual hardware once; here it closes
+//! the loop model -> device -> measured constants -> model.
+
+use std::sync::Arc;
+
+use crate::config::{DeviceProfile, LinkParams};
+use crate::device::bus::Bus;
+use crate::util::stats;
+
+/// Measured link constants.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkCalibration {
+    pub htd: LinkParams,
+    pub dth: LinkParams,
+    /// Measured duplex slowdown sigma (1.0 on single-DMA devices).
+    pub duplex_slowdown: f64,
+}
+
+/// Calibrate by timing solo transfers over `sizes` bytes in each
+/// direction, then a fully overlapped pair to extract sigma.
+pub fn calibrate_link(profile: &DeviceProfile, sizes: &[u64]) -> LinkCalibration {
+    assert!(sizes.len() >= 2, "need >= 2 sizes to fit a line");
+    let bus = Bus::new(Arc::new(profile.clone()));
+
+    let fit_dir = |htd: bool| -> LinkParams {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &bytes in sizes {
+            let t0 = std::time::Instant::now();
+            let _g = bus.begin_transfer(htd);
+            bus.pace(htd, bytes);
+            drop(_g);
+            xs.push(bytes as f64);
+            ys.push(t0.elapsed().as_secs_f64());
+        }
+        let (g_slope, latency) = stats::linfit(&xs, &ys);
+        LinkParams {
+            latency: latency.max(0.0),
+            bytes_per_sec: 1.0 / g_slope.max(1e-18),
+        }
+    };
+    let htd = fit_dir(true);
+    let dth = fit_dir(false);
+
+    // Duplex: run equal-size transfers in both directions simultaneously.
+    let duplex_slowdown = if profile.dma_engines < 2 {
+        1.0
+    } else {
+        let bytes = *sizes.last().unwrap();
+        let solo = htd.transfer_secs(bytes);
+        let bus2 = bus.clone();
+        let other = std::thread::spawn(move || {
+            let _g = bus2.begin_transfer(false);
+            bus2.pace(false, bytes);
+        });
+        let t0 = std::time::Instant::now();
+        let _g = bus.begin_transfer(true);
+        bus.pace(true, bytes);
+        drop(_g);
+        let overlapped = t0.elapsed().as_secs_f64();
+        other.join().unwrap();
+        (overlapped / solo).max(1.0)
+    };
+
+    LinkCalibration { htd, dth, duplex_slowdown }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+
+    #[test]
+    fn recovers_profile_constants() {
+        let _t = crate::util::timing::timing_test_lock();
+        let p = profile_by_name("cpu_live").unwrap();
+        // Sizes chosen so transfers are 0.5-2 ms: fast test, good fit.
+        let sizes: Vec<u64> =
+            vec![4_000_000, 8_000_000, 12_000_000, 16_000_000];
+        let cal = calibrate_link(&p, &sizes);
+        let bw_err = (cal.htd.bytes_per_sec - p.htd.bytes_per_sec).abs()
+            / p.htd.bytes_per_sec;
+        assert!(bw_err < 0.10, "bw err {bw_err}");
+        assert!(cal.htd.latency < 200e-6, "latency {}", cal.htd.latency);
+    }
+
+    #[test]
+    fn duplex_sigma_close_to_profile() {
+        let _t = crate::util::timing::timing_test_lock();
+        let p = profile_by_name("amd_r9").unwrap();
+        let sizes: Vec<u64> = vec![6_000_000, 12_000_000];
+        let cal = calibrate_link(&p, &sizes);
+        assert!(
+            (cal.duplex_slowdown - p.duplex_slowdown).abs() < 0.15,
+            "sigma {} vs {}",
+            cal.duplex_slowdown,
+            p.duplex_slowdown
+        );
+    }
+
+    #[test]
+    fn single_dma_sigma_is_one() {
+        let p = profile_by_name("xeon_phi").unwrap();
+        let cal = calibrate_link(&p, &[2_000_000, 4_000_000]);
+        assert_eq!(cal.duplex_slowdown, 1.0);
+    }
+}

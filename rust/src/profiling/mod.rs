@@ -1,0 +1,14 @@
+//! Offline calibration (paper §4.2): measures the constants the temporal
+//! model consumes, the way the paper runs micro-benchmarks on each device.
+//!
+//! * [`loggp`] — transfer-link calibration: solo latency/bandwidth per
+//!   direction (LogGP reduced form) and the duplex slowdown sigma.
+//! * [`kernels`] — Eq. 1 calibration: measures artifact execution times on
+//!   the PJRT runtime across each family's size variants and fits
+//!   `T = eta * m + gamma`.
+
+pub mod kernels;
+pub mod loggp;
+
+pub use kernels::{calibrate_kernels, KernelCalibration};
+pub use loggp::{calibrate_link, LinkCalibration};

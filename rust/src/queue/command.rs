@@ -1,0 +1,82 @@
+//! The command vocabulary the host proxy submits to the virtual device.
+
+use crate::queue::event::Event;
+use crate::task::KernelSpec;
+
+/// Which software command queue a command is enqueued on (paper §3.2:
+/// OpenCL associates even/odd CQs with different DMA engines; we keep the
+/// same three-queue layout for 2-DMA devices and two queues for 1-DMA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QueueId {
+    /// Transfers HtD (2-DMA) or *all* transfers (1-DMA).
+    Transfer0,
+    /// Transfers DtH (2-DMA only).
+    Transfer1,
+    /// Kernel execution queue.
+    Compute,
+}
+
+#[derive(Clone, Debug)]
+pub enum CommandKind {
+    HtD { bytes: u64 },
+    Kernel { spec: KernelSpec },
+    DtH { bytes: u64 },
+}
+
+impl CommandKind {
+    pub fn is_transfer(&self) -> bool {
+        !matches!(self, CommandKind::Kernel { .. })
+    }
+}
+
+/// One submitted command: payload + dependency events + completion event.
+#[derive(Clone, Debug)]
+pub struct Command {
+    /// Task index within the submitted group (for records/metrics).
+    pub task: usize,
+    /// Command index within its stage.
+    pub seq: usize,
+    pub kind: CommandKind,
+    /// Events that must be complete before this command may start
+    /// (intra-task green arrows; the 1-DMA red arrow is enforced by queue
+    /// ordering, not an event, exactly as in Fig. 2).
+    pub waits: Vec<Event>,
+    /// Event this command completes when it finishes.
+    pub completion: Event,
+}
+
+impl Command {
+    pub fn new(task: usize, seq: usize, kind: CommandKind, waits: Vec<Event>) -> Self {
+        Command { task, seq, kind, waits, completion: Event::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_classification() {
+        assert!(CommandKind::HtD { bytes: 4 }.is_transfer());
+        assert!(CommandKind::DtH { bytes: 4 }.is_transfer());
+        assert!(!CommandKind::Kernel {
+            spec: KernelSpec::Timed { secs: 1e-3 }
+        }
+        .is_transfer());
+    }
+
+    #[test]
+    fn command_carries_events() {
+        let dep = Event::new();
+        let c = Command::new(
+            2,
+            0,
+            CommandKind::HtD { bytes: 128 },
+            vec![dep.clone()],
+        );
+        assert_eq!(c.task, 2);
+        assert!(!c.completion.is_complete());
+        dep.complete(0.0);
+        assert!(c.waits[0].is_complete());
+    }
+}

@@ -1,0 +1,101 @@
+//! OpenCL-style events: one-shot completion flags with blocking waiters.
+//!
+//! The host proxy associates an event with each submitted command; later
+//! commands in *other* queues list events as wait conditions, reproducing
+//! the red/green dependency arrows of Figs. 2-4.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug, Default)]
+pub struct Event {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    done: Mutex<Option<f64>>, // completion timestamp (secs since epoch t0)
+    cv: Condvar,
+}
+
+impl Event {
+    pub fn new() -> Self {
+        Event::default()
+    }
+
+    /// Signal completion at `timestamp` (seconds on the device clock).
+    /// Signalling twice is a bug in the caller.
+    pub fn complete(&self, timestamp: f64) {
+        let mut g = self.inner.done.lock().unwrap();
+        assert!(g.is_none(), "event completed twice");
+        *g = Some(timestamp);
+        self.inner.cv.notify_all();
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.inner.done.lock().unwrap().is_some()
+    }
+
+    /// Completion timestamp if signalled.
+    pub fn timestamp(&self) -> Option<f64> {
+        *self.inner.done.lock().unwrap()
+    }
+
+    /// Block until completion; returns the completion timestamp.
+    pub fn wait(&self) -> f64 {
+        let mut g = self.inner.done.lock().unwrap();
+        while g.is_none() {
+            g = self.inner.cv.wait(g).unwrap();
+        }
+        g.unwrap()
+    }
+
+    /// Block with a timeout; None on timeout.
+    pub fn wait_timeout(&self, d: Duration) -> Option<f64> {
+        let deadline = Instant::now() + d;
+        let mut g = self.inner.done.lock().unwrap();
+        while g.is_none() {
+            let left = deadline.checked_duration_since(Instant::now())?;
+            let (ng, res) = self.inner.cv.wait_timeout(g, left).unwrap();
+            g = ng;
+            if res.timed_out() && g.is_none() {
+                return None;
+            }
+        }
+        *g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn signal_and_wait() {
+        let e = Event::new();
+        assert!(!e.is_complete());
+        let e2 = e.clone();
+        let h = thread::spawn(move || e2.wait());
+        thread::sleep(Duration::from_millis(5));
+        e.complete(1.25);
+        assert_eq!(h.join().unwrap(), 1.25);
+        assert_eq!(e.timestamp(), Some(1.25));
+    }
+
+    #[test]
+    fn wait_timeout_expires() {
+        let e = Event::new();
+        assert_eq!(e.wait_timeout(Duration::from_millis(10)), None);
+        e.complete(0.5);
+        assert_eq!(e.wait_timeout(Duration::from_millis(10)), Some(0.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "completed twice")]
+    fn double_complete_panics() {
+        let e = Event::new();
+        e.complete(0.0);
+        e.complete(1.0);
+    }
+}

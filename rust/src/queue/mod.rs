@@ -1,0 +1,16 @@
+//! OpenCL-style software command queues and events (paper §3).
+//!
+//! * [`event::Event`] — one-shot completion objects commands signal and
+//!   other commands wait on (the paper's intra-task dependencies).
+//! * [`command`] — the command vocabulary submitted to the device.
+//! * [`submit`] — the two §3.2 submission schemes mapping a task group
+//!   onto command queues: grouped-by-type (1 DMA engine, Fig. 2) and
+//!   grouped-by-task (2 DMA engines, Fig. 3).
+
+pub mod command;
+pub mod event;
+pub mod submit;
+
+pub use command::{Command, CommandKind, QueueId};
+pub use event::Event;
+pub use submit::{submission_plan, SubmissionPlan};

@@ -1,0 +1,206 @@
+//! The §3.2 submission schemes: mapping an *ordered* task group onto
+//! command queues with the right dependency events.
+//!
+//! * **Grouped-by-type** (devices with 1 DMA engine, Fig. 2): two queues.
+//!   All HtD commands (task order) then all DtH commands go to the single
+//!   transfer queue — the HtD-before-DtH "red arrow" is queue order, not
+//!   an event. Kernels go to the compute queue with events enforcing
+//!   K_i-after-HtD_i; DtH_i waits on K_i.
+//! * **Grouped-by-task** (2 DMA engines, Fig. 3): three queues. HtD on
+//!   Transfer0, DtH on Transfer1, kernels on Compute; commands submitted
+//!   task by task, maximizing the window where both engines run.
+
+use crate::config::DeviceProfile;
+use crate::queue::command::{Command, CommandKind, QueueId};
+use crate::queue::event::Event;
+use crate::task::TaskSpec;
+
+/// Commands per queue, in submission order.
+#[derive(Debug, Default)]
+pub struct SubmissionPlan {
+    pub transfer0: Vec<Command>,
+    pub transfer1: Vec<Command>,
+    pub compute: Vec<Command>,
+}
+
+impl SubmissionPlan {
+    pub fn queue(&self, id: QueueId) -> &[Command] {
+        match id {
+            QueueId::Transfer0 => &self.transfer0,
+            QueueId::Transfer1 => &self.transfer1,
+            QueueId::Compute => &self.compute,
+        }
+    }
+
+    pub fn total_commands(&self) -> usize {
+        self.transfer0.len() + self.transfer1.len() + self.compute.len()
+    }
+
+    /// Completion events of the last command of each task (task-done).
+    pub fn task_done_events(&self, n_tasks: usize) -> Vec<Event> {
+        let mut out: Vec<Option<(usize, Event)>> = vec![None; n_tasks];
+        // The last command of a task is its final DtH, or its kernel when
+        // the DtH stage is empty. Scan all queues; keep the "largest" rank.
+        let rank = |c: &Command| match c.kind {
+            CommandKind::HtD { .. } => 0usize,
+            CommandKind::Kernel { .. } => 1,
+            CommandKind::DtH { .. } => 2,
+        };
+        for q in [&self.transfer0, &self.transfer1, &self.compute] {
+            for c in q.iter() {
+                let r = rank(c) * 1000 + c.seq;
+                match &out[c.task] {
+                    Some((prev, _)) if *prev >= r => {}
+                    _ => out[c.task] = Some((r, c.completion.clone())),
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("task with no commands").1).collect()
+    }
+}
+
+/// Build the submission plan for `tasks` (already in the desired order)
+/// on `profile`, including all dependency events.
+pub fn submission_plan(tasks: &[TaskSpec], profile: &DeviceProfile) -> SubmissionPlan {
+    if profile.dma_engines < 2 {
+        grouped_by_type(tasks)
+    } else {
+        grouped_by_task(tasks)
+    }
+}
+
+/// Fig. 2: 1-DMA scheme (two queues, commands grouped by type).
+fn grouped_by_type(tasks: &[TaskSpec]) -> SubmissionPlan {
+    let mut plan = SubmissionPlan::default();
+    let mut last_htd: Vec<Vec<Event>> = vec![Vec::new(); tasks.len()];
+    // 1) All HtD commands, task order.
+    for (t, task) in tasks.iter().enumerate() {
+        for (j, &bytes) in task.htd_bytes.iter().enumerate() {
+            let c = Command::new(t, j, CommandKind::HtD { bytes }, vec![]);
+            last_htd[t].push(c.completion.clone());
+            plan.transfer0.push(c);
+        }
+    }
+    // 2) Kernels, task order, each waiting on its own HtD completions.
+    let mut k_events: Vec<Event> = Vec::with_capacity(tasks.len());
+    for (t, task) in tasks.iter().enumerate() {
+        let c = Command::new(
+            t,
+            0,
+            CommandKind::Kernel { spec: task.kernel.clone() },
+            last_htd[t].clone(),
+        );
+        k_events.push(c.completion.clone());
+        plan.compute.push(c);
+    }
+    // 3) All DtH commands, task order, after every HtD (queue order) and
+    //    each after its kernel (event).
+    for (t, task) in tasks.iter().enumerate() {
+        for (j, &bytes) in task.dth_bytes.iter().enumerate() {
+            let c = Command::new(
+                t,
+                j,
+                CommandKind::DtH { bytes },
+                vec![k_events[t].clone()],
+            );
+            plan.transfer0.push(c);
+        }
+    }
+    plan
+}
+
+/// Fig. 3: 2-DMA scheme (three queues, commands grouped by task).
+fn grouped_by_task(tasks: &[TaskSpec]) -> SubmissionPlan {
+    let mut plan = SubmissionPlan::default();
+    for (t, task) in tasks.iter().enumerate() {
+        let mut htd_events = Vec::new();
+        for (j, &bytes) in task.htd_bytes.iter().enumerate() {
+            let c = Command::new(t, j, CommandKind::HtD { bytes }, vec![]);
+            htd_events.push(c.completion.clone());
+            plan.transfer0.push(c);
+        }
+        let k = Command::new(
+            t,
+            0,
+            CommandKind::Kernel { spec: task.kernel.clone() },
+            htd_events,
+        );
+        let k_event = k.completion.clone();
+        plan.compute.push(k);
+        for (j, &bytes) in task.dth_bytes.iter().enumerate() {
+            let c = Command::new(
+                t,
+                j,
+                CommandKind::DtH { bytes },
+                vec![k_event.clone()],
+            );
+            plan.transfer1.push(c);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    #[test]
+    fn one_dma_uses_two_queues_grouped_by_type() {
+        let p = profile_by_name("xeon_phi").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let plan = submission_plan(&g.tasks, &p);
+        assert!(plan.transfer1.is_empty());
+        assert_eq!(plan.compute.len(), 4);
+        assert_eq!(plan.transfer0.len(), 8); // 4 HtD + 4 DtH
+        // First 4 are HtD in task order, last 4 DtH in task order.
+        for (i, c) in plan.transfer0.iter().take(4).enumerate() {
+            assert!(matches!(c.kind, CommandKind::HtD { .. }));
+            assert_eq!(c.task, i);
+        }
+        for (i, c) in plan.transfer0.iter().skip(4).enumerate() {
+            assert!(matches!(c.kind, CommandKind::DtH { .. }));
+            assert_eq!(c.task, i);
+            assert_eq!(c.waits.len(), 1); // waits on its kernel
+        }
+    }
+
+    #[test]
+    fn two_dma_uses_three_queues_grouped_by_task() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let plan = submission_plan(&g.tasks, &p);
+        assert_eq!(plan.transfer0.len(), 4);
+        assert_eq!(plan.transfer1.len(), 4);
+        assert_eq!(plan.compute.len(), 4);
+        // DtH_i waits on K_i: completing K_0's event readies DtH_0 only.
+        let k0 = &plan.compute[0];
+        k0.completion.complete(0.0);
+        assert!(plan.transfer1[0].waits.iter().all(|e| e.is_complete()));
+        assert!(!plan.transfer1[1].waits.iter().all(|e| e.is_complete()));
+    }
+
+    #[test]
+    fn kernel_waits_on_all_its_htd_commands() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        // Split task 0's HtD into two commands.
+        let half = g.tasks[0].htd_bytes[0] / 2;
+        g.tasks[0].htd_bytes = vec![half, half];
+        let plan = submission_plan(&g.tasks, &p);
+        assert_eq!(plan.compute[0].waits.len(), 2);
+    }
+
+    #[test]
+    fn task_done_events_map_to_last_command() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK0", &p, 1.0).unwrap();
+        let plan = submission_plan(&g.tasks, &p);
+        let done = plan.task_done_events(4);
+        // Completing task 2's DtH completes exactly done[2].
+        plan.transfer1[2].completion.complete(7.0);
+        assert_eq!(done[2].timestamp(), Some(7.0));
+        assert!(done[0].timestamp().is_none());
+    }
+}

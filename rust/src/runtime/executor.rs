@@ -1,0 +1,36 @@
+//! Live kernel backend: the virtual device's compute engine executes real
+//! AOT artifacts through the PJRT service thread (the `cpu_live` profile).
+
+use std::time::Duration;
+
+use crate::device::executor::KernelExecutor;
+use crate::runtime::service::PjrtService;
+use crate::task::KernelSpec;
+use crate::util::timing;
+
+pub struct PjrtExecutor {
+    service: PjrtService,
+}
+
+impl PjrtExecutor {
+    pub fn new(service: PjrtService) -> Self {
+        PjrtExecutor { service }
+    }
+}
+
+impl KernelExecutor for PjrtExecutor {
+    fn execute(&self, spec: &KernelSpec, launch_overhead: f64) -> anyhow::Result<()> {
+        match spec {
+            // Synthetic / replayed kernels still burn their duration so
+            // mixed groups behave on the live device.
+            KernelSpec::Timed { secs } => {
+                timing::precise_wait(Duration::from_secs_f64(secs + launch_overhead));
+                Ok(())
+            }
+            KernelSpec::Artifact { variant, .. } => {
+                timing::precise_wait(Duration::from_secs_f64(launch_overhead));
+                self.service.execute(variant).map(|_| ())
+            }
+        }
+    }
+}

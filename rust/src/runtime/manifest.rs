@@ -1,0 +1,196 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. One entry per AOT-compiled (kernel x size) variant.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape of one f32 input/output buffer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BufferMeta {
+    pub shape: Vec<usize>,
+}
+
+impl BufferMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        4 * self.numel() as u64
+    }
+}
+
+/// One AOT variant (e.g. `mm_256`).
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    /// Kernel family (`matmul`, `vecadd`, ...).
+    pub kernel: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<BufferMeta>,
+    pub outputs: Vec<BufferMeta>,
+    pub htd_bytes: u64,
+    pub dth_bytes: u64,
+    /// 'DK' or 'DT' majority label from the Python side.
+    pub dominance: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest root not an object"))?;
+        let mut variants = BTreeMap::new();
+        for (name, entry) in obj {
+            variants.insert(name.clone(), parse_variant(name, entry)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact variant '{name}'"))
+    }
+
+    /// Absolute path of a variant's HLO text.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Variants of one kernel family, sorted by input size.
+    pub fn family(&self, kernel: &str) -> Vec<&VariantMeta> {
+        let mut v: Vec<&VariantMeta> =
+            self.variants.values().filter(|m| m.kernel == kernel).collect();
+        v.sort_by_key(|m| m.htd_bytes);
+        v
+    }
+}
+
+fn parse_variant(name: &str, j: &Json) -> Result<VariantMeta> {
+    let str_field = |k: &str| -> Result<String> {
+        Ok(j.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("variant {name}: missing {k}"))?
+            .to_string())
+    };
+    let num_field = |k: &str| -> Result<u64> {
+        j.get(k)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("variant {name}: missing {k}"))
+    };
+    let buffers = |k: &str| -> Result<Vec<BufferMeta>> {
+        j.get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("variant {name}: missing {k}"))?
+            .iter()
+            .map(|b| {
+                let shape = b
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("variant {name}: bad buffer"))?
+                    .iter()
+                    .map(|d| d.as_u64().map(|x| x as usize))
+                    .collect::<Option<Vec<usize>>>()
+                    .ok_or_else(|| anyhow!("variant {name}: bad shape"))?;
+                let dtype = b.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+                anyhow::ensure!(dtype == "f32", "variant {name}: dtype {dtype} unsupported");
+                Ok(BufferMeta { shape })
+            })
+            .collect()
+    };
+    Ok(VariantMeta {
+        name: name.to_string(),
+        kernel: str_field("kernel")?,
+        file: str_field("file")?,
+        dominance: str_field("dominance")?,
+        inputs: buffers("inputs")?,
+        outputs: buffers("outputs")?,
+        htd_bytes: num_field("htd_bytes")?,
+        dth_bytes: num_field("dth_bytes")?,
+    })
+}
+
+/// Default artifact directory: `$OCLCC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("OCLCC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("oclcc_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"mm_8": {"kernel": "matmul", "file": "mm_8.hlo.txt",
+                "dominance": "DK",
+                "inputs": [{"shape": [8, 8], "dtype": "f32"},
+                           {"shape": [8, 8], "dtype": "f32"}],
+                "outputs": [{"shape": [8, 8], "dtype": "f32"}],
+                "htd_bytes": 512, "dth_bytes": 256}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.get("mm_8").unwrap();
+        assert_eq!(v.inputs.len(), 2);
+        assert_eq!(v.inputs[0].numel(), 64);
+        assert_eq!(v.inputs[0].bytes(), 256);
+        assert_eq!(v.htd_bytes, 512);
+        assert!(m.get("nope").is_err());
+        assert!(m.hlo_path("mm_8").unwrap().ends_with("mm_8.hlo.txt"));
+    }
+
+    #[test]
+    fn family_sorted_by_size() {
+        let dir = std::env::temp_dir().join("oclcc_manifest_family");
+        write_manifest(
+            &dir,
+            r#"{"va_big": {"kernel": "vecadd", "file": "b.hlo.txt",
+                 "dominance": "DT",
+                 "inputs": [{"shape": [1024], "dtype": "f32"}],
+                 "outputs": [{"shape": [1024], "dtype": "f32"}],
+                 "htd_bytes": 4096, "dth_bytes": 4096},
+                "va_small": {"kernel": "vecadd", "file": "s.hlo.txt",
+                 "dominance": "DT",
+                 "inputs": [{"shape": [16], "dtype": "f32"}],
+                 "outputs": [{"shape": [16], "dtype": "f32"}],
+                 "htd_bytes": 64, "dth_bytes": 64}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let fam = m.family("vecadd");
+        assert_eq!(fam.len(), 2);
+        assert_eq!(fam[0].name, "va_small");
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = Manifest::load(Path::new("/definitely/not/here"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime — loads the AOT artifacts produced by `make artifacts`
+//! and executes them on the `xla` crate's CPU client.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (variant -> HLO file,
+//!   input/output shapes, transfer byte counts).
+//! * [`engine`] — compile-once/execute-many registry over
+//!   `PjRtClient::cpu()`; interchange is HLO *text* (xla_extension 0.5.1
+//!   rejects jax >= 0.5 serialized protos — see python/compile/aot.py).
+//! * [`executor`] — `PjrtExecutor`, the live kernel backend for the
+//!   virtual device's compute engine (`cpu_live` profile).
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+pub mod service;
+
+pub use engine::PjrtRuntime;
+pub use executor::PjrtExecutor;
+pub use service::PjrtService;
+pub use manifest::{Manifest, VariantMeta};

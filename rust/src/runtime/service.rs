@@ -1,0 +1,101 @@
+//! PJRT service thread: the `xla` crate's client/executable/literal types
+//! are `!Send` (Rc + raw pointers), so a single dedicated thread owns the
+//! `PjrtRuntime` and serves execution requests over a channel. The
+//! cloneable [`PjrtService`] handle is `Send + Sync` and safe to share
+//! with the virtual device's engine threads.
+//!
+//! This also faithfully models real accelerators: one in-order compute
+//! queue consuming kernel commands (the model's no-CKE assumption).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::engine::{ExecStats, PjrtRuntime};
+
+enum Request {
+    Warmup(String, mpsc::Sender<Result<()>>),
+    Execute(String, mpsc::Sender<Result<ExecStats>>),
+    Platform(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+}
+
+impl PjrtService {
+    /// Start the service over an artifact directory. Fails fast if the
+    /// manifest is missing or the PJRT client cannot be created.
+    pub fn start(artifact_dir: PathBuf) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let runtime = match PjrtRuntime::new(&artifact_dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Warmup(v, reply) => {
+                            let _ = reply.send(runtime.warmup(&v));
+                        }
+                        Request::Execute(v, reply) => {
+                            let _ = reply.send(runtime.execute(&v));
+                        }
+                        Request::Platform(reply) => {
+                            let _ = reply.send(runtime.platform());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn pjrt service");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt service died during startup"))??;
+        Ok(PjrtService { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow!("pjrt service is gone"))
+    }
+
+    pub fn warmup(&self, variant: &str) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Warmup(variant.to_string(), tx))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped request"))?
+    }
+
+    pub fn execute(&self, variant: &str) -> Result<ExecStats> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Execute(variant.to_string(), tx))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped request"))?
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Platform(tx))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped request"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.send(Request::Shutdown);
+    }
+}

@@ -1,0 +1,129 @@
+//! Baseline ordering policies, used as ablation comparators in the benches
+//! (`oclcc bench ablation`) and as sanity anchors in tests.
+
+use crate::config::DeviceProfile;
+use crate::task::{Dominance, TaskSpec};
+use crate::util::rng::Pcg64;
+
+/// Submission order exactly as received (the NoReorder identity).
+pub fn fifo(tasks: &[TaskSpec]) -> Vec<usize> {
+    (0..tasks.len()).collect()
+}
+
+/// Uniformly random order.
+pub fn random(tasks: &[TaskSpec], rng: &mut Pcg64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    rng.shuffle(&mut order);
+    order
+}
+
+/// Shortest-job-first by solo sequential time.
+pub fn sjf(tasks: &[TaskSpec], profile: &DeviceProfile) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&a, &b| {
+        tasks[a]
+            .sequential_secs(profile)
+            .partial_cmp(&tasks[b].sequential_secs(profile))
+            .unwrap()
+    });
+    order
+}
+
+/// Longest-kernel-first: greedy proxy for "hide the biggest K behind
+/// transfers of everything that follows".
+pub fn longest_kernel_first(tasks: &[TaskSpec], profile: &DeviceProfile) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&a, &b| {
+        tasks[b]
+            .stage_secs(profile)
+            .k
+            .partial_cmp(&tasks[a].stage_secs(profile).k)
+            .unwrap()
+    });
+    order
+}
+
+/// Alternate dominant-kernel and dominant-transfer tasks (DK first), the
+/// folk heuristic the paper's Algorithm 1 refines.
+pub fn alternate_dominance(tasks: &[TaskSpec], profile: &DeviceProfile) -> Vec<usize> {
+    let mut dk: Vec<usize> = Vec::new();
+    let mut dt: Vec<usize> = Vec::new();
+    for (i, t) in tasks.iter().enumerate() {
+        match t.dominance(profile) {
+            Dominance::DominantKernel => dk.push(i),
+            Dominance::DominantTransfer => dt.push(i),
+        }
+    }
+    let mut order = Vec::with_capacity(tasks.len());
+    let (mut i, mut j) = (0, 0);
+    while i < dk.len() || j < dt.len() {
+        if i < dk.len() {
+            order.push(dk[i]);
+            i += 1;
+        }
+        if j < dt.len() {
+            order.push(dt[j]);
+            j += 1;
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    fn is_perm(order: &[usize], n: usize) -> bool {
+        let mut v = order.to_vec();
+        v.sort_unstable();
+        v == (0..n).collect::<Vec<_>>()
+    }
+
+    #[test]
+    fn all_baselines_are_permutations() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let mut rng = Pcg64::seeded(4);
+        for order in [
+            fifo(&g.tasks),
+            random(&g.tasks, &mut rng),
+            sjf(&g.tasks, &p),
+            longest_kernel_first(&g.tasks, &p),
+            alternate_dominance(&g.tasks, &p),
+        ] {
+            assert!(is_perm(&order, 4), "{order:?}");
+        }
+    }
+
+    #[test]
+    fn sjf_sorts_by_sequential_time() {
+        let p = profile_by_name("k20c").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        let order = sjf(&g.tasks, &p);
+        for w in order.windows(2) {
+            assert!(
+                g.tasks[w[0]].sequential_secs(&p)
+                    <= g.tasks[w[1]].sequential_secs(&p) + 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn alternate_interleaves() {
+        let p = profile_by_name("amd_r9").unwrap();
+        // BK50 = T0, T1 (DK), T4, T5 (DT).
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let order = alternate_dominance(&g.tasks, &p);
+        assert_eq!(order.len(), 4);
+        assert_eq!(
+            g.tasks[order[0]].dominance(&p),
+            Dominance::DominantKernel
+        );
+        assert_eq!(
+            g.tasks[order[1]].dominance(&p),
+            Dominance::DominantTransfer
+        );
+    }
+}

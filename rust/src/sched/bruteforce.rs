@@ -1,0 +1,184 @@
+//! Exhaustive and sampled permutation evaluation — the NoReorder setup of
+//! §6.2: the baseline distribution (worst / median / best over orderings)
+//! that Figs. 9-10 plot speedups against.
+
+use crate::config::DeviceProfile;
+use crate::model::simulator::makespan_of_order;
+use crate::task::TaskSpec;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// All permutations of 0..n in lexicographic order (n! of them; n <= 10
+/// guarded — the paper itself stops exhaustive evaluation at T = 8).
+pub fn permutations(n: usize) -> Vec<Vec<usize>> {
+    assert!(n <= 10, "n! explosion: refusing n = {n} > 10");
+    let mut cur: Vec<usize> = (0..n).collect();
+    let mut out = Vec::new();
+    loop {
+        out.push(cur.clone());
+        if !next_permutation(&mut cur) {
+            break;
+        }
+    }
+    out
+}
+
+/// In-place lexicographic successor; false when wrapped.
+pub fn next_permutation(xs: &mut [usize]) -> bool {
+    let n = xs.len();
+    if n < 2 {
+        return false;
+    }
+    let mut i = n - 1;
+    while i > 0 && xs[i - 1] >= xs[i] {
+        i -= 1;
+    }
+    if i == 0 {
+        xs.reverse();
+        return false;
+    }
+    let mut j = n - 1;
+    while xs[j] <= xs[i - 1] {
+        j -= 1;
+    }
+    xs.swap(i - 1, j);
+    xs[i..].reverse();
+    true
+}
+
+/// Sample up to `cap` distinct-ish permutations; when n! <= cap, this is
+/// the exhaustive set (mirrors the paper: all permutations at T=4, a 5%
+/// random subset at T=6/N=2, N=1 only at T=8).
+pub fn permutation_sample(n: usize, cap: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    let total: usize = (1..=n).product();
+    if total <= cap {
+        return permutations(n);
+    }
+    let mut out = Vec::with_capacity(cap);
+    for _ in 0..cap {
+        let mut p: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut p);
+        out.push(p);
+    }
+    out
+}
+
+/// Distribution of simulated makespans over a set of orderings.
+#[derive(Clone, Debug)]
+pub struct OrderStats {
+    pub n_orders: usize,
+    pub best: f64,
+    pub worst: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub best_order: Vec<usize>,
+    pub worst_order: Vec<usize>,
+}
+
+impl OrderStats {
+    /// Evaluate every ordering in `orders` with the temporal model.
+    pub fn evaluate(
+        tasks: &[TaskSpec],
+        orders: &[Vec<usize>],
+        profile: &DeviceProfile,
+    ) -> OrderStats {
+        assert!(!orders.is_empty());
+        let mut times = Vec::with_capacity(orders.len());
+        let mut best = f64::INFINITY;
+        let mut worst = f64::NEG_INFINITY;
+        let mut best_order = orders[0].clone();
+        let mut worst_order = orders[0].clone();
+        for order in orders {
+            let t = makespan_of_order(tasks, order, profile);
+            if t < best {
+                best = t;
+                best_order = order.clone();
+            }
+            if t > worst {
+                worst = t;
+                worst_order = order.clone();
+            }
+            times.push(t);
+        }
+        OrderStats {
+            n_orders: orders.len(),
+            best,
+            worst,
+            mean: stats::mean(&times),
+            median: stats::median(&times),
+            best_order,
+            worst_order,
+        }
+    }
+
+    /// Exhaustive (or capped) evaluation of a task group.
+    pub fn exhaustive(
+        tasks: &[TaskSpec],
+        profile: &DeviceProfile,
+        cap: usize,
+        rng: &mut Pcg64,
+    ) -> OrderStats {
+        let orders = permutation_sample(tasks.len(), cap, rng);
+        Self::evaluate(tasks, &orders, profile)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    #[test]
+    fn permutation_count_and_uniqueness() {
+        let perms = permutations(4);
+        assert_eq!(perms.len(), 24);
+        let mut sorted = perms.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 24);
+    }
+
+    #[test]
+    fn next_permutation_order() {
+        let mut p = vec![0, 1, 2];
+        assert!(next_permutation(&mut p));
+        assert_eq!(p, vec![0, 2, 1]);
+        let mut last = vec![2, 1, 0];
+        assert!(!next_permutation(&mut last));
+        assert_eq!(last, vec![0, 1, 2]); // wrapped
+    }
+
+    #[test]
+    fn sample_caps() {
+        let mut rng = Pcg64::seeded(1);
+        assert_eq!(permutation_sample(3, 100, &mut rng).len(), 6);
+        assert_eq!(permutation_sample(6, 50, &mut rng).len(), 50);
+    }
+
+    #[test]
+    fn stats_bounds_are_consistent() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        let mut rng = Pcg64::seeded(2);
+        let st = OrderStats::exhaustive(&g.tasks, &p, 1000, &mut rng);
+        assert_eq!(st.n_orders, 24);
+        assert!(st.best <= st.median && st.median <= st.worst);
+        assert!(st.best <= st.mean && st.mean <= st.worst);
+        // Recorded extreme orders reproduce their times.
+        assert!(
+            (makespan_of_order(&g.tasks, &st.best_order, &p) - st.best).abs()
+                < 1e-12
+        );
+        assert!(
+            (makespan_of_order(&g.tasks, &st.worst_order, &p) - st.worst).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "explosion")]
+    fn permutations_guard() {
+        permutations(11);
+    }
+}

@@ -1,0 +1,17 @@
+//! Task-ordering schedulers (paper §5).
+//!
+//! * `heuristic` — the paper's Batch Reordering Algorithm (Algorithm 1):
+//!   a greedy, model-guided search that runs in O(T^2) simulations.
+//! * `bruteforce` — exhaustive / sampled permutation evaluation (the
+//!   NoReorder experimental setup of §6.2).
+//! * `baselines` — classic orderings (FIFO, random, SJF, LPT-kernel,
+//!   alternate-dominance) used as ablation comparators.
+
+pub mod baselines;
+pub mod bruteforce;
+pub mod heuristic;
+pub mod multidevice;
+
+pub use bruteforce::{permutations, OrderStats};
+pub use heuristic::batch_reorder;
+pub use multidevice::{schedule_multi, MultiSchedule};

@@ -1,0 +1,198 @@
+//! Task representation and the paper's task catalogs.
+//!
+//! A *task* is the offloading unit of the paper: a `HtD* -> K -> DtH*`
+//! command chain (each transfer stage may hold zero or more commands).
+//! `synthetic` encodes Tables 2-3, `real` encodes Tables 4-5.
+
+pub mod real;
+pub mod synthetic;
+
+use crate::config::DeviceProfile;
+
+/// What the kernel command does when the virtual device executes it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelSpec {
+    /// Spin for a fixed duration (synthetic tasks / Table-5 replays).
+    Timed { secs: f64 },
+    /// Execute an AOT-compiled HLO artifact via PJRT; `est_secs` is the
+    /// model's a-priori duration (Eq. 1 calibration or profiling).
+    Artifact { variant: String, est_secs: f64 },
+}
+
+impl KernelSpec {
+    /// Duration the temporal model uses for the K command.
+    pub fn est_secs(&self) -> f64 {
+        match self {
+            KernelSpec::Timed { secs } => *secs,
+            KernelSpec::Artifact { est_secs, .. } => *est_secs,
+        }
+    }
+}
+
+/// Dominance class (paper §4.3): transfer-dominant vs kernel-dominant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dominance {
+    /// t_HtD + t_DtH > t_K
+    DominantTransfer,
+    /// t_HtD + t_DtH <= t_K
+    DominantKernel,
+}
+
+/// One offloadable task.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    /// Bytes of each host-to-device command (input buffers).
+    pub htd_bytes: Vec<u64>,
+    pub kernel: KernelSpec,
+    /// Bytes of each device-to-host command (output buffers).
+    pub dth_bytes: Vec<u64>,
+}
+
+impl TaskSpec {
+    /// Single-command-per-stage convenience constructor.
+    pub fn simple(name: &str, htd: u64, kernel: KernelSpec, dth: u64) -> Self {
+        TaskSpec {
+            name: name.to_string(),
+            htd_bytes: if htd > 0 { vec![htd] } else { vec![] },
+            kernel,
+            dth_bytes: if dth > 0 { vec![dth] } else { vec![] },
+        }
+    }
+
+    pub fn total_htd_bytes(&self) -> u64 {
+        self.htd_bytes.iter().sum()
+    }
+
+    pub fn total_dth_bytes(&self) -> u64 {
+        self.dth_bytes.iter().sum()
+    }
+
+    /// Solo (no-contention) stage durations on `profile`.
+    pub fn stage_secs(&self, profile: &DeviceProfile) -> StageSecs {
+        StageSecs {
+            htd: self.htd_bytes.iter().map(|&b| profile.htd.transfer_secs(b)).sum(),
+            k: self.kernel.est_secs() + profile.kernel_launch_overhead,
+            dth: self.dth_bytes.iter().map(|&b| profile.dth.transfer_secs(b)).sum(),
+        }
+    }
+
+    /// Dominance on a given device (DCT/FWT flip between devices, Table 4).
+    pub fn dominance(&self, profile: &DeviceProfile) -> Dominance {
+        let s = self.stage_secs(profile);
+        if s.htd + s.dth > s.k {
+            Dominance::DominantTransfer
+        } else {
+            Dominance::DominantKernel
+        }
+    }
+
+    /// Sequential (zero-overlap) execution time: the NoConcurrency floor.
+    pub fn sequential_secs(&self, profile: &DeviceProfile) -> f64 {
+        let s = self.stage_secs(profile);
+        s.htd + s.k + s.dth
+    }
+}
+
+/// Solo durations of the three stages (model inputs and heuristic metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageSecs {
+    pub htd: f64,
+    pub k: f64,
+    pub dth: f64,
+}
+
+/// A group of independent tasks ready for offload (TG in the paper).
+#[derive(Clone, Debug, Default)]
+pub struct TaskGroup {
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl TaskGroup {
+    pub fn new(tasks: Vec<TaskSpec>) -> Self {
+        TaskGroup { tasks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Reorder into `order` (a permutation of 0..len).
+    pub fn reordered(&self, order: &[usize]) -> TaskGroup {
+        assert_eq!(order.len(), self.tasks.len());
+        TaskGroup {
+            tasks: order.iter().map(|&i| self.tasks[i].clone()).collect(),
+        }
+    }
+
+    /// Fraction of dominant-kernel tasks on `profile` (the BKxx label).
+    pub fn dk_fraction(&self, profile: &DeviceProfile) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        let dk = self
+            .tasks
+            .iter()
+            .filter(|t| t.dominance(profile) == Dominance::DominantKernel)
+            .count();
+        dk as f64 / self.tasks.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+
+    fn timed(name: &str, htd: u64, k: f64, dth: u64) -> TaskSpec {
+        TaskSpec::simple(name, htd, KernelSpec::Timed { secs: k }, dth)
+    }
+
+    #[test]
+    fn stage_secs_and_dominance() {
+        let p = profile_by_name("amd_r9").unwrap();
+        // ~1 ms HtD, 8 ms K, ~1 ms DtH -> dominant kernel (paper T0).
+        let t = timed("t0", 6_200_000, 8e-3, 5_900_000);
+        let s = t.stage_secs(&p);
+        assert!((s.htd - (18e-6 + 1e-3)).abs() < 1e-9);
+        assert_eq!(t.dominance(&p), Dominance::DominantKernel);
+        // Transfer-heavy task.
+        let t = timed("t7", 49_600_000, 1e-3, 5_900_000);
+        assert_eq!(t.dominance(&p), Dominance::DominantTransfer);
+    }
+
+    #[test]
+    fn null_stages_allowed() {
+        let p = profile_by_name("k20c").unwrap();
+        let t = timed("k_only", 0, 5e-3, 0);
+        assert!(t.htd_bytes.is_empty() && t.dth_bytes.is_empty());
+        let s = t.stage_secs(&p);
+        assert_eq!(s.htd, 0.0);
+        assert_eq!(s.dth, 0.0);
+    }
+
+    #[test]
+    fn reorder_is_permutation() {
+        let g = TaskGroup::new(
+            (0..4).map(|i| timed(&format!("t{i}"), 100, 1e-3, 100)).collect(),
+        );
+        let r = g.reordered(&[2, 0, 3, 1]);
+        let names: Vec<&str> =
+            r.tasks.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["t2", "t0", "t3", "t1"]);
+    }
+
+    #[test]
+    fn dk_fraction() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = TaskGroup::new(vec![
+            timed("dk", 1000, 8e-3, 1000),
+            timed("dt", 30_000_000, 1e-3, 30_000_000),
+        ]);
+        assert!((g.dk_fraction(&p) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic task catalog — paper Table 2 (tasks T0-T7) and Table 3
+//! (benchmarks BK0-BK100).
+//!
+//! Table 2 gives each stage as a fraction of a 10 ms time unit. The printed
+//! table in the paper is partially garbled; the values below keep every
+//! legible cell (T0 = 0.1/0.8/0.1; the DtH row 0.1,0.1,0.1,0.2,0.2,0.6,0.4,
+//! 0.1; T7 = 0.8/0.1/0.1) and reconstruct the rest consistently with the
+//! stated classification: T0-T3 dominant-kernel, T4-T7 dominant-transfer.
+
+use crate::config::DeviceProfile;
+use crate::task::{KernelSpec, TaskGroup, TaskSpec};
+
+/// The paper's time unit: 10 ms.
+pub const TIME_UNIT: f64 = 10e-3;
+
+/// (HtD, K, DtH) stage fractions of the time unit for T0..T7.
+pub const TABLE2: [(f64, f64, f64); 8] = [
+    (0.1, 0.8, 0.1), // T0  DK
+    (0.2, 0.7, 0.1), // T1  DK
+    (0.3, 0.6, 0.1), // T2  DK
+    (0.2, 0.6, 0.2), // T3  DK
+    (0.5, 0.3, 0.2), // T4  DT
+    (0.3, 0.1, 0.6), // T5  DT
+    (0.5, 0.1, 0.4), // T6  DT
+    (0.8, 0.1, 0.1), // T7  DT
+];
+
+/// Benchmark compositions (Table 3): task indices into TABLE2.
+pub const TABLE3: [(&str, [usize; 4]); 5] = [
+    ("BK0", [6, 7, 4, 5]),
+    ("BK25", [0, 4, 6, 7]),
+    ("BK50", [0, 1, 4, 5]),
+    ("BK75", [0, 1, 2, 4]),
+    ("BK100", [0, 1, 2, 3]),
+];
+
+/// Instantiate synthetic task Ti for a device profile.
+///
+/// Transfer fractions are converted to *bytes* through the profile's link
+/// parameters so the solo transfer time equals the Table-2 target on that
+/// device; the kernel is a timed spin. `scale` compresses the time unit
+/// (scale=1.0 -> 10 ms unit) for quick runs.
+pub fn synthetic_task(i: usize, profile: &DeviceProfile, scale: f64) -> TaskSpec {
+    let (fh, fk, fd) = TABLE2[i];
+    let unit = TIME_UNIT * scale;
+    let htd = profile.htd.bytes_for_secs(fh * unit);
+    let dth = profile.dth.bytes_for_secs(fd * unit);
+    let k = (fk * unit - profile.kernel_launch_overhead).max(0.0);
+    TaskSpec::simple(&format!("T{i}"), htd, KernelSpec::Timed { secs: k }, dth)
+}
+
+/// Instantiate benchmark BKxx (by label) for a device profile.
+pub fn synthetic_benchmark(
+    label: &str,
+    profile: &DeviceProfile,
+    scale: f64,
+) -> anyhow::Result<TaskGroup> {
+    let (_, idxs) = TABLE3
+        .iter()
+        .find(|(l, _)| *l == label)
+        .ok_or_else(|| anyhow::anyhow!("unknown synthetic benchmark '{label}'"))?;
+    Ok(TaskGroup::new(
+        idxs.iter().map(|&i| synthetic_task(i, profile, scale)).collect(),
+    ))
+}
+
+/// All benchmark labels in paper order.
+pub fn benchmark_labels() -> Vec<&'static str> {
+    TABLE3.iter().map(|(l, _)| *l).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::Dominance;
+
+    #[test]
+    fn table2_dominance_classes() {
+        // DK tasks: HtD + DtH <= K; DT tasks: HtD + DtH > K.
+        for (i, (h, k, d)) in TABLE2.iter().enumerate() {
+            if i < 4 {
+                assert!(h + d <= *k, "T{i} should be dominant-kernel");
+            } else {
+                assert!(h + d > *k, "T{i} should be dominant-transfer");
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_task_durations_match_fractions() {
+        let p = profile_by_name("amd_r9").unwrap();
+        for i in 0..8 {
+            let t = synthetic_task(i, &p, 1.0);
+            let s = t.stage_secs(&p);
+            let (fh, fk, fd) = TABLE2[i];
+            assert!((s.htd - fh * TIME_UNIT).abs() < 50e-6, "T{i} htd");
+            assert!((s.k - fk * TIME_UNIT).abs() < 50e-6, "T{i} k");
+            assert!((s.dth - fd * TIME_UNIT).abs() < 50e-6, "T{i} dth");
+        }
+    }
+
+    #[test]
+    fn benchmark_dk_percentages() {
+        let p = profile_by_name("k20c").unwrap();
+        for (label, want_pct) in
+            [("BK0", 0.0), ("BK25", 0.25), ("BK50", 0.5), ("BK75", 0.75), ("BK100", 1.0)]
+        {
+            let g = synthetic_benchmark(label, &p, 1.0).unwrap();
+            assert_eq!(g.len(), 4);
+            assert!(
+                (g.dk_fraction(&p) - want_pct).abs() < 1e-9,
+                "{label}: {}",
+                g.dk_fraction(&p)
+            );
+        }
+    }
+
+    #[test]
+    fn scale_compresses_time() {
+        let p = profile_by_name("xeon_phi").unwrap();
+        let full = synthetic_task(0, &p, 1.0).sequential_secs(&p);
+        let tenth = synthetic_task(0, &p, 0.1).sequential_secs(&p);
+        assert!((full / tenth - 10.0).abs() < 0.5, "{full} vs {tenth}");
+    }
+
+    #[test]
+    fn unknown_benchmark_errors() {
+        let p = profile_by_name("amd_r9").unwrap();
+        assert!(synthetic_benchmark("BK33", &p, 1.0).is_err());
+    }
+
+    #[test]
+    fn dominance_holds_on_device() {
+        let p = profile_by_name("amd_r9").unwrap();
+        assert_eq!(
+            synthetic_task(0, &p, 1.0).dominance(&p),
+            Dominance::DominantKernel
+        );
+        assert_eq!(
+            synthetic_task(7, &p, 1.0).dominance(&p),
+            Dominance::DominantTransfer
+        );
+    }
+}

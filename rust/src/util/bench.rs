@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Used by the `rust/benches/*` targets (built with `harness = false`).
+//! Warms up, then runs timed batches until either the time budget or the
+//! max iteration count is hit, and reports min/median/mean/p95 per
+//! iteration.
+
+use std::time::Instant;
+
+use crate::util::stats;
+use crate::util::table;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub p95: f64,
+}
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub max_iters: usize,
+    pub budget_secs: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            max_iters: 200,
+            budget_secs: 2.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(budget_secs: f64, max_iters: usize) -> Self {
+        Bencher { budget_secs, max_iters, ..Default::default() }
+    }
+
+    /// Run `f` repeatedly; `f` must do one full unit of work per call.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < 5 || start.elapsed().as_secs_f64() < self.budget_secs)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: stats::mean(&samples),
+            median: stats::median(&samples),
+            min: stats::min(&samples),
+            p95: stats::percentile(&samples, 95.0),
+        };
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Render all recorded results as a table.
+    pub fn report(&self) -> String {
+        let mut t = table::Table::new(&["bench", "iters", "min", "median", "mean", "p95"]);
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                r.iters.to_string(),
+                table::dur(r.min),
+                table::dur(r.median),
+                table::dur(r.mean),
+                table::dur(r.p95),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_sane_times() {
+        let mut b = Bencher::new(0.05, 50);
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min > 0.0 && r.min <= r.median && r.median <= r.p95);
+        assert!(b.report().contains("spin"));
+    }
+}

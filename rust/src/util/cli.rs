@@ -1,0 +1,107 @@
+//! Tiny argument parser (clap is not in the offline registry).
+//!
+//! Grammar: `oclcc <subcommand> [positional...] [--flag] [--key value]`.
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name / consumed subcommands).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn positional_flags_options() {
+        let a = parse("fig9 --quick --reps 5 --device=amd_r9 extra");
+        assert_eq!(a.positional, vec!["fig9", "extra"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt_usize("reps", 1), 5);
+        assert_eq!(a.opt("device"), Some("amd_r9"));
+    }
+
+    #[test]
+    fn flag_before_positional_not_swallowed() {
+        let a = parse("--verbose run");
+        // "--verbose run": 'run' is treated as the value; document grammar:
+        // values never start with '--', so '--verbose run' binds run.
+        assert_eq!(a.opt("verbose"), Some("run"));
+        let b = parse("run --verbose");
+        assert!(b.flag("verbose"));
+        assert_eq!(b.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_f64("scale", 1.5), 1.5);
+        assert_eq!(a.opt_or("mode", "sim"), "sim");
+        assert!(!a.flag("quick"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained utility substrate.
+//!
+//! The offline registry only ships the `xla` crate's dependency closure
+//! (no rand / serde / clap / criterion), so the RNG, JSON codec, stats,
+//! CLI parsing, table rendering and bench timing used across the project
+//! are implemented here and unit-tested in place.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timing;

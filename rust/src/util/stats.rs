@@ -1,0 +1,144 @@
+//! Descriptive statistics and least-squares fitting used by the model
+//! calibration (`profiling/`), the bench harnesses and the reports.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean (paper reports geomean prediction errors/speedups).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let logs: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (logs / xs.len() as f64).exp()
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Median (paper extracts the median of 15 repetitions).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Ordinary least squares y = a*x + b; returns (a, b).
+///
+/// This is Eq. (1) calibration: kernel time = eta * size + gamma.
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need >= 2 points to fit a line");
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-30 {
+        return (0.0, sy / n); // degenerate: all x equal
+    }
+    let a = (n * sxy - sx * sy) / denom;
+    let b = (sy - a * sx) / n;
+    (a, b)
+}
+
+/// Relative error |pred - meas| / meas.
+pub fn rel_err(pred: f64, meas: f64) -> f64 {
+    if meas == 0.0 {
+        return if pred == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (pred - meas).abs() / meas.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        let g = geomean(&[1.0, 4.0, 16.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.5 * x + 2.0).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 3.5).abs() < 1e-9 && (b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_noisy() {
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let xs: Vec<f64> = (1..200).map(|i| i as f64).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| 2.0 * x + 5.0 + rng.uniform(-0.5, 0.5)).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 2.0).abs() < 0.01, "a={a}");
+        assert!((b - 5.0).abs() < 1.0, "b={b}");
+    }
+
+    #[test]
+    fn stddev_known() {
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_err_cases() {
+        assert_eq!(rel_err(11.0, 10.0), 0.1);
+        assert_eq!(rel_err(0.0, 0.0), 0.0);
+    }
+}

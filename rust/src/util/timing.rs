@@ -1,0 +1,79 @@
+//! Precise waiting and wall-clock helpers for the virtual device.
+//!
+//! Command durations in the paper are 0.1-10 ms; plain `thread::sleep` on
+//! Linux overshoots by the timer slack (~50 us), which alone would exceed
+//! the model's ~1% error budget at the short end. `precise_wait` sleeps for
+//! the bulk of the interval and spins the tail on `Instant`.
+
+use std::time::{Duration, Instant};
+
+/// Tail window that is spun rather than slept.
+const SPIN_TAIL: Duration = Duration::from_micros(120);
+
+/// Block the current thread for `d` with sub-50us accuracy.
+pub fn precise_wait(d: Duration) {
+    let deadline = Instant::now() + d;
+    precise_wait_until(deadline);
+}
+
+/// Block until `deadline` (sleep + spin tail).
+pub fn precise_wait_until(deadline: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        let left = deadline - now;
+        if left > SPIN_TAIL {
+            std::thread::sleep(left - SPIN_TAIL);
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Seconds elapsed since `t0` as f64 (the project's time currency).
+pub fn secs_since(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64()
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precise_wait_accuracy() {
+        let _t = crate::util::timing::timing_test_lock();
+        // 500 us target; require < 60 us absolute error on the median of 9.
+        let mut errs = Vec::new();
+        for _ in 0..9 {
+            let t0 = Instant::now();
+            precise_wait(Duration::from_micros(500));
+            errs.push((t0.elapsed().as_secs_f64() - 500e-6).abs());
+        }
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(errs[4] < 60e-6, "median wait error {:.1} us", errs[4] * 1e6);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, dt) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}
+
+/// Global lock serializing *timing-sensitive* tests: the virtual device's
+/// pacing accuracy degrades when sibling tests saturate every core, so
+/// tests that assert wall-clock behaviour hold this while running.
+pub fn timing_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}

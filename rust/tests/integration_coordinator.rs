@@ -1,0 +1,80 @@
+//! Integration: the §6.2 multi-worker runtime end to end on the virtual
+//! device (spin backend; the PJRT-live path is exercised by
+//! examples/e2e_trace.rs and integration_runtime.rs).
+
+use std::sync::Arc;
+
+use oclcc::config::profile_by_name;
+use oclcc::coordinator::{Coordinator, Policy};
+use oclcc::device::{SpinExecutor, VirtualDevice};
+use oclcc::task::real::real_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::rng::Pcg64;
+
+fn device(name: &str) -> Arc<VirtualDevice> {
+    Arc::new(VirtualDevice::new(
+        profile_by_name(name).unwrap(),
+        Arc::new(SpinExecutor),
+    ))
+}
+
+fn batches(dev: &str, t: usize, n: usize, scale: f64, seed: u64) -> Vec<Vec<TaskSpec>> {
+    let p = profile_by_name(dev).unwrap();
+    let mut rng = Pcg64::seeded(seed);
+    let g = real_benchmark("BK50", dev, &p, t * n, &mut rng, scale).unwrap();
+    (0..t)
+        .map(|w| (0..n).map(|r| g.tasks[w * n + r].clone()).collect())
+        .collect()
+}
+
+#[test]
+fn all_tasks_complete_and_latencies_recorded() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    let coord = Coordinator::new(device("amd_r9"), Policy::Heuristic);
+    let m = coord.run(batches("amd_r9", 4, 2, 0.15, 1));
+    assert_eq!(m.n_tasks, 8);
+    assert_eq!(m.latencies.len(), 8);
+    assert!(m.latencies.iter().all(|&l| l > 0.0));
+    assert!(m.n_groups >= 2);
+    assert!(m.group_makespans.iter().all(|&g| g > 0.0));
+}
+
+#[test]
+fn batch_dependencies_serialize_worker_tasks() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    // One worker, three dependent tasks: three singleton groups.
+    let coord = Coordinator::new(device("k20c"), Policy::NoReorder);
+    let m = coord.run(batches("k20c", 1, 3, 0.15, 2));
+    assert_eq!(m.n_groups, 3);
+    assert_eq!(m.n_tasks, 3);
+}
+
+#[test]
+fn heuristic_overhead_is_negligible() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    let coord = Coordinator::new(device("k20c"), Policy::Heuristic);
+    // Paper time scale (10 ms unit): Table 6's overhead ratio is defined
+    // against real-magnitude device times.
+    let m = coord.run(batches("k20c", 6, 2, 1.0, 3));
+    let device_busy: f64 = m.group_makespans.iter().sum();
+    // Table 6's envelope: well under 2% of device time in release builds.
+    // Debug builds run the simulator ~15x slower; keep the invariant
+    // meaningful there without asserting optimized-only numbers.
+    let budget = if cfg!(debug_assertions) { 0.30 } else { 0.02 };
+    assert!(
+        m.sched_overhead_secs < budget * device_busy,
+        "overhead {} vs busy {device_busy}",
+        m.sched_overhead_secs
+    );
+}
+
+#[test]
+fn policies_complete_same_workload() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    let b = batches("amd_r9", 3, 2, 0.12, 4);
+    let no = Coordinator::new(device("amd_r9"), Policy::NoReorder).run(b.clone());
+    let he = Coordinator::new(device("amd_r9"), Policy::Heuristic).run(b);
+    assert_eq!(no.n_tasks, he.n_tasks);
+    // Same number of rounds (round structure is driven by batch deps).
+    assert_eq!(no.n_groups, he.n_groups);
+}

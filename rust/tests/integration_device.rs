@@ -1,0 +1,101 @@
+//! Integration: virtual device vs temporal model across catalogs — the
+//! Fig. 7 validation loop as assertions (compressed time scale).
+
+use std::sync::Arc;
+
+use oclcc::config::profile_by_name;
+use oclcc::device::{SpinExecutor, VirtualDevice};
+use oclcc::model::{simulate, EngineState, SimOptions};
+use oclcc::task::real::real_benchmark;
+use oclcc::task::synthetic::synthetic_benchmark;
+use oclcc::util::rng::Pcg64;
+use oclcc::util::stats;
+
+fn prediction_error(dev_name: &str, label: &str, scale: f64, order: &[usize]) -> f64 {
+    let p = profile_by_name(dev_name).unwrap();
+    let device = VirtualDevice::new(p.clone(), Arc::new(SpinExecutor));
+    let g = synthetic_benchmark(label, &p, scale).unwrap();
+    let tasks = g.reordered(order).tasks;
+    let pred = simulate(&tasks, &p, EngineState::default(), SimOptions::default())
+        .makespan;
+    let meas = device.run_group(&tasks).makespan;
+    stats::rel_err(pred, meas)
+}
+
+#[test]
+fn model_validates_on_every_device() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    for dev in ["amd_r9", "k20c", "xeon_phi"] {
+        let mut errs = Vec::new();
+        for (label, order) in
+            [("BK25", [0usize, 1, 2, 3]), ("BK50", [3, 1, 0, 2]), ("BK75", [2, 0, 3, 1])]
+        {
+            errs.push(prediction_error(dev, label, 0.5, &order));
+        }
+        let worst = stats::max(&errs);
+        assert!(worst < 0.12, "{dev}: worst error {worst}");
+    }
+}
+
+#[test]
+fn device_agrees_with_model_on_ordering_ranking() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    // If the model says order A is much better than order B, the device
+    // must agree on the direction.
+    let p = profile_by_name("amd_r9").unwrap();
+    let device = VirtualDevice::new(p.clone(), Arc::new(SpinExecutor));
+    let g = synthetic_benchmark("BK25", &p, 0.4).unwrap();
+    let orders = [[0usize, 1, 2, 3], [3, 2, 1, 0]];
+    let mut pred = Vec::new();
+    let mut meas = Vec::new();
+    for o in &orders {
+        let tasks = g.reordered(o).tasks;
+        pred.push(
+            simulate(&tasks, &p, EngineState::default(), SimOptions::default())
+                .makespan,
+        );
+        meas.push(device.run_group(&tasks).makespan);
+    }
+    let model_gap = (pred[1] - pred[0]) / pred[0];
+    assert!(model_gap > 0.05, "test premise: orders differ ({model_gap})");
+    assert!(
+        meas[1] > meas[0],
+        "device disagrees with model ranking: {meas:?} vs {pred:?}"
+    );
+}
+
+#[test]
+fn real_task_groups_validate_on_device() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    let p = profile_by_name("k20c").unwrap();
+    let device = VirtualDevice::new(p.clone(), Arc::new(SpinExecutor));
+    let mut rng = Pcg64::seeded(17);
+    let g = real_benchmark("BK50", "k20c", &p, 4, &mut rng, 0.5).unwrap();
+    let pred = simulate(&g.tasks, &p, EngineState::default(), SimOptions::default())
+        .makespan;
+    let meas = device.run_group(&g.tasks).makespan;
+    assert!(
+        stats::rel_err(pred, meas) < 0.12,
+        "pred {pred} vs meas {meas}"
+    );
+}
+
+#[test]
+fn cke_device_beats_no_cke_device_on_kernel_queue() {
+    let _t = oclcc::util::timing::timing_test_lock();
+    // CKE emulation (device-only) shortens back-to-back kernel queues —
+    // reproducing the paper's observation that CKE can make the measured
+    // best beat the model's best.
+    let base = profile_by_name("k20c").unwrap();
+    let mut cke = base.clone();
+    cke.cke_tail_overlap = 0.3;
+    let g = synthetic_benchmark("BK100", &base, 0.3).unwrap();
+    let dev_plain = VirtualDevice::new(base, Arc::new(SpinExecutor));
+    let dev_cke = VirtualDevice::new(cke, Arc::new(SpinExecutor));
+    let m_plain = dev_plain.run_group(&g.tasks).makespan;
+    let m_cke = dev_cke.run_group(&g.tasks).makespan;
+    assert!(
+        m_cke < m_plain,
+        "CKE should shorten kernel-dominant groups: {m_cke} vs {m_plain}"
+    );
+}

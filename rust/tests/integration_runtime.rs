@@ -1,0 +1,109 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//! Requires `make artifacts` (skips with a message otherwise, so
+//! `cargo test` stays green on a fresh checkout).
+
+use oclcc::runtime::manifest::{default_artifact_dir, Manifest};
+use oclcc::runtime::{PjrtRuntime, PjrtService};
+
+fn artifacts_present() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_covers_all_families() {
+    require_artifacts!();
+    let m = Manifest::load(&default_artifact_dir()).unwrap();
+    let fams: std::collections::BTreeSet<&str> =
+        m.variants.values().map(|v| v.kernel.as_str()).collect();
+    for fam in [
+        "matmul", "black_scholes", "fwt", "floyd_warshall", "conv_sep",
+        "vecadd", "transpose", "dct8x8", "synthetic",
+    ] {
+        assert!(fams.contains(fam), "missing family {fam}");
+    }
+    // Every referenced HLO file exists.
+    for v in m.variants.values() {
+        assert!(m.dir.join(&v.file).exists(), "missing {}", v.file);
+    }
+}
+
+#[test]
+fn compiles_and_executes_every_variant() {
+    require_artifacts!();
+    let rt = PjrtRuntime::new(&default_artifact_dir()).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+    for name in rt.manifest().variants.keys() {
+        let stats = rt.execute(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(stats.exec_secs > 0.0, "{name}");
+        assert_eq!(
+            stats.n_outputs,
+            rt.manifest().get(name).unwrap().outputs.len(),
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn vecadd_numerics_roundtrip() {
+    require_artifacts!();
+    let rt = PjrtRuntime::new(&default_artifact_dir()).unwrap();
+    // vecadd output = a + b with inputs uniform in [0.5, 1.5]: every
+    // element must land in [1.0, 3.0].
+    let out = rt.execute_collect("va_256k").unwrap();
+    assert_eq!(out.len(), 1 << 18);
+    assert!(out.iter().all(|&x| (1.0..=3.0).contains(&x)));
+    let mean: f32 = out.iter().sum::<f32>() / out.len() as f32;
+    assert!((mean - 2.0).abs() < 0.01, "mean {mean}");
+}
+
+#[test]
+fn transpose_is_involution_shape() {
+    require_artifacts!();
+    let rt = PjrtRuntime::new(&default_artifact_dir()).unwrap();
+    let out = rt.execute_collect("mt_512").unwrap();
+    assert_eq!(out.len(), 512 * 512);
+}
+
+#[test]
+fn service_thread_serves_concurrent_clients() {
+    require_artifacts!();
+    let service = PjrtService::start(default_artifact_dir()).unwrap();
+    service.warmup("syn_i16").unwrap();
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let s = service.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..3 {
+                s.execute("syn_i16").unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    service.shutdown();
+}
+
+#[test]
+fn execution_times_are_repeatable() {
+    require_artifacts!();
+    let rt = PjrtRuntime::new(&default_artifact_dir()).unwrap();
+    rt.execute("mm_256").unwrap(); // warm
+    let mut times = Vec::new();
+    for _ in 0..5 {
+        times.push(rt.execute("mm_256").unwrap().exec_secs);
+    }
+    let med = oclcc::util::stats::median(&times);
+    let spread = (oclcc::util::stats::max(&times) - oclcc::util::stats::min(&times)) / med;
+    // Loose bound: CPU timing, but the same executable should not vary 10x.
+    assert!(spread < 5.0, "times {times:?}");
+}

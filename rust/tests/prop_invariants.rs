@@ -1,0 +1,270 @@
+//! Property-based invariants over the temporal model and schedulers
+//! (proptest is not in the offline registry; this is a seeded-random
+//! property harness — every failure prints the generating seed, so cases
+//! are exactly reproducible).
+
+use oclcc::config::{builtin_profiles, profile_by_name, DeviceProfile};
+use oclcc::model::simulator::makespan_of_order;
+use oclcc::model::timeline::{CmdKind, Timeline};
+use oclcc::model::{simulate, EngineState, SimOptions};
+use oclcc::sched::bruteforce::{permutation_sample, OrderStats};
+use oclcc::sched::heuristic::batch_reorder;
+use oclcc::task::{KernelSpec, TaskSpec};
+use oclcc::util::rng::Pcg64;
+
+const CASES: u64 = 60;
+
+/// Random task group: 1-7 tasks, 0-2 commands per transfer stage,
+/// durations spanning 0.05-10 ms.
+fn random_group(rng: &mut Pcg64) -> Vec<TaskSpec> {
+    let n = 1 + rng.below(7) as usize;
+    (0..n)
+        .map(|i| {
+            let n_htd = rng.below(3) as usize;
+            let n_dth = rng.below(3) as usize;
+            let htd: Vec<u64> =
+                (0..n_htd).map(|_| rng.below(30_000_000) + 10_000).collect();
+            let dth: Vec<u64> =
+                (0..n_dth).map(|_| rng.below(30_000_000) + 10_000).collect();
+            TaskSpec {
+                name: format!("t{i}"),
+                htd_bytes: htd,
+                kernel: KernelSpec::Timed { secs: rng.uniform(0.05e-3, 10e-3) },
+                dth_bytes: dth,
+            }
+        })
+        .collect()
+}
+
+fn random_profile(rng: &mut Pcg64) -> DeviceProfile {
+    let base = builtin_profiles();
+    let mut p = base[rng.below(base.len() as u64) as usize].clone();
+    p.duplex_slowdown = rng.uniform(1.0, 2.0);
+    p.dma_engines = if rng.below(2) == 0 { 1 } else { 2 };
+    p
+}
+
+fn opts() -> SimOptions {
+    SimOptions { record_timeline: true }
+}
+
+#[test]
+fn prop_makespan_bounded_by_serial_and_critical_path() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(seed);
+        let tasks = random_group(&mut rng);
+        let p = random_profile(&mut rng);
+        let r = simulate(&tasks, &p, EngineState::default(), opts());
+        let serial: f64 = tasks.iter().map(|t| t.sequential_secs(&p)).sum();
+        // Lower bound: no engine can compress its own queue.
+        let k_sum: f64 = tasks.iter().map(|t| t.stage_secs(&p).k).sum();
+        assert!(
+            r.makespan <= serial + 1e-9,
+            "seed {seed}: makespan {} > serial {serial}",
+            r.makespan
+        );
+        assert!(
+            r.makespan >= k_sum - 1e-9,
+            "seed {seed}: makespan {} < kernel sum {k_sum}",
+            r.makespan
+        );
+        // Makespan equals the last command end.
+        let last_end = Timeline(&r.timeline).makespan();
+        assert!((r.makespan - last_end).abs() < 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_task_dependencies_in_timeline() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(1000 + seed);
+        let tasks = random_group(&mut rng);
+        let p = random_profile(&mut rng);
+        let r = simulate(&tasks, &p, EngineState::default(), opts());
+        for t in 0..tasks.len() {
+            let h_end = r
+                .timeline
+                .iter()
+                .filter(|c| c.task == t && c.kind == CmdKind::HtD)
+                .map(|c| c.end)
+                .fold(0.0, f64::max);
+            let k = r
+                .timeline
+                .iter()
+                .find(|c| c.task == t && c.kind == CmdKind::Kernel)
+                .unwrap();
+            assert!(k.start >= h_end - 1e-9, "seed {seed} task {t}");
+            for d in r
+                .timeline
+                .iter()
+                .filter(|c| c.task == t && c.kind == CmdKind::DtH)
+            {
+                assert!(d.start >= k.end - 1e-9, "seed {seed} task {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernels_serial_no_cke() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(2000 + seed);
+        let tasks = random_group(&mut rng);
+        let p = random_profile(&mut rng);
+        let r = simulate(&tasks, &p, EngineState::default(), opts());
+        let mut ks: Vec<_> = r
+            .timeline
+            .iter()
+            .filter(|c| c.kind == CmdKind::Kernel)
+            .collect();
+        ks.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in ks.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-9, "seed {seed}: CKE in model");
+        }
+    }
+}
+
+#[test]
+fn prop_single_dma_never_overlaps_transfers() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(3000 + seed);
+        let tasks = random_group(&mut rng);
+        let mut p = random_profile(&mut rng);
+        p.dma_engines = 1;
+        let r = simulate(&tasks, &p, EngineState::default(), opts());
+        let mut xs: Vec<_> = r
+            .timeline
+            .iter()
+            .filter(|c| c.kind != CmdKind::Kernel)
+            .collect();
+        xs.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in xs.windows(2) {
+            assert!(
+                w[1].start >= w[0].end - 1e-9,
+                "seed {seed}: transfer overlap on 1 DMA engine"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_heuristic_is_valid_permutation_and_beats_mean() {
+    let mut matched_best = 0usize;
+    let mut evaluated = 0usize;
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(4000 + seed);
+        let tasks = random_group(&mut rng);
+        let p = random_profile(&mut rng);
+        let order = batch_reorder(&tasks, &p, EngineState::default());
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..tasks.len()).collect::<Vec<_>>(), "seed {seed}");
+        if tasks.len() < 2 {
+            continue;
+        }
+        let st = OrderStats::exhaustive(&tasks, &p, 120, &mut rng);
+        let h = makespan_of_order(&tasks, &order, &p);
+        // The paper's claim: always better than the permutation average.
+        assert!(
+            h <= st.mean * 1.001 + 1e-9,
+            "seed {seed}: heuristic {h} vs mean {}",
+            st.mean
+        );
+        evaluated += 1;
+        if h <= st.best + 1e-9 {
+            matched_best += 1;
+        }
+    }
+    // "Most times near-optimal": the heuristic should match the sampled
+    // best in a solid majority of random cases.
+    assert!(
+        matched_best * 2 > evaluated,
+        "heuristic matched best only {matched_best}/{evaluated} times"
+    );
+}
+
+#[test]
+fn prop_scaling_tasks_scales_makespan() {
+    // Doubling every command duration doubles the makespan (the model is
+    // positively homogeneous once fixed latencies are zeroed).
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(5000 + seed);
+        let tasks = random_group(&mut rng);
+        let mut p = random_profile(&mut rng);
+        p.kernel_launch_overhead = 0.0;
+        p.htd.latency = 0.0;
+        p.dth.latency = 0.0;
+        let doubled: Vec<TaskSpec> = tasks
+            .iter()
+            .map(|t| TaskSpec {
+                name: t.name.clone(),
+                htd_bytes: t.htd_bytes.iter().map(|b| b * 2).collect(),
+                kernel: KernelSpec::Timed { secs: t.kernel.est_secs() * 2.0 },
+                dth_bytes: t.dth_bytes.iter().map(|b| b * 2).collect(),
+            })
+            .collect();
+        let m1 = simulate(&tasks, &p, EngineState::default(), SimOptions::default())
+            .makespan;
+        let m2 = simulate(&doubled, &p, EngineState::default(), SimOptions::default())
+            .makespan;
+        assert!(
+            (m2 - 2.0 * m1).abs() <= 2e-6 + 1e-6 * m1,
+            "seed {seed}: {m1} -> {m2}"
+        );
+    }
+}
+
+#[test]
+fn prop_adding_a_task_never_reduces_makespan() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(6000 + seed);
+        let mut tasks = random_group(&mut rng);
+        let p = random_profile(&mut rng);
+        let m_all = simulate(&tasks, &p, EngineState::default(), SimOptions::default())
+            .makespan;
+        tasks.pop();
+        let m_less = simulate(&tasks, &p, EngineState::default(), SimOptions::default())
+            .makespan;
+        assert!(
+            m_less <= m_all + 1e-9,
+            "seed {seed}: removing a task increased makespan {m_less} > {m_all}"
+        );
+    }
+}
+
+#[test]
+fn prop_duplex_slowdown_monotone() {
+    // A larger sigma can never make a group finish earlier.
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(7000 + seed);
+        let tasks = random_group(&mut rng);
+        let mut p = profile_by_name("amd_r9").unwrap();
+        p.duplex_slowdown = 1.0;
+        let m_fast = simulate(&tasks, &p, EngineState::default(), SimOptions::default())
+            .makespan;
+        p.duplex_slowdown = 1.6;
+        let m_slow = simulate(&tasks, &p, EngineState::default(), SimOptions::default())
+            .makespan;
+        assert!(
+            m_slow >= m_fast - 1e-9,
+            "seed {seed}: sigma 1.6 faster than 1.0 ({m_slow} < {m_fast})"
+        );
+    }
+}
+
+#[test]
+fn prop_permutation_distribution_sane() {
+    for seed in 0..20 {
+        let mut rng = Pcg64::seeded(8000 + seed);
+        let tasks = random_group(&mut rng);
+        if tasks.len() < 3 {
+            continue;
+        }
+        let p = random_profile(&mut rng);
+        let orders = permutation_sample(tasks.len(), 60, &mut rng);
+        let st = OrderStats::evaluate(&tasks, &orders, &p);
+        let eps = 1e-12 * st.worst;
+        assert!(st.best > 0.0 && st.best <= st.median + eps && st.median <= st.worst + eps);
+        assert!(st.mean >= st.best - eps && st.mean <= st.worst + eps);
+    }
+}
