@@ -1,8 +1,10 @@
-//! `cargo bench` — throughput of the event-driven simulator (the
-//! heuristic's inner loop; DESIGN.md §Perf targets >= 1e5 sims/s at T=8).
+//! `cargo bench --bench simulator_perf` — throughput of the event-driven
+//! simulator (the heuristic's inner loop; DESIGN.md §Perf targets >= 1e5
+//! sims/s at T=8), for both the one-shot wrapper and the resumable
+//! SimCursor snapshot/resume path the beam search actually runs.
 
 use oclcc::config::profile_by_name;
-use oclcc::model::{simulate, EngineState, SimOptions};
+use oclcc::model::{simulate, EngineState, SimCursor, SimOptions};
 use oclcc::task::real::real_benchmark;
 use oclcc::util::bench::Bencher;
 use oclcc::util::rng::Pcg64;
@@ -26,6 +28,46 @@ fn main() {
             println!(
                 "  -> {:.0} simulations/s",
                 1.0 / r.median.max(1e-12)
+            );
+
+            // Resumable hot path: a reused cursor reset per iteration —
+            // the same event work with zero allocations after warm-up.
+            let mut cursor = SimCursor::new(&profile, EngineState::default());
+            let r = b.bench(&format!("cursor reset+run {dev} T={t}"), || {
+                cursor.reset(&profile, EngineState::default());
+                for task in &g.tasks {
+                    cursor.push_task(task);
+                }
+                cursor.run_to_quiescence()
+            });
+            println!(
+                "  -> {:.0} cursor sims/s",
+                1.0 / r.median.max(1e-12)
+            );
+
+            // Snapshot/resume scoring pattern: pay for the half-group
+            // prefix once, then score each remaining task by resume+push.
+            let half = t / 2;
+            let mut prefix = SimCursor::new(&profile, EngineState::default());
+            for task in &g.tasks[..half] {
+                prefix.push_task(task);
+            }
+            let mut probe = SimCursor::new(&profile, EngineState::default());
+            let r = b.bench(
+                &format!("resume-score {dev} T={t} ({} cands)", t - half),
+                || {
+                    let mut acc = 0.0;
+                    for task in &g.tasks[half..] {
+                        probe.resume_from(&prefix);
+                        probe.push_task(task);
+                        acc += probe.run_to_quiescence();
+                    }
+                    acc
+                },
+            );
+            println!(
+                "  -> {:.0} candidate scores/s",
+                (t - half) as f64 / r.median.max(1e-12)
             );
         }
         // With timeline recording (reporting path, not the hot path).

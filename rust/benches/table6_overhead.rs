@@ -1,27 +1,119 @@
-//! `cargo bench` — Table 6: CPU cost of the Batch Reordering heuristic
-//! for T = 4/6/8, plus the width-1 (pure Algorithm-1) variant.
+//! `cargo bench --bench table6_overhead` — Table 6: CPU cost of the Batch
+//! Reordering heuristic for T = 4/6/8 per device, measured for BOTH the
+//! resumable-cursor implementation and the pre-refactor from-scratch
+//! replay baseline, plus the width-1 (pure Algorithm-1) variant.
+//!
+//! Emits `BENCH_sched_overhead.json` (array of rows with mean/p50/p99
+//! seconds per (device, T, impl) and per-point speedups) so future PRs
+//! have a perf trajectory to regress against. Acceptance target of the
+//! resumable refactor: >= 3x mean speedup vs the from-scratch baseline at
+//! T=8 on amd_r9.
 
 use oclcc::config::profile_by_name;
 use oclcc::model::EngineState;
-use oclcc::sched::heuristic::{batch_reorder, batch_reorder_beam};
+use oclcc::sched::heuristic::{
+    batch_reorder_beam_into, batch_reorder_beam_replay, BeamScratch,
+    DEFAULT_BEAM_WIDTH,
+};
 use oclcc::task::real::real_benchmark;
-use oclcc::util::bench::Bencher;
+use oclcc::util::bench::{BenchResult, Bencher};
+use oclcc::util::json::Json;
 use oclcc::util::rng::Pcg64;
 
+const OUT_PATH: &str = "BENCH_sched_overhead.json";
+
+fn row(device: &str, t: usize, imp: &str, r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("device", Json::str(device)),
+        ("t", Json::num(t as f64)),
+        ("impl", Json::str(imp)),
+        ("bench", r.to_json()),
+    ])
+}
+
 fn main() {
-    let profile = profile_by_name("k20c").unwrap();
     let mut b = Bencher::new(1.0, 400);
-    for t in [4usize, 6, 8] {
-        let mut rng = Pcg64::seeded(0xBE6C + t as u64);
-        let g = real_benchmark("BK50", "k20c", &profile, t, &mut rng, 1.0).unwrap();
-        b.bench(&format!("batch_reorder T={t} (beam 3)"), || {
-            batch_reorder(&g.tasks, &profile, EngineState::default())
-        });
-        b.bench(&format!("batch_reorder T={t} (beam 1)"), || {
-            batch_reorder_beam(&g.tasks, &profile, EngineState::default(), 1)
-        });
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<(String, usize, f64)> = Vec::new();
+
+    for dev in ["amd_r9", "k20c", "xeon_phi"] {
+        let profile = profile_by_name(dev).unwrap();
+        for t in [4usize, 6, 8] {
+            let mut rng = Pcg64::seeded(0xBE6C + t as u64);
+            let g =
+                real_benchmark("BK50", dev, &profile, t, &mut rng, 1.0).unwrap();
+
+            // Resumable path through an explicit scratch (what the
+            // coordinator hot loop does); warm-up iterations inside the
+            // Bencher also warm the arena, so steady-state is measured.
+            let mut scratch = BeamScratch::new();
+            let mut order: Vec<usize> = Vec::new();
+            let fast = b
+                .bench(&format!("reorder {dev} T={t} resumable"), || {
+                    batch_reorder_beam_into(
+                        &g.tasks,
+                        &profile,
+                        EngineState::default(),
+                        DEFAULT_BEAM_WIDTH,
+                        &mut scratch,
+                        &mut order,
+                    );
+                    order.len()
+                })
+                .clone();
+            json_rows.push(row(dev, t, "resumable", &fast));
+
+            // Pre-refactor baseline: from-scratch simulate per candidate.
+            let slow = b
+                .bench(&format!("reorder {dev} T={t} fromscratch"), || {
+                    batch_reorder_beam_replay(
+                        &g.tasks,
+                        &profile,
+                        EngineState::default(),
+                        DEFAULT_BEAM_WIDTH,
+                    )
+                })
+                .clone();
+            json_rows.push(row(dev, t, "fromscratch", &slow));
+
+            // Width-1 pure Algorithm-1 greedy, for the Table-6 comparison.
+            let w1 = b
+                .bench(&format!("reorder {dev} T={t} beam1"), || {
+                    batch_reorder_beam_into(
+                        &g.tasks,
+                        &profile,
+                        EngineState::default(),
+                        1,
+                        &mut scratch,
+                        &mut order,
+                    );
+                    order.len()
+                })
+                .clone();
+            json_rows.push(row(dev, t, "beam1", &w1));
+
+            let speedup = slow.mean / fast.mean.max(1e-12);
+            speedups.push((dev.to_string(), t, speedup));
+            json_rows.push(Json::obj(vec![
+                ("device", Json::str(dev)),
+                ("t", Json::num(t as f64)),
+                ("impl", Json::str("speedup_resumable_vs_fromscratch")),
+                ("speedup_mean", Json::num(speedup)),
+                ("speedup_p50", Json::num(slow.median / fast.median.max(1e-12))),
+            ]));
+        }
     }
+
     println!("== Table 6 counterpart: heuristic CPU time ==");
     print!("{}", b.report());
     println!("paper budget (K20c, Core 2 Quad): 0.06 / 0.10 / 0.22 ms for T=4/6/8");
+    println!("\nresumable vs from-scratch (mean):");
+    for (dev, t, s) in &speedups {
+        println!("  {dev} T={t}: {s:.2}x");
+    }
+
+    match std::fs::write(OUT_PATH, Json::arr(json_rows).to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}]"),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
 }

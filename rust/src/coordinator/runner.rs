@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use crate::config::DeviceProfile;
 use crate::device::vdev::VirtualDevice;
 use crate::model::EngineState;
-use crate::sched::heuristic::batch_reorder;
+use crate::sched::heuristic::{batch_reorder_beam_into, BeamScratch, DEFAULT_BEAM_WIDTH};
 use crate::coordinator::buffer::{SharedBuffer, Submission};
 use crate::queue::event::Event;
 use crate::task::TaskSpec;
@@ -117,20 +117,30 @@ impl Coordinator {
             })
         };
 
+        // The reorder arena persists across task groups: after the first
+        // round the heuristic performs zero heap allocations per group
+        // (cursor pools, beam entries and the order buffer are all reused).
+        let mut scratch = BeamScratch::new();
+        let mut order: Vec<usize> = Vec::new();
         while let Some(subs) = buffer.drain(t_workers, self.settle) {
             let tasks: Vec<TaskSpec> =
                 subs.iter().map(|s| s.task.clone()).collect();
-            let order: Vec<usize> = match self.policy {
-                Policy::NoReorder => (0..tasks.len()).collect(),
+            match self.policy {
+                Policy::NoReorder => {
+                    order.clear();
+                    order.extend(0..tasks.len());
+                }
                 Policy::Heuristic => {
                     let t0 = Instant::now();
-                    let o = batch_reorder(
+                    batch_reorder_beam_into(
                         &tasks,
                         &self.profile,
                         EngineState::default(),
+                        DEFAULT_BEAM_WIDTH,
+                        &mut scratch,
+                        &mut order,
                     );
                     sched_overhead += t0.elapsed().as_secs_f64();
-                    o
                 }
             };
             let ordered: Vec<TaskSpec> =

@@ -8,7 +8,10 @@
 //!   with least-squares calibration.
 //! * `simulator` — the event-driven simulator over three FIFO command
 //!   queues (Figs. 4-5) that predicts the makespan of an ordered task
-//!   group, with overlap re-estimation at every step.
+//!   group, with overlap re-estimation at every step. Exposed both as
+//!   one-shot wrappers (`simulate` / `simulate_order`) and as the
+//!   resumable [`SimCursor`] (push tasks incrementally, snapshot, resume)
+//!   that the scheduler hot path builds on.
 //! * `timeline` — per-command records, ASCII Gantt rendering and overlap
 //!   metrics used by reports and tests.
 
@@ -17,5 +20,7 @@ pub mod simulator;
 pub mod timeline;
 pub mod transfer;
 
-pub use simulator::{simulate, EngineState, SimOptions, SimResult};
+pub use simulator::{
+    simulate, simulate_order, EngineState, SimCursor, SimOptions, SimResult,
+};
 pub use timeline::{CmdKind, CmdRecord};

@@ -1,5 +1,5 @@
 //! Event-driven simulator of a task group's concurrent execution
-//! (paper §4.1, Figs. 4-5).
+//! (paper §4.1, Figs. 4-5) — as an explicit, *resumable* engine.
 //!
 //! Three FIFO software queues (HtD, K, DtH) mirror the OpenCL submission
 //! schemes of §3.2:
@@ -16,6 +16,30 @@
 //! Intra-task dependencies (K after its last HtD, DtH after K) are the
 //! green arrows of Fig. 4. Kernel commands never overlap each other: the
 //! model deliberately excludes CKE (§4.1).
+//!
+//! # Resumable simulation ([`SimCursor`])
+//!
+//! The scheduler's hot path is no longer "replay the whole prefix from
+//! scratch per candidate". A [`SimCursor`] owns the three queues, the
+//! dependency counters, the three active-engine slots and the clock;
+//! [`SimCursor::push_task`] appends a task and advances the simulation up
+//! to the *committed frontier* — the instant the HtD engine would go idle,
+//! which is exactly where a later-pushed task's first HtD command would
+//! start and perturb downstream transfer rates. Everything before the
+//! frontier is invariant under future pushes, so a paused cursor can be
+//! snapshotted ([`SimCursor::resume_from`] is an allocation-free
+//! `clone_from`) and each candidate extension scored by resuming instead
+//! of replaying: the beam search in `sched/heuristic.rs` pays for each
+//! prefix **once**, turning its former O(w·T³·C) total event work into
+//! amortized O(w·T²·C), with zero heap allocations per candidate after
+//! warm-up (cursor buffers are reused, never reallocated at steady state).
+//!
+//! `simulate` / `simulate_order` / `makespan_of_order` remain as thin
+//! wrappers that drive a fresh cursor, and
+//! [`simulate_order_fromscratch`] preserves the pre-refactor single-shot
+//! loop as an independently-coded reference: the equivalence property
+//! tests (rust/tests/prop_incremental.rs) pin the cursor to it at 1e-12,
+//! and the `table6_overhead` bench uses it as the speedup baseline.
 //!
 //! Transfers are fluid: a command is `latency` seconds of fixed overhead
 //! followed by `bytes` drained at the current rate. The virtual device
@@ -75,6 +99,476 @@ struct Cmd {
     start: f64,
 }
 
+const EPS: f64 = 1e-12;
+
+/// Device constants the event loop consumes, copied out of a
+/// [`DeviceProfile`] so a cursor is plain `Copy` data plus buffers (no
+/// lifetimes, cheap `clone_from`).
+#[derive(Clone, Copy, Debug, Default)]
+struct ProfileParams {
+    single_dma: bool,
+    htd_latency: f64,
+    dth_latency: f64,
+    htd_bps: f64,
+    dth_bps: f64,
+    duplex_slowdown: f64,
+    kernel_launch_overhead: f64,
+}
+
+impl ProfileParams {
+    fn of(p: &DeviceProfile) -> Self {
+        ProfileParams {
+            single_dma: p.dma_engines < 2,
+            htd_latency: p.htd.latency,
+            dth_latency: p.dth.latency,
+            htd_bps: p.htd.bytes_per_sec,
+            dth_bps: p.dth.bytes_per_sec,
+            duplex_slowdown: p.duplex_slowdown,
+            kernel_launch_overhead: p.kernel_launch_overhead,
+        }
+    }
+
+    /// Effective transfer rate (bytes/s), same semantics as
+    /// `DeviceProfile::rate`.
+    #[inline]
+    fn rate(&self, htd: bool, opposite_active: bool) -> f64 {
+        let base = if htd { self.htd_bps } else { self.dth_bps };
+        if opposite_active && !self.single_dma {
+            base / self.duplex_slowdown
+        } else {
+            base
+        }
+    }
+}
+
+/// Resumable incremental simulation state: queues, cursors, dependency
+/// counters, three active-command slots and the clock. See the module
+/// docs for the committed-frontier invariant that makes pause/resume
+/// bit-identical to a from-scratch run.
+#[derive(Debug, Default)]
+pub struct SimCursor {
+    prof: ProfileParams,
+    init: EngineState,
+    record: bool,
+    /// Flattened FIFO queues; entries are (slot, seq, bytes). Slots are
+    /// positions in push order, matching `simulate_order`'s indexing.
+    q_htd: Vec<(usize, usize, u64)>,
+    q_dth: Vec<(usize, usize, u64)>,
+    h_next: usize,
+    d_next: usize,
+    k_next: usize,
+    /// Per-slot dependency bookkeeping.
+    htd_pending: Vec<u32>,
+    k_done: Vec<bool>,
+    dth_pending: Vec<u32>,
+    /// Kernel duration per slot (est_secs + launch overhead), captured at
+    /// push time so the cursor never re-touches the TaskSpec.
+    kernel_secs: Vec<f64>,
+    htd_cmds_done: usize,
+    /// Active slots: at most one command per engine.
+    act_h: Option<Cmd>,
+    act_d: Option<Cmd>,
+    act_k: Option<Cmd>,
+    now: f64,
+    end_state: EngineState,
+    task_end: Vec<f64>,
+    timeline: Vec<CmdRecord>,
+    finished: bool,
+}
+
+impl SimCursor {
+    /// Fresh cursor over `profile` starting from `init` engine state.
+    pub fn new(profile: &DeviceProfile, init: EngineState) -> SimCursor {
+        Self::with_options(profile, init, SimOptions::default())
+    }
+
+    pub fn with_options(
+        profile: &DeviceProfile,
+        init: EngineState,
+        opts: SimOptions,
+    ) -> SimCursor {
+        SimCursor {
+            prof: ProfileParams::of(profile),
+            init,
+            record: opts.record_timeline,
+            end_state: init,
+            ..SimCursor::default()
+        }
+    }
+
+    /// Placeholder cursor for scratch arenas: carries zeroed device
+    /// parameters and must be [`SimCursor::reset`] (or `resume_from`) to a
+    /// real profile before use.
+    pub fn detached() -> SimCursor {
+        SimCursor::default()
+    }
+
+    /// Rewind to an empty simulation, keeping every buffer's capacity (so
+    /// this is NOT `*self = default()` — the Vec clears below deliberately
+    /// retain their allocations for the scheduler hot path).
+    pub fn reset(&mut self, profile: &DeviceProfile, init: EngineState) {
+        self.prof = ProfileParams::of(profile);
+        self.init = init;
+        self.q_htd.clear();
+        self.q_dth.clear();
+        self.h_next = 0;
+        self.d_next = 0;
+        self.k_next = 0;
+        self.htd_pending.clear();
+        self.k_done.clear();
+        self.dth_pending.clear();
+        self.kernel_secs.clear();
+        self.htd_cmds_done = 0;
+        self.act_h = None;
+        self.act_d = None;
+        self.act_k = None;
+        self.now = 0.0;
+        self.end_state = init;
+        self.task_end.clear();
+        self.timeline.clear();
+        self.finished = false;
+    }
+
+    /// Number of tasks pushed so far.
+    pub fn n_tasks(&self) -> usize {
+        self.task_end.len()
+    }
+
+    /// Current simulation clock (the makespan once finished).
+    pub fn clock(&self) -> f64 {
+        self.now
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Engine availability after the events processed so far.
+    pub fn end_state(&self) -> EngineState {
+        self.end_state
+    }
+
+    /// Per-slot completion times (valid for slots whose last command has
+    /// completed; 0.0 otherwise).
+    pub fn task_end(&self) -> &[f64] {
+        &self.task_end
+    }
+
+    /// Recorded per-command timeline (empty unless constructed with
+    /// `record_timeline`).
+    pub fn timeline(&self) -> &[CmdRecord] {
+        &self.timeline
+    }
+
+    /// Append one task and advance the committed frontier. Panics (debug)
+    /// after `run_to_quiescence`: pushing into a drained simulation would
+    /// diverge from the equivalent from-scratch run (on 1-DMA devices the
+    /// drained run already released DtH commands that a longer order would
+    /// have held back).
+    pub fn push_task(&mut self, task: &TaskSpec) {
+        debug_assert!(
+            !self.finished,
+            "SimCursor::push_task after run_to_quiescence; snapshot before \
+             finishing instead"
+        );
+        let slot = self.task_end.len();
+        for (j, &b) in task.htd_bytes.iter().enumerate() {
+            self.q_htd.push((slot, j, b));
+        }
+        for (j, &b) in task.dth_bytes.iter().enumerate() {
+            self.q_dth.push((slot, j, b));
+        }
+        self.htd_pending.push(task.htd_bytes.len() as u32);
+        self.dth_pending.push(task.dth_bytes.len() as u32);
+        self.k_done.push(false);
+        self.kernel_secs
+            .push(task.kernel.est_secs() + self.prof.kernel_launch_overhead);
+        self.task_end.push(0.0);
+        self.drain(false);
+    }
+
+    /// Run every remaining event; returns the makespan. The cursor stays
+    /// readable (task_end / end_state / timeline) but accepts no further
+    /// pushes.
+    pub fn run_to_quiescence(&mut self) -> f64 {
+        self.drain(true);
+        self.finished = true;
+        self.now
+    }
+
+    /// Owning snapshot (allocates; the hot path uses
+    /// [`SimCursor::resume_from`] on a pooled cursor instead).
+    pub fn snapshot(&self) -> SimCursor {
+        self.clone()
+    }
+
+    /// Become a copy of `snap`, reusing this cursor's buffers — zero heap
+    /// allocations once capacities have warmed up.
+    pub fn resume_from(&mut self, snap: &SimCursor) {
+        self.clone_from(snap);
+    }
+
+    /// Drive the event loop. With `finishing == false` the loop stops at
+    /// the committed frontier: the moment the HtD engine would go idle
+    /// with an empty HtD queue. Up to that instant the event sequence is
+    /// invariant under future `push_task` calls (appended HtD commands
+    /// would first run exactly at the frontier; DtH rates and 1-DMA
+    /// engine sharing only depend on HtD activity, which is fully known
+    /// until then), so pause/resume replays the from-scratch event
+    /// sequence bit for bit.
+    fn drain(&mut self, finishing: bool) {
+        loop {
+            // ---- Activation phase: move ready queue heads into engines.
+            // HtD engine.
+            if self.act_h.is_none() && self.h_next < self.q_htd.len() {
+                let (t, j, b) = self.q_htd[self.h_next];
+                // Single-DMA: the transfer engine is shared; it must not
+                // carry an active DtH (act_d) either.
+                let engine_ok = !self.prof.single_dma || self.act_d.is_none();
+                if engine_ok && self.now + EPS >= self.init.htd_free {
+                    self.act_h = Some(Cmd {
+                        task: t,
+                        kind: CmdKind::HtD,
+                        seq: j,
+                        lat_left: self.prof.htd_latency,
+                        work_left: b as f64,
+                        start: self.now.max(self.init.htd_free),
+                    });
+                    self.h_next += 1;
+                }
+            }
+            // DtH engine: head must satisfy (a) its kernel done, (b) on
+            // 1-DMA devices all HtD commands done AND the shared engine
+            // free. "All HtD commands" is only a known set once the caller
+            // stops pushing, hence the `finishing` gate.
+            if self.act_d.is_none() && self.d_next < self.q_dth.len() {
+                let (t, j, b) = self.q_dth[self.d_next];
+                let dep_ok = self.k_done[t]
+                    && (!self.prof.single_dma
+                        || (finishing
+                            && self.htd_cmds_done == self.q_htd.len()
+                            && self.act_h.is_none()));
+                if dep_ok && self.now + EPS >= self.init.dth_free {
+                    self.act_d = Some(Cmd {
+                        task: t,
+                        kind: CmdKind::DtH,
+                        seq: j,
+                        lat_left: self.prof.dth_latency,
+                        work_left: b as f64,
+                        start: self.now.max(self.init.dth_free),
+                    });
+                    self.d_next += 1;
+                }
+            }
+            // Compute engine: strictly serial, K_t after all its HtD.
+            if self.act_k.is_none()
+                && self.k_next < self.k_done.len()
+                && self.htd_pending[self.k_next] == 0
+                && self.now + EPS >= self.init.k_free
+            {
+                self.act_k = Some(Cmd {
+                    task: self.k_next,
+                    kind: CmdKind::Kernel,
+                    seq: 0,
+                    lat_left: 0.0,
+                    work_left: self.kernel_secs[self.k_next],
+                    start: self.now.max(self.init.k_free),
+                });
+                self.k_next += 1;
+            }
+
+            // ---- Committed frontier: while pushes may still arrive, stop
+            // the clock where a future task's first HtD would slot in.
+            if !finishing && self.act_h.is_none() && self.h_next >= self.q_htd.len()
+            {
+                return;
+            }
+
+            // ---- Termination: nothing active and nothing activatable.
+            if self.act_h.is_none() && self.act_d.is_none() && self.act_k.is_none()
+            {
+                if self.h_next >= self.q_htd.len()
+                    && self.d_next >= self.q_dth.len()
+                    && self.k_next >= self.k_done.len()
+                {
+                    return;
+                }
+                // Engines blocked purely by init free-times: jump forward.
+                // Only consider queue heads whose *dependencies* are
+                // already satisfied — others can never unblock while
+                // nothing runs.
+                let mut jump = f64::INFINITY;
+                if self.h_next < self.q_htd.len() {
+                    jump = jump.min(self.init.htd_free);
+                }
+                if self.d_next < self.q_dth.len() {
+                    let (t, _, _) = self.q_dth[self.d_next];
+                    if self.k_done[t]
+                        && (!self.prof.single_dma
+                            || self.htd_cmds_done == self.q_htd.len())
+                    {
+                        jump = jump.min(self.init.dth_free);
+                    }
+                }
+                if self.k_next < self.k_done.len()
+                    && self.htd_pending[self.k_next] == 0
+                {
+                    jump = jump.min(self.init.k_free);
+                }
+                assert!(
+                    jump.is_finite() && jump > self.now,
+                    "simulator deadlock at t={}",
+                    self.now
+                );
+                self.now = jump;
+                continue;
+            }
+
+            // ---- Rate assignment (re-estimated every event, Fig. 5).
+            let both_transfers = self.act_h.is_some() && self.act_d.is_some();
+            let rate_h = self.prof.rate(true, both_transfers);
+            let rate_d = self.prof.rate(false, both_transfers);
+
+            // ---- Earliest completion among active commands.
+            let eta = |c: &Cmd, rate: f64| c.lat_left + c.work_left / rate;
+            let mut dt = f64::INFINITY;
+            if let Some(c) = &self.act_h {
+                dt = dt.min(eta(c, rate_h));
+            }
+            if let Some(c) = &self.act_d {
+                dt = dt.min(eta(c, rate_d));
+            }
+            if let Some(c) = &self.act_k {
+                dt = dt.min(eta(c, 1.0));
+            }
+            debug_assert!(dt.is_finite() && dt >= 0.0);
+            self.now += dt;
+
+            // ---- Advance in-flight work and collect completions.
+            let done_h = advance_cmd(&mut self.act_h, rate_h, dt);
+            let done_d = advance_cmd(&mut self.act_d, rate_d, dt);
+            let done_k = advance_cmd(&mut self.act_k, 1.0, dt);
+            for done in [done_h, done_d, done_k].into_iter().flatten() {
+                self.complete(done);
+            }
+        }
+    }
+
+    fn complete(&mut self, done: Cmd) {
+        match done.kind {
+            CmdKind::HtD => {
+                self.htd_pending[done.task] -= 1;
+                self.htd_cmds_done += 1;
+                self.end_state.htd_free = self.now;
+            }
+            CmdKind::Kernel => {
+                self.k_done[done.task] = true;
+                self.end_state.k_free = self.now;
+                if self.dth_pending[done.task] == 0 {
+                    self.task_end[done.task] = self.now;
+                }
+            }
+            CmdKind::DtH => {
+                self.dth_pending[done.task] -= 1;
+                self.end_state.dth_free = self.now;
+                if self.dth_pending[done.task] == 0 {
+                    self.task_end[done.task] = self.now;
+                }
+            }
+        }
+        if self.record {
+            self.timeline.push(CmdRecord {
+                task: done.task,
+                kind: done.kind,
+                seq: done.seq,
+                start: done.start,
+                end: self.now,
+            });
+        }
+    }
+
+    fn into_result(self) -> SimResult {
+        SimResult {
+            makespan: self.now,
+            task_end: self.task_end,
+            end_state: self.end_state,
+            timeline: self.timeline,
+        }
+    }
+}
+
+/// Burn `dt` seconds of an in-flight command at `rate`; returns the
+/// command if it completed (same arithmetic as the original loop, so
+/// cursor and from-scratch runs agree bit for bit).
+#[inline]
+fn advance_cmd(c: &mut Option<Cmd>, rate: f64, dt: f64) -> Option<Cmd> {
+    if let Some(cmd) = c.as_mut() {
+        let lat_used = dt.min(cmd.lat_left);
+        cmd.lat_left -= lat_used;
+        cmd.work_left -= (dt - lat_used).max(0.0) * rate;
+        if cmd.lat_left <= EPS && cmd.work_left <= rate.max(1.0) * EPS {
+            let done = *cmd;
+            *c = None;
+            return Some(done);
+        }
+    }
+    None
+}
+
+impl Clone for SimCursor {
+    fn clone(&self) -> SimCursor {
+        SimCursor {
+            prof: self.prof,
+            init: self.init,
+            record: self.record,
+            q_htd: self.q_htd.clone(),
+            q_dth: self.q_dth.clone(),
+            h_next: self.h_next,
+            d_next: self.d_next,
+            k_next: self.k_next,
+            htd_pending: self.htd_pending.clone(),
+            k_done: self.k_done.clone(),
+            dth_pending: self.dth_pending.clone(),
+            kernel_secs: self.kernel_secs.clone(),
+            htd_cmds_done: self.htd_cmds_done,
+            act_h: self.act_h,
+            act_d: self.act_d,
+            act_k: self.act_k,
+            now: self.now,
+            end_state: self.end_state,
+            task_end: self.task_end.clone(),
+            timeline: self.timeline.clone(),
+            finished: self.finished,
+        }
+    }
+
+    /// Buffer-reusing copy: `Vec::clone_from` truncates and extends in
+    /// place, so a warmed-up destination performs no heap allocation.
+    fn clone_from(&mut self, src: &SimCursor) {
+        self.prof = src.prof;
+        self.init = src.init;
+        self.record = src.record;
+        self.q_htd.clone_from(&src.q_htd);
+        self.q_dth.clone_from(&src.q_dth);
+        self.h_next = src.h_next;
+        self.d_next = src.d_next;
+        self.k_next = src.k_next;
+        self.htd_pending.clone_from(&src.htd_pending);
+        self.k_done.clone_from(&src.k_done);
+        self.dth_pending.clone_from(&src.dth_pending);
+        self.kernel_secs.clone_from(&src.kernel_secs);
+        self.htd_cmds_done = src.htd_cmds_done;
+        self.act_h = src.act_h;
+        self.act_d = src.act_d;
+        self.act_k = src.act_k;
+        self.now = src.now;
+        self.end_state = src.end_state;
+        self.task_end.clone_from(&src.task_end);
+        self.timeline.clone_from(&src.timeline);
+        self.finished = src.finished;
+    }
+}
+
 /// Predict the execution of `tasks` submitted in the given vector order on
 /// `profile`, starting from `init` engine state.
 pub fn simulate(
@@ -83,16 +577,52 @@ pub fn simulate(
     init: EngineState,
     opts: SimOptions,
 ) -> SimResult {
-    let order: Vec<usize> = (0..tasks.len()).collect();
-    simulate_order(tasks, &order, profile, init, opts)
+    let mut cursor = SimCursor::with_options(profile, init, opts);
+    for task in tasks {
+        cursor.push_task(task);
+    }
+    cursor.run_to_quiescence();
+    cursor.into_result()
 }
 
 /// Zero-copy variant: predict `tasks` submitted in `order` (a permutation
-/// of indices into `tasks`). This is the scheduler's hot path — the
-/// heuristic calls it O(w * T^2) times per reordering, so it must not
-/// clone task specs (String names alone would dominate). Record/task_end
-/// indices are *slots* (positions in `order`), matching `simulate`.
+/// of indices into `tasks`). Record/task_end indices are *slots*
+/// (positions in `order`), matching `simulate`. This is a thin wrapper
+/// over [`SimCursor`]; schedulers that score many related orders should
+/// hold cursors directly and pay for shared prefixes once.
 pub fn simulate_order(
+    all_tasks: &[TaskSpec],
+    order: &[usize],
+    profile: &DeviceProfile,
+    init: EngineState,
+    opts: SimOptions,
+) -> SimResult {
+    let mut cursor = SimCursor::with_options(profile, init, opts);
+    for &i in order {
+        cursor.push_task(&all_tasks[i]);
+    }
+    cursor.run_to_quiescence();
+    cursor.into_result()
+}
+
+/// Convenience: makespan of an order over a task group.
+pub fn makespan_of_order(
+    tasks: &[TaskSpec],
+    order: &[usize],
+    profile: &DeviceProfile,
+) -> f64 {
+    simulate_order(tasks, order, profile, EngineState::default(), SimOptions::default())
+        .makespan
+}
+
+/// The pre-refactor single-shot event loop, kept verbatim as an
+/// independently-coded reference implementation: the incremental-cursor
+/// property tests pin [`SimCursor`] to it (<= 1e-12), and
+/// `benches/table6_overhead.rs` uses it (via
+/// `sched::heuristic::batch_reorder_beam_replay`) as the from-scratch
+/// baseline the resumable path is measured against. Allocates ~6 Vecs per
+/// call by construction — do not use on hot paths.
+pub fn simulate_order_fromscratch(
     all_tasks: &[TaskSpec],
     order: &[usize],
     profile: &DeviceProfile,
@@ -154,16 +684,13 @@ pub fn simulate_order(
     let mut act_k: Option<Cmd> = None;
 
     let mut now = 0.0f64;
-    let eps = 1e-12;
+    let eps = EPS;
 
     loop {
         // ---- Activation phase: move ready queue heads into free engines.
-        // HtD engine.
         if act_h.is_none() && h_next < q_htd.len() {
             let (t, j, b) = q_htd[h_next];
             let free_at = init.htd_free;
-            // Single-DMA: the transfer engine is shared; it must not carry
-            // an active DtH (act_d) either.
             let engine_ok = !single_dma || act_d.is_none();
             if engine_ok && now + eps >= free_at {
                 act_h = Some(Cmd {
@@ -177,8 +704,6 @@ pub fn simulate_order(
                 h_next += 1;
             }
         }
-        // DtH engine: head must satisfy (a) its kernel done, (b) on 1-DMA
-        // devices all HtD commands done AND the shared engine free.
         if act_d.is_none() && d_next < q_dth.len() {
             let (t, j, b) = q_dth[d_next];
             let dep_ok = k_done[t]
@@ -196,21 +721,22 @@ pub fn simulate_order(
                 d_next += 1;
             }
         }
-        // Compute engine: strictly serial, K_t after all its HtD commands.
-        if act_k.is_none() && k_next < n {
-            if htd_pending[k_next] == 0 && now + eps >= init.k_free {
-                let dur = tasks.get(k_next).kernel.est_secs()
-                    + profile.kernel_launch_overhead;
-                act_k = Some(Cmd {
-                    task: k_next,
-                    kind: CmdKind::Kernel,
-                    seq: 0,
-                    lat_left: 0.0,
-                    work_left: dur,
-                    start: now.max(init.k_free),
-                });
-                k_next += 1;
-            }
+        if act_k.is_none()
+            && k_next < n
+            && htd_pending[k_next] == 0
+            && now + eps >= init.k_free
+        {
+            let dur = tasks.get(k_next).kernel.est_secs()
+                + profile.kernel_launch_overhead;
+            act_k = Some(Cmd {
+                task: k_next,
+                kind: CmdKind::Kernel,
+                seq: 0,
+                lat_left: 0.0,
+                work_left: dur,
+                start: now.max(init.k_free),
+            });
+            k_next += 1;
         }
 
         // ---- Termination: nothing active and nothing activatable.
@@ -218,9 +744,6 @@ pub fn simulate_order(
             if h_next >= q_htd.len() && d_next >= q_dth.len() && k_next >= n {
                 break;
             }
-            // Engines blocked purely by init free-times: jump forward.
-            // Only consider queue heads whose *dependencies* are already
-            // satisfied — others can never unblock while nothing runs.
             let mut jump = f64::INFINITY;
             if h_next < q_htd.len() {
                 jump = jump.min(init.htd_free);
@@ -263,23 +786,9 @@ pub fn simulate_order(
         debug_assert!(dt.is_finite() && dt >= 0.0);
         now += dt;
 
-        // ---- Advance in-flight work and collect completions.
-        let complete = |c: &mut Option<Cmd>, rate: f64| -> Option<Cmd> {
-            if let Some(cmd) = c.as_mut() {
-                let lat_used = dt.min(cmd.lat_left);
-                cmd.lat_left -= lat_used;
-                cmd.work_left -= (dt - lat_used).max(0.0) * rate;
-                if cmd.lat_left <= eps && cmd.work_left <= rate.max(1.0) * eps {
-                    let done = *cmd;
-                    *c = None;
-                    return Some(done);
-                }
-            }
-            None
-        };
-        let done_h = complete(&mut act_h, rate_h);
-        let done_d = complete(&mut act_d, rate_d);
-        let done_k = complete(&mut act_k, 1.0);
+        let done_h = advance_cmd(&mut act_h, rate_h, dt);
+        let done_d = advance_cmd(&mut act_d, rate_d, dt);
+        let done_k = advance_cmd(&mut act_k, 1.0, dt);
 
         for done in [done_h, done_d, done_k].into_iter().flatten() {
             match done.kind {
@@ -317,16 +826,6 @@ pub fn simulate_order(
 
     result.makespan = now;
     result
-}
-
-/// Convenience: makespan of an order over a task group.
-pub fn makespan_of_order(
-    tasks: &[TaskSpec],
-    order: &[usize],
-    profile: &DeviceProfile,
-) -> f64 {
-    simulate_order(tasks, order, profile, EngineState::default(), SimOptions::default())
-        .makespan
 }
 
 #[cfg(test)]
@@ -530,5 +1029,91 @@ mod tests {
         let p = profile_by_name("amd_r9").unwrap();
         let r = simulate(&[], &p, EngineState::default(), opts());
         assert_eq!(r.makespan, 0.0);
+    }
+
+    #[test]
+    fn cursor_matches_fromscratch_on_catalogs() {
+        for dev in ["amd_r9", "k20c", "xeon_phi"] {
+            let p = profile_by_name(dev).unwrap();
+            for label in ["BK0", "BK25", "BK50", "BK75", "BK100"] {
+                let g = synthetic_benchmark(label, &p, 1.0).unwrap();
+                for perm in crate::sched::bruteforce::permutations(4) {
+                    let a = simulate_order(
+                        &g.tasks,
+                        &perm,
+                        &p,
+                        EngineState::default(),
+                        opts(),
+                    );
+                    let b = simulate_order_fromscratch(
+                        &g.tasks,
+                        &perm,
+                        &p,
+                        EngineState::default(),
+                        opts(),
+                    );
+                    assert!(
+                        (a.makespan - b.makespan).abs() <= 1e-12,
+                        "{dev}/{label}/{perm:?}: {} vs {}",
+                        a.makespan,
+                        b.makespan
+                    );
+                    assert_eq!(a.timeline.len(), b.timeline.len());
+                    assert_eq!(a.task_end, b.task_end);
+                    assert_eq!(a.end_state, b.end_state);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_resume_scores_extensions_exactly() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        // Simulate prefix [2, 0] once, snapshot, then score extensions 1
+        // and 3 by resuming — must equal the from-scratch runs.
+        let mut prefix = SimCursor::new(&p, EngineState::default());
+        prefix.push_task(&g.tasks[2]);
+        prefix.push_task(&g.tasks[0]);
+        let mut probe = SimCursor::new(&p, EngineState::default());
+        for ext in [1usize, 3] {
+            probe.resume_from(&prefix);
+            probe.push_task(&g.tasks[ext]);
+            let m = probe.run_to_quiescence();
+            let want = simulate_order_fromscratch(
+                &g.tasks,
+                &[2, 0, ext],
+                &p,
+                EngineState::default(),
+                SimOptions::default(),
+            )
+            .makespan;
+            assert!((m - want).abs() <= 1e-12, "ext {ext}: {m} vs {want}");
+        }
+        // The snapshot source is still resumable afterwards.
+        prefix.push_task(&g.tasks[1]);
+        prefix.push_task(&g.tasks[3]);
+        let m = prefix.run_to_quiescence();
+        let want = makespan_of_order(&g.tasks, &[2, 0, 1, 3], &p);
+        assert!((m - want).abs() <= 1e-12);
+    }
+
+    #[test]
+    fn cursor_reset_reuses_buffers() {
+        let p = profile_by_name("k20c").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        let mut cur = SimCursor::new(&p, EngineState::default());
+        for t in &g.tasks {
+            cur.push_task(t);
+        }
+        let first = cur.run_to_quiescence();
+        cur.reset(&p, EngineState::default());
+        assert_eq!(cur.n_tasks(), 0);
+        assert!(!cur.is_finished());
+        for t in &g.tasks {
+            cur.push_task(t);
+        }
+        let second = cur.run_to_quiescence();
+        assert_eq!(first, second);
     }
 }

@@ -4,16 +4,15 @@
 //! re-parses and re-assigns instruction ids, sidestepping the 64-bit-id
 //! protos jax >= 0.5 emits that xla_extension 0.5.1 rejects (see
 //! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The live implementation needs the `xla` crate, which is not vendored
+//! in this offline workspace; it is gated behind the `pjrt` cargo feature
+//! (see rust/Cargo.toml). The default build ships a stub whose
+//! constructor fails with an actionable message, so every other layer
+//! (model, scheduler, virtual device, coordinator) builds and runs
+//! without PJRT.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-use std::time::Instant;
-
-use anyhow::{Context, Result};
-
-use crate::runtime::manifest::{Manifest, VariantMeta};
-use crate::util::rng::Pcg64;
+use anyhow::Result;
 
 /// One timed execution.
 #[derive(Clone, Copy, Debug)]
@@ -24,116 +23,183 @@ pub struct ExecStats {
     pub n_outputs: usize,
 }
 
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    /// Deterministic input literals, built once (host-side "pinned
-    /// buffers"; input creation is the HtD analogue which the virtual
-    /// device paces separately).
-    inputs: Vec<xla::Literal>,
-}
+#[cfg(feature = "pjrt")]
+mod live {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
+    use std::time::Instant;
 
-/// Thread-safe artifact registry bound to one PJRT CPU client.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<Compiled>>>,
-}
+    use anyhow::{Context, Result};
 
-impl PjrtRuntime {
-    /// Create a CPU-client runtime over an artifact directory.
-    pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    use super::ExecStats;
+    use crate::runtime::manifest::{Manifest, VariantMeta};
+    use crate::util::rng::Pcg64;
+
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+        /// Deterministic input literals, built once (host-side "pinned
+        /// buffers"; input creation is the HtD analogue which the virtual
+        /// device paces separately).
+        inputs: Vec<xla::Literal>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    /// Thread-safe artifact registry bound to one PJRT CPU client.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<Compiled>>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compiled(&self, variant: &str) -> Result<std::sync::Arc<Compiled>> {
-        if let Some(c) = self.cache.lock().unwrap().get(variant) {
-            return Ok(c.clone());
+    impl PjrtRuntime {
+        /// Create a CPU-client runtime over an artifact directory.
+        pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtRuntime { client, manifest, cache: Mutex::new(HashMap::new()) })
         }
-        let meta = self.manifest.get(variant)?.clone();
-        let path = self.manifest.hlo_path(variant)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {variant}"))?;
-        let inputs = build_inputs(&meta)?;
-        let arc = std::sync::Arc::new(Compiled { exe, inputs });
-        self.cache.lock().unwrap().insert(variant.to_string(), arc.clone());
-        Ok(arc)
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn compiled(&self, variant: &str) -> Result<std::sync::Arc<Compiled>> {
+            if let Some(c) = self.cache.lock().unwrap().get(variant) {
+                return Ok(c.clone());
+            }
+            let meta = self.manifest.get(variant)?.clone();
+            let path = self.manifest.hlo_path(variant)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {variant}"))?;
+            let inputs = build_inputs(&meta)?;
+            let arc = std::sync::Arc::new(Compiled { exe, inputs });
+            self.cache.lock().unwrap().insert(variant.to_string(), arc.clone());
+            Ok(arc)
+        }
+
+        /// Pre-compile a variant (hot-path warmup).
+        pub fn warmup(&self, variant: &str) -> Result<()> {
+            self.compiled(variant).map(|_| ())
+        }
+
+        /// Execute a variant with its cached deterministic inputs; returns
+        /// wall time and output count. The outputs are fetched to host
+        /// literals to close the full execute-and-read path.
+        pub fn execute(&self, variant: &str) -> Result<ExecStats> {
+            let c = self.compiled(variant)?;
+            let t0 = Instant::now();
+            let result = c.exe.execute::<xla::Literal>(&c.inputs)?[0][0]
+                .to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            let exec_secs = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                outs.len() == self.manifest.get(variant)?.outputs.len(),
+                "variant {variant}: expected {} outputs, got {}",
+                self.manifest.get(variant)?.outputs.len(),
+                outs.len()
+            );
+            Ok(ExecStats { exec_secs, n_outputs: outs.len() })
+        }
+
+        /// Execute and return the first output as f32s (tests/examples).
+        pub fn execute_collect(&self, variant: &str) -> Result<Vec<f32>> {
+            let c = self.compiled(variant)?;
+            let result = c.exe.execute::<xla::Literal>(&c.inputs)?[0][0]
+                .to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            anyhow::ensure!(!outs.is_empty(), "no outputs");
+            Ok(outs[0].to_vec::<f32>()?)
+        }
     }
 
-    /// Pre-compile a variant (hot-path warmup).
-    pub fn warmup(&self, variant: &str) -> Result<()> {
-        self.compiled(variant).map(|_| ())
-    }
-
-    /// Execute a variant with its cached deterministic inputs; returns
-    /// wall time and output count. The outputs are fetched to host
-    /// literals to close the full execute-and-read path.
-    pub fn execute(&self, variant: &str) -> Result<ExecStats> {
-        let c = self.compiled(variant)?;
-        let t0 = Instant::now();
-        let result = c.exe.execute::<xla::Literal>(&c.inputs)?[0][0]
-            .to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        let exec_secs = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(
-            outs.len() == self.manifest.get(variant)?.outputs.len(),
-            "variant {variant}: expected {} outputs, got {}",
-            self.manifest.get(variant)?.outputs.len(),
-            outs.len()
-        );
-        Ok(ExecStats { exec_secs, n_outputs: outs.len() })
-    }
-
-    /// Execute and return the first output as f32s (for tests/examples).
-    pub fn execute_collect(&self, variant: &str) -> Result<Vec<f32>> {
-        let c = self.compiled(variant)?;
-        let result = c.exe.execute::<xla::Literal>(&c.inputs)?[0][0]
-            .to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        anyhow::ensure!(!outs.is_empty(), "no outputs");
-        Ok(outs[0].to_vec::<f32>()?)
+    /// Deterministic, numerically safe inputs matching the manifest shapes
+    /// (uniform in [0.5, 1.5], seeded per buffer — the same distribution
+    /// the Python tests use).
+    pub(super) fn build_inputs(meta: &VariantMeta) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(meta.inputs.len());
+        for (i, buf) in meta.inputs.iter().enumerate() {
+            let mut rng = Pcg64::new(0xA07 ^ i as u64, 17);
+            let data: Vec<f32> =
+                (0..buf.numel()).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
+            let lit = xla::Literal::vec1(&data);
+            let dims: Vec<i64> = buf.shape.iter().map(|&d| d as i64).collect();
+            out.push(lit.reshape(&dims)?);
+        }
+        Ok(out)
     }
 }
 
-/// Deterministic, numerically safe inputs matching the manifest shapes
-/// (uniform in [0.5, 1.5], seeded per buffer — the same distribution the
-/// Python tests use).
-fn build_inputs(meta: &VariantMeta) -> Result<Vec<xla::Literal>> {
-    let mut out = Vec::with_capacity(meta.inputs.len());
-    for (i, buf) in meta.inputs.iter().enumerate() {
-        let mut rng = Pcg64::new(0xA07 ^ i as u64, 17);
-        let data: Vec<f32> =
-            (0..buf.numel()).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
-        let lit = xla::Literal::vec1(&data);
-        let dims: Vec<i64> = buf.shape.iter().map(|&d| d as i64).collect();
-        out.push(lit.reshape(&dims)?);
+#[cfg(feature = "pjrt")]
+pub use live::PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::Result;
+
+    use super::ExecStats;
+    use crate::runtime::manifest::Manifest;
+
+    const UNAVAILABLE: &str = "oclcc was built without the `pjrt` feature: \
+         PJRT kernel execution is unavailable (enable the feature and add \
+         the xla dependency in rust/Cargo.toml)";
+
+    /// Stub registry: keeps the `cpu_live` code paths compiling; the
+    /// constructor fails fast so callers (PjrtService::start, `oclcc
+    /// profile --kernels`) degrade with a clear message.
+    pub struct PjrtRuntime {
+        manifest: Manifest,
     }
-    Ok(out)
+
+    impl PjrtRuntime {
+        pub fn new(_artifact_dir: &Path) -> Result<PjrtRuntime> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn warmup(&self, _variant: &str) -> Result<()> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+
+        pub fn execute(&self, _variant: &str) -> Result<ExecStats> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+
+        pub fn execute_collect(&self, _variant: &str) -> Result<Vec<f32>> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+    }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtRuntime;
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     // PJRT-backed tests live in rust/tests/integration_runtime.rs, where
     // the artifact directory is guaranteed present; here we only cover the
     // input builder against synthetic metadata.
-    use super::*;
-    use crate::runtime::manifest::BufferMeta;
+    use crate::runtime::manifest::{BufferMeta, VariantMeta};
 
     #[test]
     fn inputs_match_shapes_and_are_deterministic() {
@@ -150,8 +216,8 @@ mod tests {
             htd_bytes: 256,
             dth_bytes: 128,
         };
-        let a = build_inputs(&meta).unwrap();
-        let b = build_inputs(&meta).unwrap();
+        let a = super::live::build_inputs(&meta).unwrap();
+        let b = super::live::build_inputs(&meta).unwrap();
         assert_eq!(a.len(), 2);
         assert_eq!(a[0].element_count(), 32);
         assert_eq!(

@@ -2,6 +2,8 @@
 //! (`oclcc bench ablation`) and as sanity anchors in tests.
 
 use crate::config::DeviceProfile;
+use crate::model::simulator::SimCursor;
+use crate::model::EngineState;
 use crate::task::{Dominance, TaskSpec};
 use crate::util::rng::Pcg64;
 
@@ -69,6 +71,35 @@ pub fn alternate_dominance(tasks: &[TaskSpec], profile: &DeviceProfile) -> Vec<u
     order
 }
 
+/// Simulated makespan of every baseline policy on one group, evaluated
+/// through a single reused [`SimCursor`] (the ablation bench calls this
+/// per group x device; the shared cursor keeps the sweep allocation-light
+/// the same way the heuristic's `BeamScratch` does).
+pub fn baseline_makespans(
+    tasks: &[TaskSpec],
+    profile: &DeviceProfile,
+    rng: &mut Pcg64,
+) -> Vec<(&'static str, f64)> {
+    let orders: Vec<(&'static str, Vec<usize>)> = vec![
+        ("fifo", fifo(tasks)),
+        ("random", random(tasks, rng)),
+        ("sjf", sjf(tasks, profile)),
+        ("lkf", longest_kernel_first(tasks, profile)),
+        ("alternate", alternate_dominance(tasks, profile)),
+    ];
+    let mut cursor = SimCursor::new(profile, EngineState::default());
+    orders
+        .into_iter()
+        .map(|(name, order)| {
+            cursor.reset(profile, EngineState::default());
+            for &i in &order {
+                cursor.push_task(&tasks[i]);
+            }
+            (name, cursor.run_to_quiescence())
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +138,32 @@ mod tests {
                 g.tasks[w[0]].sequential_secs(&p)
                     <= g.tasks[w[1]].sequential_secs(&p) + 1e-12
             );
+        }
+    }
+
+    #[test]
+    fn baseline_makespans_match_direct_simulation() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        let mut rng_a = Pcg64::seeded(11);
+        let mut rng_b = Pcg64::seeded(11);
+        let got = baseline_makespans(&g.tasks, &p, &mut rng_a);
+        assert_eq!(got.len(), 5);
+        let want: Vec<(&str, f64)> = vec![
+            ("fifo", fifo(&g.tasks)),
+            ("random", random(&g.tasks, &mut rng_b)),
+            ("sjf", sjf(&g.tasks, &p)),
+            ("lkf", longest_kernel_first(&g.tasks, &p)),
+            ("alternate", alternate_dominance(&g.tasks, &p)),
+        ]
+        .into_iter()
+        .map(|(n, o)| {
+            (n, crate::model::simulator::makespan_of_order(&g.tasks, &o, &p))
+        })
+        .collect();
+        for ((na, ma), (nb, mb)) in got.iter().zip(&want) {
+            assert_eq!(na, nb);
+            assert!((ma - mb).abs() <= 1e-12, "{na}: {ma} vs {mb}");
         }
     }
 

@@ -18,19 +18,125 @@
 //!    wins.
 //!
 //! The returned order is a permutation of `0..tasks.len()` over the input
-//! slice. Cost: O(T^2) simulator calls, each O(C) — Table 6 measures
-//! 0.06-0.22 ms for T = 4-8 on the paper's Core 2 Quad.
+//! slice.
+//!
+//! # Cost (post-refactor)
+//!
+//! The search runs on [`SimCursor`]s: every surviving beam prefix is
+//! simulated **once** up to its committed frontier and kept paused inside
+//! its [`BeamScratch`] entry; each candidate extension is scored by
+//! `resume_from` + `push_task` + `run_to_quiescence` on a pooled probe
+//! cursor instead of replaying the prefix from scratch. Total event work
+//! drops from O(w·T³·C) to amortized O(w·T²·C), membership tests are
+//! bitmask words instead of `Vec::contains` scans (the old O(T²) term),
+//! and the whole inner loop performs **zero heap allocations** after
+//! warm-up: beam entries, masks, candidate lists and cursors all live in
+//! the reusable [`BeamScratch`] arena (thread-local for the convenience
+//! wrappers, caller-owned via [`batch_reorder_beam_into`]). The
+//! pre-refactor implementation is preserved as
+//! [`batch_reorder_beam_replay`] for equivalence tests and as the
+//! overhead baseline in `benches/table6_overhead.rs`.
+
+use std::cell::RefCell;
 
 use crate::config::DeviceProfile;
-use crate::model::simulator::simulate_order;
+use crate::model::simulator::{simulate_order_fromscratch, SimCursor};
 use crate::model::{EngineState, SimOptions};
 use crate::task::TaskSpec;
 
 /// Beam width of the generalized greedy. Width 1 is Algorithm 1's pure
 /// greedy; the default 3 recovers near-optimal orders the pure greedy
-/// misses on tie-dense groups while keeping the O(w * T^2) simulation
-/// budget far below the Table-6 overhead envelope.
+/// misses on tie-dense groups while keeping the simulation budget far
+/// below the Table-6 overhead envelope.
 pub const DEFAULT_BEAM_WIDTH: usize = 3;
+
+#[inline]
+fn mask_words(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+#[inline]
+fn mask_contains(mask: &[u64], i: usize) -> bool {
+    mask[i >> 6] & (1u64 << (i & 63)) != 0
+}
+
+#[inline]
+fn mask_set(mask: &mut [u64], i: usize) {
+    mask[i >> 6] |= 1u64 << (i & 63);
+}
+
+/// One surviving beam prefix: its order, membership bitmask, pruning
+/// score, and the paused simulation of exactly that prefix.
+struct BeamEntry {
+    order: Vec<usize>,
+    mask: Vec<u64>,
+    cursor: SimCursor,
+    score: f64,
+}
+
+impl BeamEntry {
+    fn placeholder() -> BeamEntry {
+        BeamEntry {
+            order: Vec::new(),
+            mask: Vec::new(),
+            cursor: SimCursor::detached(),
+            score: 0.0,
+        }
+    }
+}
+
+/// A candidate extension generated during one expansion step. `parent`
+/// and `cand` double as the deterministic tie-break, reproducing the
+/// stable generation order of the pre-refactor sort.
+#[derive(Clone, Copy)]
+struct Cand {
+    parent: u32,
+    cand: u32,
+    score: f64,
+}
+
+/// Reusable arena for the beam search: cursors, beam entry pools,
+/// candidate list and rollout ranking. After the first call at a given
+/// (T, command-count) size, subsequent calls through the same scratch
+/// perform no heap allocations.
+pub struct BeamScratch {
+    base: SimCursor,
+    probe: SimCursor,
+    beam: Vec<BeamEntry>,
+    next: Vec<BeamEntry>,
+    beam_len: usize,
+    cands: Vec<Cand>,
+    firsts: Vec<usize>,
+    greedy: Vec<usize>,
+}
+
+impl BeamScratch {
+    pub fn new() -> BeamScratch {
+        BeamScratch {
+            base: SimCursor::detached(),
+            probe: SimCursor::detached(),
+            beam: Vec::new(),
+            next: Vec::new(),
+            beam_len: 0,
+            cands: Vec::new(),
+            firsts: Vec::new(),
+            greedy: Vec::new(),
+        }
+    }
+}
+
+impl Default for BeamScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    /// Per-thread arena backing the convenience wrappers, so repeated
+    /// calls (coordinator rounds, benches, multi-device placement) reuse
+    /// warm buffers without threading a scratch through every signature.
+    static TLS_SCRATCH: RefCell<BeamScratch> = RefCell::new(BeamScratch::new());
+}
 
 /// Compute a near-optimal submission order for `tasks` on `profile`,
 /// starting from engine state `init` (Algorithm 1's t_HTD/t_K/t_DTH).
@@ -50,14 +156,229 @@ pub fn batch_reorder_beam(
     init: EngineState,
     width: usize,
 ) -> Vec<usize> {
+    TLS_SCRATCH.with(|s| {
+        let mut scratch = s.borrow_mut();
+        let mut out = Vec::with_capacity(tasks.len());
+        batch_reorder_beam_into(tasks, profile, init, width, &mut scratch, &mut out);
+        out
+    })
+}
+
+/// Allocation-free core: writes the order into `out` using only buffers
+/// from `scratch` (both are reused across calls; after warm-up the whole
+/// search performs zero heap allocations — see `rust/tests/alloc_free.rs`).
+pub fn batch_reorder_beam_into(
+    tasks: &[TaskSpec],
+    profile: &DeviceProfile,
+    init: EngineState,
+    width: usize,
+    scratch: &mut BeamScratch,
+    out: &mut Vec<usize>,
+) {
+    let n = tasks.len();
+    let width = width.max(1);
+    out.clear();
+    if n <= 1 {
+        out.extend(0..n);
+        return;
+    }
+    let words = mask_words(n);
+
+    {
+        let BeamScratch { base, probe, beam, next, beam_len, cands, firsts, .. } =
+            scratch;
+
+        // ---- select_first_task ranking, reused as the rollout order of
+        // prefix scores (stage_secs sorts are invariant per call). The
+        // index tie-break reproduces the stable sort of the replay path.
+        firsts.clear();
+        firsts.extend(0..n);
+        firsts.sort_unstable_by(|&a, &b| {
+            let (sa, sb) =
+                (tasks[a].stage_secs(profile), tasks[b].stage_secs(profile));
+            let (ka, kb) = (sa.k - sa.htd, sb.k - sb.htd);
+            kb.partial_cmp(&ka)
+                .unwrap()
+                .then(sb.dth.partial_cmp(&sa.dth).unwrap())
+                .then(a.cmp(&b))
+        });
+
+        base.reset(profile, init);
+
+        // ---- seed the beam. Width 1 reproduces Algorithm 1 exactly: the
+        // first task comes from the short-HtD/long-K rule. Wider beams
+        // consider every starter and let the rollout score prune, which
+        // strictly dominates the hand rule when more than one prefix
+        // survives.
+        *beam_len = 0;
+        let n_seeds = if width == 1 { 1 } else { n };
+        for s in 0..n_seeds {
+            let seed = if width == 1 { firsts[0] } else { s };
+            let e = entry_at(beam, *beam_len);
+            e.order.clear();
+            e.order.push(seed);
+            set_mask_len(&mut e.mask, words);
+            mask_set(&mut e.mask, seed);
+            e.cursor.resume_from(base);
+            e.cursor.push_task(&tasks[seed]);
+            e.score = rollout_score(probe, &e.cursor, &e.mask, firsts, tasks);
+            *beam_len += 1;
+        }
+        beam[..*beam_len].sort_unstable_by(|a, b| {
+            a.score
+                .partial_cmp(&b.score)
+                .unwrap()
+                .then(a.order[0].cmp(&b.order[0]))
+        });
+        *beam_len = (*beam_len).min(width);
+
+        // ---- greedy expansion: extend each surviving prefix by every
+        // absent candidate, score by resuming the prefix cursor (never by
+        // replaying the prefix), keep the `width` best.
+        for _depth in 1..n {
+            cands.clear();
+            for p in 0..*beam_len {
+                let parent = &beam[p];
+                for cand in 0..n {
+                    if mask_contains(&parent.mask, cand) {
+                        continue;
+                    }
+                    probe.resume_from(&parent.cursor);
+                    probe.push_task(&tasks[cand]);
+                    for &r in firsts.iter() {
+                        if r != cand && !mask_contains(&parent.mask, r) {
+                            probe.push_task(&tasks[r]);
+                        }
+                    }
+                    let score = probe.run_to_quiescence();
+                    cands.push(Cand {
+                        parent: p as u32,
+                        cand: cand as u32,
+                        score,
+                    });
+                }
+            }
+            cands.sort_unstable_by(|a, b| {
+                a.score
+                    .partial_cmp(&b.score)
+                    .unwrap()
+                    .then(a.parent.cmp(&b.parent))
+                    .then(a.cand.cmp(&b.cand))
+            });
+            let keep = width.min(cands.len());
+            for (k, c) in cands[..keep].iter().enumerate() {
+                let parent = &beam[c.parent as usize];
+                let e = entry_at(next, k);
+                e.order.clone_from(&parent.order);
+                e.order.push(c.cand as usize);
+                e.mask.clone_from(&parent.mask);
+                mask_set(&mut e.mask, c.cand as usize);
+                e.cursor.resume_from(&parent.cursor);
+                e.cursor.push_task(&tasks[c.cand as usize]);
+                e.score = c.score;
+            }
+            std::mem::swap(beam, next);
+            *beam_len = keep;
+        }
+
+        // ---- final orders are complete, so their score IS the simulated
+        // makespan; the beam is sorted ascending with the generation-order
+        // tie-break, so beam[0] is exactly what the replay path's
+        // `min_by` (first of equal minima) selects.
+        out.clone_from(&beam[0].order);
+        if width == 1 {
+            return;
+        }
+    }
+
+    // ---- width-1 floor: a pure Algorithm-1 greedy run acts as the floor
+    // for wider beams (scratch is reused; `out` holds the beam result).
+    let m_beam = order_makespan(&mut scratch.probe, tasks, out, profile, init);
+    let mut greedy = std::mem::take(&mut scratch.greedy);
+    batch_reorder_beam_into(tasks, profile, init, 1, scratch, &mut greedy);
+    let m_greedy =
+        order_makespan(&mut scratch.probe, tasks, &greedy, profile, init);
+    if m_greedy < m_beam {
+        out.clone_from(&greedy);
+    }
+    scratch.greedy = greedy;
+}
+
+/// Fetch (or lazily grow) the pooled entry at `idx`.
+fn entry_at(pool: &mut Vec<BeamEntry>, idx: usize) -> &mut BeamEntry {
+    while pool.len() <= idx {
+        pool.push(BeamEntry::placeholder());
+    }
+    &mut pool[idx]
+}
+
+fn set_mask_len(mask: &mut Vec<u64>, words: usize) {
+    mask.clear();
+    mask.resize(words, 0);
+}
+
+/// Pruning score of a paused prefix cursor: the simulated makespan of the
+/// prefix *completed by a cheap deterministic rollout* of the remaining
+/// tasks (sorted by descending K - HtD, the select_first rule applied
+/// repeatedly). A pure prefix-makespan or lower-bound score is loose
+/// exactly on the branches that later turn bad, which mis-prunes the
+/// beam; a rollout scores every prefix by a *realizable* full completion,
+/// so the kept prefixes are the ones that can actually finish early. For
+/// a complete order the rollout is empty and the score is the exact
+/// simulated makespan.
+fn rollout_score(
+    probe: &mut SimCursor,
+    prefix: &SimCursor,
+    mask: &[u64],
+    rollout_rank: &[usize],
+    tasks: &[TaskSpec],
+) -> f64 {
+    probe.resume_from(prefix);
+    for &r in rollout_rank {
+        if !mask_contains(mask, r) {
+            probe.push_task(&tasks[r]);
+        }
+    }
+    probe.run_to_quiescence()
+}
+
+/// Exact simulated makespan of a complete order, on a pooled cursor.
+fn order_makespan(
+    probe: &mut SimCursor,
+    tasks: &[TaskSpec],
+    order: &[usize],
+    profile: &DeviceProfile,
+    init: EngineState,
+) -> f64 {
+    probe.reset(profile, init);
+    for &i in order {
+        probe.push_task(&tasks[i]);
+    }
+    probe.run_to_quiescence()
+}
+
+// ---------------------------------------------------------------------------
+// Pre-refactor reference implementation
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor beam search, verbatim: every candidate prefix is
+/// re-simulated from scratch with [`simulate_order_fromscratch`] and
+/// membership is an O(T) `contains` scan. Kept as (a) the reference the
+/// equivalence property tests pin the fast path to (identical orders on
+/// random groups), and (b) the baseline `benches/table6_overhead.rs`
+/// measures the >= 3x reorder-overhead win against.
+pub fn batch_reorder_beam_replay(
+    tasks: &[TaskSpec],
+    profile: &DeviceProfile,
+    init: EngineState,
+    width: usize,
+) -> Vec<usize> {
     let n = tasks.len();
     let width = width.max(1);
     if n <= 1 {
         return (0..n).collect();
     }
 
-    // ---- select_first_task: seed the beam with the best starters by the
-    // short-HtD / long-K rule (long-DtH tie-break).
     let mut firsts: Vec<usize> = (0..n).collect();
     firsts.sort_by(|&a, &b| {
         let (sa, sb) = (tasks[a].stage_secs(profile), tasks[b].stage_secs(profile));
@@ -66,31 +387,23 @@ pub fn batch_reorder_beam(
             .unwrap()
             .then(sb.dth.partial_cmp(&sa.dth).unwrap())
     });
-    // Width 1 reproduces Algorithm 1 exactly: the first task comes from
-    // the short-HtD/long-K rule. Wider beams consider every starter and
-    // let the completion lower bound prune, which strictly dominates the
-    // hand rule when more than one prefix survives.
     let seeds: Vec<usize> = if width == 1 {
         vec![firsts[0]]
     } else {
         (0..n).collect()
     };
-    // Memoized rollout order (stage_secs sorts are invariant per call).
     let firsts_sorted = firsts;
     let mut beam: Vec<(Vec<usize>, f64)> = seeds
         .into_iter()
         .map(|i| {
-            let score = prefix_score(tasks, &[i], &firsts_sorted, profile, init);
+            let score =
+                prefix_score_replay(tasks, &[i], &firsts_sorted, profile, init);
             (vec![i], score)
         })
         .collect();
     beam.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
     beam.truncate(width);
 
-    // ---- greedy expansion: append each remaining candidate, keep the
-    // `width` prefixes with the smallest *completion lower bound* — the
-    // simulated prefix end-state plus the remaining per-engine work (the
-    // "best fit" of select_next_task, made pruning-safe).
     for _depth in 1..n {
         let mut next: Vec<(Vec<usize>, f64)> = Vec::new();
         for (prefix, _) in &beam {
@@ -100,8 +413,13 @@ pub fn batch_reorder_beam(
                 }
                 let mut order = prefix.clone();
                 order.push(cand);
-                let score =
-                    prefix_score(tasks, &order, &firsts_sorted, profile, init);
+                let score = prefix_score_replay(
+                    tasks,
+                    &order,
+                    &firsts_sorted,
+                    profile,
+                    init,
+                );
                 next.push((order, score));
             }
         }
@@ -110,9 +428,6 @@ pub fn batch_reorder_beam(
         next.truncate(width);
         beam = next;
     }
-    // Final orders are complete, so their score IS the simulated makespan;
-    // pick the best. A width-1 run is the pure Algorithm-1 greedy and acts
-    // as the floor for wider beams.
     let best_beam = beam
         .into_iter()
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
@@ -121,9 +436,9 @@ pub fn batch_reorder_beam(
     if width == 1 {
         return best_beam;
     }
-    let greedy = batch_reorder_beam(tasks, profile, init, 1);
-    let m_beam = prefix_makespan(tasks, &best_beam, &[], profile, init);
-    let m_greedy = prefix_makespan(tasks, &greedy, &[], profile, init);
+    let greedy = batch_reorder_beam_replay(tasks, profile, init, 1);
+    let m_beam = prefix_makespan_replay(tasks, &best_beam, &[], profile, init);
+    let m_greedy = prefix_makespan_replay(tasks, &greedy, &[], profile, init);
     if m_greedy < m_beam {
         greedy
     } else {
@@ -131,16 +446,9 @@ pub fn batch_reorder_beam(
     }
 }
 
-/// Pruning score of a partial order: the simulated makespan of the prefix
-/// *completed by a cheap deterministic rollout* of the remaining tasks
-/// (sorted by descending K - HtD, the select_first rule applied
-/// repeatedly). A pure prefix-makespan or lower-bound score is loose
-/// exactly on the branches that later turn bad, which mis-prunes the
-/// beam; a rollout scores every prefix by a *realizable* full completion,
-/// so the kept prefixes are the ones that can actually finish early. For
-/// a complete order the rollout is empty and the score is the exact
-/// simulated makespan.
-fn prefix_score(
+/// Replay counterpart of the rollout pruning score (from-scratch
+/// simulation + O(n^2) membership scan, as before the refactor).
+fn prefix_score_replay(
     tasks: &[TaskSpec],
     order: &[usize],
     rollout_rank: &[usize],
@@ -150,11 +458,12 @@ fn prefix_score(
     let mut full = Vec::with_capacity(tasks.len());
     full.extend_from_slice(order);
     full.extend(rollout_rank.iter().filter(|i| !order.contains(i)));
-    simulate_order(tasks, &full, profile, init, SimOptions::default()).makespan
+    simulate_order_fromscratch(tasks, &full, profile, init, SimOptions::default())
+        .makespan
 }
 
-/// Simulated makespan of ordered prefix + suffix candidates.
-fn prefix_makespan(
+/// Simulated makespan of ordered prefix + suffix candidates (replay path).
+fn prefix_makespan_replay(
     tasks: &[TaskSpec],
     ordered: &[usize],
     suffix: &[usize],
@@ -164,7 +473,8 @@ fn prefix_makespan(
     let mut order = Vec::with_capacity(ordered.len() + suffix.len());
     order.extend_from_slice(ordered);
     order.extend_from_slice(suffix);
-    simulate_order(tasks, &order, profile, init, SimOptions::default()).makespan
+    simulate_order_fromscratch(tasks, &order, profile, init, SimOptions::default())
+        .makespan
 }
 
 #[cfg(test)]
@@ -290,5 +600,53 @@ mod tests {
         let mut order = batch_reorder(&g.tasks, &p, st);
         order.sort_unstable();
         assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn matches_replay_on_catalogs() {
+        // The resumable search must return exactly the order the
+        // pre-refactor implementation returned.
+        for dev in ["amd_r9", "k20c", "xeon_phi"] {
+            let p = profile_by_name(dev).unwrap();
+            for label in benchmark_labels() {
+                let g = synthetic_benchmark(label, &p, 1.0).unwrap();
+                for width in [1usize, 2, 3, 6] {
+                    let fast = batch_reorder_beam(
+                        &g.tasks,
+                        &p,
+                        EngineState::default(),
+                        width,
+                    );
+                    let slow = batch_reorder_beam_replay(
+                        &g.tasks,
+                        &p,
+                        EngineState::default(),
+                        width,
+                    );
+                    assert_eq!(fast, slow, "{dev}/{label} width {width}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_scratch_matches_wrapper() {
+        let p = profile_by_name("k20c").unwrap();
+        let mut rng = Pcg64::seeded(77);
+        let g = real_benchmark("BK50", "k20c", &p, 6, &mut rng, 1.0).unwrap();
+        let via_tls = batch_reorder(&g.tasks, &p, EngineState::default());
+        let mut scratch = BeamScratch::new();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            batch_reorder_beam_into(
+                &g.tasks,
+                &p,
+                EngineState::default(),
+                DEFAULT_BEAM_WIDTH,
+                &mut scratch,
+                &mut out,
+            );
+            assert_eq!(out, via_tls);
+        }
     }
 }

@@ -1,7 +1,9 @@
 //! Task-ordering schedulers (paper §5).
 //!
 //! * `heuristic` — the paper's Batch Reordering Algorithm (Algorithm 1):
-//!   a greedy, model-guided search that runs in O(T^2) simulations.
+//!   a greedy, model-guided beam search over resumable `SimCursor`
+//!   snapshots (each prefix simulated once, candidates scored by resume),
+//!   allocation-free after warm-up via its `BeamScratch` arena.
 //! * `bruteforce` — exhaustive / sampled permutation evaluation (the
 //!   NoReorder experimental setup of §6.2).
 //! * `baselines` — classic orderings (FIFO, random, SJF, LPT-kernel,
@@ -13,5 +15,5 @@ pub mod heuristic;
 pub mod multidevice;
 
 pub use bruteforce::{permutations, OrderStats};
-pub use heuristic::batch_reorder;
+pub use heuristic::{batch_reorder, batch_reorder_beam_into, BeamScratch};
 pub use multidevice::{schedule_multi, MultiSchedule};

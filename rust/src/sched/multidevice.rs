@@ -17,7 +17,7 @@
 //! The group makespan is the max over devices.
 
 use crate::config::DeviceProfile;
-use crate::model::simulator::simulate_order;
+use crate::model::simulator::{simulate_order, SimCursor};
 use crate::model::{EngineState, SimOptions};
 use crate::sched::heuristic::batch_reorder;
 use crate::task::TaskSpec;
@@ -58,29 +58,31 @@ pub fn schedule_multi(tasks: &[TaskSpec], profiles: &[DeviceProfile]) -> MultiSc
         };
         dur(b).partial_cmp(&dur(a)).unwrap()
     });
+    // Each device keeps a paused SimCursor over its assigned sublist;
+    // scoring "append task i to device dev" is resume + push + finish on
+    // a probe cursor instead of re-simulating the whole sublist from
+    // scratch — O(n) incremental placement work per device instead of the
+    // old O(n^2) full replays, and no allocation once probes are warm.
     let mut lists: Vec<Vec<usize>> = vec![Vec::new(); d];
-    let mut completion: Vec<f64> = vec![0.0; d];
+    let mut device_cursors: Vec<SimCursor> = profiles
+        .iter()
+        .map(|p| SimCursor::new(p, EngineState::default()))
+        .collect();
+    let mut probe = SimCursor::detached();
     for &i in &by_size {
         let mut best_dev = 0;
         let mut best_time = f64::INFINITY;
-        for (dev, profile) in profiles.iter().enumerate() {
-            let mut trial = lists[dev].clone();
-            trial.push(i);
-            let t = simulate_order(
-                tasks,
-                &trial,
-                profile,
-                EngineState::default(),
-                SimOptions::default(),
-            )
-            .makespan;
+        for dev in 0..d {
+            probe.resume_from(&device_cursors[dev]);
+            probe.push_task(&tasks[i]);
+            let t = probe.run_to_quiescence();
             if t < best_time {
                 best_time = t;
                 best_dev = dev;
             }
         }
+        device_cursors[best_dev].push_task(&tasks[i]);
         lists[best_dev].push(i);
-        completion[best_dev] = best_time;
     }
 
     // Phase 2: per-device Batch Reordering.

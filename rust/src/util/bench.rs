@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
 use crate::util::table;
 
@@ -15,9 +16,26 @@ pub struct BenchResult {
     pub name: String,
     pub iters: usize,
     pub mean: f64,
+    /// p50 of the per-iteration samples.
     pub median: f64,
     pub min: f64,
     pub p95: f64,
+    pub p99: f64,
+}
+
+impl BenchResult {
+    /// Machine-readable form (seconds), for BENCH_*.json trajectory files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean)),
+            ("p50_s", Json::num(self.median)),
+            ("min_s", Json::num(self.min)),
+            ("p95_s", Json::num(self.p95)),
+            ("p99_s", Json::num(self.p99)),
+        ])
+    }
 }
 
 pub struct Bencher {
@@ -64,6 +82,7 @@ impl Bencher {
             median: stats::median(&samples),
             min: stats::min(&samples),
             p95: stats::percentile(&samples, 95.0),
+            p99: stats::percentile(&samples, 99.0),
         };
         self.results.push(r);
         self.results.last().unwrap()
@@ -71,7 +90,9 @@ impl Bencher {
 
     /// Render all recorded results as a table.
     pub fn report(&self) -> String {
-        let mut t = table::Table::new(&["bench", "iters", "min", "median", "mean", "p95"]);
+        let mut t = table::Table::new(&[
+            "bench", "iters", "min", "median", "mean", "p95", "p99",
+        ]);
         for r in &self.results {
             t.row(vec![
                 r.name.clone(),
@@ -80,6 +101,7 @@ impl Bencher {
                 table::dur(r.median),
                 table::dur(r.mean),
                 table::dur(r.p95),
+                table::dur(r.p99),
             ]);
         }
         t.render()

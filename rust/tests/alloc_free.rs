@@ -1,0 +1,104 @@
+//! Verifies the acceptance criterion "zero heap allocations per candidate
+//! evaluation in the beam inner loop after warm-up": a counting global
+//! allocator wraps System, the beam search warms its BeamScratch arena,
+//! and a repeat run of the ENTIRE search (which strictly contains every
+//! candidate evaluation) must perform zero allocations.
+//!
+//! This test lives alone in its own integration-test binary: the test
+//! harness runs sibling tests on other threads, and any allocation they
+//! made while the counter is armed would pollute the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use oclcc::config::profile_by_name;
+use oclcc::model::EngineState;
+use oclcc::sched::heuristic::{batch_reorder_beam_into, BeamScratch};
+use oclcc::task::real::real_benchmark;
+use oclcc::util::rng::Pcg64;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static REALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            REALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warm_beam_search_performs_zero_heap_allocations() {
+    for dev in ["amd_r9", "xeon_phi"] {
+        let profile = profile_by_name(dev).unwrap();
+        for t in [4usize, 8] {
+            let mut rng = Pcg64::seeded(0xA110C + t as u64);
+            let g =
+                real_benchmark("BK50", dev, &profile, t, &mut rng, 1.0).unwrap();
+            let mut scratch = BeamScratch::new();
+            let mut out: Vec<usize> = Vec::new();
+
+            // Warm-up: grow every pooled buffer to steady-state capacity.
+            for _ in 0..2 {
+                batch_reorder_beam_into(
+                    &g.tasks,
+                    &profile,
+                    EngineState::default(),
+                    3,
+                    &mut scratch,
+                    &mut out,
+                );
+            }
+            let warm_order = out.clone();
+
+            ALLOCS.store(0, Ordering::SeqCst);
+            REALLOCS.store(0, Ordering::SeqCst);
+            ARMED.store(true, Ordering::SeqCst);
+            batch_reorder_beam_into(
+                &g.tasks,
+                &profile,
+                EngineState::default(),
+                3,
+                &mut scratch,
+                &mut out,
+            );
+            ARMED.store(false, Ordering::SeqCst);
+
+            let allocs = ALLOCS.load(Ordering::SeqCst);
+            let reallocs = REALLOCS.load(Ordering::SeqCst);
+            assert_eq!(
+                allocs + reallocs,
+                0,
+                "{dev} T={t}: warm beam search allocated ({allocs} allocs, \
+                 {reallocs} reallocs)"
+            );
+            assert_eq!(out, warm_order, "{dev} T={t}: warm rerun changed order");
+        }
+    }
+}

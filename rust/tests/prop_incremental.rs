@@ -1,0 +1,199 @@
+//! Equivalence properties of the resumable incremental simulator and the
+//! refactored beam search (seeded-random harness, like prop_invariants.rs:
+//! every failure prints the generating seed).
+//!
+//! Pins the post-refactor hot path to the pre-refactor reference code:
+//!
+//! * `SimCursor` (push / snapshot / resume / run_to_quiescence) produces
+//!   makespans identical (<= 1e-12) to `simulate_order_fromscratch` for
+//!   every prefix and every prefix+extension, on all three device
+//!   profiles (2-DMA and the 1-DMA Xeon Phi path) and under random
+//!   initial engine states;
+//! * `batch_reorder_beam` returns exactly the order the pre-refactor
+//!   implementation (`batch_reorder_beam_replay`) returned.
+
+use oclcc::config::{profile_by_name, DeviceProfile};
+use oclcc::model::simulator::{simulate_order_fromscratch, SimCursor};
+use oclcc::model::{EngineState, SimOptions};
+use oclcc::sched::heuristic::{batch_reorder_beam, batch_reorder_beam_replay};
+use oclcc::task::{KernelSpec, TaskSpec};
+use oclcc::util::rng::Pcg64;
+
+const CASES: u64 = 40;
+
+/// Random task group: 1-7 tasks, 0-2 commands per transfer stage,
+/// durations spanning 0.05-10 ms.
+fn random_group(rng: &mut Pcg64) -> Vec<TaskSpec> {
+    let n = 1 + rng.below(7) as usize;
+    (0..n)
+        .map(|i| {
+            let n_htd = rng.below(3) as usize;
+            let n_dth = rng.below(3) as usize;
+            let htd: Vec<u64> =
+                (0..n_htd).map(|_| rng.below(30_000_000) + 10_000).collect();
+            let dth: Vec<u64> =
+                (0..n_dth).map(|_| rng.below(30_000_000) + 10_000).collect();
+            TaskSpec {
+                name: format!("t{i}"),
+                htd_bytes: htd,
+                kernel: KernelSpec::Timed { secs: rng.uniform(0.05e-3, 10e-3) },
+                dth_bytes: dth,
+            }
+        })
+        .collect()
+}
+
+fn profiles() -> Vec<DeviceProfile> {
+    ["amd_r9", "k20c", "xeon_phi"]
+        .iter()
+        .map(|d| profile_by_name(d).unwrap())
+        .collect()
+}
+
+fn random_init(rng: &mut Pcg64) -> EngineState {
+    if rng.below(2) == 0 {
+        EngineState::default()
+    } else {
+        EngineState {
+            htd_free: rng.uniform(0.0, 4e-3),
+            k_free: rng.uniform(0.0, 4e-3),
+            dth_free: rng.uniform(0.0, 4e-3),
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_prefixes_match_fromscratch() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x1AC + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let order: Vec<usize> = {
+                let mut o: Vec<usize> = (0..tasks.len()).collect();
+                rng.shuffle(&mut o);
+                o
+            };
+            let mut cursor = SimCursor::new(&p, init);
+            for (len, &next) in order.iter().enumerate() {
+                // Snapshot the paused prefix, finish a copy, compare with
+                // the from-scratch reference on the same prefix.
+                let snap = cursor.snapshot();
+                let mut probe = SimCursor::new(&p, init);
+                probe.resume_from(&snap);
+                let got = probe.run_to_quiescence();
+                let want = simulate_order_fromscratch(
+                    &tasks,
+                    &order[..len],
+                    &p,
+                    init,
+                    SimOptions::default(),
+                );
+                assert!(
+                    (got - want.makespan).abs() <= 1e-12,
+                    "seed {seed} dev {} prefix {:?}: cursor {got} vs \
+                     fromscratch {}",
+                    p.name,
+                    &order[..len],
+                    want.makespan
+                );
+                assert_eq!(
+                    probe.task_end(),
+                    &want.task_end[..],
+                    "seed {seed} dev {} prefix {:?}: task_end mismatch",
+                    p.name,
+                    &order[..len]
+                );
+                assert_eq!(probe.end_state(), want.end_state);
+
+                // Every possible single-task extension of this prefix,
+                // scored from the snapshot.
+                for &ext in order.iter().skip(len) {
+                    probe.resume_from(&snap);
+                    probe.push_task(&tasks[ext]);
+                    let got = probe.run_to_quiescence();
+                    let mut full: Vec<usize> = order[..len].to_vec();
+                    full.push(ext);
+                    let want = simulate_order_fromscratch(
+                        &tasks,
+                        &full,
+                        &p,
+                        init,
+                        SimOptions::default(),
+                    )
+                    .makespan;
+                    assert!(
+                        (got - want).abs() <= 1e-12,
+                        "seed {seed} dev {} prefix+ext {full:?}: {got} vs {want}",
+                        p.name
+                    );
+                }
+                cursor.push_task(&tasks[next]);
+            }
+            let got = cursor.run_to_quiescence();
+            let want = simulate_order_fromscratch(
+                &tasks,
+                &order,
+                &p,
+                init,
+                SimOptions::default(),
+            )
+            .makespan;
+            assert!(
+                (got - want).abs() <= 1e-12,
+                "seed {seed} dev {} full {order:?}: {got} vs {want}",
+                p.name
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_beam_orders_unchanged_by_refactor() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xBEA + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            for width in [1usize, 3] {
+                let fast = batch_reorder_beam(&tasks, &p, init, width);
+                let slow = batch_reorder_beam_replay(&tasks, &p, init, width);
+                assert_eq!(
+                    fast, slow,
+                    "seed {seed} dev {} width {width}",
+                    p.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_timeline_identical_incremental_vs_fromscratch() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x71E + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let order: Vec<usize> = (0..tasks.len()).collect();
+            let opts = SimOptions { record_timeline: true };
+            let a = oclcc::model::simulate(
+                &tasks,
+                &p,
+                EngineState::default(),
+                opts,
+            );
+            let b = simulate_order_fromscratch(
+                &tasks,
+                &order,
+                &p,
+                EngineState::default(),
+                opts,
+            );
+            assert_eq!(
+                a.timeline, b.timeline,
+                "seed {seed} dev {}: timeline diverged",
+                p.name
+            );
+        }
+    }
+}
