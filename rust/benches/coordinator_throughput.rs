@@ -1,0 +1,190 @@
+//! `cargo bench --bench coordinator_throughput` — tasks-throughput of the
+//! sharded coordinator: a sweep over workers × lanes × group size on the
+//! amd_r9 virtual device (time-compressed tasks so each cell runs in
+//! milliseconds while ratios stay intact).
+//!
+//! Each cell runs the full live pipeline — worker threads, per-lane
+//! buffers with batched drains, heuristic reorder on a persistent arena,
+//! virtual-device execution, completion events — and records:
+//!
+//! * `tasks_per_sec` — the paper's tasks-throughput metric, now for the
+//!   coordinator itself;
+//! * `p50_latency_s` / `p99_latency_s` — per-task submission→completion
+//!   wall latency;
+//! * `sched_overhead_share` — fraction of wall-clock the proxies spent
+//!   inside the reordering heuristic (the Table-6 overhead envelope,
+//!   extended to the multi-lane runtime);
+//! * model-vs-device drift per cell (predicted vs measured busy seconds).
+//!
+//! Emits `BENCH_coordinator_throughput.json` (one row per cell × rep
+//! aggregate) — the coordinator-throughput trajectory future PRs regress
+//! against, alongside `BENCH_sched_overhead.json` from PR 1. The headline
+//! comparison printed at the end: multi-lane vs single-lane tasks/sec at
+//! 8 workers.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oclcc::config::profile_by_name;
+use oclcc::coordinator::lanes::{LaneCoordinator, LaneOptions};
+use oclcc::coordinator::runner::Policy;
+use oclcc::device::executor::SpinExecutor;
+use oclcc::task::real::real_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::json::Json;
+use oclcc::util::stats;
+
+const OUT_PATH: &str = "BENCH_coordinator_throughput.json";
+
+/// Time compression for the virtual device: Table-5 magnitudes are
+/// 0.1-10 ms per command; 0.05 keeps every cell in the low milliseconds.
+const SCALE: f64 = 0.05;
+
+/// Per-worker dependent batch length (rounds of task groups per run).
+const BATCH: usize = 3;
+
+fn workloads(workers: usize, scale: f64) -> Vec<Vec<TaskSpec>> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let mut rng = oclcc::util::rng::Pcg64::seeded(0xC00D + workers as u64);
+    // One BK50 pool, tasks dealt round-robin so every worker's batch is a
+    // representative DK/DT mix.
+    let g = real_benchmark("BK50", "amd_r9", &p, 8, &mut rng, scale).unwrap();
+    (0..workers)
+        .map(|w| (0..BATCH).map(|i| g.tasks[(w + i) % g.len()].clone()).collect())
+        .collect()
+}
+
+struct Cell {
+    workers: usize,
+    lanes: usize,
+    group_cap: usize,
+    tasks_per_sec: f64,
+    p50: f64,
+    p99: f64,
+    sched_share: f64,
+    drift: f64,
+    n_groups: usize,
+}
+
+fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell {
+    let profile = profile_by_name("amd_r9").unwrap();
+    let mut tput = Vec::with_capacity(reps);
+    let mut p50 = Vec::with_capacity(reps);
+    let mut p99 = Vec::with_capacity(reps);
+    let mut share = Vec::with_capacity(reps);
+    let mut drift = Vec::with_capacity(reps);
+    let mut groups = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let coord = LaneCoordinator::homogeneous(
+            profile.clone(),
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes,
+                policy: Policy::Heuristic,
+                settle: Duration::from_micros(200),
+                group_cap,
+                scoring_threads: 1,
+            },
+        );
+        let m = coord.run(workloads(workers, SCALE));
+        assert_eq!(m.n_tasks, workers * BATCH, "lost tasks in cell");
+        tput.push(m.tasks_per_sec);
+        p50.push(m.p50_latency());
+        p99.push(m.p99_latency());
+        share.push(m.sched_overhead_share());
+        let (busy, pred): (f64, f64) = m
+            .per_lane
+            .iter()
+            .fold((0.0, 0.0), |(b, p), l| (b + l.busy_secs, p + l.predicted_secs));
+        drift.push(if pred > 0.0 { busy / pred } else { 1.0 });
+        groups.push(m.n_groups as f64);
+    }
+    Cell {
+        workers,
+        lanes,
+        group_cap,
+        tasks_per_sec: stats::median(&tput),
+        p50: stats::median(&p50),
+        p99: stats::median(&p99),
+        sched_share: stats::median(&share),
+        drift: stats::median(&drift),
+        // Median across reps like every other cell metric — group
+        // formation depends on settle-window timing, so a single rep's
+        // count is scheduling noise.
+        n_groups: stats::median(&groups).round() as usize,
+    }
+}
+
+fn main() {
+    let fast = std::env::var_os("OCLCC_BENCH_FAST").is_some();
+    let reps = if fast { 2 } else { 5 };
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut cells: Vec<Cell> = Vec::new();
+    println!("== coordinator throughput: workers x lanes x group size ==");
+    println!(
+        "{:>7} {:>5} {:>5} {:>12} {:>10} {:>10} {:>9} {:>7}",
+        "workers", "lanes", "T", "tasks/sec", "p50 lat", "p99 lat", "sched%", "drift"
+    );
+    for &workers in &[2usize, 4, 8] {
+        for &lanes in &[1usize, 2, 4] {
+            if lanes > workers {
+                continue;
+            }
+            // T = group size cap: a full lane round, and a split round.
+            let full = workers.div_ceil(lanes);
+            let caps = if full > 2 { vec![full, 2] } else { vec![full] };
+            for cap in caps {
+                let c = run_cell(workers, lanes, cap, reps);
+                println!(
+                    "{:>7} {:>5} {:>5} {:>12.1} {:>9.3}ms {:>9.3}ms {:>8.2}% {:>7.3}",
+                    c.workers,
+                    c.lanes,
+                    c.group_cap,
+                    c.tasks_per_sec,
+                    c.p50 * 1e3,
+                    c.p99 * 1e3,
+                    c.sched_share * 100.0,
+                    c.drift,
+                );
+                rows.push(Json::obj(vec![
+                    ("workers", Json::num(c.workers as f64)),
+                    ("lanes", Json::num(c.lanes as f64)),
+                    ("t_group_cap", Json::num(c.group_cap as f64)),
+                    ("reps", Json::num(reps as f64)),
+                    ("tasks_per_sec", Json::num(c.tasks_per_sec)),
+                    ("p50_latency_s", Json::num(c.p50)),
+                    ("p99_latency_s", Json::num(c.p99)),
+                    ("sched_overhead_share", Json::num(c.sched_share)),
+                    ("measured_vs_predicted", Json::num(c.drift)),
+                    ("n_groups", Json::num(c.n_groups as f64)),
+                ]));
+                cells.push(c);
+            }
+        }
+    }
+
+    // Headline: the lane scaling the sharded coordinator buys at 8 workers.
+    let best_at = |workers: usize, lanes: usize| -> Option<f64> {
+        cells
+            .iter()
+            .filter(|c| c.workers == workers && c.lanes == lanes)
+            .map(|c| c.tasks_per_sec)
+            .reduce(f64::max)
+    };
+    if let (Some(single), Some(multi)) = (
+        best_at(8, 1),
+        [2usize, 4].iter().filter_map(|&l| best_at(8, l)).reduce(f64::max),
+    ) {
+        println!(
+            "\n8 workers: multi-lane {multi:.1} tasks/s vs single-lane \
+             {single:.1} tasks/s ({:.2}x)",
+            multi / single.max(1e-12)
+        );
+    }
+
+    match std::fs::write(OUT_PATH, Json::arr(rows).to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}]"),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
+}

@@ -1,13 +1,16 @@
 //! `cargo bench --bench table6_overhead` — Table 6: CPU cost of the Batch
 //! Reordering heuristic for T = 4/6/8 per device, measured for BOTH the
 //! resumable-cursor implementation and the pre-refactor from-scratch
-//! replay baseline, plus the width-1 (pure Algorithm-1) variant.
+//! replay baseline, plus the width-1 (pure Algorithm-1) variant — and,
+//! since the sharded-pipeline PR, parallel-vs-serial reorder cases at
+//! T = 16/24 (multi-lane candidate scoring over a persistent pool).
 //!
 //! Emits `BENCH_sched_overhead.json` (array of rows with mean/p50/p99
 //! seconds per (device, T, impl) and per-point speedups) so future PRs
-//! have a perf trajectory to regress against. Acceptance target of the
-//! resumable refactor: >= 3x mean speedup vs the from-scratch baseline at
-//! T=8 on amd_r9.
+//! have a perf trajectory to regress against. Acceptance targets:
+//! >= 3x mean resumable-vs-fromscratch speedup at T=8 on amd_r9 (PR 1),
+//! >= 2x mean parallel-vs-serial speedup at T >= 16 with >= 4 scoring
+//! threads (this PR).
 
 use oclcc::config::profile_by_name;
 use oclcc::model::EngineState;
@@ -15,6 +18,7 @@ use oclcc::sched::heuristic::{
     batch_reorder_beam_into, batch_reorder_beam_replay, BeamScratch,
     DEFAULT_BEAM_WIDTH,
 };
+use oclcc::sched::parallel::{batch_reorder_beam_parallel_into, ParBeamScratch};
 use oclcc::task::real::real_benchmark;
 use oclcc::util::bench::{BenchResult, Bencher};
 use oclcc::util::json::Json;
@@ -32,7 +36,7 @@ fn row(device: &str, t: usize, imp: &str, r: &BenchResult) -> Json {
 }
 
 fn main() {
-    let mut b = Bencher::new(1.0, 400);
+    let mut b = Bencher::from_env(1.0, 400);
     let mut json_rows: Vec<Json> = Vec::new();
     let mut speedups: Vec<(String, usize, f64)> = Vec::new();
 
@@ -104,12 +108,87 @@ fn main() {
         }
     }
 
+    // ---- parallel candidate scoring at coordinator-scale group sizes:
+    // the serial resumable search vs the multi-lane pool (4 and 8
+    // stripes). Same machine, same groups; acceptance is >= 2x mean at
+    // T >= 16 with >= 4 threads.
+    let mut par_speedups: Vec<(String, usize, usize, f64)> = Vec::new();
+    for dev in ["amd_r9", "k20c"] {
+        let profile = profile_by_name(dev).unwrap();
+        for t in [16usize, 24] {
+            let mut rng = Pcg64::seeded(0x9A7 + t as u64);
+            let g =
+                real_benchmark("BK50", dev, &profile, t, &mut rng, 1.0).unwrap();
+
+            let mut scratch = BeamScratch::new();
+            let mut order: Vec<usize> = Vec::new();
+            let serial = b
+                .bench(&format!("reorder {dev} T={t} serial"), || {
+                    batch_reorder_beam_into(
+                        &g.tasks,
+                        &profile,
+                        EngineState::default(),
+                        DEFAULT_BEAM_WIDTH,
+                        &mut scratch,
+                        &mut order,
+                    );
+                    order.len()
+                })
+                .clone();
+            json_rows.push(row(dev, t, "serial", &serial));
+
+            for threads in [4usize, 8] {
+                let mut par = ParBeamScratch::new(threads);
+                let mut par_order: Vec<usize> = Vec::new();
+                let fast = b
+                    .bench(&format!("reorder {dev} T={t} parallel{threads}"), || {
+                        batch_reorder_beam_parallel_into(
+                            &g.tasks,
+                            &profile,
+                            EngineState::default(),
+                            DEFAULT_BEAM_WIDTH,
+                            &mut par,
+                            &mut par_order,
+                        );
+                        par_order.len()
+                    })
+                    .clone();
+                assert_eq!(
+                    par_order, order,
+                    "parallel order diverged from serial ({dev} T={t})"
+                );
+                json_rows.push(row(dev, t, &format!("parallel{threads}"), &fast));
+                let speedup = serial.mean / fast.mean.max(1e-12);
+                par_speedups.push((dev.to_string(), t, threads, speedup));
+                json_rows.push(Json::obj(vec![
+                    ("device", Json::str(dev)),
+                    ("t", Json::num(t as f64)),
+                    (
+                        "impl",
+                        Json::str(&format!(
+                            "speedup_parallel{threads}_vs_serial"
+                        )),
+                    ),
+                    ("speedup_mean", Json::num(speedup)),
+                    (
+                        "speedup_p50",
+                        Json::num(serial.median / fast.median.max(1e-12)),
+                    ),
+                ]));
+            }
+        }
+    }
+
     println!("== Table 6 counterpart: heuristic CPU time ==");
     print!("{}", b.report());
     println!("paper budget (K20c, Core 2 Quad): 0.06 / 0.10 / 0.22 ms for T=4/6/8");
     println!("\nresumable vs from-scratch (mean):");
     for (dev, t, s) in &speedups {
         println!("  {dev} T={t}: {s:.2}x");
+    }
+    println!("\nparallel vs serial reorder (mean):");
+    for (dev, t, threads, s) in &par_speedups {
+        println!("  {dev} T={t} threads={threads}: {s:.2}x");
     }
 
     match std::fs::write(OUT_PATH, Json::arr(json_rows).to_string()) {

@@ -2,6 +2,11 @@
 //! (paper Fig. 8): workers write intercepted "OpenCL API calls" (task
 //! submissions); the proxy polls, drains a task group, reorders and
 //! submits it to the device queues.
+//!
+//! [`ShardedBuffer`] splits the single buffer into independent per-lane
+//! buffers (worker `w` always lands on lane `w % L`, so per-worker
+//! submission order is preserved by construction); each lane is drained
+//! in batches by its own proxy — see `coordinator::lanes`.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -62,6 +67,22 @@ impl SharedBuffer {
     /// available, wait this long for stragglers before draining — this is
     /// what lets all T workers land in the same task group.
     pub fn drain(&self, max: usize, settle: Duration) -> Option<Vec<Submission>> {
+        let mut out = Vec::new();
+        self.drain_into(max, settle, &mut out).map(|_| out)
+    }
+
+    /// [`SharedBuffer::drain`] into a caller-owned Vec — the batched-drain
+    /// hot path of the lane proxies: `out` is cleared and refilled, so a
+    /// warm proxy loop performs no allocation per drained group. Returns
+    /// the number of submissions drained, or `None` once the buffer is
+    /// closed and empty.
+    pub fn drain_into(
+        &self,
+        max: usize,
+        settle: Duration,
+        out: &mut Vec<Submission>,
+    ) -> Option<usize> {
+        out.clear();
         let (m, cv) = &*self.inner;
         let mut g = m.lock().unwrap();
         loop {
@@ -74,9 +95,11 @@ impl SharedBuffer {
             g = cv.wait(g).unwrap();
         }
         if !settle.is_zero() {
-            // Give other workers a window to join this TG.
+            // Give other workers a window to join this TG. A full batch or
+            // a closed buffer ends the window early — no need to sleep out
+            // the clock once no straggler can arrive.
             let deadline = std::time::Instant::now() + settle;
-            while g.queue.len() < max {
+            while g.queue.len() < max && !g.closed {
                 let left = match deadline.checked_duration_since(std::time::Instant::now()) {
                     Some(d) => d,
                     None => break,
@@ -89,7 +112,8 @@ impl SharedBuffer {
             }
         }
         let take = g.queue.len().min(max);
-        Some(g.queue.drain(..take).collect())
+        out.extend(g.queue.drain(..take));
+        Some(take)
     }
 
     pub fn len(&self) -> usize {
@@ -101,10 +125,62 @@ impl SharedBuffer {
     }
 }
 
+/// Per-lane submission buffers (see module docs): lane `w % L` serves
+/// worker `w`, so one worker's dependent batch always drains in order
+/// through one lane while independent workers' groups form concurrently
+/// on other lanes.
+#[derive(Clone)]
+pub struct ShardedBuffer {
+    lanes: Arc<[SharedBuffer]>,
+}
+
+impl ShardedBuffer {
+    pub fn new(lanes: usize) -> Self {
+        let lanes: Vec<SharedBuffer> =
+            (0..lanes.max(1)).map(|_| SharedBuffer::new()).collect();
+        ShardedBuffer { lanes: lanes.into() }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane(&self, l: usize) -> &SharedBuffer {
+        &self.lanes[l]
+    }
+
+    /// The lane that serves worker `w`.
+    pub fn lane_for_worker(&self, w: usize) -> &SharedBuffer {
+        &self.lanes[w % self.lanes.len()]
+    }
+
+    /// Route one submission to its worker's lane.
+    pub fn push(&self, s: Submission) {
+        self.lane_for_worker(s.worker).push(s);
+    }
+
+    /// Close every lane (no further submissions anywhere).
+    pub fn close_all(&self) {
+        for lane in self.lanes.iter() {
+            lane.close();
+        }
+    }
+
+    /// Total queued submissions across lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::task::KernelSpec;
+    use std::sync::Barrier;
 
     fn sub(worker: usize, seq: usize) -> Submission {
         Submission {
@@ -133,38 +209,130 @@ mod tests {
         assert_eq!(b.len(), 1);
     }
 
+    // The concurrency tests rendezvous on a Barrier instead of sleeping:
+    // whichever side wins the race after the barrier, the asserted
+    // outcome is the same, so they cannot flake under load (the old
+    // 3-5 ms `thread::sleep` versions could).
+
     #[test]
     fn drain_blocks_until_push() {
         let b = SharedBuffer::new();
-        let b2 = b.clone();
-        let h = std::thread::spawn(move || b2.drain(4, Duration::ZERO));
-        std::thread::sleep(Duration::from_millis(5));
+        let barrier = Arc::new(Barrier::new(2));
+        let (b2, barrier2) = (b.clone(), barrier.clone());
+        // Whether drain enters its wait before or after the push lands,
+        // it must return exactly the pushed submission.
+        let h = std::thread::spawn(move || {
+            barrier2.wait();
+            b2.drain(4, Duration::ZERO)
+        });
+        barrier.wait();
         b.push(sub(3, 1));
         let got = h.join().unwrap().unwrap();
+        assert_eq!(got.len(), 1);
         assert_eq!(got[0].worker, 3);
     }
 
     #[test]
     fn close_unblocks_with_none() {
         let b = SharedBuffer::new();
-        let b2 = b.clone();
-        let h = std::thread::spawn(move || b2.drain(4, Duration::ZERO));
-        std::thread::sleep(Duration::from_millis(5));
+        let barrier = Arc::new(Barrier::new(2));
+        let (b2, barrier2) = (b.clone(), barrier.clone());
+        // Close-before-drain and drain-before-close both end in None.
+        let h = std::thread::spawn(move || {
+            barrier2.wait();
+            b2.drain(4, Duration::ZERO)
+        });
+        barrier.wait();
         b.close();
         assert!(h.join().unwrap().is_none());
     }
 
     #[test]
     fn settle_window_gathers_stragglers() {
+        // The straggler pushes after the rendezvous; `max = 2` ends the
+        // settle window the moment it lands, so the generous window is an
+        // upper bound that is never slept out, not a tuned delay.
         let b = SharedBuffer::new();
         b.push(sub(0, 0));
-        let b2 = b.clone();
+        let barrier = Arc::new(Barrier::new(2));
+        let (b2, barrier2) = (b.clone(), barrier.clone());
         let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(3));
+            barrier2.wait();
             b2.push(sub(1, 0));
         });
-        let got = b.drain(4, Duration::from_millis(50)).unwrap();
+        barrier.wait();
+        let got = b.drain(2, Duration::from_secs(30)).unwrap();
         h.join().unwrap();
         assert_eq!(got.len(), 2, "straggler should join the TG");
+    }
+
+    #[test]
+    fn settle_window_ends_at_close() {
+        // Once every lane worker has exited, close() must end the settle
+        // wait immediately (no straggler can arrive), with the queued
+        // submissions still delivered.
+        let b = SharedBuffer::new();
+        b.push(sub(0, 0));
+        let barrier = Arc::new(Barrier::new(2));
+        let (b2, barrier2) = (b.clone(), barrier.clone());
+        let h = std::thread::spawn(move || {
+            barrier2.wait();
+            b2.close();
+        });
+        barrier.wait();
+        let got = b.drain(4, Duration::from_secs(30)).unwrap();
+        h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(b.drain(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn sharded_routes_by_worker_and_preserves_lane_fifo() {
+        let s = ShardedBuffer::new(2);
+        for seq in 0..3 {
+            for w in 0..4 {
+                s.push(sub(w, seq));
+            }
+        }
+        assert_eq!(s.len(), 12);
+        // Lane 0 serves workers 0 and 2, in push order.
+        let lane0 = s.lane(0).drain(16, Duration::ZERO).unwrap();
+        let got: Vec<(usize, usize)> =
+            lane0.iter().map(|x| (x.worker, x.batch_seq)).collect();
+        assert_eq!(
+            got,
+            vec![(0, 0), (2, 0), (0, 1), (2, 1), (0, 2), (2, 2)]
+        );
+        // Per-worker batch_seq is monotonic within the lane.
+        let lane1 = s.lane(1).drain(16, Duration::ZERO).unwrap();
+        for w in [1usize, 3] {
+            let seqs: Vec<usize> = lane1
+                .iter()
+                .filter(|x| x.worker == w)
+                .map(|x| x.batch_seq)
+                .collect();
+            assert_eq!(seqs, vec![0, 1, 2]);
+        }
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn sharded_close_all_unblocks_every_lane() {
+        let s = ShardedBuffer::new(3);
+        let barrier = Arc::new(Barrier::new(4));
+        let handles: Vec<_> = (0..3)
+            .map(|l| {
+                let (s2, barrier2) = (s.clone(), barrier.clone());
+                std::thread::spawn(move || {
+                    barrier2.wait();
+                    s2.lane(l).drain(4, Duration::ZERO)
+                })
+            })
+            .collect();
+        barrier.wait();
+        s.close_all();
+        for h in handles {
+            assert!(h.join().unwrap().is_none());
+        }
     }
 }

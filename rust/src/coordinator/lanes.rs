@@ -1,0 +1,491 @@
+//! The multi-lane coordinator — the Fig. 8 proxy runtime sharded so the
+//! *scheduler* scales with the host, not just the device.
+//!
+//! The single-buffer coordinator (`coordinator::runner`) serializes every
+//! drained task group through one proxy thread: reorder, submit, signal,
+//! repeat. Table 6's premise — reordering overhead stays negligible while
+//! task groups keep arriving — breaks on a many-core host the moment one
+//! proxy becomes the bottleneck. This module splits the pipeline into
+//! `L` independent **lanes**:
+//!
+//! * worker `w` always submits to lane `w % L`
+//!   ([`ShardedBuffer`]), so each worker's dependent batch drains in
+//!   order through one lane — per-worker submission order is preserved by
+//!   construction, exactly the guarantee the single buffer gave;
+//! * each lane runs its own proxy thread with a **batched drain**
+//!   (`drain_into` into a reused Vec, up to `group_cap` submissions per
+//!   task group), its own reorder arena ([`ParBeamScratch`], so big
+//!   groups can additionally fan candidate scoring out over
+//!   `scoring_threads` stripes), and its own virtual device — independent
+//!   task groups are reordered and executed concurrently on different
+//!   lanes;
+//! * each lane keeps a persistent paused [`SimCursor`] + [`TaskTable`]
+//!   pair: the group is compiled **once** per drain and shared between
+//!   the search and the prediction bookkeeping (the heuristic's own
+//!   chosen-order makespan is recorded directly; NoReorder drains are
+//!   replayed through the lane cursor, allocation-free once warm) — the
+//!   per-lane prediction drift is reported in [`LaneStats`], and the
+//!   paused-cursor substrate is what the upcoming online-rescheduling
+//!   work resumes mid-group.
+//!
+//! [`CoordMetrics`]-style aggregates plus per-lane breakdowns come back
+//! in [`LaneMetrics`]; `benches/coordinator_throughput.rs` sweeps
+//! workers × lanes × group size over this runtime and emits
+//! `BENCH_coordinator_throughput.json`.
+//!
+//! [`CoordMetrics`]: crate::coordinator::runner::CoordMetrics
+//! [`ShardedBuffer`]: crate::coordinator::buffer::ShardedBuffer
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::DeviceProfile;
+use crate::coordinator::buffer::{ShardedBuffer, SharedBuffer, Submission};
+use crate::coordinator::runner::Policy;
+use crate::device::executor::KernelExecutor;
+use crate::device::vdev::VirtualDevice;
+use crate::model::{EngineState, SimCursor, TaskTable};
+use crate::queue::event::Event;
+use crate::sched::heuristic::DEFAULT_BEAM_WIDTH;
+use crate::sched::parallel::{batch_reorder_table_parallel_into, ParBeamScratch};
+use crate::task::TaskSpec;
+use crate::util::stats;
+
+/// Knobs of the sharded runtime.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneOptions {
+    /// Lane count for [`LaneCoordinator::homogeneous`] (ignored by
+    /// [`LaneCoordinator::with_devices`], which derives it from the
+    /// device list).
+    pub lanes: usize,
+    pub policy: Policy,
+    /// Proxy settle window while forming a task group (how long a lane
+    /// waits for stragglers once something is buffered).
+    pub settle: Duration,
+    /// Max submissions drained per task group (the batched-drain size).
+    /// 0 = one full round of the lane's workers: `ceil(T / lanes)`.
+    pub group_cap: usize,
+    /// Scoring stripes per lane reorder (1 = serial candidate scoring).
+    pub scoring_threads: usize,
+}
+
+impl Default for LaneOptions {
+    fn default() -> Self {
+        LaneOptions {
+            lanes: 1,
+            policy: Policy::Heuristic,
+            settle: Duration::from_micros(300),
+            group_cap: 0,
+            scoring_threads: 1,
+        }
+    }
+}
+
+/// Per-lane breakdown of one run.
+#[derive(Clone, Debug)]
+pub struct LaneStats {
+    pub lane: usize,
+    pub n_groups: usize,
+    pub n_tasks: usize,
+    /// CPU seconds this lane's proxy spent inside the reorder heuristic.
+    pub sched_overhead_secs: f64,
+    /// Device-measured busy seconds (sum of group makespans).
+    pub busy_secs: f64,
+    /// Model-predicted busy seconds for the same orders (paused-cursor
+    /// replay); `busy_secs / predicted_secs` is the lane's pacing drift.
+    pub predicted_secs: f64,
+}
+
+/// Aggregate metrics of one sharded run (single-lane degenerates to the
+/// classic [`CoordMetrics`] numbers; `runner::Coordinator` delegates).
+///
+/// [`CoordMetrics`]: crate::coordinator::runner::CoordMetrics
+#[derive(Clone, Debug)]
+pub struct LaneMetrics {
+    pub total_secs: f64,
+    /// Executed tasks per second — the paper's "tasks throughput".
+    pub tasks_per_sec: f64,
+    /// Per-task submission → completion latency (s), all lanes.
+    pub latencies: Vec<f64>,
+    /// Device busy time per group (s), all lanes.
+    pub group_makespans: Vec<f64>,
+    pub sched_overhead_secs: f64,
+    pub n_groups: usize,
+    pub n_tasks: usize,
+    pub per_lane: Vec<LaneStats>,
+}
+
+impl LaneMetrics {
+    pub fn mean_latency(&self) -> f64 {
+        stats::mean(&self.latencies)
+    }
+
+    pub fn p50_latency(&self) -> f64 {
+        stats::percentile(&self.latencies, 50.0)
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        stats::percentile(&self.latencies, 99.0)
+    }
+
+    /// Fraction of wall-clock the proxies spent scheduling (the Table-6
+    /// "overhead share" extended to the multi-lane runtime).
+    pub fn sched_overhead_share(&self) -> f64 {
+        if self.total_secs <= 0.0 {
+            return 0.0;
+        }
+        self.sched_overhead_secs / self.total_secs
+    }
+}
+
+/// What one lane proxy hands back when its buffer closes.
+struct LaneOutcome {
+    stats: LaneStats,
+    latencies: Vec<f64>,
+    group_makespans: Vec<f64>,
+}
+
+/// The sharded multi-worker runtime (see module docs).
+pub struct LaneCoordinator {
+    devices: Vec<Arc<VirtualDevice>>,
+    opts: LaneOptions,
+}
+
+impl LaneCoordinator {
+    /// One lane per entry of `devices` (heterogeneous lanes allowed; each
+    /// proxy schedules against its own device's profile).
+    pub fn with_devices(devices: Vec<Arc<VirtualDevice>>, opts: LaneOptions) -> Self {
+        assert!(!devices.is_empty(), "need at least one lane device");
+        LaneCoordinator { devices, opts }
+    }
+
+    /// `opts.lanes` identical lanes over copies of one profile/executor.
+    pub fn homogeneous(
+        profile: DeviceProfile,
+        executor: Arc<dyn KernelExecutor>,
+        opts: LaneOptions,
+    ) -> Self {
+        let devices = (0..opts.lanes.max(1))
+            .map(|_| {
+                Arc::new(VirtualDevice::new(profile.clone(), executor.clone()))
+            })
+            .collect();
+        LaneCoordinator { devices, opts }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Run `workloads[w]` = the dependent task batch of worker `w` (each
+    /// worker submits its next task only after the previous completed).
+    pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> LaneMetrics {
+        let t_workers = workloads.len();
+        let lanes = self.devices.len();
+        let sharded = ShardedBuffer::new(lanes);
+        let epoch = Instant::now();
+
+        let mut outcomes: Vec<LaneOutcome> = Vec::with_capacity(lanes);
+        std::thread::scope(|s| {
+            // ---- workers ------------------------------------------------
+            let mut worker_handles = Vec::with_capacity(t_workers);
+            for (w, batch) in workloads.into_iter().enumerate() {
+                let sharded = sharded.clone();
+                let h = std::thread::Builder::new()
+                    .name(format!("worker-{w}"))
+                    .spawn_scoped(s, move || {
+                        for (seq, task) in batch.into_iter().enumerate() {
+                            let done = Event::new();
+                            sharded.push(Submission {
+                                worker: w,
+                                batch_seq: seq,
+                                task,
+                                done: done.clone(),
+                                submitted_at: epoch.elapsed().as_secs_f64(),
+                            });
+                            // Dependency: wait before submitting the next.
+                            done.wait();
+                        }
+                    })
+                    .expect("spawn worker");
+                worker_handles.push(h);
+            }
+
+            // ---- janitor: close every lane once all workers exited ----
+            let sharded_j = sharded.clone();
+            std::thread::Builder::new()
+                .name("lane-janitor".into())
+                .spawn_scoped(s, move || {
+                    // Collect results first and close the lanes even when a
+                    // worker panicked: re-raising before close_all would
+                    // leave every proxy blocked in drain_into forever and
+                    // hang the scope instead of surfacing the panic.
+                    let results: Vec<_> =
+                        worker_handles.into_iter().map(|h| h.join()).collect();
+                    sharded_j.close_all();
+                    for r in results {
+                        if let Err(payload) = r {
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                })
+                .expect("spawn janitor");
+
+            // ---- lane proxies ------------------------------------------
+            let proxy_handles: Vec<_> = (0..lanes)
+                .map(|l| {
+                    let buffer = sharded.lane(l).clone();
+                    let device = Arc::clone(&self.devices[l]);
+                    let opts = self.opts;
+                    // group_cap = 0: one full round of THIS lane's workers
+                    // (those with w % lanes == l) — a global ceil(T/lanes)
+                    // would make under-populated lanes sleep out the whole
+                    // settle window on every group.
+                    let cap = if opts.group_cap == 0 {
+                        t_workers.saturating_sub(l).div_ceil(lanes).max(1)
+                    } else {
+                        opts.group_cap.max(1)
+                    };
+                    std::thread::Builder::new()
+                        .name(format!("lane-proxy-{l}"))
+                        .spawn_scoped(s, move || {
+                            lane_proxy(l, buffer, device, opts, cap, epoch)
+                        })
+                        .expect("spawn lane proxy")
+                })
+                .collect();
+            for h in proxy_handles {
+                outcomes.push(h.join().expect("lane proxy panicked"));
+            }
+        });
+
+        let total_secs = epoch.elapsed().as_secs_f64();
+        let mut latencies = Vec::new();
+        let mut group_makespans = Vec::new();
+        let mut per_lane = Vec::with_capacity(lanes);
+        let (mut overhead, mut n_groups, mut n_tasks) = (0.0, 0, 0);
+        for o in outcomes {
+            latencies.extend(o.latencies);
+            group_makespans.extend(o.group_makespans);
+            overhead += o.stats.sched_overhead_secs;
+            n_groups += o.stats.n_groups;
+            n_tasks += o.stats.n_tasks;
+            per_lane.push(o.stats);
+        }
+        LaneMetrics {
+            total_secs,
+            tasks_per_sec: n_tasks as f64 / total_secs,
+            latencies,
+            group_makespans,
+            sched_overhead_secs: overhead,
+            n_groups,
+            n_tasks,
+            per_lane,
+        }
+    }
+}
+
+/// One lane's proxy loop: batched drain → reorder (persistent arena) →
+/// device run → completion signals. All per-group buffers are reused, so
+/// a warm lane performs no allocation on its drain path beyond the task
+/// clones handed to the device.
+fn lane_proxy(
+    lane: usize,
+    buffer: SharedBuffer,
+    device: Arc<VirtualDevice>,
+    opts: LaneOptions,
+    cap: usize,
+    epoch: Instant,
+) -> LaneOutcome {
+    let profile = device.profile().clone();
+    let mut scratch = ParBeamScratch::new(opts.scoring_threads);
+    let mut order: Vec<usize> = Vec::new();
+    let mut drained: Vec<Submission> = Vec::new();
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    let mut ordered: Vec<TaskSpec> = Vec::new();
+    // Persistent paused-cursor pair: the table is compiled once per
+    // drained group (shared with the search); the cursor replays
+    // NoReorder orders for the predicted-makespan record (the heuristic
+    // reports its chosen order's makespan itself).
+    let mut lane_table = TaskTable::new();
+    let mut lane_cursor = SimCursor::detached();
+
+    let mut latencies = Vec::new();
+    let mut group_makespans = Vec::new();
+    let mut stats = LaneStats {
+        lane,
+        n_groups: 0,
+        n_tasks: 0,
+        sched_overhead_secs: 0.0,
+        busy_secs: 0.0,
+        predicted_secs: 0.0,
+    };
+
+    while buffer.drain_into(cap, opts.settle, &mut drained).is_some() {
+        let group = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            tasks.clear();
+            tasks.extend(drained.iter().map(|s| s.task.clone()));
+            // Compiled once per drained group; shared by the search and
+            // the prediction bookkeeping.
+            lane_table.compile_into(&tasks, &profile);
+            match opts.policy {
+                Policy::NoReorder => {
+                    order.clear();
+                    order.extend(0..tasks.len());
+                    // Model prediction for the arrival order
+                    // (allocation-free replay through the lane cursor).
+                    lane_cursor.reset(&profile, EngineState::default());
+                    for &i in &order {
+                        lane_cursor.push_task_compiled(&lane_table, i);
+                    }
+                    stats.predicted_secs += lane_cursor.run_to_quiescence();
+                }
+                Policy::Heuristic => {
+                    let t0 = Instant::now();
+                    let predicted = batch_reorder_table_parallel_into(
+                        &lane_table,
+                        EngineState::default(),
+                        DEFAULT_BEAM_WIDTH,
+                        &mut scratch,
+                        &mut order,
+                    );
+                    stats.sched_overhead_secs += t0.elapsed().as_secs_f64();
+                    stats.predicted_secs += predicted;
+                }
+            }
+
+            ordered.clear();
+            ordered.extend(order.iter().map(|&i| tasks[i].clone()));
+            let run = device.run_group(&ordered);
+            group_makespans.push(run.makespan);
+            stats.busy_secs += run.makespan;
+            let now = epoch.elapsed().as_secs_f64();
+            // Signal completions (device timestamps are group-relative;
+            // the workers only need the ordering, latency uses wall time).
+            for (slot, &orig) in order.iter().enumerate() {
+                let sub = &drained[orig];
+                sub.done.complete(now - run.makespan + run.task_end[slot]);
+                latencies.push(now - sub.submitted_at);
+            }
+            stats.n_groups += 1;
+            stats.n_tasks += drained.len();
+        }));
+        if let Err(payload) = group {
+            // Liveness before failure: workers routed to this lane block
+            // in `done.wait()` and would hang `run`'s scope forever if
+            // the proxy just died. Complete this group's events and keep
+            // draining-and-completing until every worker exited, then
+            // surface the panic through the proxy's join.
+            loop {
+                let now = epoch.elapsed().as_secs_f64();
+                for sub in &drained {
+                    if !sub.done.is_complete() {
+                        sub.done.complete(now);
+                    }
+                }
+                if buffer.drain_into(cap, Duration::ZERO, &mut drained).is_none()
+                {
+                    break;
+                }
+            }
+            std::panic::resume_unwind(payload);
+        }
+    }
+    LaneOutcome { stats, latencies, group_makespans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::device::executor::SpinExecutor;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    fn workload(t: usize, n: usize, scale: f64) -> Vec<Vec<TaskSpec>> {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, scale).unwrap();
+        (0..t)
+            .map(|w| (0..n).map(|i| g.tasks[(w + i) % 4].clone()).collect())
+            .collect()
+    }
+
+    fn coordinator(lanes: usize, policy: Policy) -> LaneCoordinator {
+        LaneCoordinator::homogeneous(
+            profile_by_name("amd_r9").unwrap(),
+            Arc::new(SpinExecutor),
+            LaneOptions { lanes, policy, ..LaneOptions::default() },
+        )
+    }
+
+    #[test]
+    fn two_lanes_complete_all_tasks() {
+        let c = coordinator(2, Policy::Heuristic);
+        let m = c.run(workload(4, 2, 0.1));
+        assert_eq!(m.n_tasks, 8);
+        assert_eq!(m.latencies.len(), 8);
+        assert_eq!(m.per_lane.len(), 2);
+        assert_eq!(m.per_lane.iter().map(|l| l.n_tasks).sum::<usize>(), 8);
+        assert!(m.tasks_per_sec > 0.0);
+        // Every lane that executed groups must carry a prediction.
+        for l in &m.per_lane {
+            if l.n_groups > 0 {
+                assert!(l.predicted_secs > 0.0);
+                assert!(l.busy_secs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_partition_workers_evenly() {
+        let c = coordinator(2, Policy::NoReorder);
+        let m = c.run(workload(4, 3, 0.05));
+        assert_eq!(m.n_tasks, 12);
+        // Workers 0,2 → lane 0; workers 1,3 → lane 1: 6 tasks each.
+        for l in &m.per_lane {
+            assert_eq!(l.n_tasks, 6, "lane {}: {:?}", l.lane, m.per_lane);
+        }
+        assert_eq!(m.sched_overhead_secs, 0.0);
+    }
+
+    #[test]
+    fn single_lane_matches_runner_semantics() {
+        let c = coordinator(1, Policy::Heuristic);
+        let m = c.run(workload(3, 2, 0.1));
+        assert_eq!(m.n_tasks, 6);
+        assert!(m.n_groups >= 2, "batch deps force >= 2 rounds");
+        assert!(m.sched_overhead_secs > 0.0);
+        assert!(m.p50_latency() <= m.p99_latency() + 1e-12);
+    }
+
+    #[test]
+    fn group_cap_splits_large_drains() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let c = LaneCoordinator::homogeneous(
+            p,
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 1,
+                group_cap: 2,
+                // No settle: groups form from whatever is buffered, the
+                // cap bounds each batch.
+                settle: Duration::ZERO,
+                ..LaneOptions::default()
+            },
+        );
+        let m = c.run(workload(4, 1, 0.05));
+        assert_eq!(m.n_tasks, 4);
+        for g in &m.group_makespans {
+            assert!(*g > 0.0);
+        }
+        assert!(m.n_groups >= 2, "cap 2 over 4 tasks needs >= 2 groups");
+    }
+
+    #[test]
+    fn empty_workload_terminates() {
+        let c = coordinator(2, Policy::Heuristic);
+        let m = c.run(Vec::new());
+        assert_eq!(m.n_tasks, 0);
+        assert_eq!(m.n_groups, 0);
+        assert!(m.latencies.is_empty());
+    }
+}

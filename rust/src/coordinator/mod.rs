@@ -1,10 +1,20 @@
 //! The §6.2 multi-worker runtime: worker threads offload dependent task
-//! batches through a shared buffer; a host proxy thread forms task groups,
-//! reorders them with the Batch Reordering heuristic and drives the
-//! virtual device.
+//! batches through a shared buffer; host proxy threads form task groups,
+//! reorder them with the Batch Reordering heuristic and drive the virtual
+//! device.
+//!
+//! * `buffer` — the MPSC submission buffer ([`SharedBuffer`]) and its
+//!   per-lane sharding ([`ShardedBuffer`]).
+//! * `lanes` — the sharded runtime ([`LaneCoordinator`]): per-lane proxy
+//!   threads with batched drains, persistent reorder arenas (optionally
+//!   parallel candidate scoring) and paused prediction cursors.
+//! * `runner` — the classic single-proxy harness, now a single-lane
+//!   facade over `lanes`.
 
 pub mod buffer;
+pub mod lanes;
 pub mod runner;
 
-pub use buffer::{SharedBuffer, Submission};
+pub use buffer::{ShardedBuffer, SharedBuffer, Submission};
+pub use lanes::{LaneCoordinator, LaneMetrics, LaneOptions, LaneStats};
 pub use runner::{CoordMetrics, Coordinator, Policy};

@@ -1,18 +1,18 @@
 //! The host proxy runtime (paper §6.2, Fig. 8): T worker threads submit N
-//! dependent tasks each through the shared buffer; the proxy thread drains
-//! task groups, optionally reorders them with the heuristic, submits them
-//! to the virtual device, and signals per-task completion events back to
-//! the workers.
+//! dependent tasks each through the shared buffer; the proxy drains task
+//! groups, optionally reorders them with the heuristic, submits them to
+//! the virtual device, and signals per-task completion events back to the
+//! workers.
+//!
+//! Since the sharded refactor this is a thin facade over
+//! [`LaneCoordinator`] with a single lane: same buffer semantics, same
+//! policies, same metrics — `coordinator::lanes` is the actual runtime.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::config::DeviceProfile;
+use crate::coordinator::lanes::{LaneCoordinator, LaneOptions};
 use crate::device::vdev::VirtualDevice;
-use crate::model::EngineState;
-use crate::sched::heuristic::{batch_reorder_beam_into, BeamScratch, DEFAULT_BEAM_WIDTH};
-use crate::coordinator::buffer::{SharedBuffer, Submission};
-use crate::queue::event::Event;
 use crate::task::TaskSpec;
 use crate::util::stats;
 
@@ -49,10 +49,10 @@ impl CoordMetrics {
     }
 }
 
-/// The multi-worker runtime harness.
+/// The multi-worker runtime harness (single-lane facade over
+/// [`LaneCoordinator`]).
 pub struct Coordinator {
     device: Arc<VirtualDevice>,
-    profile: DeviceProfile,
     policy: Policy,
     /// Proxy settle window while forming a TG (paper: the proxy "samples"
     /// the buffer; this bounds how long it waits for stragglers).
@@ -61,113 +61,32 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(device: Arc<VirtualDevice>, policy: Policy) -> Self {
-        let profile = device.profile().clone();
-        Coordinator { device, profile, policy, settle: Duration::from_micros(300) }
+        Coordinator { device, policy, settle: Duration::from_micros(300) }
     }
 
     /// Run `workloads[w]` = the dependent task batch of worker `w`.
     /// Each worker submits its next task only after the previous one
     /// completed (the paper's batch dependency).
     pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> CoordMetrics {
-        let t_workers = workloads.len();
-        let buffer = SharedBuffer::new();
-        let epoch = Instant::now();
-
-        // ---- workers ----------------------------------------------------
-        let mut worker_handles = Vec::new();
-        for (w, batch) in workloads.into_iter().enumerate() {
-            let buffer = buffer.clone();
-            worker_handles.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-{w}"))
-                    .spawn(move || {
-                        for (seq, task) in batch.into_iter().enumerate() {
-                            let done = Event::new();
-                            buffer.push(Submission {
-                                worker: w,
-                                batch_seq: seq,
-                                task,
-                                done: done.clone(),
-                                submitted_at: epoch.elapsed().as_secs_f64(),
-                            });
-                            // Dependency: wait before submitting the next.
-                            done.wait();
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
-        }
-
-        // ---- proxy (this thread) ---------------------------------------
-        let mut latencies = Vec::new();
-        let mut group_makespans = Vec::new();
-        let mut sched_overhead = 0.0;
-        let mut n_tasks = 0usize;
-        // Workers are tracked via the buffer-closing janitor below.
-
-        // Close the buffer once all workers have drained: do it from a
-        // janitor thread joining the workers.
-        let closer = {
-            let buffer = buffer.clone();
-            std::thread::spawn(move || {
-                for h in worker_handles {
-                    h.join().expect("worker panicked");
-                }
-                buffer.close();
-            })
-        };
-
-        // The reorder arena persists across task groups: after the first
-        // round the heuristic performs zero heap allocations per group
-        // (cursor pools, beam entries and the order buffer are all reused).
-        let mut scratch = BeamScratch::new();
-        let mut order: Vec<usize> = Vec::new();
-        while let Some(subs) = buffer.drain(t_workers, self.settle) {
-            let tasks: Vec<TaskSpec> =
-                subs.iter().map(|s| s.task.clone()).collect();
-            match self.policy {
-                Policy::NoReorder => {
-                    order.clear();
-                    order.extend(0..tasks.len());
-                }
-                Policy::Heuristic => {
-                    let t0 = Instant::now();
-                    batch_reorder_beam_into(
-                        &tasks,
-                        &self.profile,
-                        EngineState::default(),
-                        DEFAULT_BEAM_WIDTH,
-                        &mut scratch,
-                        &mut order,
-                    );
-                    sched_overhead += t0.elapsed().as_secs_f64();
-                }
-            };
-            let ordered: Vec<TaskSpec> =
-                order.iter().map(|&i| tasks[i].clone()).collect();
-            let run = self.device.run_group(&ordered);
-            group_makespans.push(run.makespan);
-            let now = epoch.elapsed().as_secs_f64();
-            // Signal completions (device timestamps are group-relative;
-            // workers only need the ordering, the latency uses wall time).
-            for (slot, &orig) in order.iter().enumerate() {
-                let sub = &subs[orig];
-                sub.done.complete(now - run.makespan + run.task_end[slot]);
-                latencies.push(now - sub.submitted_at);
-            }
-            n_tasks += subs.len();
-        }
-        closer.join().unwrap();
-
-        let total_secs = epoch.elapsed().as_secs_f64();
+        let lane = LaneCoordinator::with_devices(
+            vec![Arc::clone(&self.device)],
+            LaneOptions {
+                lanes: 1,
+                policy: self.policy,
+                settle: self.settle,
+                group_cap: 0,
+                scoring_threads: 1,
+            },
+        );
+        let m = lane.run(workloads);
         CoordMetrics {
-            total_secs,
-            tasks_per_sec: n_tasks as f64 / total_secs,
-            latencies,
-            n_groups: group_makespans.len(),
-            group_makespans,
-            sched_overhead_secs: sched_overhead,
-            n_tasks,
+            total_secs: m.total_secs,
+            tasks_per_sec: m.tasks_per_sec,
+            latencies: m.latencies,
+            group_makespans: m.group_makespans,
+            sched_overhead_secs: m.sched_overhead_secs,
+            n_groups: m.n_groups,
+            n_tasks: m.n_tasks,
         }
     }
 }

@@ -12,15 +12,23 @@
 //!   one-shot wrappers (`simulate` / `simulate_order`) and as the
 //!   resumable [`SimCursor`] (push tasks incrementally, snapshot, resume)
 //!   that the scheduler hot path builds on.
+//! * `tasktable` — [`TaskTable`], a task group compiled against a device
+//!   profile into structure-of-arrays form (flat command-size arenas,
+//!   pre-resolved kernel durations, precomputed stage seconds and
+//!   dominance) so the scheduler hot path pushes tasks from contiguous
+//!   slices instead of walking `TaskSpec` structs.
 //! * `timeline` — per-command records, ASCII Gantt rendering and overlap
 //!   metrics used by reports and tests.
 
 pub mod kernel;
 pub mod simulator;
+pub mod tasktable;
 pub mod timeline;
 pub mod transfer;
 
 pub use simulator::{
-    simulate, simulate_order, EngineState, SimCursor, SimOptions, SimResult,
+    simulate, simulate_order, simulate_order_compiled, EngineState, SimCursor,
+    SimOptions, SimResult,
 };
+pub use tasktable::TaskTable;
 pub use timeline::{CmdKind, CmdRecord};

@@ -48,6 +48,7 @@
 //! system, as in the paper.
 
 use crate::config::DeviceProfile;
+use crate::model::tasktable::TaskTable;
 use crate::model::timeline::{CmdKind, CmdRecord};
 use crate::task::TaskSpec;
 
@@ -103,9 +104,11 @@ const EPS: f64 = 1e-12;
 
 /// Device constants the event loop consumes, copied out of a
 /// [`DeviceProfile`] so a cursor is plain `Copy` data plus buffers (no
-/// lifetimes, cheap `clone_from`).
-#[derive(Clone, Copy, Debug, Default)]
-struct ProfileParams {
+/// lifetimes, cheap `clone_from`). `PartialEq` backs the debug assertion
+/// that a [`TaskTable`] is only pushed into cursors compiled for the same
+/// device.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub(crate) struct ProfileParams {
     single_dma: bool,
     htd_latency: f64,
     dth_latency: f64,
@@ -116,7 +119,7 @@ struct ProfileParams {
 }
 
 impl ProfileParams {
-    fn of(p: &DeviceProfile) -> Self {
+    pub(crate) fn of(p: &DeviceProfile) -> Self {
         ProfileParams {
             single_dma: p.dma_engines < 2,
             htd_latency: p.htd.latency,
@@ -207,7 +210,14 @@ impl SimCursor {
     /// this is NOT `*self = default()` — the Vec clears below deliberately
     /// retain their allocations for the scheduler hot path).
     pub fn reset(&mut self, profile: &DeviceProfile, init: EngineState) {
-        self.prof = ProfileParams::of(profile);
+        self.reset_params(ProfileParams::of(profile), init);
+    }
+
+    /// [`SimCursor::reset`] with pre-extracted device constants — lets a
+    /// [`TaskTable`] holder rewind a cursor without re-touching the
+    /// `DeviceProfile`.
+    pub(crate) fn reset_params(&mut self, prof: ProfileParams, init: EngineState) {
+        self.prof = prof;
         self.init = init;
         self.q_htd.clear();
         self.q_dth.clear();
@@ -285,6 +295,87 @@ impl SimCursor {
             .push(task.kernel.est_secs() + self.prof.kernel_launch_overhead);
         self.task_end.push(0.0);
         self.drain(false);
+    }
+
+    /// [`SimCursor::push_task`] from a compiled [`TaskTable`] row: the
+    /// same state transitions fed from two contiguous slices and one
+    /// pre-resolved kernel duration instead of a `TaskSpec` walk. This is
+    /// the scheduler hot path's push; it is bit-identical to
+    /// `push_task(&tasks[i])` because the table stores the exact values
+    /// `push_task` computes (see `model/tasktable.rs`).
+    pub fn push_task_compiled(&mut self, table: &TaskTable, i: usize) {
+        debug_assert!(
+            !self.finished,
+            "SimCursor::push_task_compiled after run_to_quiescence; snapshot \
+             before finishing instead"
+        );
+        debug_assert!(
+            table.params() == self.prof,
+            "TaskTable compiled for a different device profile"
+        );
+        let slot = self.task_end.len();
+        let htd = table.htd_bytes(i);
+        let dth = table.dth_bytes(i);
+        for (j, &b) in htd.iter().enumerate() {
+            self.q_htd.push((slot, j, b));
+        }
+        for (j, &b) in dth.iter().enumerate() {
+            self.q_dth.push((slot, j, b));
+        }
+        self.htd_pending.push(htd.len() as u32);
+        self.dth_pending.push(dth.len() as u32);
+        self.k_done.push(false);
+        self.kernel_secs.push(table.kernel_secs(i));
+        self.task_end.push(0.0);
+        self.drain(false);
+    }
+
+    /// Append a canonical encoding of the cursor's *dynamic* simulation
+    /// state to `out` (clock, active commands, queue contents, dependency
+    /// counters — everything that determines how any future push sequence
+    /// evolves; `task_end`/timeline/record flags are outputs, not state).
+    /// Two cursors with equal encodings produce identical makespans for
+    /// identical future push sequences — the exactness invariant behind
+    /// the prefix transposition memo in `sched::parallel`.
+    pub(crate) fn write_state_sig(&self, out: &mut Vec<u64>) {
+        out.push(self.now.to_bits());
+        out.push(self.init.htd_free.to_bits());
+        out.push(self.init.k_free.to_bits());
+        out.push(self.init.dth_free.to_bits());
+        out.push(self.h_next as u64);
+        out.push(self.d_next as u64);
+        out.push(self.k_next as u64);
+        out.push(self.htd_cmds_done as u64);
+        for act in [&self.act_h, &self.act_d, &self.act_k] {
+            match act {
+                Some(c) => {
+                    out.push(1 | ((c.task as u64) << 1));
+                    out.push(((c.kind as u64) << 32) | c.seq as u64);
+                    out.push(c.lat_left.to_bits());
+                    out.push(c.work_left.to_bits());
+                }
+                None => out.extend_from_slice(&[0, 0, 0, 0]),
+            }
+        }
+        out.push(self.q_htd.len() as u64);
+        for &(t, j, b) in &self.q_htd {
+            out.push(((t as u64) << 32) | j as u64);
+            out.push(b);
+        }
+        out.push(self.q_dth.len() as u64);
+        for &(t, j, b) in &self.q_dth {
+            out.push(((t as u64) << 32) | j as u64);
+            out.push(b);
+        }
+        out.push(self.kernel_secs.len() as u64);
+        for &k in &self.kernel_secs {
+            out.push(k.to_bits());
+        }
+        for (i, &p) in self.htd_pending.iter().enumerate() {
+            out.push(((p as u64) << 33)
+                | ((self.dth_pending[i] as u64) << 1)
+                | self.k_done[i] as u64);
+        }
     }
 
     /// Run every remaining event; returns the makespan. The cursor stays
@@ -587,9 +678,10 @@ pub fn simulate(
 
 /// Zero-copy variant: predict `tasks` submitted in `order` (a permutation
 /// of indices into `tasks`). Record/task_end indices are *slots*
-/// (positions in `order`), matching `simulate`. This is a thin wrapper
-/// over [`SimCursor`]; schedulers that score many related orders should
-/// hold cursors directly and pay for shared prefixes once.
+/// (positions in `order`), matching `simulate`. Compiles a [`TaskTable`]
+/// once and pushes from it; schedulers that score *many* orders of the
+/// same group should compile the table themselves (or hold cursors
+/// directly and pay for shared prefixes once).
 pub fn simulate_order(
     all_tasks: &[TaskSpec],
     order: &[usize],
@@ -597,9 +689,22 @@ pub fn simulate_order(
     init: EngineState,
     opts: SimOptions,
 ) -> SimResult {
-    let mut cursor = SimCursor::with_options(profile, init, opts);
+    let table = TaskTable::compile(all_tasks, profile);
+    simulate_order_compiled(&table, order, init, opts)
+}
+
+/// [`simulate_order`] over a pre-compiled [`TaskTable`] — the zero-
+/// recompilation path for sweeps that score many orders of one group.
+pub fn simulate_order_compiled(
+    table: &TaskTable,
+    order: &[usize],
+    init: EngineState,
+    opts: SimOptions,
+) -> SimResult {
+    let mut cursor = SimCursor { record: opts.record_timeline, ..SimCursor::default() };
+    cursor.reset_params(table.params(), init);
     for &i in order {
-        cursor.push_task(&all_tasks[i]);
+        cursor.push_task_compiled(table, i);
     }
     cursor.run_to_quiescence();
     cursor.into_result()

@@ -1,0 +1,321 @@
+//! Compiled structure-of-arrays task tables — the scheduler's cache-
+//! friendly view of a task group.
+//!
+//! The simulator's hot path ([`SimCursor::push_task`]) used to walk a
+//! [`TaskSpec`] per push: two `Vec<u64>` field loads, a `KernelSpec` enum
+//! match and a profile field read, all behind a `&TaskSpec` that points at
+//! a heap-scattered struct (the group is cloned out of `Submission`s, so
+//! consecutive tasks are rarely adjacent in memory). A [`TaskTable`] is
+//! the same information *compiled once per (group, device)*:
+//!
+//! * all HtD / DtH command sizes live in two flat `Vec<u64>` arenas with
+//!   per-task offset ranges (classic SoA / CSR layout), so pushing task
+//!   `i` is two contiguous slice walks;
+//! * kernel durations are pre-resolved to `est_secs + launch_overhead`
+//!   (the exact value the cursor would compute), one `f64` load per push;
+//! * the per-stage solo seconds, the `K - HtD` ranking key, the sequential
+//!   floor and the dominance class are precomputed, so scheduler ranking
+//!   passes ([`sched::heuristic`]'s first-task sort, LPT keys in
+//!   [`sched::multidevice`]) read contiguous `f64` slices instead of
+//!   recomputing `stage_secs` per comparison.
+//!
+//! Compilation is `O(commands)` and reuses buffers via
+//! [`TaskTable::compile_into`], so a warm table performs no heap
+//! allocation — the lane coordinator compiles each drained group into a
+//! per-lane table, and the beam search (serial and parallel) scores every
+//! candidate through [`SimCursor::push_task_compiled`].
+//!
+//! Every derived quantity is computed with the *same float expressions*
+//! as the `TaskSpec` path (`stage_secs`, `sequential_secs`,
+//! `kernel.est_secs() + overhead`), so table-driven simulation is
+//! bit-identical to spec-driven simulation — property-tested in
+//! `rust/tests/prop_parallel.rs`.
+//!
+//! [`SimCursor::push_task`]: crate::model::SimCursor::push_task
+//! [`SimCursor::push_task_compiled`]: crate::model::SimCursor::push_task_compiled
+//! [`sched::heuristic`]: crate::sched::heuristic
+//! [`sched::multidevice`]: crate::sched::multidevice
+
+use crate::config::DeviceProfile;
+use crate::model::simulator::ProfileParams;
+use crate::task::{Dominance, TaskSpec};
+
+/// A task group compiled against one device profile (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct TaskTable {
+    pub(crate) prof: ProfileParams,
+    /// Flat HtD command sizes; task `i` owns `htd_raw[htd_off[i]..htd_off[i+1]]`.
+    htd_raw: Vec<u64>,
+    htd_off: Vec<u32>,
+    /// Flat DtH command sizes, same layout.
+    dth_raw: Vec<u64>,
+    dth_off: Vec<u32>,
+    /// Kernel command duration incl. launch overhead (what the cursor runs).
+    kernel: Vec<f64>,
+    /// Solo per-stage seconds (identical arithmetic to `TaskSpec::stage_secs`).
+    htd_secs: Vec<f64>,
+    dth_secs: Vec<f64>,
+    /// `k - htd`, the select-first ranking key of Algorithm 1.
+    k_minus_htd: Vec<f64>,
+    /// `htd + k + dth`, the NoConcurrency floor / LPT key.
+    seq_secs: Vec<f64>,
+    /// Same predicate as `TaskSpec::dominance` (`htd + dth > k`), so the
+    /// classes agree even when a degenerate profile yields NaN stage
+    /// times (the comparison then defaults to `DominantKernel` on both
+    /// paths).
+    dominant_transfer: Vec<bool>,
+    /// FNV of each row's `write_row_sig` encoding, plus the reused sig
+    /// buffer, backing the twin check below.
+    row_hash: Vec<u64>,
+    sig_scratch: Vec<u64>,
+    has_twins: bool,
+}
+
+impl TaskTable {
+    /// Empty, detached table; [`TaskTable::compile_into`] before use.
+    pub fn new() -> TaskTable {
+        TaskTable::default()
+    }
+
+    /// Compile `tasks` against `profile` (allocating constructor).
+    pub fn compile(tasks: &[TaskSpec], profile: &DeviceProfile) -> TaskTable {
+        let mut t = TaskTable::new();
+        t.compile_into(tasks, profile);
+        t
+    }
+
+    /// Recompile in place, retaining every buffer's capacity: a warm table
+    /// recompiled for a same-or-smaller group performs no heap allocation.
+    pub fn compile_into(&mut self, tasks: &[TaskSpec], profile: &DeviceProfile) {
+        self.prof = ProfileParams::of(profile);
+        self.htd_raw.clear();
+        self.htd_off.clear();
+        self.dth_raw.clear();
+        self.dth_off.clear();
+        self.kernel.clear();
+        self.htd_secs.clear();
+        self.dth_secs.clear();
+        self.k_minus_htd.clear();
+        self.seq_secs.clear();
+        self.dominant_transfer.clear();
+        self.htd_off.push(0);
+        self.dth_off.push(0);
+        for task in tasks {
+            self.htd_raw.extend_from_slice(&task.htd_bytes);
+            self.htd_off.push(self.htd_raw.len() as u32);
+            self.dth_raw.extend_from_slice(&task.dth_bytes);
+            self.dth_off.push(self.dth_raw.len() as u32);
+            // Same expressions as TaskSpec::{stage_secs, sequential_secs}
+            // and SimCursor::push_task, so derived values are bit-equal.
+            let htd: f64 =
+                task.htd_bytes.iter().map(|&b| profile.htd.transfer_secs(b)).sum();
+            let dth: f64 =
+                task.dth_bytes.iter().map(|&b| profile.dth.transfer_secs(b)).sum();
+            let k = task.kernel.est_secs() + profile.kernel_launch_overhead;
+            self.kernel.push(k);
+            self.htd_secs.push(htd);
+            self.dth_secs.push(dth);
+            self.k_minus_htd.push(k - htd);
+            self.seq_secs.push(htd + k + dth);
+            self.dominant_transfer.push(htd + dth > k);
+        }
+        // Twin detection for the parallel search's transposition memo:
+        // the memo can only ever hit when two rows share a simulation-
+        // relevant encoding, so groups of all-distinct specs skip it
+        // entirely. A hash collision here can only enable the memo
+        // spuriously — memo hits themselves are proven by full-key
+        // comparison, never by hash.
+        self.row_hash.clear();
+        self.has_twins = false;
+        let mut sig = std::mem::take(&mut self.sig_scratch);
+        for i in 0..self.kernel.len() {
+            sig.clear();
+            self.write_row_sig(i, &mut sig);
+            let h = fnv64(&sig);
+            if self.row_hash.contains(&h) {
+                self.has_twins = true;
+            }
+            self.row_hash.push(h);
+        }
+        self.sig_scratch = sig;
+    }
+
+    /// Whether any two rows share a simulation-relevant encoding (spec
+    /// twins). Gates the transposition memo in `sched::parallel`: with
+    /// all-distinct rows no memo key can ever repeat, so building keys
+    /// would be pure serialized overhead.
+    pub(crate) fn has_spec_twins(&self) -> bool {
+        self.has_twins
+    }
+
+    /// Number of compiled tasks.
+    pub fn len(&self) -> usize {
+        self.kernel.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernel.is_empty()
+    }
+
+    /// HtD command sizes of task `i` (contiguous slice).
+    #[inline]
+    pub fn htd_bytes(&self, i: usize) -> &[u64] {
+        &self.htd_raw[self.htd_off[i] as usize..self.htd_off[i + 1] as usize]
+    }
+
+    /// DtH command sizes of task `i` (contiguous slice).
+    #[inline]
+    pub fn dth_bytes(&self, i: usize) -> &[u64] {
+        &self.dth_raw[self.dth_off[i] as usize..self.dth_off[i + 1] as usize]
+    }
+
+    /// Kernel duration incl. launch overhead — exactly what the cursor runs.
+    #[inline]
+    pub fn kernel_secs(&self, i: usize) -> f64 {
+        self.kernel[i]
+    }
+
+    /// Solo HtD stage seconds (== `stage_secs().htd`).
+    #[inline]
+    pub fn htd_secs(&self, i: usize) -> f64 {
+        self.htd_secs[i]
+    }
+
+    /// Solo DtH stage seconds (== `stage_secs().dth`).
+    #[inline]
+    pub fn dth_secs(&self, i: usize) -> f64 {
+        self.dth_secs[i]
+    }
+
+    /// Algorithm 1's select-first key: `k - htd`, precomputed.
+    #[inline]
+    pub fn k_minus_htd(&self, i: usize) -> f64 {
+        self.k_minus_htd[i]
+    }
+
+    /// Sequential (zero-overlap) seconds (== `sequential_secs`).
+    #[inline]
+    pub fn sequential_secs(&self, i: usize) -> f64 {
+        self.seq_secs[i]
+    }
+
+    /// Dominance class on the compiled device.
+    #[inline]
+    pub fn dominance(&self, i: usize) -> Dominance {
+        if self.dominant_transfer[i] {
+            Dominance::DominantTransfer
+        } else {
+            Dominance::DominantKernel
+        }
+    }
+
+    /// Total commands across all tasks (HtD + K + DtH).
+    pub fn total_commands(&self) -> usize {
+        self.htd_raw.len() + self.dth_raw.len() + self.kernel.len()
+    }
+
+    /// Device constants this table was compiled against.
+    pub(crate) fn params(&self) -> ProfileParams {
+        self.prof
+    }
+
+    /// Append a canonical encoding of task `i`'s *simulation-relevant*
+    /// content (command sizes + kernel duration; names excluded) to `out`.
+    /// Two tasks with equal row signatures are interchangeable for the
+    /// simulator — the transposition memo in `sched::parallel` keys
+    /// rollout sequences on this.
+    pub(crate) fn write_row_sig(&self, i: usize, out: &mut Vec<u64>) {
+        let htd = self.htd_bytes(i);
+        let dth = self.dth_bytes(i);
+        out.push(((htd.len() as u64) << 32) | dth.len() as u64);
+        out.extend_from_slice(htd);
+        out.push(self.kernel[i].to_bits());
+        out.extend_from_slice(dth);
+    }
+}
+
+/// FNV-1a over u64 words — the prefilter hash for row/state signatures
+/// (shared with the transposition memo in `sched::parallel`).
+pub(crate) fn fnv64(words: &[u64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &w in words {
+        h ^= w;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::synthetic::synthetic_benchmark;
+    use crate::task::KernelSpec;
+
+    #[test]
+    fn compiled_rows_match_spec_arithmetic() {
+        for dev in ["amd_r9", "k20c", "xeon_phi"] {
+            let p = profile_by_name(dev).unwrap();
+            let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+            let t = TaskTable::compile(&g.tasks, &p);
+            assert_eq!(t.len(), g.tasks.len());
+            for (i, task) in g.tasks.iter().enumerate() {
+                let s = task.stage_secs(&p);
+                assert_eq!(t.htd_bytes(i), &task.htd_bytes[..]);
+                assert_eq!(t.dth_bytes(i), &task.dth_bytes[..]);
+                assert_eq!(t.kernel_secs(i), s.k);
+                assert_eq!(t.htd_secs(i), s.htd);
+                assert_eq!(t.dth_secs(i), s.dth);
+                assert_eq!(t.k_minus_htd(i), s.k - s.htd);
+                assert_eq!(t.sequential_secs(i), task.sequential_secs(&p));
+                assert_eq!(t.dominance(i), task.dominance(&p));
+            }
+        }
+    }
+
+    #[test]
+    fn recompile_reuses_and_resizes() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        let mut t = TaskTable::compile(&g.tasks, &p);
+        t.compile_into(&g.tasks[..2], &p);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.htd_bytes(1), &g.tasks[1].htd_bytes[..]);
+        t.compile_into(&g.tasks, &p);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dth_bytes(3), &g.tasks[3].dth_bytes[..]);
+    }
+
+    #[test]
+    fn row_sig_distinguishes_specs_and_matches_duplicates() {
+        let p = profile_by_name("k20c").unwrap();
+        let a = TaskSpec::simple("a", 1000, KernelSpec::Timed { secs: 1e-3 }, 500);
+        let b = TaskSpec::simple("b", 1000, KernelSpec::Timed { secs: 1e-3 }, 500);
+        let c = TaskSpec::simple("c", 2000, KernelSpec::Timed { secs: 1e-3 }, 500);
+        let t = TaskTable::compile(&[a, b, c], &p);
+        let sig = |i: usize| {
+            let mut v = Vec::new();
+            t.write_row_sig(i, &mut v);
+            v
+        };
+        assert_eq!(sig(0), sig(1), "identical specs, different names");
+        assert_ne!(sig(0), sig(2));
+        assert!(t.has_spec_twins());
+        let distinct = TaskTable::compile(
+            &[
+                TaskSpec::simple("a", 1000, KernelSpec::Timed { secs: 1e-3 }, 500),
+                TaskSpec::simple("c", 2000, KernelSpec::Timed { secs: 1e-3 }, 500),
+            ],
+            &p,
+        );
+        assert!(!distinct.has_spec_twins());
+    }
+
+    #[test]
+    fn empty_table() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let t = TaskTable::compile(&[], &p);
+        assert!(t.is_empty());
+        assert_eq!(t.total_commands(), 0);
+    }
+}

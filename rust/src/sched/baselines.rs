@@ -3,7 +3,7 @@
 
 use crate::config::DeviceProfile;
 use crate::model::simulator::SimCursor;
-use crate::model::EngineState;
+use crate::model::{EngineState, TaskTable};
 use crate::task::{Dominance, TaskSpec};
 use crate::util::rng::Pcg64;
 
@@ -19,14 +19,14 @@ pub fn random(tasks: &[TaskSpec], rng: &mut Pcg64) -> Vec<usize> {
     order
 }
 
-/// Shortest-job-first by solo sequential time.
+/// Shortest-job-first by solo sequential time (`total_cmp`: a NaN from a
+/// degenerate profile sorts last instead of panicking the proxy thread).
 pub fn sjf(tasks: &[TaskSpec], profile: &DeviceProfile) -> Vec<usize> {
     let mut order: Vec<usize> = (0..tasks.len()).collect();
     order.sort_by(|&a, &b| {
         tasks[a]
             .sequential_secs(profile)
-            .partial_cmp(&tasks[b].sequential_secs(profile))
-            .unwrap()
+            .total_cmp(&tasks[b].sequential_secs(profile))
     });
     order
 }
@@ -39,8 +39,7 @@ pub fn longest_kernel_first(tasks: &[TaskSpec], profile: &DeviceProfile) -> Vec<
         tasks[b]
             .stage_secs(profile)
             .k
-            .partial_cmp(&tasks[a].stage_secs(profile).k)
-            .unwrap()
+            .total_cmp(&tasks[a].stage_secs(profile).k)
     });
     order
 }
@@ -71,10 +70,11 @@ pub fn alternate_dominance(tasks: &[TaskSpec], profile: &DeviceProfile) -> Vec<u
     order
 }
 
-/// Simulated makespan of every baseline policy on one group, evaluated
-/// through a single reused [`SimCursor`] (the ablation bench calls this
-/// per group x device; the shared cursor keeps the sweep allocation-light
-/// the same way the heuristic's `BeamScratch` does).
+/// Simulated makespan of every baseline policy on one group: the group is
+/// compiled once into a [`TaskTable`] and every order is replayed through
+/// a single reused [`SimCursor`] (the ablation bench calls this per group
+/// x device; table + shared cursor keep the sweep allocation-light the
+/// same way the heuristic's `BeamScratch` does).
 pub fn baseline_makespans(
     tasks: &[TaskSpec],
     profile: &DeviceProfile,
@@ -87,13 +87,14 @@ pub fn baseline_makespans(
         ("lkf", longest_kernel_first(tasks, profile)),
         ("alternate", alternate_dominance(tasks, profile)),
     ];
+    let table = TaskTable::compile(tasks, profile);
     let mut cursor = SimCursor::new(profile, EngineState::default());
     orders
         .into_iter()
         .map(|(name, order)| {
             cursor.reset(profile, EngineState::default());
             for &i in &order {
-                cursor.push_task(&tasks[i]);
+                cursor.push_task_compiled(&table, i);
             }
             (name, cursor.run_to_quiescence())
         })

@@ -4,7 +4,7 @@
 
 use crate::config::DeviceProfile;
 use crate::model::simulator::SimCursor;
-use crate::model::EngineState;
+use crate::model::{EngineState, TaskTable};
 use crate::task::TaskSpec;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
@@ -77,16 +77,19 @@ pub struct OrderStats {
 }
 
 impl OrderStats {
-    /// Evaluate every ordering in `orders` with the temporal model. A
-    /// single [`SimCursor`] is reset per order, so the sweep reuses its
-    /// queue/counter buffers instead of allocating ~6 Vecs per ordering
-    /// (this path evaluates up to T! orders per experiment cell).
+    /// Evaluate every ordering in `orders` with the temporal model. The
+    /// group is compiled once into a [`TaskTable`] and a single
+    /// [`SimCursor`] is reset per order, so the sweep walks contiguous
+    /// SoA rows and reuses its queue/counter buffers instead of
+    /// re-reading `TaskSpec`s and allocating ~6 Vecs per ordering (this
+    /// path evaluates up to T! orders per experiment cell).
     pub fn evaluate(
         tasks: &[TaskSpec],
         orders: &[Vec<usize>],
         profile: &DeviceProfile,
     ) -> OrderStats {
         assert!(!orders.is_empty());
+        let table = TaskTable::compile(tasks, profile);
         let mut times = Vec::with_capacity(orders.len());
         let mut best = f64::INFINITY;
         let mut worst = f64::NEG_INFINITY;
@@ -96,7 +99,7 @@ impl OrderStats {
         for order in orders {
             cursor.reset(profile, EngineState::default());
             for &i in order {
-                cursor.push_task(&tasks[i]);
+                cursor.push_task_compiled(&table, i);
             }
             let t = cursor.run_to_quiescence();
             if t < best {

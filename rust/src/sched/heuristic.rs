@@ -25,23 +25,31 @@
 //! The search runs on [`SimCursor`]s: every surviving beam prefix is
 //! simulated **once** up to its committed frontier and kept paused inside
 //! its [`BeamScratch`] entry; each candidate extension is scored by
-//! `resume_from` + `push_task` + `run_to_quiescence` on a pooled probe
-//! cursor instead of replaying the prefix from scratch. Total event work
-//! drops from O(w·T³·C) to amortized O(w·T²·C), membership tests are
+//! `resume_from` + `push_task_compiled` + `run_to_quiescence` on a pooled
+//! probe cursor instead of replaying the prefix from scratch. Total event
+//! work drops from O(w·T³·C) to amortized O(w·T²·C), membership tests are
 //! bitmask words instead of `Vec::contains` scans (the old O(T²) term),
-//! and the whole inner loop performs **zero heap allocations** after
-//! warm-up: beam entries, masks, candidate lists and cursors all live in
+//! the group is compiled once per call into a [`TaskTable`] (so every
+//! push reads contiguous SoA slices, never a `TaskSpec`), and the whole
+//! inner loop performs **zero heap allocations** after warm-up: beam
+//! entries, masks, candidate lists, the table and the cursors all live in
 //! the reusable [`BeamScratch`] arena (thread-local for the convenience
-//! wrappers, caller-owned via [`batch_reorder_beam_into`]). The
-//! pre-refactor implementation is preserved as
-//! [`batch_reorder_beam_replay`] for equivalence tests and as the
-//! overhead baseline in `benches/table6_overhead.rs`.
+//! wrappers, caller-owned via [`batch_reorder_beam_into`]). For larger
+//! groups, `sched::parallel` fans candidate scoring out over a persistent
+//! thread pool while returning bit-identical orders. The pre-refactor
+//! implementation is preserved as [`batch_reorder_beam_replay`] for
+//! equivalence tests and as the overhead baseline in
+//! `benches/table6_overhead.rs`.
+//!
+//! All f64 score comparisons use `f64::total_cmp`: a NaN from a
+//! degenerate profile must not panic the coordinator's proxy thread
+//! mid-drain (it sorts last instead).
 
 use std::cell::RefCell;
 
 use crate::config::DeviceProfile;
 use crate::model::simulator::{simulate_order_fromscratch, SimCursor};
-use crate::model::{EngineState, SimOptions};
+use crate::model::{EngineState, SimOptions, TaskTable};
 use crate::task::TaskSpec;
 
 /// Beam width of the generalized greedy. Width 1 is Algorithm 1's pure
@@ -51,27 +59,28 @@ use crate::task::TaskSpec;
 pub const DEFAULT_BEAM_WIDTH: usize = 3;
 
 #[inline]
-fn mask_words(n: usize) -> usize {
+pub(crate) fn mask_words(n: usize) -> usize {
     n.div_ceil(64)
 }
 
 #[inline]
-fn mask_contains(mask: &[u64], i: usize) -> bool {
+pub(crate) fn mask_contains(mask: &[u64], i: usize) -> bool {
     mask[i >> 6] & (1u64 << (i & 63)) != 0
 }
 
 #[inline]
-fn mask_set(mask: &mut [u64], i: usize) {
+pub(crate) fn mask_set(mask: &mut [u64], i: usize) {
     mask[i >> 6] |= 1u64 << (i & 63);
 }
 
 /// One surviving beam prefix: its order, membership bitmask, pruning
-/// score, and the paused simulation of exactly that prefix.
-struct BeamEntry {
-    order: Vec<usize>,
-    mask: Vec<u64>,
-    cursor: SimCursor,
-    score: f64,
+/// score, and the paused simulation of exactly that prefix. Shared with
+/// the parallel search in `sched::parallel`.
+pub(crate) struct BeamEntry {
+    pub(crate) order: Vec<usize>,
+    pub(crate) mask: Vec<u64>,
+    pub(crate) cursor: SimCursor,
+    pub(crate) score: f64,
 }
 
 impl BeamEntry {
@@ -89,17 +98,18 @@ impl BeamEntry {
 /// and `cand` double as the deterministic tie-break, reproducing the
 /// stable generation order of the pre-refactor sort.
 #[derive(Clone, Copy)]
-struct Cand {
-    parent: u32,
-    cand: u32,
-    score: f64,
+pub(crate) struct Cand {
+    pub(crate) parent: u32,
+    pub(crate) cand: u32,
+    pub(crate) score: f64,
 }
 
-/// Reusable arena for the beam search: cursors, beam entry pools,
-/// candidate list and rollout ranking. After the first call at a given
-/// (T, command-count) size, subsequent calls through the same scratch
-/// perform no heap allocations.
+/// Reusable arena for the beam search: compiled task table, cursors, beam
+/// entry pools, candidate list and rollout ranking. After the first call
+/// at a given (T, command-count) size, subsequent calls through the same
+/// scratch perform no heap allocations.
 pub struct BeamScratch {
+    table: TaskTable,
     base: SimCursor,
     probe: SimCursor,
     beam: Vec<BeamEntry>,
@@ -113,6 +123,7 @@ pub struct BeamScratch {
 impl BeamScratch {
     pub fn new() -> BeamScratch {
         BeamScratch {
+            table: TaskTable::new(),
             base: SimCursor::detached(),
             probe: SimCursor::detached(),
             beam: Vec::new(),
@@ -167,6 +178,8 @@ pub fn batch_reorder_beam(
 /// Allocation-free core: writes the order into `out` using only buffers
 /// from `scratch` (both are reused across calls; after warm-up the whole
 /// search performs zero heap allocations — see `rust/tests/alloc_free.rs`).
+/// Compiles the group into the scratch's [`TaskTable`] once and runs the
+/// search entirely over the compiled SoA rows.
 pub fn batch_reorder_beam_into(
     tasks: &[TaskSpec],
     profile: &DeviceProfile,
@@ -175,7 +188,23 @@ pub fn batch_reorder_beam_into(
     scratch: &mut BeamScratch,
     out: &mut Vec<usize>,
 ) {
-    let n = tasks.len();
+    let mut table = std::mem::take(&mut scratch.table);
+    table.compile_into(tasks, profile);
+    beam_over_table(&table, init, width, scratch, out);
+    scratch.table = table;
+}
+
+/// The search proper, over a pre-compiled table. Split out so the width-1
+/// greedy floor (and the parallel search's serial fallback) recurse
+/// without recompiling the table.
+pub(crate) fn beam_over_table(
+    table: &TaskTable,
+    init: EngineState,
+    width: usize,
+    scratch: &mut BeamScratch,
+    out: &mut Vec<usize>,
+) {
+    let n = table.len();
     let width = width.max(1);
     out.clear();
     if n <= 1 {
@@ -188,22 +217,8 @@ pub fn batch_reorder_beam_into(
         let BeamScratch { base, probe, beam, next, beam_len, cands, firsts, .. } =
             scratch;
 
-        // ---- select_first_task ranking, reused as the rollout order of
-        // prefix scores (stage_secs sorts are invariant per call). The
-        // index tie-break reproduces the stable sort of the replay path.
-        firsts.clear();
-        firsts.extend(0..n);
-        firsts.sort_unstable_by(|&a, &b| {
-            let (sa, sb) =
-                (tasks[a].stage_secs(profile), tasks[b].stage_secs(profile));
-            let (ka, kb) = (sa.k - sa.htd, sb.k - sb.htd);
-            kb.partial_cmp(&ka)
-                .unwrap()
-                .then(sb.dth.partial_cmp(&sa.dth).unwrap())
-                .then(a.cmp(&b))
-        });
-
-        base.reset(profile, init);
+        rank_firsts(table, firsts);
+        base.reset_params(table.params(), init);
 
         // ---- seed the beam. Width 1 reproduces Algorithm 1 exactly: the
         // first task comes from the short-HtD/long-K rule. Wider beams
@@ -220,15 +235,12 @@ pub fn batch_reorder_beam_into(
             set_mask_len(&mut e.mask, words);
             mask_set(&mut e.mask, seed);
             e.cursor.resume_from(base);
-            e.cursor.push_task(&tasks[seed]);
-            e.score = rollout_score(probe, &e.cursor, &e.mask, firsts, tasks);
+            e.cursor.push_task_compiled(table, seed);
+            e.score = rollout_score(probe, &e.cursor, &e.mask, firsts, table);
             *beam_len += 1;
         }
         beam[..*beam_len].sort_unstable_by(|a, b| {
-            a.score
-                .partial_cmp(&b.score)
-                .unwrap()
-                .then(a.order[0].cmp(&b.order[0]))
+            a.score.total_cmp(&b.score).then(a.order[0].cmp(&b.order[0]))
         });
         *beam_len = (*beam_len).min(width);
 
@@ -244,10 +256,10 @@ pub fn batch_reorder_beam_into(
                         continue;
                     }
                     probe.resume_from(&parent.cursor);
-                    probe.push_task(&tasks[cand]);
+                    probe.push_task_compiled(table, cand);
                     for &r in firsts.iter() {
                         if r != cand && !mask_contains(&parent.mask, r) {
-                            probe.push_task(&tasks[r]);
+                            probe.push_task_compiled(table, r);
                         }
                     }
                     let score = probe.run_to_quiescence();
@@ -258,13 +270,7 @@ pub fn batch_reorder_beam_into(
                     });
                 }
             }
-            cands.sort_unstable_by(|a, b| {
-                a.score
-                    .partial_cmp(&b.score)
-                    .unwrap()
-                    .then(a.parent.cmp(&b.parent))
-                    .then(a.cand.cmp(&b.cand))
-            });
+            cands.sort_unstable_by(cand_cmp);
             let keep = width.min(cands.len());
             for (k, c) in cands[..keep].iter().enumerate() {
                 let parent = &beam[c.parent as usize];
@@ -274,7 +280,7 @@ pub fn batch_reorder_beam_into(
                 e.mask.clone_from(&parent.mask);
                 mask_set(&mut e.mask, c.cand as usize);
                 e.cursor.resume_from(&parent.cursor);
-                e.cursor.push_task(&tasks[c.cand as usize]);
+                e.cursor.push_task_compiled(table, c.cand as usize);
                 e.score = c.score;
             }
             std::mem::swap(beam, next);
@@ -293,26 +299,51 @@ pub fn batch_reorder_beam_into(
 
     // ---- width-1 floor: a pure Algorithm-1 greedy run acts as the floor
     // for wider beams (scratch is reused; `out` holds the beam result).
-    let m_beam = order_makespan(&mut scratch.probe, tasks, out, profile, init);
+    let m_beam = order_makespan(&mut scratch.probe, table, out, init);
     let mut greedy = std::mem::take(&mut scratch.greedy);
-    batch_reorder_beam_into(tasks, profile, init, 1, scratch, &mut greedy);
-    let m_greedy =
-        order_makespan(&mut scratch.probe, tasks, &greedy, profile, init);
+    beam_over_table(table, init, 1, scratch, &mut greedy);
+    let m_greedy = order_makespan(&mut scratch.probe, table, &greedy, init);
     if m_greedy < m_beam {
         out.clone_from(&greedy);
     }
     scratch.greedy = greedy;
 }
 
+/// The select_first_task ranking (descending `K - HtD`, ties by longer
+/// DtH, then index — reproducing the stable sort of the replay path),
+/// reused as the rollout order of prefix scores. Reads the table's
+/// precomputed keys; `total_cmp` keeps a NaN from panicking the caller.
+pub(crate) fn rank_firsts(table: &TaskTable, firsts: &mut Vec<usize>) {
+    firsts.clear();
+    firsts.extend(0..table.len());
+    firsts.sort_unstable_by(|&a, &b| {
+        table
+            .k_minus_htd(b)
+            .total_cmp(&table.k_minus_htd(a))
+            .then(table.dth_secs(b).total_cmp(&table.dth_secs(a)))
+            .then(a.cmp(&b))
+    });
+}
+
+/// The deterministic candidate ordering: ascending score, generation
+/// order (parent, cand) as the tie-break. Shared with `sched::parallel`
+/// so the merge of parallel-scored candidates is bit-identical.
+pub(crate) fn cand_cmp(a: &Cand, b: &Cand) -> std::cmp::Ordering {
+    a.score
+        .total_cmp(&b.score)
+        .then(a.parent.cmp(&b.parent))
+        .then(a.cand.cmp(&b.cand))
+}
+
 /// Fetch (or lazily grow) the pooled entry at `idx`.
-fn entry_at(pool: &mut Vec<BeamEntry>, idx: usize) -> &mut BeamEntry {
+pub(crate) fn entry_at(pool: &mut Vec<BeamEntry>, idx: usize) -> &mut BeamEntry {
     while pool.len() <= idx {
         pool.push(BeamEntry::placeholder());
     }
     &mut pool[idx]
 }
 
-fn set_mask_len(mask: &mut Vec<u64>, words: usize) {
+pub(crate) fn set_mask_len(mask: &mut Vec<u64>, words: usize) {
     mask.clear();
     mask.resize(words, 0);
 }
@@ -326,33 +357,32 @@ fn set_mask_len(mask: &mut Vec<u64>, words: usize) {
 /// so the kept prefixes are the ones that can actually finish early. For
 /// a complete order the rollout is empty and the score is the exact
 /// simulated makespan.
-fn rollout_score(
+pub(crate) fn rollout_score(
     probe: &mut SimCursor,
     prefix: &SimCursor,
     mask: &[u64],
     rollout_rank: &[usize],
-    tasks: &[TaskSpec],
+    table: &TaskTable,
 ) -> f64 {
     probe.resume_from(prefix);
     for &r in rollout_rank {
         if !mask_contains(mask, r) {
-            probe.push_task(&tasks[r]);
+            probe.push_task_compiled(table, r);
         }
     }
     probe.run_to_quiescence()
 }
 
 /// Exact simulated makespan of a complete order, on a pooled cursor.
-fn order_makespan(
+pub(crate) fn order_makespan(
     probe: &mut SimCursor,
-    tasks: &[TaskSpec],
+    table: &TaskTable,
     order: &[usize],
-    profile: &DeviceProfile,
     init: EngineState,
 ) -> f64 {
-    probe.reset(profile, init);
+    probe.reset_params(table.params(), init);
     for &i in order {
-        probe.push_task(&tasks[i]);
+        probe.push_task_compiled(table, i);
     }
     probe.run_to_quiescence()
 }
@@ -383,9 +413,7 @@ pub fn batch_reorder_beam_replay(
     firsts.sort_by(|&a, &b| {
         let (sa, sb) = (tasks[a].stage_secs(profile), tasks[b].stage_secs(profile));
         let (ka, kb) = (sa.k - sa.htd, sb.k - sb.htd);
-        kb.partial_cmp(&ka)
-            .unwrap()
-            .then(sb.dth.partial_cmp(&sa.dth).unwrap())
+        kb.total_cmp(&ka).then(sb.dth.total_cmp(&sa.dth))
     });
     let seeds: Vec<usize> = if width == 1 {
         vec![firsts[0]]
@@ -401,7 +429,7 @@ pub fn batch_reorder_beam_replay(
             (vec![i], score)
         })
         .collect();
-    beam.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    beam.sort_by(|a, b| a.1.total_cmp(&b.1));
     beam.truncate(width);
 
     for _depth in 1..n {
@@ -423,14 +451,14 @@ pub fn batch_reorder_beam_replay(
                 next.push((order, score));
             }
         }
-        next.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        next.sort_by(|a, b| a.1.total_cmp(&b.1));
         next.dedup_by(|a, b| a.0 == b.0);
         next.truncate(width);
         beam = next;
     }
     let best_beam = beam
         .into_iter()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .map(|(order, _)| order)
         .unwrap();
     if width == 1 {

@@ -4,6 +4,9 @@
 //!   a greedy, model-guided beam search over resumable `SimCursor`
 //!   snapshots (each prefix simulated once, candidates scored by resume),
 //!   allocation-free after warm-up via its `BeamScratch` arena.
+//! * `parallel` — the same beam search with candidate scoring fanned out
+//!   over a persistent thread pool (per-stripe probe arenas + an exact
+//!   prefix transposition memo), returning bit-identical orders.
 //! * `bruteforce` — exhaustive / sampled permutation evaluation (the
 //!   NoReorder experimental setup of §6.2).
 //! * `baselines` — classic orderings (FIFO, random, SJF, LPT-kernel,
@@ -13,7 +16,12 @@ pub mod baselines;
 pub mod bruteforce;
 pub mod heuristic;
 pub mod multidevice;
+pub mod parallel;
 
 pub use bruteforce::{permutations, OrderStats};
 pub use heuristic::{batch_reorder, batch_reorder_beam_into, BeamScratch};
 pub use multidevice::{schedule_multi, MultiSchedule};
+pub use parallel::{
+    batch_reorder_beam_parallel_into, batch_reorder_table_parallel_into,
+    ParBeamScratch, ScoringPool,
+};

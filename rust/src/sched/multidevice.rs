@@ -17,8 +17,8 @@
 //! The group makespan is the max over devices.
 
 use crate::config::DeviceProfile;
-use crate::model::simulator::{simulate_order, SimCursor};
-use crate::model::{EngineState, SimOptions};
+use crate::model::simulator::{simulate_order, simulate_order_compiled, SimCursor};
+use crate::model::{EngineState, SimOptions, TaskTable};
 use crate::sched::heuristic::batch_reorder;
 use crate::task::TaskSpec;
 
@@ -46,17 +46,25 @@ pub fn schedule_multi(tasks: &[TaskSpec], profiles: &[DeviceProfile]) -> MultiSc
     let n = tasks.len();
     let d = profiles.len();
 
+    // Compile the whole group once per device: placement scoring and the
+    // final makespan checks all run over SoA rows (a task's bytes/kernel
+    // row is read D times per placement step — the table makes those
+    // reads contiguous and profile-resolved).
+    let tables: Vec<TaskTable> =
+        profiles.iter().map(|p| TaskTable::compile(tasks, p)).collect();
+
     // Phase 1: LPT-style greedy placement by simulated completion time.
     let mut by_size: Vec<usize> = (0..n).collect();
     by_size.sort_by(|&a, &b| {
-        // Use the max solo duration across devices as the LPT key.
+        // Use the max solo duration across devices as the LPT key
+        // (precomputed per table; total_cmp so a NaN cannot panic).
         let dur = |i: usize| -> f64 {
-            profiles
+            tables
                 .iter()
-                .map(|p| tasks[i].sequential_secs(p))
+                .map(|t| t.sequential_secs(i))
                 .fold(0.0, f64::max)
         };
-        dur(b).partial_cmp(&dur(a)).unwrap()
+        dur(b).total_cmp(&dur(a))
     });
     // Each device keeps a paused SimCursor over its assigned sublist;
     // scoring "append task i to device dev" is resume + push + finish on
@@ -74,14 +82,14 @@ pub fn schedule_multi(tasks: &[TaskSpec], profiles: &[DeviceProfile]) -> MultiSc
         let mut best_time = f64::INFINITY;
         for dev in 0..d {
             probe.resume_from(&device_cursors[dev]);
-            probe.push_task(&tasks[i]);
+            probe.push_task_compiled(&tables[dev], i);
             let t = probe.run_to_quiescence();
             if t < best_time {
                 best_time = t;
                 best_dev = dev;
             }
         }
-        device_cursors[best_dev].push_task(&tasks[i]);
+        device_cursors[best_dev].push_task_compiled(&tables[best_dev], i);
         lists[best_dev].push(i);
     }
 
@@ -96,10 +104,9 @@ pub fn schedule_multi(tasks: &[TaskSpec], profiles: &[DeviceProfile]) -> MultiSc
         let sub: Vec<TaskSpec> = list.iter().map(|&i| tasks[i].clone()).collect();
         let local = batch_reorder(&sub, &profiles[dev], EngineState::default());
         let order: Vec<usize> = local.iter().map(|&j| list[j]).collect();
-        let m = simulate_order(
-            tasks,
+        let m = simulate_order_compiled(
+            &tables[dev],
             &order,
-            &profiles[dev],
             EngineState::default(),
             SimOptions::default(),
         )

@@ -1,0 +1,782 @@
+//! Multi-lane (parallel) beam-candidate scoring — the serial search of
+//! `sched::heuristic` fanned out over a persistent thread pool, returning
+//! **bit-identical orders**.
+//!
+//! The paper's premise (Table 6) is that reordering overhead must stay
+//! negligible while task groups keep arriving; past T ≈ 12 the serial
+//! candidate loop becomes the coordinator's throughput ceiling. Candidate
+//! scores are embarrassingly parallel — each one is an independent
+//! `resume + push + run_to_quiescence` on a private probe cursor — so
+//! this module parallelizes exactly that loop and nothing else:
+//!
+//! * [`ScoringPool`] — a pool of worker threads built once (std-only:
+//!   `Mutex`/`Condvar` dispatch of a lifetime-erased job pointer, no new
+//!   dependencies). Dispatching a round of scoring performs **zero heap
+//!   allocations** on the coordinating thread: no per-round spawns, no
+//!   channels, no boxed closures. The coordinator itself scores the last
+//!   stripe, so `threads = 1` degenerates to the serial loop inline.
+//! * [`ParBeamScratch`] — per-stripe probe-cursor arenas plus the same
+//!   pooled beam/candidate buffers as `BeamScratch`, all reused across
+//!   calls (`rust/tests/alloc_free.rs` pins the warm path to zero
+//!   allocations).
+//! * a **prefix transposition memo**: beam states reached by
+//!   permuted-equivalent prefixes (common when a drained group contains
+//!   several spec-identical tasks, as every BKxx catalog does) produce
+//!   byte-identical `SimCursor::write_state_sig` encodings, and candidate
+//!   rollouts over spec-identical remainders produce byte-identical key
+//!   tails — such candidates are simulated **once** and the score reused.
+//!   Keys are compared in full (the FNV hash is only a prefilter), so a
+//!   memo hit is a proof of score equality, never a heuristic. Groups
+//!   with no twin specs ([`TaskTable::has_spec_twins`]) skip the memo
+//!   outright: no key could ever repeat, so building keys would only
+//!   serialize work on the coordinating thread.
+//!
+//! # Determinism
+//!
+//! Work is partitioned by candidate index (stride = stripe count), every
+//! score is written to its own slot, and the merge is the same
+//! `cand_cmp` sort the serial search uses — so the returned order is
+//! bit-identical to [`batch_reorder_beam_into`] for every thread count
+//! (property-tested in `rust/tests/prop_parallel.rs` for 1..=8 threads).
+//!
+//! [`batch_reorder_beam_into`]: crate::sched::heuristic::batch_reorder_beam_into
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+use crate::config::DeviceProfile;
+use crate::model::simulator::SimCursor;
+use crate::model::tasktable::fnv64;
+use crate::model::{EngineState, TaskTable};
+use crate::sched::heuristic::{
+    cand_cmp, entry_at, mask_contains, mask_set, mask_words, order_makespan,
+    rank_firsts, rollout_score, set_mask_len, BeamEntry, Cand,
+};
+use crate::task::TaskSpec;
+
+// ---------------------------------------------------------------------------
+// Scoring pool
+// ---------------------------------------------------------------------------
+
+/// Lifetime-erased job pointer parked in the pool's shared state while a
+/// round is in flight. The coordinator clears it before `run` returns.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointee is `Sync` (asserted by the type) and `run` keeps the
+// referent alive until every worker finished the call.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    epoch: u64,
+    job: Option<JobPtr>,
+    remaining: usize,
+    shutdown: bool,
+    /// A worker panicked mid-job; subsequent rounds run inline on the
+    /// coordinator so results stay complete (and deterministic).
+    broken: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+    done: Condvar,
+}
+
+impl PoolShared {
+    /// Poison-tolerant state lock: a panicking job must not cascade into
+    /// every later lock site — the pool recovers through `broken` (inline
+    /// fallback) instead, and `PoolState` holds no job data that could be
+    /// observed half-written.
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Persistent scoring thread pool (see module docs). `threads` is the
+/// total stripe count including the coordinating thread: `new(4)` spawns
+/// three workers and the coordinator scores the fourth stripe itself.
+pub struct ScoringPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    stripes: usize,
+}
+
+impl ScoringPool {
+    pub fn new(threads: usize) -> ScoringPool {
+        let stripes = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                shutdown: false,
+                broken: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..stripes - 1)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("beam-score-{i}"))
+                    .spawn(move || worker_loop(i, shared))
+                    .expect("spawn scoring worker")
+            })
+            .collect();
+        ScoringPool { shared, handles, stripes }
+    }
+
+    /// Total parallel stripes (worker threads + the coordinating thread).
+    pub fn stripes(&self) -> usize {
+        self.stripes
+    }
+
+    /// Run `job(stripe)` for every stripe in `0..stripes()`; blocks until
+    /// all stripes completed. Allocation-free: the job reference is parked
+    /// as a raw pointer, workers are woken via condvar.
+    fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        let inline = self.stripes == 1 || self.shared.lock().broken;
+        if inline {
+            for s in 0..self.stripes {
+                job(s);
+            }
+            return;
+        }
+        // Only the lifetime is erased by this cast; parking the pointer is
+        // sound because the `RoundSync` guard below keeps this frame alive
+        // until every worker decremented `remaining` (finished its call)
+        // and the pointer is cleared — even if the coordinator's own
+        // stripe panics and `run` unwinds.
+        let ptr = JobPtr(job as *const (dyn Fn(usize) + Sync + 'static));
+        {
+            let mut g = self.shared.lock();
+            g.job = Some(ptr);
+            g.remaining = self.stripes - 1;
+            g.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        let sync = RoundSync(&self.shared);
+        // The coordinator scores the last stripe instead of idling.
+        job(self.stripes - 1);
+        // Blocks until remaining == 0, then clears the parked pointer.
+        drop(sync);
+        if self.shared.lock().broken {
+            // A worker died on this round: its stripe may be unscored.
+            // Re-run the whole job inline — slots are idempotent writes,
+            // so double-scored stripes are harmless and the round stays
+            // complete and deterministic.
+            for s in 0..self.stripes {
+                job(s);
+            }
+        }
+    }
+}
+
+impl Drop for ScoringPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.lock();
+            g.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Held by the coordinator while a round is in flight: waits for every
+/// worker to finish and clears the parked job pointer *in drop*, so the
+/// lifetime-erasure invariant holds even when the coordinator's own
+/// stripe panics and `run` unwinds (workers may still be dereferencing
+/// the pointer into the unwinding frame at that instant).
+struct RoundSync<'a>(&'a Arc<PoolShared>);
+
+impl Drop for RoundSync<'_> {
+    fn drop(&mut self) {
+        let mut g = self.0.lock();
+        while g.remaining > 0 {
+            g = self.0.done.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+        g.job = None;
+    }
+}
+
+/// Decrements `remaining` even while unwinding, so a panicking worker
+/// cannot deadlock the coordinator; it also flags the pool broken.
+struct RoundGuard<'a>(&'a PoolShared);
+
+impl Drop for RoundGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = self.0.lock();
+        if std::thread::panicking() {
+            g.broken = true;
+        }
+        g.remaining = g.remaining.saturating_sub(1);
+        if g.remaining == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+fn worker_loop(stripe: usize, shared: Arc<PoolShared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = shared.lock();
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    seen = g.epoch;
+                    break g.job.expect("job parked for new epoch");
+                }
+                g = shared.work.wait(g).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let _guard = RoundGuard(&shared);
+        // SAFETY: the coordinator blocks in `run` until this worker's
+        // guard decrements `remaining`, so the closure is alive here.
+        let f = unsafe { &*job.0 };
+        f(stripe);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefix transposition memo
+// ---------------------------------------------------------------------------
+
+struct MemoEntry {
+    hash: u64,
+    off: usize,
+    len: usize,
+    slot: u32,
+}
+
+/// Exact transposition memo over (prefix state, rollout spec sequence)
+/// keys. `slot_for` returns the scoring slot an equivalent candidate was
+/// assigned, or registers `new_slot` for a fresh key. All buffers are
+/// reused across rounds and calls.
+#[derive(Default)]
+struct SpecMemo {
+    words: Vec<u64>,
+    entries: Vec<MemoEntry>,
+    hits: usize,
+    misses: usize,
+}
+
+impl SpecMemo {
+    fn clear(&mut self) {
+        self.words.clear();
+        self.entries.clear();
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn slot_for(
+        &mut self,
+        parent_sig: &[u64],
+        table: &TaskTable,
+        cand: usize,
+        mask: &[u64],
+        firsts: &[usize],
+        new_slot: u32,
+    ) -> u32 {
+        let start = self.words.len();
+        self.words.extend_from_slice(parent_sig);
+        table.write_row_sig(cand, &mut self.words);
+        for &r in firsts {
+            if r != cand && !mask_contains(mask, r) {
+                table.write_row_sig(r, &mut self.words);
+            }
+        }
+        let len = self.words.len() - start;
+        let hash = fnv64(&self.words[start..]);
+        let mut found = None;
+        for e in &self.entries {
+            if e.hash == hash
+                && e.len == len
+                && self.words[e.off..e.off + len] == self.words[start..start + len]
+            {
+                found = Some(e.slot);
+                break;
+            }
+        }
+        if let Some(slot) = found {
+            self.hits += 1;
+            self.words.truncate(start);
+            return slot;
+        }
+        self.misses += 1;
+        self.entries.push(MemoEntry { hash, off: start, len, slot: new_slot });
+        new_slot
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel beam search
+// ---------------------------------------------------------------------------
+
+/// Arena + thread pool for the parallel beam search: everything
+/// [`BeamScratch`] pools, plus one probe cursor per stripe, the score
+/// slots, the candidate→slot map and the transposition memo. Build once
+/// (spawns the pool), reuse for every group.
+///
+/// [`BeamScratch`]: crate::sched::heuristic::BeamScratch
+pub struct ParBeamScratch {
+    pool: ScoringPool,
+    probes: Vec<Mutex<SimCursor>>,
+    table: TaskTable,
+    base: SimCursor,
+    beam: Vec<BeamEntry>,
+    next: Vec<BeamEntry>,
+    beam_len: usize,
+    cands: Vec<Cand>,
+    cand_slot: Vec<u32>,
+    items: Vec<(u32, u32)>,
+    scores: Vec<AtomicU64>,
+    firsts: Vec<usize>,
+    greedy: Vec<usize>,
+    sig_buf: Vec<u64>,
+    sig_off: Vec<(u32, u32)>,
+    memo: SpecMemo,
+}
+
+impl ParBeamScratch {
+    /// `threads` = total scoring stripes (including the calling thread);
+    /// `new(1)` never touches the pool and scores inline.
+    pub fn new(threads: usize) -> ParBeamScratch {
+        let pool = ScoringPool::new(threads);
+        let probes =
+            (0..pool.stripes()).map(|_| Mutex::new(SimCursor::detached())).collect();
+        ParBeamScratch {
+            pool,
+            probes,
+            table: TaskTable::new(),
+            base: SimCursor::detached(),
+            beam: Vec::new(),
+            next: Vec::new(),
+            beam_len: 0,
+            cands: Vec::new(),
+            cand_slot: Vec::new(),
+            items: Vec::new(),
+            scores: Vec::new(),
+            firsts: Vec::new(),
+            greedy: Vec::new(),
+            sig_buf: Vec::new(),
+            sig_off: Vec::new(),
+            memo: SpecMemo::default(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.stripes()
+    }
+
+    /// (hits, misses) of the transposition memo since construction.
+    pub fn memo_stats(&self) -> (usize, usize) {
+        (self.memo.hits, self.memo.misses)
+    }
+}
+
+/// Truncate-or-grow the score slots without shrinking capacity.
+fn resize_scores(scores: &mut Vec<AtomicU64>, n: usize) {
+    scores.resize_with(n, || AtomicU64::new(0));
+}
+
+/// Parallel counterpart of [`batch_reorder_beam_into`]: identical inputs,
+/// bit-identical output order, candidate scoring fanned out over the
+/// scratch's pool (and deduplicated by the transposition memo). Returns
+/// the model's predicted makespan of the chosen order (from `init`), so
+/// callers that record predictions need no extra replay.
+///
+/// [`batch_reorder_beam_into`]: crate::sched::heuristic::batch_reorder_beam_into
+pub fn batch_reorder_beam_parallel_into(
+    tasks: &[TaskSpec],
+    profile: &DeviceProfile,
+    init: EngineState,
+    width: usize,
+    scratch: &mut ParBeamScratch,
+    out: &mut Vec<usize>,
+) -> f64 {
+    let mut table = std::mem::take(&mut scratch.table);
+    table.compile_into(tasks, profile);
+    let m = parallel_over_table(&table, init, width, scratch, out);
+    scratch.table = table;
+    m
+}
+
+/// [`batch_reorder_beam_parallel_into`] over a caller-compiled
+/// [`TaskTable`] — skips the recompilation for callers that already hold
+/// the group compiled (the lane coordinator compiles each drained group
+/// once and shares the table between search and prediction bookkeeping).
+pub fn batch_reorder_table_parallel_into(
+    table: &TaskTable,
+    init: EngineState,
+    width: usize,
+    scratch: &mut ParBeamScratch,
+    out: &mut Vec<usize>,
+) -> f64 {
+    parallel_over_table(table, init, width, scratch, out)
+}
+
+fn parallel_over_table(
+    table: &TaskTable,
+    init: EngineState,
+    width: usize,
+    scratch: &mut ParBeamScratch,
+    out: &mut Vec<usize>,
+) -> f64 {
+    let n = table.len();
+    let width = width.max(1);
+    out.clear();
+    if n <= 1 {
+        out.extend(0..n);
+        if n == 0 {
+            return 0.0;
+        }
+        let probe = scratch.probes[0]
+            .get_mut()
+            .unwrap_or_else(PoisonError::into_inner);
+        return order_makespan(probe, table, out, init);
+    }
+    let words = mask_words(n);
+
+    {
+        let ParBeamScratch {
+            pool,
+            probes,
+            base,
+            beam,
+            next,
+            beam_len,
+            cands,
+            cand_slot,
+            items,
+            scores,
+            firsts,
+            sig_buf,
+            sig_off,
+            memo,
+            ..
+        } = scratch;
+
+        rank_firsts(table, firsts);
+        base.reset_params(table.params(), init);
+
+        // ---- seed the beam (same seeds as the serial search), then
+        // score every seed's rollout in parallel.
+        *beam_len = 0;
+        let n_seeds = if width == 1 { 1 } else { n };
+        for s in 0..n_seeds {
+            let seed = if width == 1 { firsts[0] } else { s };
+            let e = entry_at(beam, *beam_len);
+            e.order.clear();
+            e.order.push(seed);
+            set_mask_len(&mut e.mask, words);
+            mask_set(&mut e.mask, seed);
+            e.cursor.resume_from(base);
+            e.cursor.push_task_compiled(table, seed);
+            *beam_len += 1;
+        }
+        resize_scores(scores, *beam_len);
+        {
+            let beam_ro: &[BeamEntry] = &beam[..*beam_len];
+            let scores_ro: &[AtomicU64] = scores;
+            let firsts_ro: &[usize] = firsts;
+            let probes_ro: &[Mutex<SimCursor>] = probes;
+            let stripes = pool.stripes();
+            let job = move |stripe: usize| {
+                // Poison-tolerant: every probe use starts with
+                // `resume_from`/`reset_params`, which overwrite the full
+                // cursor state, so a cursor a prior panic left behind is
+                // never observed.
+                let mut probe = probes_ro[stripe]
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                let mut i = stripe;
+                while i < beam_ro.len() {
+                    let e = &beam_ro[i];
+                    let m = rollout_score(
+                        &mut probe, &e.cursor, &e.mask, firsts_ro, table,
+                    );
+                    scores_ro[i].store(m.to_bits(), Ordering::Relaxed);
+                    i += stripes;
+                }
+            };
+            pool.run(&job);
+        }
+        for (i, e) in beam[..*beam_len].iter_mut().enumerate() {
+            e.score = f64::from_bits(scores[i].load(Ordering::Relaxed));
+        }
+        beam[..*beam_len].sort_unstable_by(|a, b| {
+            a.score.total_cmp(&b.score).then(a.order[0].cmp(&b.order[0]))
+        });
+        *beam_len = (*beam_len).min(width);
+
+        // ---- expansion: generate candidates on the coordinator (with
+        // memo dedup), score unique candidates in parallel stripes,
+        // merge deterministically. The memo can only ever hit when the
+        // group carries spec twins, so all-distinct groups skip the key
+        // building entirely — it would be pure serialized overhead on
+        // the coordinating thread.
+        let use_memo = table.has_spec_twins();
+        for _depth in 1..n {
+            sig_buf.clear();
+            sig_off.clear();
+            memo.clear();
+            if use_memo {
+                for p in 0..*beam_len {
+                    let off = sig_buf.len();
+                    beam[p].cursor.write_state_sig(sig_buf);
+                    sig_off.push((off as u32, (sig_buf.len() - off) as u32));
+                }
+            }
+            cands.clear();
+            cand_slot.clear();
+            items.clear();
+            for p in 0..*beam_len {
+                let parent = &beam[p];
+                for cand in 0..n {
+                    if mask_contains(&parent.mask, cand) {
+                        continue;
+                    }
+                    let slot = if use_memo {
+                        let (soff, slen) = sig_off[p];
+                        let parent_sig =
+                            &sig_buf[soff as usize..(soff + slen) as usize];
+                        memo.slot_for(
+                            parent_sig,
+                            table,
+                            cand,
+                            &parent.mask,
+                            firsts,
+                            items.len() as u32,
+                        )
+                    } else {
+                        items.len() as u32
+                    };
+                    if slot as usize == items.len() {
+                        items.push((p as u32, cand as u32));
+                    }
+                    cand_slot.push(slot);
+                    cands.push(Cand {
+                        parent: p as u32,
+                        cand: cand as u32,
+                        score: 0.0,
+                    });
+                }
+            }
+            resize_scores(scores, items.len());
+            {
+                let beam_ro: &[BeamEntry] = beam;
+                let scores_ro: &[AtomicU64] = scores;
+                let firsts_ro: &[usize] = firsts;
+                let probes_ro: &[Mutex<SimCursor>] = probes;
+                let items_ro: &[(u32, u32)] = items;
+                let stripes = pool.stripes();
+                let job = move |stripe: usize| {
+                    let mut probe = probes_ro[stripe]
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner);
+                    let mut i = stripe;
+                    while i < items_ro.len() {
+                        let (p, cand) = items_ro[i];
+                        let parent = &beam_ro[p as usize];
+                        probe.resume_from(&parent.cursor);
+                        probe.push_task_compiled(table, cand as usize);
+                        for &r in firsts_ro {
+                            if r != cand as usize
+                                && !mask_contains(&parent.mask, r)
+                            {
+                                probe.push_task_compiled(table, r);
+                            }
+                        }
+                        let m = probe.run_to_quiescence();
+                        scores_ro[i].store(m.to_bits(), Ordering::Relaxed);
+                        i += stripes;
+                    }
+                };
+                pool.run(&job);
+            }
+            for (k, c) in cands.iter_mut().enumerate() {
+                c.score = f64::from_bits(
+                    scores[cand_slot[k] as usize].load(Ordering::Relaxed),
+                );
+            }
+            cands.sort_unstable_by(cand_cmp);
+            let keep = width.min(cands.len());
+            for (k, c) in cands[..keep].iter().enumerate() {
+                let parent = &beam[c.parent as usize];
+                let e = entry_at(next, k);
+                e.order.clone_from(&parent.order);
+                e.order.push(c.cand as usize);
+                e.mask.clone_from(&parent.mask);
+                mask_set(&mut e.mask, c.cand as usize);
+                e.cursor.resume_from(&parent.cursor);
+                e.cursor.push_task_compiled(table, c.cand as usize);
+                e.score = c.score;
+            }
+            std::mem::swap(beam, next);
+            *beam_len = keep;
+        }
+
+        out.clone_from(&beam[0].order);
+        if width == 1 {
+            // A complete order's rollout is empty, so its score IS the
+            // exact simulated makespan.
+            return beam[0].score;
+        }
+    }
+
+    // ---- width-1 floor, exactly as the serial search applies it (the
+    // same `<` keeps NaN tie behavior identical to the serial path; the
+    // returned makespan always belongs to the order left in `out`).
+    let m_beam = order_makespan(
+        scratch.probes[0].get_mut().unwrap_or_else(PoisonError::into_inner),
+        table,
+        out,
+        init,
+    );
+    let mut greedy = std::mem::take(&mut scratch.greedy);
+    let m_greedy = parallel_over_table(table, init, 1, scratch, &mut greedy);
+    let chosen = if m_greedy < m_beam {
+        out.clone_from(&greedy);
+        m_greedy
+    } else {
+        m_beam
+    };
+    scratch.greedy = greedy;
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::sched::heuristic::{batch_reorder_beam_into, BeamScratch};
+    use crate::task::real::real_benchmark;
+    use crate::task::synthetic::{benchmark_labels, synthetic_benchmark};
+    use crate::util::rng::Pcg64;
+
+    fn serial_order(
+        tasks: &[crate::task::TaskSpec],
+        p: &crate::config::DeviceProfile,
+        width: usize,
+    ) -> Vec<usize> {
+        let mut scratch = BeamScratch::new();
+        let mut out = Vec::new();
+        batch_reorder_beam_into(
+            tasks,
+            p,
+            EngineState::default(),
+            width,
+            &mut scratch,
+            &mut out,
+        );
+        out
+    }
+
+    #[test]
+    fn matches_serial_on_catalogs_for_every_thread_count() {
+        for threads in [1usize, 2, 4] {
+            let mut scratch = ParBeamScratch::new(threads);
+            let mut out = Vec::new();
+            for dev in ["amd_r9", "k20c", "xeon_phi"] {
+                let p = profile_by_name(dev).unwrap();
+                for label in benchmark_labels() {
+                    let g = synthetic_benchmark(label, &p, 1.0).unwrap();
+                    for width in [1usize, 3] {
+                        batch_reorder_beam_parallel_into(
+                            &g.tasks,
+                            &p,
+                            EngineState::default(),
+                            width,
+                            &mut scratch,
+                            &mut out,
+                        );
+                        assert_eq!(
+                            out,
+                            serial_order(&g.tasks, &p, width),
+                            "{dev}/{label} width {width} threads {threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memo_hits_on_duplicated_specs() {
+        // T=8 from a 4-spec catalog duplicates every spec: permuted-
+        // equivalent prefixes and twin candidates must share simulations.
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let mut tasks = g.tasks.clone();
+        tasks.extend(g.tasks.iter().cloned());
+        let mut scratch = ParBeamScratch::new(2);
+        let mut out = Vec::new();
+        batch_reorder_beam_parallel_into(
+            &tasks,
+            &p,
+            EngineState::default(),
+            3,
+            &mut scratch,
+            &mut out,
+        );
+        let (hits, misses) = scratch.memo_stats();
+        assert!(hits > 0, "duplicated specs produced no memo hits");
+        assert!(misses > 0);
+        assert_eq!(out, serial_order(&tasks, &p, 3));
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable() {
+        let p = profile_by_name("k20c").unwrap();
+        let mut rng = Pcg64::seeded(99);
+        let g = real_benchmark("BK50", "k20c", &p, 6, &mut rng, 1.0).unwrap();
+        let mut scratch = ParBeamScratch::new(3);
+        let mut out = Vec::new();
+        let want = serial_order(&g.tasks, &p, 3);
+        for _ in 0..3 {
+            batch_reorder_beam_parallel_into(
+                &g.tasks,
+                &p,
+                EngineState::default(),
+                3,
+                &mut scratch,
+                &mut out,
+            );
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn pool_single_thread_runs_inline() {
+        let pool = ScoringPool::new(1);
+        assert_eq!(pool.stripes(), 1);
+        let hits = AtomicU64::new(0);
+        pool.run(&|s| {
+            assert_eq!(s, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_covers_every_stripe() {
+        let pool = ScoringPool::new(4);
+        let seen: Vec<AtomicU64> =
+            (0..4).map(|_| AtomicU64::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(&|s| {
+                seen[s].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (s, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 50, "stripe {s}");
+        }
+    }
+}

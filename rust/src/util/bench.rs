@@ -61,6 +61,18 @@ impl Bencher {
         Bencher { budget_secs, max_iters, ..Default::default() }
     }
 
+    /// [`Bencher::new`], except that when `OCLCC_BENCH_FAST` is set in the
+    /// environment the budget and iteration cap are slashed to smoke-test
+    /// levels — the CI bench job uses this to record the BENCH_*.json
+    /// trajectory on every PR without paying full measurement time.
+    pub fn from_env(budget_secs: f64, max_iters: usize) -> Self {
+        if std::env::var_os("OCLCC_BENCH_FAST").is_some() {
+            Bencher::new(budget_secs.min(0.05), max_iters.min(20))
+        } else {
+            Bencher::new(budget_secs, max_iters)
+        }
+    }
+
     /// Run `f` repeatedly; `f` must do one full unit of work per call.
     pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
         for _ in 0..self.warmup_iters {

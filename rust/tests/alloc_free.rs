@@ -1,12 +1,18 @@
 //! Verifies the acceptance criterion "zero heap allocations per candidate
 //! evaluation in the beam inner loop after warm-up": a counting global
-//! allocator wraps System, the beam search warms its BeamScratch arena,
-//! and a repeat run of the ENTIRE search (which strictly contains every
-//! candidate evaluation) must perform zero allocations.
+//! allocator wraps System, the beam search warms its arena, and a repeat
+//! run of the ENTIRE search (which strictly contains every candidate
+//! evaluation) must perform zero allocations. Covered for both the serial
+//! `BeamScratch` path and the parallel `ParBeamScratch` path (pre-built
+//! thread pool + per-stripe probe arenas warmed in setup — dispatching a
+//! round must allocate nothing anywhere: not on the coordinating thread,
+//! not on the scoring workers).
 //!
-//! This test lives alone in its own integration-test binary: the test
-//! harness runs sibling tests on other threads, and any allocation they
-//! made while the counter is armed would pollute the count.
+//! This file holds a single #[test] in its own integration-test binary:
+//! the test harness runs sibling tests on other threads, and any
+//! allocation they made while the counter is armed would pollute the
+//! count (the counter is process-global by design — worker-thread
+//! allocations must be caught too).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -14,6 +20,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use oclcc::config::profile_by_name;
 use oclcc::model::EngineState;
 use oclcc::sched::heuristic::{batch_reorder_beam_into, BeamScratch};
+use oclcc::sched::parallel::{batch_reorder_beam_parallel_into, ParBeamScratch};
 use oclcc::task::real::real_benchmark;
 use oclcc::util::rng::Pcg64;
 
@@ -54,7 +61,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[test]
-fn warm_beam_search_performs_zero_heap_allocations() {
+fn warm_search_paths_perform_zero_heap_allocations() {
+    // ---- serial path: warmed BeamScratch, repeat run allocates nothing.
     for dev in ["amd_r9", "xeon_phi"] {
         let profile = profile_by_name(dev).unwrap();
         for t in [4usize, 8] {
@@ -100,5 +108,54 @@ fn warm_beam_search_performs_zero_heap_allocations() {
             );
             assert_eq!(out, warm_order, "{dev} T={t}: warm rerun changed order");
         }
+    }
+
+    // ---- parallel path: pre-built 4-stripe pool, warmed per-stripe
+    // probe arenas, score slots and memo buffers. A warm reorder must
+    // allocate nothing — the counter is process-global, so this covers
+    // the coordinating thread AND the pool workers (condvar dispatch of
+    // the parked job pointer is allocation-free by construction).
+    let profile = profile_by_name("amd_r9").unwrap();
+    for t in [8usize, 16] {
+        let mut rng = Pcg64::seeded(0xA110CF + t as u64);
+        let g =
+            real_benchmark("BK50", "amd_r9", &profile, t, &mut rng, 1.0).unwrap();
+        let mut scratch = ParBeamScratch::new(4);
+        let mut out: Vec<usize> = Vec::new();
+
+        for _ in 0..2 {
+            batch_reorder_beam_parallel_into(
+                &g.tasks,
+                &profile,
+                EngineState::default(),
+                3,
+                &mut scratch,
+                &mut out,
+            );
+        }
+        let warm_order = out.clone();
+
+        ALLOCS.store(0, Ordering::SeqCst);
+        REALLOCS.store(0, Ordering::SeqCst);
+        ARMED.store(true, Ordering::SeqCst);
+        batch_reorder_beam_parallel_into(
+            &g.tasks,
+            &profile,
+            EngineState::default(),
+            3,
+            &mut scratch,
+            &mut out,
+        );
+        ARMED.store(false, Ordering::SeqCst);
+
+        let allocs = ALLOCS.load(Ordering::SeqCst);
+        let reallocs = REALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            allocs + reallocs,
+            0,
+            "parallel T={t}: warm reorder allocated ({allocs} allocs, \
+             {reallocs} reallocs)"
+        );
+        assert_eq!(out, warm_order, "parallel T={t}: warm rerun changed order");
     }
 }

@@ -1,0 +1,243 @@
+//! Equivalence properties of the parallel sharded scheduling pipeline
+//! (seeded-random harness, like prop_incremental.rs: every failure prints
+//! the generating seed).
+//!
+//! Pins the new hot paths to their references:
+//!
+//! * `batch_reorder_beam_parallel_into` returns the **identical order**
+//!   (and hence a makespan equal to within 1e-12) as the serial
+//!   `batch_reorder_beam_into`, for every scoring-thread count 1..=8,
+//!   every width, all three device profiles and random initial engine
+//!   states — the parallel merge and the transposition memo must be
+//!   invisible in the results;
+//! * the `TaskTable` SoA push path (`SimCursor::push_task_compiled`)
+//!   matches `simulate_order_fromscratch` for **every prefix** of random
+//!   orders: makespan, per-task ends and end state.
+
+use oclcc::config::{profile_by_name, DeviceProfile};
+use oclcc::model::simulator::{simulate_order_fromscratch, SimCursor};
+use oclcc::model::{EngineState, SimOptions, TaskTable};
+use oclcc::sched::heuristic::{batch_reorder_beam_into, BeamScratch};
+use oclcc::sched::parallel::{batch_reorder_beam_parallel_into, ParBeamScratch};
+use oclcc::task::{KernelSpec, TaskSpec};
+use oclcc::util::rng::Pcg64;
+
+const CASES: u64 = 24;
+
+/// Random task group: 1-8 tasks, 0-2 commands per transfer stage,
+/// durations spanning 0.05-10 ms. Half the draws duplicate an earlier
+/// task's spec, so permuted-equivalent prefixes (the transposition memo's
+/// target) actually occur.
+fn random_group(rng: &mut Pcg64) -> Vec<TaskSpec> {
+    let n = 1 + rng.below(8) as usize;
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && rng.below(2) == 0 {
+            let src = rng.below(i as u64) as usize;
+            let mut dup = tasks[src].clone();
+            dup.name = format!("t{i}");
+            tasks.push(dup);
+            continue;
+        }
+        let n_htd = rng.below(3) as usize;
+        let n_dth = rng.below(3) as usize;
+        let htd: Vec<u64> =
+            (0..n_htd).map(|_| rng.below(30_000_000) + 10_000).collect();
+        let dth: Vec<u64> =
+            (0..n_dth).map(|_| rng.below(30_000_000) + 10_000).collect();
+        tasks.push(TaskSpec {
+            name: format!("t{i}"),
+            htd_bytes: htd,
+            kernel: KernelSpec::Timed { secs: rng.uniform(0.05e-3, 10e-3) },
+            dth_bytes: dth,
+        });
+    }
+    tasks
+}
+
+fn profiles() -> Vec<DeviceProfile> {
+    ["amd_r9", "k20c", "xeon_phi"]
+        .iter()
+        .map(|d| profile_by_name(d).unwrap())
+        .collect()
+}
+
+fn random_init(rng: &mut Pcg64) -> EngineState {
+    if rng.below(2) == 0 {
+        EngineState::default()
+    } else {
+        EngineState {
+            htd_free: rng.uniform(0.0, 4e-3),
+            k_free: rng.uniform(0.0, 4e-3),
+            dth_free: rng.uniform(0.0, 4e-3),
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_beam_identical_to_serial_for_all_thread_counts() {
+    // One scratch (and pool) per thread count, reused across every case:
+    // this also exercises arena reuse across differently-sized groups.
+    let mut scratches: Vec<ParBeamScratch> =
+        (1usize..=8).map(ParBeamScratch::new).collect();
+    let mut serial = BeamScratch::new();
+    let mut serial_out = Vec::new();
+    let mut par_out = Vec::new();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x9AA + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            for width in [1usize, 3] {
+                batch_reorder_beam_into(
+                    &tasks,
+                    &p,
+                    init,
+                    width,
+                    &mut serial,
+                    &mut serial_out,
+                );
+                let m_serial = oclcc::model::simulate_order(
+                    &tasks,
+                    &serial_out,
+                    &p,
+                    init,
+                    SimOptions::default(),
+                )
+                .makespan;
+                for scratch in scratches.iter_mut() {
+                    let m_pred = batch_reorder_beam_parallel_into(
+                        &tasks,
+                        &p,
+                        init,
+                        width,
+                        scratch,
+                        &mut par_out,
+                    );
+                    assert!(
+                        (m_pred - m_serial).abs() <= 1e-12,
+                        "seed {seed} dev {} width {width} threads {}: returned \
+                         makespan {m_pred} vs replay {m_serial}",
+                        p.name,
+                        scratch.threads()
+                    );
+                    assert_eq!(
+                        par_out,
+                        serial_out,
+                        "seed {seed} dev {} width {width} threads {}",
+                        p.name,
+                        scratch.threads()
+                    );
+                    let m_par = oclcc::model::simulate_order(
+                        &tasks,
+                        &par_out,
+                        &p,
+                        init,
+                        SimOptions::default(),
+                    )
+                    .makespan;
+                    assert!(
+                        (m_par - m_serial).abs() <= 1e-12,
+                        "seed {seed} dev {}: {m_par} vs {m_serial}",
+                        p.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tasktable_prefixes_match_fromscratch() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x7AB + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let table = TaskTable::compile(&tasks, &p);
+            let order: Vec<usize> = {
+                let mut o: Vec<usize> = (0..tasks.len()).collect();
+                rng.shuffle(&mut o);
+                o
+            };
+            let mut cursor = SimCursor::new(&p, init);
+            let mut probe = SimCursor::new(&p, init);
+            for (len, &next) in order.iter().enumerate() {
+                // Finish a copy of the paused prefix and compare with the
+                // from-scratch reference on the same prefix.
+                probe.resume_from(&cursor);
+                let got = probe.run_to_quiescence();
+                let want = simulate_order_fromscratch(
+                    &tasks,
+                    &order[..len],
+                    &p,
+                    init,
+                    SimOptions::default(),
+                );
+                assert!(
+                    (got - want.makespan).abs() <= 1e-12,
+                    "seed {seed} dev {} prefix {:?}: table-cursor {got} vs \
+                     fromscratch {}",
+                    p.name,
+                    &order[..len],
+                    want.makespan
+                );
+                assert_eq!(
+                    probe.task_end(),
+                    &want.task_end[..],
+                    "seed {seed} dev {} prefix {:?}: task_end mismatch",
+                    p.name,
+                    &order[..len]
+                );
+                assert_eq!(probe.end_state(), want.end_state);
+                cursor.push_task_compiled(&table, next);
+            }
+            let got = cursor.run_to_quiescence();
+            let want = simulate_order_fromscratch(
+                &tasks,
+                &order,
+                &p,
+                init,
+                SimOptions::default(),
+            )
+            .makespan;
+            assert!(
+                (got - want).abs() <= 1e-12,
+                "seed {seed} dev {} full {order:?}: {got} vs {want}",
+                p.name
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_table_push_bitwise_equals_spec_push() {
+    // Stronger than the 1e-12 bound: pushing from the table must take the
+    // exact same float path as pushing the spec, so full state (clock,
+    // task ends, end state) is bit-identical at every step.
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x7B1 + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let table = TaskTable::compile(&tasks, &p);
+            let mut via_spec = SimCursor::new(&p, init);
+            let mut via_table = SimCursor::new(&p, init);
+            for i in 0..tasks.len() {
+                via_spec.push_task(&tasks[i]);
+                via_table.push_task_compiled(&table, i);
+                assert_eq!(
+                    via_spec.clock(),
+                    via_table.clock(),
+                    "seed {seed} dev {} step {i}: clock diverged",
+                    p.name
+                );
+            }
+            let a = via_spec.run_to_quiescence();
+            let b = via_table.run_to_quiescence();
+            assert_eq!(a, b, "seed {seed} dev {}", p.name);
+            assert_eq!(via_spec.task_end(), via_table.task_end());
+            assert_eq!(via_spec.end_state(), via_table.end_state());
+        }
+    }
+}
