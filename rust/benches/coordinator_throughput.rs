@@ -31,6 +31,7 @@ use oclcc::coordinator::runner::Policy;
 use oclcc::device::executor::SpinExecutor;
 use oclcc::task::real::real_benchmark;
 use oclcc::task::TaskSpec;
+use oclcc::util::bench::{bench_mode, fast_mode_from_env};
 use oclcc::util::json::Json;
 use oclcc::util::stats;
 
@@ -84,6 +85,7 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
                 settle: Duration::from_micros(200),
                 group_cap,
                 scoring_threads: 1,
+                online: None,
             },
         );
         let m = coord.run(workloads(workers, SCALE));
@@ -116,7 +118,7 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
 }
 
 fn main() {
-    let fast = std::env::var_os("OCLCC_BENCH_FAST").is_some();
+    let fast = fast_mode_from_env();
     let reps = if fast { 2 } else { 5 };
 
     let mut rows: Vec<Json> = Vec::new();
@@ -183,8 +185,14 @@ fn main() {
         );
     }
 
-    match std::fs::write(OUT_PATH, Json::arr(rows).to_string()) {
-        Ok(()) => println!("[saved {OUT_PATH}]"),
+    // Self-describing header: the effective OCLCC_BENCH_FAST mode, so a
+    // trajectory file records whether it holds smoke or full numbers.
+    let doc = Json::obj(vec![
+        ("bench_mode", Json::str(bench_mode())),
+        ("rows", Json::arr(rows)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}, mode={}]", bench_mode()),
         Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
     }
 }

@@ -1,0 +1,299 @@
+//! `cargo bench --bench online_resched` — online mid-group rescheduling
+//! vs the drain-then-plan baseline, per workers × lanes cell on the two
+//! workload poles (dominant-transfer BK0 and dominant-kernel BK100), plus
+//! a deliberately skewed cell that exercises lane work-stealing.
+//!
+//! Each cell runs the full live pipeline twice on identical workloads:
+//! once with `LaneOptions::online` (device execution on a runner thread,
+//! mid-group merge into the uncommitted suffix, drift-gated suffix
+//! re-plans, cross-round `EngineState` carry, bounded work-stealing) and
+//! once with the classic drain → plan → run rounds. Recorded per cell:
+//!
+//! * `makespan_s` online vs `baseline_makespan_s`, and their ratio — the
+//!   headline "mid-group rescheduling beats drain-then-plan" number;
+//! * `replan_p50_s` / `replan_p99_s` — re-plan latency distribution (the
+//!   Table-6 overhead budget now applies to re-plans);
+//! * `drift_gate_fire_rate` — fired / considered gate consultations;
+//! * `steal_count` — submissions moved between lanes;
+//! * `sched_overhead_share` for both runtimes.
+//!
+//! Emits `BENCH_online_resched.json` with a self-describing
+//! `bench_mode` header; uploaded by CI's bench-smoke job next to the
+//! existing BENCH_*.json trajectories.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oclcc::config::profile_by_name;
+use oclcc::coordinator::lanes::{LaneCoordinator, LaneMetrics, LaneOptions};
+use oclcc::coordinator::runner::Policy;
+use oclcc::device::executor::SpinExecutor;
+use oclcc::sched::online::OnlineOptions;
+use oclcc::task::synthetic::synthetic_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::bench::{bench_mode, fast_mode_from_env};
+use oclcc::util::json::Json;
+use oclcc::util::stats;
+
+const OUT_PATH: &str = "BENCH_online_resched.json";
+
+/// Time compression for the virtual device (same rationale as the
+/// coordinator bench: ratios intact, cells in low milliseconds).
+const SCALE: f64 = 0.05;
+
+/// Per-worker dependent batch length.
+const BATCH: usize = 3;
+
+/// Balanced workload: every worker runs `BATCH` tasks dealt round-robin
+/// from the labelled synthetic catalog (BK0 = all dominant-transfer,
+/// BK100 = all dominant-kernel).
+fn workloads(label: &str, workers: usize) -> Vec<Vec<TaskSpec>> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let g = synthetic_benchmark(label, &p, SCALE).unwrap();
+    (0..workers)
+        .map(|w| (0..BATCH).map(|i| g.tasks[(w + i) % g.len()].clone()).collect())
+        .collect()
+}
+
+/// Skewed workload: only even worker slots carry tasks, so with 2 lanes
+/// every submission lands on lane 0 and lane 1 can only contribute by
+/// stealing.
+fn skewed_workloads(label: &str, loaded: usize) -> Vec<Vec<TaskSpec>> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let g = synthetic_benchmark(label, &p, SCALE).unwrap();
+    (0..loaded * 2)
+        .map(|w| {
+            if w % 2 == 0 {
+                (0..BATCH).map(|i| g.tasks[(w + i) % g.len()].clone()).collect()
+            } else {
+                Vec::new()
+            }
+        })
+        .collect()
+}
+
+fn coordinator(lanes: usize, group_cap: usize, online: Option<OnlineOptions>) -> LaneCoordinator {
+    LaneCoordinator::homogeneous(
+        profile_by_name("amd_r9").unwrap(),
+        Arc::new(SpinExecutor),
+        LaneOptions {
+            lanes,
+            policy: Policy::Heuristic,
+            settle: Duration::from_micros(200),
+            group_cap,
+            scoring_threads: 1,
+            online,
+        },
+    )
+}
+
+struct CellResult {
+    makespan: f64,
+    sched_share: f64,
+    /// Pooled per-re-plan wall seconds (distribution for p50/p99).
+    replans: Vec<f64>,
+    /// Median re-plan count per rep (rep-count independent).
+    replans_per_rep: f64,
+    fire_rate: f64,
+    /// Median steal count per rep (rep-count independent).
+    steals_per_rep: f64,
+    n_tasks: usize,
+}
+
+fn summarize(m: &LaneMetrics) -> CellResult {
+    let mut replans: Vec<f64> = Vec::new();
+    let (mut fired, mut considered, mut steals) = (0usize, 0usize, 0usize);
+    for l in &m.per_lane {
+        replans.extend(l.replan_secs.iter().copied());
+        fired += l.n_replans;
+        considered += l.n_replan_considered;
+        steals += l.n_stolen;
+    }
+    CellResult {
+        makespan: m.total_secs,
+        sched_share: m.sched_overhead_share(),
+        replans,
+        replans_per_rep: fired as f64,
+        fire_rate: if considered == 0 { 0.0 } else { fired as f64 / considered as f64 },
+        steals_per_rep: steals as f64,
+        n_tasks: m.n_tasks,
+    }
+}
+
+/// Median-of-reps run of one (workload, lanes, mode) cell. Count metrics
+/// (re-plans, steals) are per-rep medians so fast (2-rep) and full
+/// (5-rep) trajectories stay comparable; only the re-plan *latency*
+/// samples are pooled across reps, for a denser p50/p99.
+fn run_cell(
+    mk: &dyn Fn() -> Vec<Vec<TaskSpec>>,
+    lanes: usize,
+    group_cap: usize,
+    online: Option<OnlineOptions>,
+    reps: usize,
+    expect_tasks: usize,
+) -> CellResult {
+    let mut makespans = Vec::with_capacity(reps);
+    let mut shares = Vec::with_capacity(reps);
+    let mut fire_rates = Vec::with_capacity(reps);
+    let mut replan_counts = Vec::with_capacity(reps);
+    let mut steal_counts = Vec::with_capacity(reps);
+    let mut replans: Vec<f64> = Vec::new();
+    for _ in 0..reps {
+        let c = coordinator(lanes, group_cap, online);
+        let m = c.run(mk());
+        assert_eq!(m.n_tasks, expect_tasks, "lost tasks in cell");
+        let r = summarize(&m);
+        makespans.push(r.makespan);
+        shares.push(r.sched_share);
+        fire_rates.push(r.fire_rate);
+        replan_counts.push(r.replans_per_rep);
+        steal_counts.push(r.steals_per_rep);
+        replans.extend(r.replans);
+    }
+    CellResult {
+        makespan: stats::median(&makespans),
+        sched_share: stats::median(&shares),
+        replans,
+        replans_per_rep: stats::median(&replan_counts),
+        fire_rate: stats::median(&fire_rates),
+        steals_per_rep: stats::median(&steal_counts),
+        n_tasks: expect_tasks,
+    }
+}
+
+fn main() {
+    let fast = fast_mode_from_env();
+    let reps = if fast { 2 } else { 5 };
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("== online mid-group rescheduling vs drain-then-plan ==");
+    println!(
+        "{:>7} {:>8} {:>5} {:>11} {:>11} {:>7} {:>9} {:>9} {:>6} {:>6}",
+        "load", "workers", "lanes", "online", "baseline", "ratio", "replan50",
+        "replan99", "fire%", "steals"
+    );
+
+    let mut cells: Vec<(String, f64)> = Vec::new();
+    for label in ["BK0", "BK100"] {
+        for &workers in &[4usize, 8] {
+            for &lanes in &[1usize, 2] {
+                if lanes > workers {
+                    continue;
+                }
+                let expect = workers * BATCH;
+                // Half-round groups: with full-round groups every worker's
+                // next submission arrives only after the group drains
+                // (dependent batches), so there would be nothing to merge
+                // mid-group in either runtime. Splitting rounds keeps the
+                // buffer hot while the device runs — the open-stream shape
+                // the online pipeline (and the paper's motivating
+                // scenario) is about. Both runtimes get the same cap.
+                let cap = workers.div_ceil(lanes).div_ceil(2).max(2);
+                let mk = move || workloads(label, workers);
+                let online = run_cell(
+                    &mk,
+                    lanes,
+                    cap,
+                    Some(OnlineOptions::default()),
+                    reps,
+                    expect,
+                );
+                let base = run_cell(&mk, lanes, cap, None, reps, expect);
+                emit_cell(
+                    &mut rows,
+                    &mut cells,
+                    label,
+                    "balanced",
+                    workers,
+                    lanes,
+                    &online,
+                    &base,
+                );
+            }
+        }
+        // Skewed cell: 4 loaded workers, all on lane 0 of 2; group_cap 2
+        // keeps the victim's buffer hot so stealing has something to move.
+        let loaded = 4usize;
+        let expect = loaded * BATCH;
+        let mk = move || skewed_workloads(label, loaded);
+        let online =
+            run_cell(&mk, 2, 2, Some(OnlineOptions::default()), reps, expect);
+        let base = run_cell(&mk, 2, 2, None, reps, expect);
+        emit_cell(
+            &mut rows,
+            &mut cells,
+            label,
+            "skewed",
+            loaded,
+            2,
+            &online,
+            &base,
+        );
+    }
+
+    // Headline: geometric-mean speedup of online over drain-then-plan.
+    let ratios: Vec<f64> = cells.iter().map(|(_, r)| *r).collect();
+    let gm = stats::geomean(&ratios);
+    println!(
+        "\nonline vs drain-then-plan makespan, geometric mean over {} cells: \
+         {gm:.3}x (>1 = online faster)",
+        cells.len()
+    );
+
+    let doc = Json::obj(vec![
+        ("bench_mode", Json::str(bench_mode())),
+        ("geomean_speedup", Json::num(gm)),
+        ("rows", Json::arr(rows)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}, mode={}]", bench_mode()),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_cell(
+    rows: &mut Vec<Json>,
+    cells: &mut Vec<(String, f64)>,
+    label: &str,
+    shape: &str,
+    workers: usize,
+    lanes: usize,
+    online: &CellResult,
+    base: &CellResult,
+) {
+    let ratio = base.makespan / online.makespan.max(1e-12);
+    let p50 = stats::percentile(&online.replans, 50.0);
+    let p99 = stats::percentile(&online.replans, 99.0);
+    println!(
+        "{:>7} {:>8} {:>5} {:>9.3}ms {:>9.3}ms {:>6.3}x {:>7.1}us {:>7.1}us {:>5.0}% {:>6.1}",
+        format!("{label}/{shape}"),
+        workers,
+        lanes,
+        online.makespan * 1e3,
+        base.makespan * 1e3,
+        ratio,
+        p50 * 1e6,
+        p99 * 1e6,
+        online.fire_rate * 100.0,
+        online.steals_per_rep,
+    );
+    rows.push(Json::obj(vec![
+        ("workload", Json::str(label)),
+        ("shape", Json::str(shape)),
+        ("workers", Json::num(workers as f64)),
+        ("lanes", Json::num(lanes as f64)),
+        ("n_tasks", Json::num(online.n_tasks as f64)),
+        ("makespan_s", Json::num(online.makespan)),
+        ("baseline_makespan_s", Json::num(base.makespan)),
+        ("speedup_vs_baseline", Json::num(ratio)),
+        ("replan_count", Json::num(online.replans_per_rep)),
+        ("replan_p50_s", Json::num(p50)),
+        ("replan_p99_s", Json::num(p99)),
+        ("drift_gate_fire_rate", Json::num(online.fire_rate)),
+        ("steal_count", Json::num(online.steals_per_rep)),
+        ("sched_overhead_share", Json::num(online.sched_share)),
+        ("baseline_sched_overhead_share", Json::num(base.sched_share)),
+    ]));
+    cells.push((format!("{label}/{shape}/{workers}w{lanes}l"), ratio));
+}

@@ -20,7 +20,7 @@ use oclcc::sched::heuristic::{
 };
 use oclcc::sched::parallel::{batch_reorder_beam_parallel_into, ParBeamScratch};
 use oclcc::task::real::real_benchmark;
-use oclcc::util::bench::{BenchResult, Bencher};
+use oclcc::util::bench::{bench_mode, BenchResult, Bencher};
 use oclcc::util::json::Json;
 use oclcc::util::rng::Pcg64;
 
@@ -191,8 +191,14 @@ fn main() {
         println!("  {dev} T={t} threads={threads}: {s:.2}x");
     }
 
-    match std::fs::write(OUT_PATH, Json::arr(json_rows).to_string()) {
-        Ok(()) => println!("[saved {OUT_PATH}]"),
+    // Self-describing header: the effective OCLCC_BENCH_FAST mode, so a
+    // trajectory file records whether it holds smoke or full numbers.
+    let doc = Json::obj(vec![
+        ("bench_mode", Json::str(bench_mode())),
+        ("rows", Json::arr(json_rows)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}, mode={}]", bench_mode()),
         Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
     }
 }

@@ -7,6 +7,13 @@
 //! buffers (worker `w` always lands on lane `w % L`, so per-worker
 //! submission order is preserved by construction); each lane is drained
 //! in batches by its own proxy — see `coordinator::lanes`.
+//!
+//! The online lanes additionally use [`SharedBuffer::drain_into_timeout`]
+//! (bounded-wait drains that never park a proxy which must also poll its
+//! device runner) and [`ShardedBuffer::steal_from_hottest`] (bounded
+//! work-stealing of uncommitted submissions: oldest first, at most half
+//! of the hottest sibling's backlog, never its last entry; per-worker
+//! FIFO holds because a worker never has two submissions outstanding).
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -33,6 +40,17 @@ pub struct Submission {
 struct State {
     queue: VecDeque<Submission>,
     closed: bool,
+}
+
+/// Outcome of a bounded-wait drain ([`SharedBuffer::drain_into_timeout`]).
+#[derive(Debug, PartialEq, Eq)]
+pub enum DrainPoll {
+    /// Drained this many submissions (>= 1).
+    Drained(usize),
+    /// Nothing arrived within the wait window; the buffer is still open.
+    Empty,
+    /// Closed and empty — no submission will ever arrive.
+    Closed,
 }
 
 /// MPSC buffer with blocking drain.
@@ -116,6 +134,76 @@ impl SharedBuffer {
         Some(take)
     }
 
+    /// [`SharedBuffer::drain_into`] with a *bounded* initial wait: blocks
+    /// at most `wait` for the first submission (then applies the same
+    /// `settle` straggler window), and reports an open-but-empty buffer
+    /// as [`DrainPoll::Empty`] instead of blocking forever. The online
+    /// lane proxy alternates this with device-completion polling and
+    /// steal probes, none of which may park the proxy indefinitely.
+    /// `wait == Duration::ZERO` is a pure non-blocking poll.
+    pub fn drain_into_timeout(
+        &self,
+        max: usize,
+        wait: Duration,
+        settle: Duration,
+        out: &mut Vec<Submission>,
+    ) -> DrainPoll {
+        out.clear();
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        if g.queue.is_empty() {
+            let deadline = std::time::Instant::now() + wait;
+            loop {
+                if !g.queue.is_empty() {
+                    break;
+                }
+                if g.closed {
+                    return DrainPoll::Closed;
+                }
+                let left = match deadline
+                    .checked_duration_since(std::time::Instant::now())
+                {
+                    Some(d) if !d.is_zero() => d,
+                    _ => return DrainPoll::Empty,
+                };
+                let (ng, _) = cv.wait_timeout(g, left).unwrap();
+                g = ng;
+            }
+        }
+        if !settle.is_zero() {
+            let deadline = std::time::Instant::now() + settle;
+            while g.queue.len() < max && !g.closed {
+                let left = match deadline
+                    .checked_duration_since(std::time::Instant::now())
+                {
+                    Some(d) => d,
+                    None => break,
+                };
+                let (ng, timeout) = cv.wait_timeout(g, left).unwrap();
+                g = ng;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        let take = g.queue.len().min(max);
+        out.extend(g.queue.drain(..take));
+        DrainPoll::Drained(take)
+    }
+
+    /// Steal up to `max` submissions from the *front* of the queue
+    /// (oldest first), bounded to half of what is queued so the owning
+    /// lane always keeps at least as much as it loses — the "bounded
+    /// work-stealing" contract. Appends to `out` (no clear) and returns
+    /// the count. Never blocks; an empty or single-entry queue yields 0.
+    pub fn steal_into(&self, max: usize, out: &mut Vec<Submission>) -> usize {
+        let (m, _cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let take = max.min(g.queue.len() / 2);
+        out.extend(g.queue.drain(..take));
+        take
+    }
+
     pub fn len(&self) -> usize {
         self.inner.0.lock().unwrap().queue.len()
     }
@@ -163,6 +251,44 @@ impl ShardedBuffer {
     pub fn close_all(&self) {
         for lane in self.lanes.iter() {
             lane.close();
+        }
+    }
+
+    /// Bounded work-stealing: an idle lane `thief` takes up to `max`
+    /// submissions from the *hottest* sibling lane's buffer (the longest
+    /// queue, ties to the lowest lane index), oldest first and capped at
+    /// half the victim's backlog ([`SharedBuffer::steal_into`]). Only
+    /// queues holding at least two submissions are victims, so a lane is
+    /// never stripped of its last buffered task. Per-worker submission
+    /// order is preserved unconditionally: a worker never has more than
+    /// one submission outstanding (it blocks on the completion event
+    /// before submitting the next), so no reordering between a worker's
+    /// own tasks is possible wherever they execute. Appends to `out` and
+    /// returns the stolen count.
+    pub fn steal_from_hottest(
+        &self,
+        thief: usize,
+        max: usize,
+        out: &mut Vec<Submission>,
+    ) -> usize {
+        if max == 0 || self.lanes.len() < 2 {
+            return 0;
+        }
+        let mut victim = None;
+        let mut hottest = 1usize; // require >= 2 queued to steal at all
+        for (l, lane) in self.lanes.iter().enumerate() {
+            if l == thief {
+                continue;
+            }
+            let len = lane.len();
+            if len > hottest {
+                hottest = len;
+                victim = Some(l);
+            }
+        }
+        match victim {
+            Some(v) => self.lanes[v].steal_into(max, out),
+            None => 0,
         }
     }
 
@@ -314,6 +440,92 @@ mod tests {
             assert_eq!(seqs, vec![0, 1, 2]);
         }
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn timeout_drain_reports_empty_open_and_closed() {
+        let b = SharedBuffer::new();
+        let mut out = Vec::new();
+        // Open and empty: bounded wait returns Empty (zero wait = poll).
+        assert_eq!(
+            b.drain_into_timeout(4, Duration::ZERO, Duration::ZERO, &mut out),
+            DrainPoll::Empty
+        );
+        assert_eq!(
+            b.drain_into_timeout(
+                4,
+                Duration::from_millis(1),
+                Duration::ZERO,
+                &mut out
+            ),
+            DrainPoll::Empty
+        );
+        // Queued items drain even after close.
+        b.push(sub(0, 0));
+        b.push(sub(1, 0));
+        b.close();
+        assert_eq!(
+            b.drain_into_timeout(1, Duration::ZERO, Duration::ZERO, &mut out),
+            DrainPoll::Drained(1)
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            b.drain_into_timeout(4, Duration::ZERO, Duration::ZERO, &mut out),
+            DrainPoll::Drained(1)
+        );
+        // Closed and empty.
+        assert_eq!(
+            b.drain_into_timeout(4, Duration::from_secs(5), Duration::ZERO, &mut out),
+            DrainPoll::Closed
+        );
+    }
+
+    #[test]
+    fn steal_takes_oldest_half_and_leaves_last() {
+        let b = SharedBuffer::new();
+        let mut out = Vec::new();
+        // Empty and singleton queues are never stolen from.
+        assert_eq!(b.steal_into(4, &mut out), 0);
+        b.push(sub(0, 0));
+        assert_eq!(b.steal_into(4, &mut out), 0);
+        assert_eq!(b.len(), 1);
+        // 5 queued: steal is bounded to floor(5/2) = 2, oldest first.
+        for w in 1..5 {
+            b.push(sub(w, 0));
+        }
+        assert_eq!(b.steal_into(4, &mut out), 2);
+        let stolen: Vec<usize> = out.iter().map(|s| s.worker).collect();
+        assert_eq!(stolen, vec![0, 1]);
+        // Victim retains the remainder in FIFO order.
+        let rest = b.drain(8, Duration::ZERO).unwrap();
+        let kept: Vec<usize> = rest.iter().map(|s| s.worker).collect();
+        assert_eq!(kept, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn sharded_steals_from_hottest_lane_only() {
+        let s = ShardedBuffer::new(3);
+        let mut out = Vec::new();
+        // All lanes empty: nothing to steal.
+        assert_eq!(s.steal_from_hottest(0, 4, &mut out), 0);
+        // Lane 1 (workers 1, 4): 2 entries; lane 2 (workers 2, 5): 4.
+        for w in [1usize, 4] {
+            s.push(sub(w, 0));
+        }
+        for w in [2usize, 5, 2, 5] {
+            s.push(sub(w, 0));
+        }
+        let got = s.steal_from_hottest(0, 8, &mut out);
+        assert_eq!(got, 2, "half of the hottest (lane 2) queue");
+        assert!(out.iter().all(|x| x.worker % 3 == 2));
+        // The victim keeps the rest; the cooler lane was untouched.
+        assert_eq!(s.lane(2).len(), 2);
+        assert_eq!(s.lane(1).len(), 2);
+        // The thief never steals from itself: with lane 2 as thief, the
+        // hottest sibling is now lane 1.
+        out.clear();
+        assert_eq!(s.steal_from_hottest(2, 8, &mut out), 1);
+        assert!(out.iter().all(|x| x.worker % 3 == 1));
     }
 
     #[test]

@@ -24,29 +24,65 @@
 //!   the search and the prediction bookkeeping (the heuristic's own
 //!   chosen-order makespan is recorded directly; NoReorder drains are
 //!   replayed through the lane cursor, allocation-free once warm) — the
-//!   per-lane prediction drift is reported in [`LaneStats`], and the
-//!   paused-cursor substrate is what the upcoming online-rescheduling
-//!   work resumes mid-group.
+//!   per-lane prediction drift is reported in [`LaneStats`].
+//!
+//! # Online rescheduling ([`LaneOptions::online`])
+//!
+//! With `online: Some(..)` a lane runs the **open-stream** pipeline
+//! instead of drain-then-plan: device execution moves to a per-lane
+//! runner thread, and while a committed group executes the proxy keeps
+//! draining. Arrivals are merged into the *uncommitted suffix* of the
+//! lane's plan rather than queued for a fresh round, and the suffix is
+//! re-planned through `sched::online::replan_into` — an incremental beam
+//! search seeded from the committed prefix's paused cursor state. The
+//! *initial* plan of each fresh suffix always runs; *re*-plans of an
+//! already-optimized suffix are admitted by the [`DriftGate`] on the
+//! lane's predicted-vs-measured drift (default threshold `0.0` re-plans
+//! on every suffix change; raise it to trade re-plan quality for Table-6
+//! overhead headroom). The lane's planning
+//! cursor is *contiguous across rounds*: submitting a group calls
+//! [`SimCursor::commit_frontier`] and the next group is planned on the
+//! same timeline via `EngineState` carry, so back-to-back groups are
+//! simulated as one busy-device stream instead of restarting from idle;
+//! the timeline resets only when the lane goes fully idle (nothing
+//! pending, nothing in flight — the physical device has drained). The
+//! systematic gap between the contiguous model and the per-group device
+//! restart is exactly what [`LaneStats`] drift records and the gate
+//! consumes.
+//!
+//! **Steal invariants** (bounded work-stealing, `OnlineOptions::steal_max`):
+//! an idle lane steals *whole uncommitted submissions* from the hottest
+//! sibling's buffer — never more than half the victim's backlog, never
+//! its last entry, and never a task already committed to any device
+//! (committed tasks are immovable by construction: stealing happens
+//! strictly upstream of `commit_frontier`). Per-worker FIFO is preserved
+//! unconditionally because a worker blocks on each submission's
+//! completion event before submitting the next, so at most one of its
+//! tasks exists anywhere in the system.
 //!
 //! [`CoordMetrics`]-style aggregates plus per-lane breakdowns come back
 //! in [`LaneMetrics`]; `benches/coordinator_throughput.rs` sweeps
 //! workers × lanes × group size over this runtime and emits
-//! `BENCH_coordinator_throughput.json`.
+//! `BENCH_coordinator_throughput.json`, and `benches/online_resched.rs`
+//! compares online vs drain-then-plan and emits
+//! `BENCH_online_resched.json`.
 //!
 //! [`CoordMetrics`]: crate::coordinator::runner::CoordMetrics
 //! [`ShardedBuffer`]: crate::coordinator::buffer::ShardedBuffer
+//! [`DriftGate`]: crate::sched::online::DriftGate
 
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::DeviceProfile;
-use crate::coordinator::buffer::{ShardedBuffer, SharedBuffer, Submission};
+use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
 use crate::coordinator::runner::Policy;
 use crate::device::executor::KernelExecutor;
 use crate::device::vdev::VirtualDevice;
 use crate::model::{EngineState, SimCursor, TaskTable};
 use crate::queue::event::Event;
 use crate::sched::heuristic::DEFAULT_BEAM_WIDTH;
+use crate::sched::online::{replan_into, DriftGate, OnlineOptions, OnlineScratch};
 use crate::sched::parallel::{batch_reorder_table_parallel_into, ParBeamScratch};
 use crate::task::TaskSpec;
 use crate::util::stats;
@@ -66,7 +102,15 @@ pub struct LaneOptions {
     /// 0 = one full round of the lane's workers: `ceil(T / lanes)`.
     pub group_cap: usize,
     /// Scoring stripes per lane reorder (1 = serial candidate scoring).
+    /// Applies to the classic drain-then-plan path only: online suffix
+    /// re-plans (`online: Some(..)`) are deliberately serial — suffixes
+    /// are small and re-plans already overlap device execution, so pool
+    /// dispatch would cost more than it saves.
     pub scoring_threads: usize,
+    /// `Some` switches the lane to the online open-stream pipeline
+    /// (mid-group merge + drift-gated suffix re-planning + bounded
+    /// work-stealing); `None` keeps the classic drain-then-plan rounds.
+    pub online: Option<OnlineOptions>,
 }
 
 impl Default for LaneOptions {
@@ -77,6 +121,7 @@ impl Default for LaneOptions {
             settle: Duration::from_micros(300),
             group_cap: 0,
             scoring_threads: 1,
+            online: None,
         }
     }
 }
@@ -94,6 +139,20 @@ pub struct LaneStats {
     /// Model-predicted busy seconds for the same orders (paused-cursor
     /// replay); `busy_secs / predicted_secs` is the lane's pacing drift.
     pub predicted_secs: f64,
+    /// Online mode: mid-group merge events (arrivals appended to a live
+    /// plan — a non-empty suffix or a group in flight). 0 in legacy mode.
+    pub n_merges: usize,
+    /// Online mode: suffix re-plans fired by the drift gate.
+    pub n_replans: usize,
+    /// Online mode: gate consultations (changed suffixes eligible for a
+    /// re-plan); `n_replans / n_replan_considered` is the gate fire rate.
+    pub n_replan_considered: usize,
+    /// Online mode: submissions stolen *into* this lane from hotter
+    /// siblings' buffers.
+    pub n_stolen: usize,
+    /// Online mode: wall seconds of each fired re-plan (the online bench
+    /// reports p50/p99). Also accumulated into `sched_overhead_secs`.
+    pub replan_secs: Vec<f64>,
 }
 
 /// Aggregate metrics of one sharded run (single-lane degenerates to the
@@ -143,6 +202,22 @@ struct LaneOutcome {
     stats: LaneStats,
     latencies: Vec<f64>,
     group_makespans: Vec<f64>,
+}
+
+fn empty_lane_stats(lane: usize) -> LaneStats {
+    LaneStats {
+        lane,
+        n_groups: 0,
+        n_tasks: 0,
+        sched_overhead_secs: 0.0,
+        busy_secs: 0.0,
+        predicted_secs: 0.0,
+        n_merges: 0,
+        n_replans: 0,
+        n_replan_considered: 0,
+        n_stolen: 0,
+        replan_secs: Vec::new(),
+    }
 }
 
 /// The sharded multi-worker runtime (see module docs).
@@ -234,7 +309,6 @@ impl LaneCoordinator {
             // ---- lane proxies ------------------------------------------
             let proxy_handles: Vec<_> = (0..lanes)
                 .map(|l| {
-                    let buffer = sharded.lane(l).clone();
                     let device = Arc::clone(&self.devices[l]);
                     let opts = self.opts;
                     // group_cap = 0: one full round of THIS lane's workers
@@ -246,10 +320,24 @@ impl LaneCoordinator {
                     } else {
                         opts.group_cap.max(1)
                     };
+                    // Online proxies get the whole sharded buffer (they
+                    // steal from sibling lanes); legacy proxies only see
+                    // their own lane.
+                    let sharded = sharded.clone();
                     std::thread::Builder::new()
                         .name(format!("lane-proxy-{l}"))
-                        .spawn_scoped(s, move || {
-                            lane_proxy(l, buffer, device, opts, cap, epoch)
+                        .spawn_scoped(s, move || match opts.online {
+                            Some(online) => online_lane_proxy(
+                                l, sharded, device, opts, online, cap, epoch,
+                            ),
+                            None => lane_proxy(
+                                l,
+                                sharded.lane(l).clone(),
+                                device,
+                                opts,
+                                cap,
+                                epoch,
+                            ),
                         })
                         .expect("spawn lane proxy")
                 })
@@ -312,14 +400,7 @@ fn lane_proxy(
 
     let mut latencies = Vec::new();
     let mut group_makespans = Vec::new();
-    let mut stats = LaneStats {
-        lane,
-        n_groups: 0,
-        n_tasks: 0,
-        sched_overhead_secs: 0.0,
-        busy_secs: 0.0,
-        predicted_secs: 0.0,
-    };
+    let mut stats = empty_lane_stats(lane);
 
     while buffer.drain_into(cap, opts.settle, &mut drained).is_some() {
         let group = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -392,6 +473,466 @@ fn lane_proxy(
         }
     }
     LaneOutcome { stats, latencies, group_makespans }
+}
+
+// ---------------------------------------------------------------------------
+// Online (open-stream) lane proxy
+// ---------------------------------------------------------------------------
+
+/// Completion notice from a lane's device-runner thread. The runner
+/// signals the submissions' completion events itself (so workers unblock
+/// without waiting for the proxy, which may be mid-re-plan), then reports
+/// the measured numbers back.
+struct RunDone {
+    makespan: f64,
+    n_tasks: usize,
+    latencies: Vec<f64>,
+    /// A device panic, deferred so the proxy can run its liveness
+    /// protocol before surfacing it.
+    panicked: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// One lane's online proxy loop (see the module docs): device execution
+/// on a dedicated runner thread, continuous draining with mid-group
+/// merge into the uncommitted suffix, drift-gated incremental re-plans
+/// seeded from the committed prefix, cross-round `EngineState` carry on a
+/// contiguous planning cursor, and bounded work-stealing when idle.
+#[allow(clippy::too_many_arguments)]
+fn online_lane_proxy(
+    lane: usize,
+    sharded: ShardedBuffer,
+    device: Arc<VirtualDevice>,
+    opts: LaneOptions,
+    online: OnlineOptions,
+    cap: usize,
+    epoch: Instant,
+) -> LaneOutcome {
+    let own = sharded.lane(lane).clone();
+    let profile = device.profile().clone();
+
+    // Planner state: the contiguous lane cursor carries EngineState
+    // across back-to-back groups (committed prefix = everything handed to
+    // the runner); the table is recompiled over the pending suffix on
+    // every merge.
+    let mut table = TaskTable::new();
+    let mut lane_cursor = SimCursor::detached();
+    let mut scratch = OnlineScratch::new();
+    let mut gate = DriftGate::new(online.drift_threshold);
+
+    let mut pending_subs: Vec<Submission> = Vec::new();
+    let mut pending_tasks: Vec<TaskSpec> = Vec::new();
+    let mut incumbent: Vec<usize> = Vec::new();
+    let mut order_buf: Vec<usize> = Vec::new();
+    let mut drained: Vec<Submission> = Vec::new();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut group_makespans: Vec<f64> = Vec::new();
+    let mut stats = empty_lane_stats(lane);
+
+    std::thread::scope(|s| {
+        let (job_tx, job_rx) = mpsc::channel::<Vec<Submission>>();
+        let (done_tx, done_rx) = mpsc::channel::<RunDone>();
+        std::thread::Builder::new()
+            .name(format!("lane-device-{lane}"))
+            .spawn_scoped(s, move || {
+                for subs in job_rx {
+                    // Built here, off the proxy's planning path (the
+                    // device API wants a contiguous TaskSpec slice).
+                    let tasks: Vec<TaskSpec> =
+                        subs.iter().map(|sub| sub.task.clone()).collect();
+                    let res = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| device.run_group(&tasks)),
+                    );
+                    let now = epoch.elapsed().as_secs_f64();
+                    let msg = match res {
+                        Ok(run) => {
+                            let mut lat = Vec::with_capacity(subs.len());
+                            for (slot, sub) in subs.iter().enumerate() {
+                                sub.done
+                                    .complete(now - run.makespan + run.task_end[slot]);
+                                lat.push(now - sub.submitted_at);
+                            }
+                            RunDone {
+                                makespan: run.makespan,
+                                n_tasks: subs.len(),
+                                latencies: lat,
+                                panicked: None,
+                            }
+                        }
+                        Err(p) => {
+                            // Liveness first: blocked workers must always
+                            // unblock, even on a device failure.
+                            for sub in &subs {
+                                if !sub.done.is_complete() {
+                                    sub.done.complete(now);
+                                }
+                            }
+                            RunDone {
+                                makespan: 0.0,
+                                n_tasks: subs.len(),
+                                latencies: Vec::new(),
+                                panicked: Some(p),
+                            }
+                        }
+                    };
+                    if done_tx.send(msg).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn lane device runner");
+
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Absolute predicted completion clocks on the contiguous
+            // planning timeline.
+            let mut planner_live = false;
+            let mut plan_dirty = false;
+            let mut suffix_planned = false;
+            let mut pred_done = 0.0f64;
+            let mut last_commit_pred = 0.0f64;
+            // Predicted makespan contribution of the group in flight.
+            let mut inflight: Option<f64> = None;
+            let mut closed = false;
+
+            loop {
+                if let Some(pred) = inflight {
+                    match done_rx.recv_timeout(online.poll) {
+                        Ok(done) => {
+                            inflight = None;
+                            stats.busy_secs += done.makespan;
+                            stats.predicted_secs += pred;
+                            gate.observe(done.makespan, pred);
+                            group_makespans.push(done.makespan);
+                            latencies.extend(done.latencies);
+                            stats.n_groups += 1;
+                            stats.n_tasks += done.n_tasks;
+                            if let Some(p) = done.panicked {
+                                std::panic::resume_unwind(p);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            // Device busy: absorb arrivals into the
+                            // uncommitted suffix (stealing when our own
+                            // stream runs dry), and overlap the re-plan
+                            // with the device run.
+                            if !closed {
+                                let room = cap.saturating_sub(pending_subs.len());
+                                if room > 0 {
+                                    match own.drain_into_timeout(
+                                        room,
+                                        Duration::ZERO,
+                                        Duration::ZERO,
+                                        &mut drained,
+                                    ) {
+                                        DrainPoll::Drained(_) => merge_arrivals(
+                                            &profile,
+                                            true,
+                                            &mut drained,
+                                            &mut pending_subs,
+                                            &mut pending_tasks,
+                                            &mut incumbent,
+                                            &mut table,
+                                            &mut lane_cursor,
+                                            &mut planner_live,
+                                            &mut last_commit_pred,
+                                            &mut plan_dirty,
+                                            &mut stats,
+                                        ),
+                                        DrainPoll::Empty => {
+                                            if pending_subs.is_empty()
+                                                && online.steal_max > 0
+                                            {
+                                                // Bounded by the lane's
+                                                // group cap as well.
+                                                let got = sharded
+                                                    .steal_from_hottest(
+                                                        lane,
+                                                        online.steal_max.min(cap),
+                                                        &mut drained,
+                                                    );
+                                                if got > 0 {
+                                                    stats.n_stolen += got;
+                                                    merge_arrivals(
+                                                        &profile,
+                                                        true,
+                                                        &mut drained,
+                                                        &mut pending_subs,
+                                                        &mut pending_tasks,
+                                                        &mut incumbent,
+                                                        &mut table,
+                                                        &mut lane_cursor,
+                                                        &mut planner_live,
+                                                        &mut last_commit_pred,
+                                                        &mut plan_dirty,
+                                                        &mut stats,
+                                                    );
+                                                }
+                                            }
+                                        }
+                                        DrainPoll::Closed => closed = true,
+                                    }
+                                }
+                            }
+                            if plan_dirty {
+                                finalize_plan(
+                                    opts.policy,
+                                    &online,
+                                    &table,
+                                    &mut lane_cursor,
+                                    &mut incumbent,
+                                    &mut order_buf,
+                                    &mut scratch,
+                                    &mut gate,
+                                    &mut suffix_planned,
+                                    &mut stats,
+                                    &mut plan_dirty,
+                                    &mut pred_done,
+                                );
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            unreachable!("lane device runner exited early")
+                        }
+                    }
+                    continue;
+                }
+
+                // ---- device idle: submit the planned suffix, if any.
+                if !pending_subs.is_empty() {
+                    if plan_dirty {
+                        finalize_plan(
+                            opts.policy,
+                            &online,
+                            &table,
+                            &mut lane_cursor,
+                            &mut incumbent,
+                            &mut order_buf,
+                            &mut scratch,
+                            &mut gate,
+                            &mut suffix_planned,
+                            &mut stats,
+                            &mut plan_dirty,
+                            &mut pred_done,
+                        );
+                    }
+                    // The order becomes committed (immovable) here: push
+                    // it into the contiguous cursor and pin the frontier.
+                    // Submissions are *moved* out in planned order (no
+                    // task clones on the submit path; the runner thread
+                    // derives its TaskSpec slice from them).
+                    let mut taken: Vec<Option<Submission>> =
+                        std::mem::take(&mut pending_subs).into_iter().map(Some).collect();
+                    let ordered_subs: Vec<Submission> = incumbent
+                        .iter()
+                        .map(|&i| taken[i].take().expect("incumbent is a permutation"))
+                        .collect();
+                    for &i in incumbent.iter() {
+                        lane_cursor.push_task_compiled(&table, i);
+                    }
+                    lane_cursor.commit_frontier();
+                    let contribution = (pred_done - last_commit_pred).max(0.0);
+                    last_commit_pred = pred_done;
+                    inflight = Some(contribution);
+                    job_tx.send(ordered_subs).expect("lane device runner alive");
+                    pending_tasks.clear();
+                    incumbent.clear();
+                    suffix_planned = false;
+                    continue;
+                }
+
+                if closed {
+                    break;
+                }
+                // Fully idle: the physical device has drained, so the
+                // contiguous planning timeline ends; the next arrival
+                // starts a fresh one. Probe our own lane briefly, then
+                // steal from the hottest sibling if we stay dry.
+                planner_live = false;
+                match own.drain_into_timeout(
+                    cap,
+                    online.poll,
+                    opts.settle,
+                    &mut drained,
+                ) {
+                    DrainPoll::Drained(_) => merge_arrivals(
+                        &profile,
+                        false,
+                        &mut drained,
+                        &mut pending_subs,
+                        &mut pending_tasks,
+                        &mut incumbent,
+                        &mut table,
+                        &mut lane_cursor,
+                        &mut planner_live,
+                        &mut last_commit_pred,
+                        &mut plan_dirty,
+                        &mut stats,
+                    ),
+                    DrainPoll::Closed => closed = true,
+                    DrainPoll::Empty => {
+                        if online.steal_max > 0 {
+                            let got = sharded.steal_from_hottest(
+                                lane,
+                                online.steal_max.min(cap),
+                                &mut drained,
+                            );
+                            if got > 0 {
+                                stats.n_stolen += got;
+                                merge_arrivals(
+                                    &profile,
+                                    false,
+                                    &mut drained,
+                                    &mut pending_subs,
+                                    &mut pending_tasks,
+                                    &mut incumbent,
+                                    &mut table,
+                                    &mut lane_cursor,
+                                    &mut planner_live,
+                                    &mut last_commit_pred,
+                                    &mut plan_dirty,
+                                    &mut stats,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }));
+        drop(job_tx);
+        if let Err(payload) = result {
+            // Liveness before failure, as in the legacy proxy: workers
+            // routed to this lane block in done.wait() and would hang the
+            // run scope forever if the proxy just died. Complete every
+            // unsignalled event (the runner thread handles its own
+            // in-flight group) and keep absorbing until all workers
+            // exited, then surface the panic through the proxy's join.
+            let now = epoch.elapsed().as_secs_f64();
+            for sub in &pending_subs {
+                if !sub.done.is_complete() {
+                    sub.done.complete(now);
+                }
+            }
+            loop {
+                let now = epoch.elapsed().as_secs_f64();
+                for sub in &drained {
+                    if !sub.done.is_complete() {
+                        sub.done.complete(now);
+                    }
+                }
+                if own.drain_into(cap, Duration::ZERO, &mut drained).is_none() {
+                    break;
+                }
+            }
+            std::panic::resume_unwind(payload);
+        }
+    });
+
+    let (fired, considered) = gate.counts();
+    stats.n_replans = fired;
+    stats.n_replan_considered = considered;
+    LaneOutcome { stats, latencies, group_makespans }
+}
+
+/// Append drained (or stolen) submissions to the lane's uncommitted
+/// suffix and recompile the pending table. Starts a fresh contiguous
+/// planning timeline when the lane was idle. `mid_group` marks arrivals
+/// that extend a live plan (suffix non-empty or a group in flight) — the
+/// "merge into the uncommitted suffix instead of queueing a fresh group"
+/// events counted by [`LaneStats::n_merges`].
+#[allow(clippy::too_many_arguments)]
+fn merge_arrivals(
+    profile: &DeviceProfile,
+    mid_group: bool,
+    drained: &mut Vec<Submission>,
+    pending_subs: &mut Vec<Submission>,
+    pending_tasks: &mut Vec<TaskSpec>,
+    incumbent: &mut Vec<usize>,
+    table: &mut TaskTable,
+    lane_cursor: &mut SimCursor,
+    planner_live: &mut bool,
+    last_commit_pred: &mut f64,
+    plan_dirty: &mut bool,
+    stats: &mut LaneStats,
+) {
+    if drained.is_empty() {
+        return;
+    }
+    if !*planner_live {
+        // Idle device: engines free now; the carry chain restarts.
+        lane_cursor.reset(profile, EngineState::default());
+        lane_cursor.commit_frontier();
+        *planner_live = true;
+        *last_commit_pred = 0.0;
+    }
+    if mid_group || !pending_subs.is_empty() {
+        stats.n_merges += 1;
+    }
+    for sub in drained.drain(..) {
+        incumbent.push(pending_tasks.len());
+        pending_tasks.push(sub.task.clone());
+        pending_subs.push(sub);
+    }
+    table.compile_into(pending_tasks, profile);
+    *plan_dirty = true;
+}
+
+/// Turn the dirty suffix into a finalized plan: consult the drift gate
+/// and either re-plan through `sched::online::replan_into` (overlapped
+/// with device execution whenever possible) or keep the incumbent order,
+/// in both cases recording the exact predicted completion clock on the
+/// contiguous lane timeline.
+#[allow(clippy::too_many_arguments)]
+fn finalize_plan(
+    policy: Policy,
+    online: &OnlineOptions,
+    table: &TaskTable,
+    lane_cursor: &mut SimCursor,
+    incumbent: &mut Vec<usize>,
+    order_buf: &mut Vec<usize>,
+    scratch: &mut OnlineScratch,
+    gate: &mut DriftGate,
+    suffix_planned: &mut bool,
+    stats: &mut LaneStats,
+    plan_dirty: &mut bool,
+    pred_done: &mut f64,
+) {
+    let replan_allowed = policy == Policy::Heuristic && incumbent.len() > 1;
+    // A never-planned suffix (fresh group, incumbent = arrival order)
+    // gets its initial plan unconditionally; the drift threshold only
+    // gates re-plans of an already-optimized incumbent.
+    let fire = replan_allowed
+        && if *suffix_planned {
+            gate.should_replan()
+        } else {
+            gate.should_plan_initial()
+        };
+    if fire {
+        let t0 = Instant::now();
+        let r = replan_into(
+            table,
+            lane_cursor,
+            incumbent,
+            online.replan_width,
+            scratch,
+            order_buf,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        stats.sched_overhead_secs += dt;
+        stats.replan_secs.push(dt);
+        std::mem::swap(incumbent, order_buf);
+        *pred_done = r.predicted_done;
+        *suffix_planned = true;
+    } else {
+        // Incumbent kept (gate closed, NoReorder, or trivial suffix):
+        // exact predicted completion via push + finish + retract on the
+        // committed cursor.
+        for &i in incumbent.iter() {
+            lane_cursor.push_task_compiled(table, i);
+        }
+        *pred_done = lane_cursor.run_to_quiescence();
+        lane_cursor.replan_suffix();
+    }
+    *plan_dirty = false;
 }
 
 #[cfg(test)]
@@ -487,5 +1028,169 @@ mod tests {
         assert_eq!(m.n_tasks, 0);
         assert_eq!(m.n_groups, 0);
         assert!(m.latencies.is_empty());
+    }
+
+    // ---- online (open-stream) mode ----------------------------------
+
+    fn online_coordinator(
+        lanes: usize,
+        policy: Policy,
+        online: OnlineOptions,
+    ) -> LaneCoordinator {
+        LaneCoordinator::homogeneous(
+            profile_by_name("amd_r9").unwrap(),
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes,
+                policy,
+                online: Some(online),
+                ..LaneOptions::default()
+            },
+        )
+    }
+
+    #[test]
+    fn online_completes_all_tasks_across_lanes() {
+        let c = online_coordinator(2, Policy::Heuristic, OnlineOptions::default());
+        let m = c.run(workload(4, 2, 0.1));
+        assert_eq!(m.n_tasks, 8);
+        assert_eq!(m.latencies.len(), 8);
+        assert_eq!(m.per_lane.len(), 2);
+        assert_eq!(m.per_lane.iter().map(|l| l.n_tasks).sum::<usize>(), 8);
+        assert!(m.tasks_per_sec > 0.0);
+        for l in &m.per_lane {
+            if l.n_groups > 0 {
+                assert!(l.predicted_secs > 0.0, "lane {}: {l:?}", l.lane);
+                assert!(l.busy_secs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn online_noreorder_never_replans() {
+        let c = online_coordinator(1, Policy::NoReorder, OnlineOptions::default());
+        let m = c.run(workload(3, 2, 0.05));
+        assert_eq!(m.n_tasks, 6);
+        assert_eq!(m.sched_overhead_secs, 0.0);
+        let replans: usize = m.per_lane.iter().map(|l| l.n_replans).sum();
+        let considered: usize =
+            m.per_lane.iter().map(|l| l.n_replan_considered).sum();
+        assert_eq!(replans, 0);
+        assert_eq!(considered, 0, "NoReorder must never consult the gate");
+        // Predictions still recorded for drift bookkeeping.
+        assert!(m.per_lane[0].predicted_secs > 0.0);
+    }
+
+    #[test]
+    fn online_infinite_drift_threshold_gates_off_replans() {
+        let c = online_coordinator(
+            1,
+            Policy::Heuristic,
+            OnlineOptions {
+                drift_threshold: f64::INFINITY,
+                ..OnlineOptions::default()
+            },
+        );
+        let m = c.run(workload(4, 2, 0.05));
+        assert_eq!(m.n_tasks, 8);
+        assert_eq!(m.per_lane.iter().map(|l| l.n_replans).sum::<usize>(), 0);
+        assert_eq!(m.sched_overhead_secs, 0.0);
+        assert!(m.per_lane[0].replan_secs.is_empty());
+    }
+
+    #[test]
+    fn online_finite_threshold_still_plans_fresh_groups() {
+        // Regression: the drift gate must not suppress the *initial*
+        // plan of a fresh suffix — with an accurate model and a finite
+        // threshold, re-plans are gated off but every new multi-task
+        // group still gets beam-planned (not raw FIFO).
+        let c = online_coordinator(
+            1,
+            Policy::Heuristic,
+            OnlineOptions { drift_threshold: 1e9, ..OnlineOptions::default() },
+        );
+        let m = c.run(workload(4, 2, 0.05));
+        assert_eq!(m.n_tasks, 8);
+        let fired: usize = m.per_lane.iter().map(|l| l.n_replans).sum();
+        assert!(fired >= 1, "fresh groups went unplanned: {:?}", m.per_lane);
+        assert!(m.sched_overhead_secs > 0.0);
+    }
+
+    #[test]
+    fn online_steals_rebalance_skewed_lanes() {
+        let _t = crate::util::timing::timing_test_lock();
+        // 12 worker slots, but only even workers (all routed to lane 0 of
+        // 2) carry tasks; group_cap 2 keeps lane 0's drains small so its
+        // buffer stays hot while its device runs — the starved lane 1
+        // must pick up part of the backlog through steals.
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 0.2).unwrap();
+        let workloads: Vec<Vec<TaskSpec>> = (0..12)
+            .map(|w| {
+                if w % 2 == 0 {
+                    (0..2).map(|i| g.tasks[(w + i) % 4].clone()).collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        let c = LaneCoordinator::homogeneous(
+            p,
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 2,
+                policy: Policy::Heuristic,
+                group_cap: 2,
+                online: Some(OnlineOptions::default()),
+                ..LaneOptions::default()
+            },
+        );
+        let m = c.run(workloads);
+        assert_eq!(m.n_tasks, 12, "{:?}", m.per_lane);
+        assert_eq!(m.latencies.len(), 12);
+        let stolen: usize = m.per_lane.iter().map(|l| l.n_stolen).sum();
+        assert!(stolen > 0, "starved lane never stole: {:?}", m.per_lane);
+        // The thief executed what it stole.
+        assert!(m.per_lane[1].n_tasks > 0, "{:?}", m.per_lane);
+    }
+
+    #[test]
+    fn online_merges_mid_group_with_trickling_arrivals() {
+        let _t = crate::util::timing::timing_test_lock();
+        // One lane, group_cap 2, four workers: the first drain commits
+        // two submissions to the device and the other two are still
+        // buffered while it runs — they must merge into the uncommitted
+        // suffix (n_merges > 0) rather than wait out a fresh
+        // settle-window round.
+        let c = LaneCoordinator::homogeneous(
+            profile_by_name("amd_r9").unwrap(),
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 1,
+                policy: Policy::Heuristic,
+                group_cap: 2,
+                online: Some(OnlineOptions::default()),
+                ..LaneOptions::default()
+            },
+        );
+        let m = c.run(workload(4, 3, 0.2));
+        assert_eq!(m.n_tasks, 12);
+        let merges: usize = m.per_lane.iter().map(|l| l.n_merges).sum();
+        assert!(merges > 0, "no mid-group merges: {:?}", m.per_lane);
+        let considered: usize =
+            m.per_lane.iter().map(|l| l.n_replan_considered).sum();
+        assert!(considered > 0);
+        // Default gate (threshold 0) fires on every considered change.
+        let fired: usize = m.per_lane.iter().map(|l| l.n_replans).sum();
+        assert_eq!(fired, considered);
+        assert_eq!(m.per_lane[0].replan_secs.len(), fired);
+    }
+
+    #[test]
+    fn online_empty_workload_terminates() {
+        let c = online_coordinator(2, Policy::Heuristic, OnlineOptions::default());
+        let m = c.run(Vec::new());
+        assert_eq!(m.n_tasks, 0);
+        assert_eq!(m.n_groups, 0);
     }
 }

@@ -4,10 +4,13 @@
 //! device.
 //!
 //! * `buffer` — the MPSC submission buffer ([`SharedBuffer`]) and its
-//!   per-lane sharding ([`ShardedBuffer`]).
+//!   per-lane sharding ([`ShardedBuffer`]), with bounded-wait drains and
+//!   the bounded work-stealing primitive the online lanes use.
 //! * `lanes` — the sharded runtime ([`LaneCoordinator`]): per-lane proxy
 //!   threads with batched drains, persistent reorder arenas (optionally
-//!   parallel candidate scoring) and paused prediction cursors.
+//!   parallel candidate scoring), paused prediction cursors, and the
+//!   online open-stream pipeline (mid-group merge, drift-gated suffix
+//!   re-plans, cross-round `EngineState` carry, lane work-stealing).
 //! * `runner` — the classic single-proxy harness, now a single-lane
 //!   facade over `lanes`.
 
@@ -15,6 +18,6 @@ pub mod buffer;
 pub mod lanes;
 pub mod runner;
 
-pub use buffer::{ShardedBuffer, SharedBuffer, Submission};
+pub use buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
 pub use lanes::{LaneCoordinator, LaneMetrics, LaneOptions, LaneStats};
 pub use runner::{CoordMetrics, Coordinator, Policy};

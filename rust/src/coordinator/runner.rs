@@ -76,6 +76,7 @@ impl Coordinator {
                 settle: self.settle,
                 group_cap: 0,
                 scoring_threads: 1,
+                online: None,
             },
         );
         let m = lane.run(workloads);

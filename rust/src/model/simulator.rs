@@ -34,6 +34,22 @@
 //! amortized O(w·T²·C), with zero heap allocations per candidate after
 //! warm-up (cursor buffers are reused, never reallocated at steady state).
 //!
+//! # Committed/uncommitted split ([`SimCursor::commit_frontier`])
+//!
+//! The online rescheduler needs to *retract* planned-but-not-yet-submitted
+//! tasks while keeping the prefix that was already handed to the device.
+//! [`SimCursor::commit_frontier`] pins every task pushed so far as
+//! **committed** (an internal paused snapshot, lazily allocated once and
+//! reused, so warm commit/replan cycles stay allocation-free);
+//! [`SimCursor::replan_suffix`] restores that snapshot bit-for-bit,
+//! undoing every later push *and any `run_to_quiescence`* — so a planner
+//! can score its current uncommitted suffix by pushing it, finishing, and
+//! retracting, then try a different suffix order against the same
+//! committed prefix. Back-to-back task groups pushed through one cursor
+//! (committing between rounds, never restarting from an idle device) are
+//! simulated as one contiguous timeline, bit-identical to a single
+//! concatenated from-scratch run — see rust/tests/prop_online.rs.
+//!
 //! `simulate` / `simulate_order` / `makespan_of_order` remain as thin
 //! wrappers that drive a fresh cursor, and
 //! [`simulate_order_fromscratch`] preserves the pre-refactor single-shot
@@ -177,6 +193,15 @@ pub struct SimCursor {
     task_end: Vec<f64>,
     timeline: Vec<CmdRecord>,
     finished: bool,
+    /// Paused snapshot at the committed frontier (see
+    /// [`SimCursor::commit_frontier`]). Lazily boxed once and retained
+    /// across resets/retractions so warm commit/replan cycles perform no
+    /// heap allocation. Never nests: a snapshot's own commit fields are
+    /// always empty.
+    commit_snap: Option<Box<SimCursor>>,
+    /// Whether `commit_snap` currently holds a live committed frontier
+    /// (the box itself is kept allocated even when invalid).
+    commit_valid: bool,
 }
 
 impl SimCursor {
@@ -237,6 +262,8 @@ impl SimCursor {
         self.task_end.clear();
         self.timeline.clear();
         self.finished = false;
+        // Keep the snapshot box (its buffers are warm) but invalidate it.
+        self.commit_valid = false;
     }
 
     /// Number of tasks pushed so far.
@@ -387,16 +414,78 @@ impl SimCursor {
         self.now
     }
 
+    /// Pin every task pushed so far as **committed** — already submitted
+    /// to the device and immovable. Later pushes form the *uncommitted
+    /// suffix*, which [`SimCursor::replan_suffix`] can retract wholesale
+    /// so the scheduler may reorder the not-yet-submitted tail against
+    /// the same [`TaskTable`]. The snapshot is stored internally (lazily
+    /// boxed once, reused forever after), so warm commit/replan cycles
+    /// are allocation-free. Returns the committed task count.
+    pub fn commit_frontier(&mut self) -> usize {
+        debug_assert!(
+            !self.finished,
+            "SimCursor::commit_frontier after run_to_quiescence; \
+             replan_suffix back to the previous frontier first"
+        );
+        let mut snap = self.commit_snap.take().unwrap_or_default();
+        snap.clone_core_from(self);
+        snap.commit_valid = false; // snapshots never nest
+        let n = snap.task_end.len();
+        self.commit_snap = Some(snap);
+        self.commit_valid = true;
+        n
+    }
+
+    /// Retract every push — and any [`SimCursor::run_to_quiescence`] —
+    /// since the last [`SimCursor::commit_frontier`], restoring the
+    /// paused committed-frontier state bit-for-bit (the cursor becomes
+    /// pushable again even if it was finished). Returns the number of
+    /// uncommitted tasks retracted.
+    pub fn replan_suffix(&mut self) -> usize {
+        assert!(
+            self.commit_valid,
+            "SimCursor::replan_suffix without a prior commit_frontier"
+        );
+        let snap = self.commit_snap.take().expect("valid commit implies snapshot");
+        let retracted = self.task_end.len() - snap.task_end.len();
+        self.clone_core_from(&snap);
+        self.commit_snap = Some(snap);
+        retracted
+    }
+
+    /// Number of committed tasks (0 until the first
+    /// [`SimCursor::commit_frontier`]).
+    pub fn committed_len(&self) -> usize {
+        if self.commit_valid {
+            self.commit_snap.as_ref().map_or(0, |s| s.task_end.len())
+        } else {
+            0
+        }
+    }
+
+    /// Whether a committed frontier is currently pinned.
+    pub fn has_commit(&self) -> bool {
+        self.commit_valid
+    }
+
     /// Owning snapshot (allocates; the hot path uses
     /// [`SimCursor::resume_from`] on a pooled cursor instead).
     pub fn snapshot(&self) -> SimCursor {
         self.clone()
     }
 
-    /// Become a copy of `snap`, reusing this cursor's buffers — zero heap
-    /// allocations once capacities have warmed up.
+    /// Become a copy of `snap`'s *simulation* state, reusing this
+    /// cursor's buffers — zero heap allocations once capacities have
+    /// warmed up. The committed-frontier split is deliberately NOT
+    /// resumed (the destination's commit is invalidated): resume targets
+    /// are scoring probes and beam entries that only simulate forward,
+    /// and copying the source's commit snapshot would double the cost of
+    /// every candidate resume in the schedulers' hot loops. Use
+    /// [`SimCursor::snapshot`] / `clone_from` for a full-fidelity copy
+    /// including the frontier.
     pub fn resume_from(&mut self, snap: &SimCursor) {
-        self.clone_from(snap);
+        self.clone_core_from(snap);
+        self.commit_valid = false;
     }
 
     /// Drive the event loop. With `finishing == false` the loop stops at
@@ -606,6 +695,37 @@ fn advance_cmd(c: &mut Option<Cmd>, rate: f64, dt: f64) -> Option<Cmd> {
     None
 }
 
+impl SimCursor {
+    /// Buffer-reusing copy of the *core* simulation state — everything
+    /// except the committed-frontier bookkeeping. `Vec::clone_from`
+    /// truncates and extends in place, so a warmed-up destination
+    /// performs no heap allocation. Shared by `Clone::clone_from`, the
+    /// internal commit snapshot, and `replan_suffix`'s restore.
+    fn clone_core_from(&mut self, src: &SimCursor) {
+        self.prof = src.prof;
+        self.init = src.init;
+        self.record = src.record;
+        self.q_htd.clone_from(&src.q_htd);
+        self.q_dth.clone_from(&src.q_dth);
+        self.h_next = src.h_next;
+        self.d_next = src.d_next;
+        self.k_next = src.k_next;
+        self.htd_pending.clone_from(&src.htd_pending);
+        self.k_done.clone_from(&src.k_done);
+        self.dth_pending.clone_from(&src.dth_pending);
+        self.kernel_secs.clone_from(&src.kernel_secs);
+        self.htd_cmds_done = src.htd_cmds_done;
+        self.act_h = src.act_h;
+        self.act_d = src.act_d;
+        self.act_k = src.act_k;
+        self.now = src.now;
+        self.end_state = src.end_state;
+        self.task_end.clone_from(&src.task_end);
+        self.timeline.clone_from(&src.timeline);
+        self.finished = src.finished;
+    }
+}
+
 impl Clone for SimCursor {
     fn clone(&self) -> SimCursor {
         SimCursor {
@@ -630,33 +750,26 @@ impl Clone for SimCursor {
             task_end: self.task_end.clone(),
             timeline: self.timeline.clone(),
             finished: self.finished,
+            commit_snap: self.commit_snap.clone(),
+            commit_valid: self.commit_valid,
         }
     }
 
-    /// Buffer-reusing copy: `Vec::clone_from` truncates and extends in
-    /// place, so a warmed-up destination performs no heap allocation.
+    /// Buffer-reusing copy (core state plus the committed frontier), so a
+    /// warmed-up destination performs no heap allocation.
     fn clone_from(&mut self, src: &SimCursor) {
-        self.prof = src.prof;
-        self.init = src.init;
-        self.record = src.record;
-        self.q_htd.clone_from(&src.q_htd);
-        self.q_dth.clone_from(&src.q_dth);
-        self.h_next = src.h_next;
-        self.d_next = src.d_next;
-        self.k_next = src.k_next;
-        self.htd_pending.clone_from(&src.htd_pending);
-        self.k_done.clone_from(&src.k_done);
-        self.dth_pending.clone_from(&src.dth_pending);
-        self.kernel_secs.clone_from(&src.kernel_secs);
-        self.htd_cmds_done = src.htd_cmds_done;
-        self.act_h = src.act_h;
-        self.act_d = src.act_d;
-        self.act_k = src.act_k;
-        self.now = src.now;
-        self.end_state = src.end_state;
-        self.task_end.clone_from(&src.task_end);
-        self.timeline.clone_from(&src.timeline);
-        self.finished = src.finished;
+        self.clone_core_from(src);
+        self.commit_valid = src.commit_valid;
+        if let Some(s) = &src.commit_snap {
+            if let Some(dst) = &mut self.commit_snap {
+                dst.clone_core_from(s);
+                dst.commit_valid = false;
+            } else {
+                self.commit_snap = Some(s.clone());
+            }
+        }
+        // When src carries no snapshot, keep our (possibly allocated) box
+        // for reuse; `commit_valid` above already marks it dead.
     }
 }
 
@@ -1201,6 +1314,76 @@ mod tests {
         let m = prefix.run_to_quiescence();
         let want = makespan_of_order(&g.tasks, &[2, 0, 1, 3], &p);
         assert!((m - want).abs() <= 1e-12);
+    }
+
+    #[test]
+    fn commit_then_replan_retracts_uncommitted_suffix() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let mut cur = SimCursor::new(&p, EngineState::default());
+        cur.push_task(&g.tasks[1]);
+        cur.push_task(&g.tasks[0]);
+        assert_eq!(cur.commit_frontier(), 2);
+        assert!(cur.has_commit());
+        // Explore one suffix to quiescence, then retract it entirely.
+        cur.push_task(&g.tasks[2]);
+        cur.push_task(&g.tasks[3]);
+        let explored = cur.run_to_quiescence();
+        assert!(cur.is_finished());
+        assert_eq!(cur.replan_suffix(), 2);
+        assert!(!cur.is_finished());
+        assert_eq!(cur.n_tasks(), 2);
+        assert_eq!(cur.committed_len(), 2);
+        // The retracted cursor accepts a different suffix and reproduces
+        // the from-scratch simulation of committed prefix + new suffix.
+        cur.push_task(&g.tasks[3]);
+        cur.push_task(&g.tasks[2]);
+        let m = cur.run_to_quiescence();
+        let want = makespan_of_order_local(&g.tasks, &[1, 0, 3, 2], &p);
+        assert!((m - want).abs() <= 1e-12, "{m} vs {want}");
+        // And the explored order matches its own reference.
+        let want_explored = makespan_of_order_local(&g.tasks, &[1, 0, 2, 3], &p);
+        assert!((explored - want_explored).abs() <= 1e-12);
+    }
+
+    fn makespan_of_order_local(
+        tasks: &[TaskSpec],
+        order: &[usize],
+        p: &crate::config::DeviceProfile,
+    ) -> f64 {
+        simulate_order_fromscratch(
+            tasks,
+            order,
+            p,
+            EngineState::default(),
+            SimOptions::default(),
+        )
+        .makespan
+    }
+
+    #[test]
+    fn commit_replan_cycles_are_repeatable() {
+        let p = profile_by_name("xeon_phi").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        let mut cur = SimCursor::new(&p, EngineState::default());
+        cur.push_task(&g.tasks[0]);
+        cur.commit_frontier();
+        // Several explore/retract cycles must all agree with from-scratch.
+        for suffix in [[1usize, 2, 3], [3, 2, 1], [2, 1, 3]] {
+            for &i in &suffix {
+                cur.push_task(&g.tasks[i]);
+            }
+            let m = cur.run_to_quiescence();
+            let mut order = vec![0usize];
+            order.extend_from_slice(&suffix);
+            let want = makespan_of_order_local(&g.tasks, &order, &p);
+            assert!((m - want).abs() <= 1e-12, "{suffix:?}: {m} vs {want}");
+            cur.replan_suffix();
+        }
+        // Committing again moves the frontier forward.
+        cur.push_task(&g.tasks[2]);
+        assert_eq!(cur.commit_frontier(), 2);
+        assert_eq!(cur.replan_suffix(), 0);
     }
 
     #[test]

@@ -102,11 +102,16 @@ impl OrderStats {
                 cursor.push_task_compiled(&table, i);
             }
             let t = cursor.run_to_quiescence();
-            if t < best {
+            // total_cmp instead of `<`/`>`: with raw comparisons a NaN
+            // makespan makes both false and silently vanishes from the
+            // recorded extremes; under the total order it loses `best`
+            // and surfaces as `worst`, where a degenerate profile is
+            // actually visible.
+            if t.total_cmp(&best).is_lt() {
                 best = t;
                 best_order = order.clone();
             }
-            if t > worst {
+            if t.total_cmp(&worst).is_gt() {
                 worst = t;
                 worst_order = order.clone();
             }

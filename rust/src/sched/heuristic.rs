@@ -299,11 +299,15 @@ pub(crate) fn beam_over_table(
 
     // ---- width-1 floor: a pure Algorithm-1 greedy run acts as the floor
     // for wider beams (scratch is reused; `out` holds the beam result).
+    // total_cmp: under `<` a NaN beam score kept the beam order; under
+    // the total order the greedy floor wins against it — mirrored
+    // exactly in the parallel and replay paths so all three stay
+    // bit-identical.
     let m_beam = order_makespan(&mut scratch.probe, table, out, init);
     let mut greedy = std::mem::take(&mut scratch.greedy);
     beam_over_table(table, init, 1, scratch, &mut greedy);
     let m_greedy = order_makespan(&mut scratch.probe, table, &greedy, init);
-    if m_greedy < m_beam {
+    if m_greedy.total_cmp(&m_beam).is_lt() {
         out.clone_from(&greedy);
     }
     scratch.greedy = greedy;
@@ -467,7 +471,9 @@ pub fn batch_reorder_beam_replay(
     let greedy = batch_reorder_beam_replay(tasks, profile, init, 1);
     let m_beam = prefix_makespan_replay(tasks, &best_beam, &[], profile, init);
     let m_greedy = prefix_makespan_replay(tasks, &greedy, &[], profile, init);
-    if m_greedy < m_beam {
+    // total_cmp, matching the resumable path's floor comparison (the
+    // equivalence tests pin the two implementations to each other).
+    if m_greedy.total_cmp(&m_beam).is_lt() {
         greedy
     } else {
         best_beam

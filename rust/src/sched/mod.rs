@@ -7,6 +7,10 @@
 //! * `parallel` — the same beam search with candidate scoring fanned out
 //!   over a persistent thread pool (per-stripe probe arenas + an exact
 //!   prefix transposition memo), returning bit-identical orders.
+//! * `online` — incremental mid-group re-planning for an open submission
+//!   stream: the uncommitted suffix is re-scored against a committed
+//!   prefix's paused cursor state, admission-controlled by a
+//!   predicted-vs-measured drift gate.
 //! * `bruteforce` — exhaustive / sampled permutation evaluation (the
 //!   NoReorder experimental setup of §6.2).
 //! * `baselines` — classic orderings (FIFO, random, SJF, LPT-kernel,
@@ -16,11 +20,13 @@ pub mod baselines;
 pub mod bruteforce;
 pub mod heuristic;
 pub mod multidevice;
+pub mod online;
 pub mod parallel;
 
 pub use bruteforce::{permutations, OrderStats};
 pub use heuristic::{batch_reorder, batch_reorder_beam_into, BeamScratch};
 pub use multidevice::{schedule_multi, MultiSchedule};
+pub use online::{replan_into, DriftGate, OnlineOptions, OnlineScratch, Replan};
 pub use parallel::{
     batch_reorder_beam_parallel_into, batch_reorder_table_parallel_into,
     ParBeamScratch, ScoringPool,

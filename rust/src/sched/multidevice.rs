@@ -84,7 +84,10 @@ pub fn schedule_multi(tasks: &[TaskSpec], profiles: &[DeviceProfile]) -> MultiSc
             probe.resume_from(&device_cursors[dev]);
             probe.push_task_compiled(&tables[dev], i);
             let t = probe.run_to_quiescence();
-            if t < best_time {
+            // total_cmp, not `<`: a NaN completion time from a degenerate
+            // profile must lose the placement race, never win it by
+            // making every comparison false.
+            if t.total_cmp(&best_time).is_lt() {
                 best_time = t;
                 best_dev = dev;
             }

@@ -1,0 +1,624 @@
+//! Online (mid-group) re-planning — the closed-group beam search of
+//! `sched::heuristic` turned into an incremental rescheduler for an
+//! *open* submission stream.
+//!
+//! The paper orders a closed task group and lets the device drain it; its
+//! motivating scenario — many host threads and cluster nodes continuously
+//! offloading onto one accelerator — is an open stream, so a production
+//! scheduler must re-plan while the device is busy. This module provides
+//! the planning half of that loop (the runtime half lives in
+//! `coordinator::lanes`):
+//!
+//! * [`replan_into`] — an incremental beam re-plan of the **uncommitted
+//!   suffix**: the committed prefix (tasks already handed to the device)
+//!   is represented by a paused [`SimCursor`] carrying a pinned
+//!   [`SimCursor::commit_frontier`], the previous plan is the *incumbent*,
+//!   and only the suffix is re-scored — every candidate is seeded from
+//!   the committed prefix's cursor state by `resume_from`, never by
+//!   replaying the prefix. The incumbent is scored *exactly* through the
+//!   committed cursor itself (push suffix → `run_to_quiescence` →
+//!   [`SimCursor::replan_suffix`] retracts bit-for-bit), and the re-plan
+//!   is kept only when it strictly beats the incumbent — ties keep the
+//!   incumbent so an unchanged stream never churns its order.
+//! * [`DriftGate`] — the re-plan trigger. `LaneStats` records
+//!   predicted-vs-measured drift per executed group; the gate smooths
+//!   `|measured/predicted - 1|` with an EWMA and admits a re-plan only
+//!   when the suffix changed **and** the smoothed drift is at least
+//!   [`OnlineOptions::drift_threshold`]. The **initial** plan of a fresh
+//!   suffix bypasses the threshold — an unplanned incumbent is raw
+//!   arrival order, and drift (a model-accuracy signal) says nothing
+//!   about its quality — so a quiet, well-predicted lane still beam-plans
+//!   every new group. With the default threshold of `0.0` every suffix
+//!   change re-plans; raising the threshold reserves re-planning of
+//!   already-optimized suffixes for moments when reality has diverged
+//!   from the plan's assumptions, keeping scheduling overhead inside the
+//!   paper's Table 6 budget. Before the first measurement the gate always
+//!   admits; a threshold of `f64::INFINITY` disables planning outright.
+//!
+//! # Invariants
+//!
+//! * **Committed tasks never move.** `replan_into` only permutes the
+//!   suffix; the committed prefix is immutable by construction (the
+//!   cursor's commit snapshot is restored bit-for-bit by every retract).
+//! * **Exactness.** The chosen suffix's predicted completion equals a
+//!   from-scratch `simulate_order_fromscratch` run of committed prefix +
+//!   chosen suffix, bit-for-bit (rust/tests/prop_online.rs).
+//! * **Never worse than the incumbent.** The returned order's predicted
+//!   completion is `<=` the incumbent's.
+//!
+//! Work-stealing (see `coordinator::lanes`) composes with this module:
+//! stolen tasks are whole *uncommitted* submissions appended to the
+//! thief's suffix, so they flow through the same gate + re-plan path;
+//! per-worker FIFO is preserved because a worker never has two
+//! submissions outstanding at once.
+
+use std::time::Duration;
+
+use crate::model::simulator::SimCursor;
+use crate::model::TaskTable;
+use crate::sched::heuristic::{
+    cand_cmp, entry_at, mask_contains, mask_set, mask_words, set_mask_len,
+    BeamEntry, Cand, DEFAULT_BEAM_WIDTH,
+};
+
+/// Knobs of the online (mid-group) rescheduling runtime. Consumed by
+/// `coordinator::lanes` via `LaneOptions::online`.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineOptions {
+    /// Re-plan admission threshold on the smoothed predicted-vs-measured
+    /// drift `|measured/predicted - 1|`: a *re*-plan of an
+    /// already-planned suffix fires only when the drift is at least
+    /// this. The **initial** plan of each fresh suffix is mandatory and
+    /// bypasses the threshold ([`DriftGate::should_plan_initial`]) — a
+    /// never-planned incumbent is raw arrival order, which drift says
+    /// nothing about. `0.0` re-plans on every suffix change;
+    /// `f64::INFINITY` disables planning outright (arrival order
+    /// everywhere — a scheduling-off baseline).
+    pub drift_threshold: f64,
+    /// Beam width of suffix re-plans.
+    pub replan_width: usize,
+    /// Max submissions stolen from the hottest sibling lane per idle
+    /// probe (`0` disables work-stealing).
+    pub steal_max: usize,
+    /// Completion-poll slice while the device is busy; also the idle
+    /// steal-probe period.
+    pub poll: Duration,
+}
+
+impl Default for OnlineOptions {
+    fn default() -> Self {
+        OnlineOptions {
+            drift_threshold: 0.0,
+            replan_width: DEFAULT_BEAM_WIDTH,
+            steal_max: 4,
+            poll: Duration::from_micros(200),
+        }
+    }
+}
+
+/// EWMA drift gate deciding when a suffix re-plan is worth its CPU time
+/// (see module docs). Fire-rate counters feed `BENCH_online_resched.json`.
+#[derive(Clone, Debug)]
+pub struct DriftGate {
+    threshold: f64,
+    /// Smoothed `|measured/predicted - 1|`; `None` until first observation.
+    ewma: Option<f64>,
+    alpha: f64,
+    considered: usize,
+    fired: usize,
+}
+
+impl DriftGate {
+    pub fn new(threshold: f64) -> DriftGate {
+        DriftGate { threshold, ewma: None, alpha: 0.5, considered: 0, fired: 0 }
+    }
+
+    /// Record one executed group's measured makespan against the model's
+    /// predicted contribution. Non-finite or non-positive inputs are
+    /// ignored (a degenerate profile must not wedge the gate open).
+    pub fn observe(&mut self, measured: f64, predicted: f64) {
+        if !(measured.is_finite() && predicted.is_finite()) || predicted <= 0.0 {
+            return;
+        }
+        let dev = (measured / predicted - 1.0).abs();
+        self.ewma = Some(match self.ewma {
+            None => dev,
+            Some(e) => e + self.alpha * (dev - e),
+        });
+    }
+
+    /// Current smoothed drift (`inf` before the first observation, so an
+    /// unmeasured lane always re-plans).
+    pub fn drift(&self) -> f64 {
+        self.ewma.unwrap_or(f64::INFINITY)
+    }
+
+    /// Consult the gate for one changed suffix whose incumbent was
+    /// already beam-planned. Counts the consultation and, when admitted,
+    /// the firing.
+    pub fn should_replan(&mut self) -> bool {
+        self.considered += 1;
+        // An infinite threshold disables re-planning outright (even while
+        // the drift itself is still infinite/unmeasured).
+        let fire = !self.threshold.is_infinite() && self.drift() >= self.threshold;
+        if fire {
+            self.fired += 1;
+        }
+        fire
+    }
+
+    /// Consult the gate for a suffix that has **never** been beam-planned
+    /// (a fresh group whose incumbent is raw arrival order). The initial
+    /// plan is mandatory regardless of drift — drift measures model
+    /// accuracy, not incumbent quality, and an unplanned incumbent has no
+    /// optimization to trust — unless planning is disabled outright
+    /// (infinite threshold). Counted like any other consultation so the
+    /// fire rate stays the fraction of plan decisions that ran the beam.
+    pub fn should_plan_initial(&mut self) -> bool {
+        self.considered += 1;
+        let fire = !self.threshold.is_infinite();
+        if fire {
+            self.fired += 1;
+        }
+        fire
+    }
+
+    /// (fired, considered) since construction.
+    pub fn counts(&self) -> (usize, usize) {
+        (self.fired, self.considered)
+    }
+
+    /// Fraction of consultations that fired a re-plan.
+    pub fn fire_rate(&self) -> f64 {
+        if self.considered == 0 {
+            0.0
+        } else {
+            self.fired as f64 / self.considered as f64
+        }
+    }
+}
+
+/// Outcome of one [`replan_into`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct Replan {
+    /// Exact predicted completion clock (on the committed cursor's
+    /// timeline) of the chosen suffix order.
+    pub predicted_done: f64,
+    /// Whether the beam strictly beat the incumbent (false = incumbent
+    /// kept, including ties).
+    pub replanned: bool,
+}
+
+/// Reusable arena for suffix re-plans: pooled beam entries, probe cursor,
+/// candidate list and rollout ranking. After warm-up at a given suffix
+/// size, re-plans through the same scratch perform no heap allocation.
+pub struct OnlineScratch {
+    probe: SimCursor,
+    beam: Vec<BeamEntry>,
+    next: Vec<BeamEntry>,
+    beam_len: usize,
+    cands: Vec<Cand>,
+    /// Rollout rank over suffix *positions* (select-first rule).
+    firsts: Vec<usize>,
+    /// Width-1 greedy floor order (row values).
+    greedy: Vec<usize>,
+    /// Beam result buffer (row values), compared against the incumbent.
+    best: Vec<usize>,
+}
+
+impl OnlineScratch {
+    pub fn new() -> OnlineScratch {
+        OnlineScratch {
+            probe: SimCursor::detached(),
+            beam: Vec::new(),
+            next: Vec::new(),
+            beam_len: 0,
+            cands: Vec::new(),
+            firsts: Vec::new(),
+            greedy: Vec::new(),
+            best: Vec::new(),
+        }
+    }
+}
+
+impl Default for OnlineScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Re-plan the uncommitted suffix against its committed prefix.
+///
+/// `committed` must be paused exactly at its committed frontier (every
+/// pushed task committed via [`SimCursor::commit_frontier`]); `incumbent`
+/// is the previous plan of the suffix, as row indices into `table`. The
+/// chosen order (incumbent, or a strictly better beam re-plan seeded from
+/// the committed cursor state) is written into `out`; the committed
+/// cursor is returned bit-identical to its paused state.
+pub fn replan_into(
+    table: &TaskTable,
+    committed: &mut SimCursor,
+    incumbent: &[usize],
+    width: usize,
+    scratch: &mut OnlineScratch,
+    out: &mut Vec<usize>,
+) -> Replan {
+    debug_assert!(
+        committed.has_commit(),
+        "replan_into needs a committed frontier (commit_frontier first)"
+    );
+    debug_assert_eq!(
+        committed.committed_len(),
+        committed.n_tasks(),
+        "committed cursor carries unretracted uncommitted pushes"
+    );
+    // Exact incumbent score through the committed/uncommitted split: push
+    // the incumbent suffix, finish, retract. The retract restores the
+    // paused committed-frontier state bit-for-bit.
+    for &r in incumbent {
+        committed.push_task_compiled(table, r);
+    }
+    let m_inc = committed.run_to_quiescence();
+    committed.replan_suffix();
+
+    out.clear();
+    out.extend_from_slice(incumbent);
+    if incumbent.len() <= 1 {
+        return Replan { predicted_done: m_inc, replanned: false };
+    }
+
+    let mut best = std::mem::take(&mut scratch.best);
+    let m_beam =
+        beam_suffix(table, committed, incumbent, width.max(1), scratch, &mut best);
+    // Strictly-better only: ties keep the incumbent so an unchanged
+    // stream never churns its order (total_cmp: a NaN beam score loses).
+    let replanned = m_beam.total_cmp(&m_inc).is_lt();
+    let predicted_done = if replanned {
+        out.clear();
+        out.extend_from_slice(&best);
+        m_beam
+    } else {
+        m_inc
+    };
+    scratch.best = best;
+    Replan { predicted_done, replanned }
+}
+
+/// Beam search over permutations of `rows` (indices into `table`), every
+/// prefix seeded from the paused `base` cursor by `resume_from` — the
+/// suffix counterpart of `sched::heuristic::beam_over_table`, sharing its
+/// pooled-entry/bitmask/rollout machinery but indexing masks by suffix
+/// *position* so arbitrary row subsets can be searched. Writes the chosen
+/// order (row values) into `out` and returns its exact predicted
+/// completion clock.
+fn beam_suffix(
+    table: &TaskTable,
+    base: &SimCursor,
+    rows: &[usize],
+    width: usize,
+    scratch: &mut OnlineScratch,
+    out: &mut Vec<usize>,
+) -> f64 {
+    let m = rows.len();
+    debug_assert!(m >= 2);
+    out.clear();
+    let words = mask_words(m);
+
+    {
+        let OnlineScratch { probe, beam, next, beam_len, cands, firsts, .. } =
+            scratch;
+
+        // Rollout rank over suffix positions: Algorithm 1's select-first
+        // key (K - HtD desc, DtH desc, position asc), read off the table.
+        firsts.clear();
+        firsts.extend(0..m);
+        firsts.sort_unstable_by(|&a, &b| {
+            table
+                .k_minus_htd(rows[b])
+                .total_cmp(&table.k_minus_htd(rows[a]))
+                .then(table.dth_secs(rows[b]).total_cmp(&table.dth_secs(rows[a])))
+                .then(a.cmp(&b))
+        });
+
+        // ---- seed the beam (same policy as the closed-group search).
+        *beam_len = 0;
+        let n_seeds = if width == 1 { 1 } else { m };
+        for s in 0..n_seeds {
+            let seed = if width == 1 { firsts[0] } else { s };
+            let e = entry_at(beam, *beam_len);
+            e.order.clear();
+            e.order.push(seed);
+            set_mask_len(&mut e.mask, words);
+            mask_set(&mut e.mask, seed);
+            e.cursor.resume_from(base);
+            e.cursor.push_task_compiled(table, rows[seed]);
+            e.score = suffix_rollout(probe, &e.cursor, &e.mask, firsts, rows, table);
+            *beam_len += 1;
+        }
+        beam[..*beam_len].sort_unstable_by(|a, b| {
+            a.score.total_cmp(&b.score).then(a.order[0].cmp(&b.order[0]))
+        });
+        *beam_len = (*beam_len).min(width);
+
+        // ---- expansion: extend each surviving prefix by every absent
+        // position, scored by resume (never by prefix replay).
+        for _depth in 1..m {
+            cands.clear();
+            for p in 0..*beam_len {
+                let parent = &beam[p];
+                for cand in 0..m {
+                    if mask_contains(&parent.mask, cand) {
+                        continue;
+                    }
+                    probe.resume_from(&parent.cursor);
+                    probe.push_task_compiled(table, rows[cand]);
+                    for &r in firsts.iter() {
+                        if r != cand && !mask_contains(&parent.mask, r) {
+                            probe.push_task_compiled(table, rows[r]);
+                        }
+                    }
+                    cands.push(Cand {
+                        parent: p as u32,
+                        cand: cand as u32,
+                        score: probe.run_to_quiescence(),
+                    });
+                }
+            }
+            cands.sort_unstable_by(cand_cmp);
+            let keep = width.min(cands.len());
+            for (k, c) in cands[..keep].iter().enumerate() {
+                let parent = &beam[c.parent as usize];
+                let e = entry_at(next, k);
+                e.order.clone_from(&parent.order);
+                e.order.push(c.cand as usize);
+                e.mask.clone_from(&parent.mask);
+                mask_set(&mut e.mask, c.cand as usize);
+                e.cursor.resume_from(&parent.cursor);
+                e.cursor.push_task_compiled(table, rows[c.cand as usize]);
+                e.score = c.score;
+            }
+            std::mem::swap(beam, next);
+            *beam_len = keep;
+        }
+
+        // A complete order's rollout is empty, so its score IS the exact
+        // predicted completion.
+        out.extend(beam[0].order.iter().map(|&pos| rows[pos]));
+        if width == 1 {
+            return beam[0].score;
+        }
+    }
+
+    // ---- width-1 floor, exactly as the closed-group search applies it.
+    let m_beam = scratch.beam[0].score;
+    let mut greedy = std::mem::take(&mut scratch.greedy);
+    let m_greedy = beam_suffix(table, base, rows, 1, scratch, &mut greedy);
+    let chosen = if m_greedy.total_cmp(&m_beam).is_lt() {
+        out.clear();
+        out.extend_from_slice(&greedy);
+        m_greedy
+    } else {
+        m_beam
+    };
+    scratch.greedy = greedy;
+    chosen
+}
+
+/// Rollout completion of a suffix prefix: resume the paused prefix on the
+/// probe, push every absent suffix row in rank order, finish.
+fn suffix_rollout(
+    probe: &mut SimCursor,
+    prefix: &SimCursor,
+    mask: &[u64],
+    rank: &[usize],
+    rows: &[usize],
+    table: &TaskTable,
+) -> f64 {
+    probe.resume_from(prefix);
+    for &pos in rank {
+        if !mask_contains(mask, pos) {
+            probe.push_task_compiled(table, rows[pos]);
+        }
+    }
+    probe.run_to_quiescence()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::model::simulator::{simulate_order_fromscratch, SimCursor};
+    use crate::model::{EngineState, SimOptions, TaskTable};
+    use crate::task::synthetic::synthetic_benchmark;
+
+    fn fromscratch(
+        tasks: &[crate::task::TaskSpec],
+        order: &[usize],
+        p: &crate::config::DeviceProfile,
+    ) -> f64 {
+        simulate_order_fromscratch(
+            tasks,
+            order,
+            p,
+            EngineState::default(),
+            SimOptions::default(),
+        )
+        .makespan
+    }
+
+    #[test]
+    fn replan_is_exact_and_not_worse_than_incumbent() {
+        for dev in ["amd_r9", "k20c", "xeon_phi"] {
+            let p = profile_by_name(dev).unwrap();
+            let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+            let table = TaskTable::compile(&g.tasks, &p);
+            let mut committed = SimCursor::new(&p, EngineState::default());
+            committed.push_task_compiled(&table, 3);
+            committed.commit_frontier();
+            let incumbent = [2usize, 0, 1];
+            let mut scratch = OnlineScratch::new();
+            let mut out = Vec::new();
+            let r = replan_into(
+                &table,
+                &mut committed,
+                &incumbent,
+                DEFAULT_BEAM_WIDTH,
+                &mut scratch,
+                &mut out,
+            );
+            // Valid permutation of the suffix.
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2], "{dev}");
+            // Exactness: predicted completion == from-scratch committed+suffix.
+            let mut full = vec![3usize];
+            full.extend_from_slice(&out);
+            let want = fromscratch(&g.tasks, &full, &p);
+            assert!(
+                (r.predicted_done - want).abs() <= 1e-12,
+                "{dev}: {} vs {want}",
+                r.predicted_done
+            );
+            // Never worse than the incumbent.
+            let m_inc = fromscratch(&g.tasks, &[3, 2, 0, 1], &p);
+            assert!(r.predicted_done <= m_inc + 1e-12, "{dev}");
+            // Committed cursor retracted to its frontier.
+            assert_eq!(committed.n_tasks(), 1, "{dev}");
+            assert!(!committed.is_finished(), "{dev}");
+        }
+    }
+
+    #[test]
+    fn replan_keeps_incumbent_on_tie() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK100", &p, 1.0).unwrap();
+        let table = TaskTable::compile(&g.tasks, &p);
+        let mut committed = SimCursor::new(&p, EngineState::default());
+        committed.commit_frontier();
+        let mut scratch = OnlineScratch::new();
+        let mut out = Vec::new();
+        // Plan once from an arbitrary incumbent, then re-plan with the
+        // chosen order as incumbent: nothing changed, so the incumbent
+        // must survive verbatim (ties never churn).
+        let first = replan_into(
+            &table,
+            &mut committed,
+            &[0, 1, 2, 3],
+            DEFAULT_BEAM_WIDTH,
+            &mut scratch,
+            &mut out,
+        );
+        let incumbent = out.clone();
+        let second = replan_into(
+            &table,
+            &mut committed,
+            &incumbent,
+            DEFAULT_BEAM_WIDTH,
+            &mut scratch,
+            &mut out,
+        );
+        assert_eq!(out, incumbent);
+        assert!(!second.replanned);
+        assert!((second.predicted_done - first.predicted_done).abs() <= 1e-12);
+    }
+
+    #[test]
+    fn singleton_and_empty_suffixes() {
+        let p = profile_by_name("k20c").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        let table = TaskTable::compile(&g.tasks, &p);
+        let mut committed = SimCursor::new(&p, EngineState::default());
+        committed.push_task_compiled(&table, 0);
+        committed.commit_frontier();
+        let mut scratch = OnlineScratch::new();
+        let mut out = Vec::new();
+        let r1 = replan_into(&table, &mut committed, &[2], 3, &mut scratch, &mut out);
+        assert_eq!(out, vec![2]);
+        assert!(!r1.replanned);
+        assert!((r1.predicted_done - fromscratch(&g.tasks, &[0, 2], &p)).abs() <= 1e-12);
+        let r0 = replan_into(&table, &mut committed, &[], 3, &mut scratch, &mut out);
+        assert!(out.is_empty());
+        assert!((r0.predicted_done - fromscratch(&g.tasks, &[0], &p)).abs() <= 1e-12);
+    }
+
+    #[test]
+    fn empty_committed_prefix_matches_closed_group_search_quality() {
+        // With nothing committed, the suffix re-plan competes with the
+        // closed-group beam search: its chosen makespan must be at least
+        // as good as FIFO and within the incumbent bound.
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let table = TaskTable::compile(&g.tasks, &p);
+        let mut committed = SimCursor::new(&p, EngineState::default());
+        committed.commit_frontier();
+        let mut scratch = OnlineScratch::new();
+        let mut out = Vec::new();
+        let r = replan_into(
+            &table,
+            &mut committed,
+            &[0, 1, 2, 3],
+            DEFAULT_BEAM_WIDTH,
+            &mut scratch,
+            &mut out,
+        );
+        let closed = crate::sched::heuristic::batch_reorder(
+            &g.tasks,
+            &p,
+            EngineState::default(),
+        );
+        let m_closed = fromscratch(&g.tasks, &closed, &p);
+        assert!(
+            r.predicted_done <= m_closed + 1e-9,
+            "online {} vs closed {m_closed}",
+            r.predicted_done
+        );
+    }
+
+    #[test]
+    fn drift_gate_thresholds() {
+        // Unmeasured gate always admits (drift = inf >= any finite thr).
+        let mut g0 = DriftGate::new(0.0);
+        assert!(g0.should_replan());
+        // Perfect model + zero threshold: still admits (0 >= 0).
+        g0.observe(1.0, 1.0);
+        assert!((g0.drift() - 0.0).abs() < 1e-15);
+        assert!(g0.should_replan());
+        assert_eq!(g0.counts(), (2, 2));
+        assert!((g0.fire_rate() - 1.0).abs() < 1e-15);
+
+        // Finite threshold: small drift is gated off, large drift fires.
+        let mut g1 = DriftGate::new(0.2);
+        g1.observe(1.05, 1.0); // 5% drift < 20%
+        assert!(!g1.should_replan());
+        g1.observe(2.0, 1.0); // EWMA jumps to ~0.52
+        assert!(g1.should_replan());
+        assert_eq!(g1.counts(), (1, 2));
+        assert!((g1.fire_rate() - 0.5).abs() < 1e-15);
+
+        // Infinite threshold never fires, even unmeasured.
+        let mut g2 = DriftGate::new(f64::INFINITY);
+        assert!(!g2.should_replan());
+        g2.observe(10.0, 1.0);
+        assert!(!g2.should_replan());
+        assert_eq!(g2.counts(), (0, 2));
+
+        // Degenerate observations are ignored.
+        let mut g3 = DriftGate::new(0.1);
+        g3.observe(f64::NAN, 1.0);
+        g3.observe(1.0, 0.0);
+        assert!(g3.drift().is_infinite());
+
+        // Initial plans bypass a finite threshold: an accurate model
+        // (low drift) gates RE-plans off but a fresh suffix still gets
+        // its first plan.
+        let mut g4 = DriftGate::new(0.2);
+        g4.observe(1.0, 1.0);
+        assert!(!g4.should_replan());
+        assert!(g4.should_plan_initial());
+        assert_eq!(g4.counts(), (1, 2));
+        // An infinite threshold disables even initial plans.
+        let mut g5 = DriftGate::new(f64::INFINITY);
+        assert!(!g5.should_plan_initial());
+        assert_eq!(g5.counts(), (0, 1));
+    }
+}

@@ -27,9 +27,9 @@
 //!   tails — such candidates are simulated **once** and the score reused.
 //!   Keys are compared in full (the FNV hash is only a prefilter), so a
 //!   memo hit is a proof of score equality, never a heuristic. Groups
-//!   with no twin specs ([`TaskTable::has_spec_twins`]) skip the memo
-//!   outright: no key could ever repeat, so building keys would only
-//!   serialize work on the coordinating thread.
+//!   with no twin specs (`TaskTable::has_spec_twins`, crate-private) skip
+//!   the memo outright: no key could ever repeat, so building keys would
+//!   only serialize work on the coordinating thread.
 //!
 //! # Determinism
 //!
@@ -632,8 +632,8 @@ fn parallel_over_table(
     }
 
     // ---- width-1 floor, exactly as the serial search applies it (the
-    // same `<` keeps NaN tie behavior identical to the serial path; the
-    // returned makespan always belongs to the order left in `out`).
+    // same total_cmp keeps NaN behavior identical to the serial path;
+    // the returned makespan always belongs to the order left in `out`).
     let m_beam = order_makespan(
         scratch.probes[0].get_mut().unwrap_or_else(PoisonError::into_inner),
         table,
@@ -642,7 +642,7 @@ fn parallel_over_table(
     );
     let mut greedy = std::mem::take(&mut scratch.greedy);
     let m_greedy = parallel_over_table(table, init, 1, scratch, &mut greedy);
-    let chosen = if m_greedy < m_beam {
+    let chosen = if m_greedy.total_cmp(&m_beam).is_lt() {
         out.clone_from(&greedy);
         m_greedy
     } else {

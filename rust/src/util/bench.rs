@@ -11,6 +11,46 @@ use crate::util::json::Json;
 use crate::util::stats;
 use crate::util::table;
 
+/// Strict parser for the `OCLCC_BENCH_FAST` switch. Truthy values
+/// (`1`/`true`/`yes`/`on`) enable fast mode, falsy values
+/// (`0`/`false`/`no`/`off`, or empty) keep full measurement; anything
+/// else is a configuration error — a CI typo like `OCLCC_BENCH_FAST=fase`
+/// must fail loudly, not silently record full-length (or smoke-length)
+/// numbers into the perf trajectory.
+pub fn parse_fast_flag(value: Option<&str>) -> Result<bool, String> {
+    let Some(v) = value else { return Ok(false) };
+    match v.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" | "on" => Ok(true),
+        "" | "0" | "false" | "no" | "off" => Ok(false),
+        other => Err(format!(
+            "OCLCC_BENCH_FAST={other:?} is not a recognized switch; use \
+             1/true/yes/on for fast mode or 0/false/no/off (or unset) for \
+             full measurement"
+        )),
+    }
+}
+
+/// Whether `OCLCC_BENCH_FAST` enables fast (smoke-test) mode; panics with
+/// an actionable message on a malformed value.
+pub fn fast_mode_from_env() -> bool {
+    let val = std::env::var_os("OCLCC_BENCH_FAST");
+    let s = val.as_ref().map(|v| v.to_string_lossy());
+    match parse_fast_flag(s.as_deref()) {
+        Ok(fast) => fast,
+        Err(msg) => panic!("{msg}"),
+    }
+}
+
+/// The effective bench mode, printed into every BENCH_*.json header so a
+/// trajectory file is self-describing about how it was measured.
+pub fn bench_mode() -> &'static str {
+    if fast_mode_from_env() {
+        "fast"
+    } else {
+        "full"
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
@@ -61,12 +101,14 @@ impl Bencher {
         Bencher { budget_secs, max_iters, ..Default::default() }
     }
 
-    /// [`Bencher::new`], except that when `OCLCC_BENCH_FAST` is set in the
-    /// environment the budget and iteration cap are slashed to smoke-test
-    /// levels — the CI bench job uses this to record the BENCH_*.json
-    /// trajectory on every PR without paying full measurement time.
+    /// [`Bencher::new`], except that when `OCLCC_BENCH_FAST` enables fast
+    /// mode (see [`fast_mode_from_env`]) the budget and iteration cap are
+    /// slashed to smoke-test levels — the CI bench job uses this to
+    /// record the BENCH_*.json trajectory on every PR without paying full
+    /// measurement time. A malformed `OCLCC_BENCH_FAST` value aborts with
+    /// a clear error instead of silently defaulting.
     pub fn from_env(budget_secs: f64, max_iters: usize) -> Self {
-        if std::env::var_os("OCLCC_BENCH_FAST").is_some() {
+        if fast_mode_from_env() {
             Bencher::new(budget_secs.min(0.05), max_iters.min(20))
         } else {
             Bencher::new(budget_secs, max_iters)
@@ -127,6 +169,21 @@ impl Bencher {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fast_flag_parses_strictly() {
+        assert_eq!(parse_fast_flag(None), Ok(false));
+        for v in ["1", "true", "YES", " on "] {
+            assert_eq!(parse_fast_flag(Some(v)), Ok(true), "{v}");
+        }
+        for v in ["", "0", "false", "No", "off"] {
+            assert_eq!(parse_fast_flag(Some(v)), Ok(false), "{v}");
+        }
+        for v in ["2", "fase", "enable", "tru"] {
+            let err = parse_fast_flag(Some(v)).unwrap_err();
+            assert!(err.contains("OCLCC_BENCH_FAST"), "{v}: {err}");
+        }
+    }
 
     #[test]
     fn bench_records_sane_times() {

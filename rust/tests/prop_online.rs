@@ -1,0 +1,319 @@
+//! Exactness properties of the online rescheduling stack (seeded-random
+//! harness like prop_incremental.rs; failures print the generating seed).
+//!
+//! * **EngineState carry**: two (or more) task groups pushed back-to-back
+//!   through one `SimCursor` — committing the frontier between rounds,
+//!   never restarting from an idle device — produce makespan, task ends,
+//!   end state and *timeline* bit-identical to one concatenated
+//!   from-scratch `simulate_order_fromscratch` run.
+//! * **commit/replan exactness**: after `commit_frontier`, any sequence
+//!   of explored-and-retracted suffixes leaves the cursor bit-identical
+//!   to its paused committed state, and the finally kept suffix
+//!   reproduces the from-scratch simulation of committed prefix + new
+//!   suffix bit-for-bit.
+//! * **`replan_into` exactness**: the chosen suffix order is a
+//!   permutation of the incumbent's rows, its predicted completion equals
+//!   the from-scratch reference, and it is never worse than the
+//!   incumbent.
+//! * **Work-stealing invariants** (buffer level): steals take the oldest
+//!   half at most, never the victim's last entry, and relative per-worker
+//!   order across thief + victim is preserved.
+
+use oclcc::config::{profile_by_name, DeviceProfile};
+use oclcc::coordinator::buffer::{ShardedBuffer, Submission};
+use oclcc::model::simulator::{simulate_order_fromscratch, SimCursor};
+use oclcc::model::{EngineState, SimOptions, TaskTable};
+use oclcc::queue::event::Event;
+use oclcc::sched::online::{replan_into, OnlineScratch};
+use oclcc::task::{KernelSpec, TaskSpec};
+use oclcc::util::rng::Pcg64;
+
+const CASES: u64 = 30;
+
+fn random_group(rng: &mut Pcg64, n_max: u64) -> Vec<TaskSpec> {
+    let n = 1 + rng.below(n_max) as usize;
+    (0..n)
+        .map(|i| {
+            let n_htd = rng.below(3) as usize;
+            let n_dth = rng.below(3) as usize;
+            let htd: Vec<u64> =
+                (0..n_htd).map(|_| rng.below(30_000_000) + 10_000).collect();
+            let dth: Vec<u64> =
+                (0..n_dth).map(|_| rng.below(30_000_000) + 10_000).collect();
+            TaskSpec {
+                name: format!("t{i}"),
+                htd_bytes: htd,
+                kernel: KernelSpec::Timed { secs: rng.uniform(0.05e-3, 10e-3) },
+                dth_bytes: dth,
+            }
+        })
+        .collect()
+}
+
+fn profiles() -> Vec<DeviceProfile> {
+    ["amd_r9", "k20c", "xeon_phi"]
+        .iter()
+        .map(|d| profile_by_name(d).unwrap())
+        .collect()
+}
+
+fn random_init(rng: &mut Pcg64) -> EngineState {
+    if rng.below(2) == 0 {
+        EngineState::default()
+    } else {
+        EngineState {
+            htd_free: rng.uniform(0.0, 4e-3),
+            k_free: rng.uniform(0.0, 4e-3),
+            dth_free: rng.uniform(0.0, 4e-3),
+        }
+    }
+}
+
+#[test]
+fn prop_engine_state_carry_is_bitexact_with_concatenated_group() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xCA11 + seed);
+        // Two "groups" = a random split of one task list.
+        let tasks = random_group(&mut rng, 6);
+        let split = rng.below(tasks.len() as u64 + 1) as usize;
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let opts = SimOptions { record_timeline: true };
+
+            // Carried run: group A, commit the frontier (the round
+            // boundary), then group B into the same cursor — one
+            // contiguous timeline, no idle-device restart.
+            let mut cur = SimCursor::with_options(&p, init, opts);
+            for t in &tasks[..split] {
+                cur.push_task(t);
+            }
+            cur.commit_frontier();
+            for t in &tasks[split..] {
+                cur.push_task(t);
+            }
+            let got_makespan = cur.run_to_quiescence();
+
+            // Reference: the concatenated group in one from-scratch run.
+            let order: Vec<usize> = (0..tasks.len()).collect();
+            let want = simulate_order_fromscratch(&tasks, &order, &p, init, opts);
+
+            assert!(
+                (got_makespan - want.makespan).abs() == 0.0,
+                "seed {seed} dev {} split {split}: carried {got_makespan} vs \
+                 concatenated {}",
+                p.name,
+                want.makespan
+            );
+            assert_eq!(cur.task_end(), &want.task_end[..], "seed {seed} dev {}", p.name);
+            assert_eq!(cur.end_state(), want.end_state, "seed {seed} dev {}", p.name);
+            assert_eq!(cur.timeline(), &want.timeline[..], "seed {seed} dev {}", p.name);
+        }
+    }
+}
+
+#[test]
+fn prop_commit_replan_reproduces_fromscratch_bitexact() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x5E7 + seed);
+        let tasks = random_group(&mut rng, 7);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let table = TaskTable::compile(&tasks, &p);
+            let n = tasks.len();
+            let split = rng.below(n as u64 + 1) as usize;
+
+            let mut prefix: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut prefix);
+            let committed: Vec<usize> = prefix[..split].to_vec();
+            let rest: Vec<usize> = prefix[split..].to_vec();
+
+            let mut cur = SimCursor::new(&p, init);
+            for &i in &committed {
+                cur.push_task_compiled(&table, i);
+            }
+            cur.commit_frontier();
+
+            // Explore a few random suffix orders, fully retracting each
+            // (some explorations run to quiescence, some stay paused).
+            for round in 0..3 {
+                let mut suffix = rest.clone();
+                rng.shuffle(&mut suffix);
+                for &i in &suffix {
+                    cur.push_task_compiled(&table, i);
+                }
+                if round % 2 == 0 {
+                    cur.run_to_quiescence();
+                }
+                assert_eq!(cur.replan_suffix(), suffix.len());
+                assert_eq!(cur.n_tasks(), committed.len());
+            }
+
+            // Final suffix: must equal from-scratch committed + suffix.
+            let mut suffix = rest.clone();
+            rng.shuffle(&mut suffix);
+            for &i in &suffix {
+                cur.push_task_compiled(&table, i);
+            }
+            let got = cur.run_to_quiescence();
+            let mut full = committed.clone();
+            full.extend_from_slice(&suffix);
+            let want = simulate_order_fromscratch(
+                &tasks,
+                &full,
+                &p,
+                init,
+                SimOptions::default(),
+            );
+            assert!(
+                (got - want.makespan).abs() == 0.0,
+                "seed {seed} dev {} full {full:?}: {got} vs {}",
+                p.name,
+                want.makespan
+            );
+            assert_eq!(cur.task_end(), &want.task_end[..]);
+            assert_eq!(cur.end_state(), want.end_state);
+        }
+    }
+}
+
+#[test]
+fn prop_replan_into_is_exact_and_never_worse() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x0A11 + seed);
+        let tasks = random_group(&mut rng, 6);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let table = TaskTable::compile(&tasks, &p);
+            let n = tasks.len();
+            let split = rng.below(n as u64 + 1) as usize;
+            let mut all: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut all);
+            let committed: Vec<usize> = all[..split].to_vec();
+            let mut incumbent: Vec<usize> = all[split..].to_vec();
+            rng.shuffle(&mut incumbent);
+
+            let mut cur = SimCursor::new(&p, init);
+            for &i in &committed {
+                cur.push_task_compiled(&table, i);
+            }
+            cur.commit_frontier();
+
+            let mut scratch = OnlineScratch::new();
+            let mut out = Vec::new();
+            let r = replan_into(&table, &mut cur, &incumbent, 3, &mut scratch, &mut out);
+
+            // Permutation of the incumbent rows; committed rows untouched.
+            let mut got_rows = out.clone();
+            got_rows.sort_unstable();
+            let mut want_rows = incumbent.clone();
+            want_rows.sort_unstable();
+            assert_eq!(got_rows, want_rows, "seed {seed} dev {}", p.name);
+            assert_eq!(cur.n_tasks(), committed.len());
+            assert!(!cur.is_finished());
+
+            // Exactness of the chosen plan's predicted completion.
+            let mut full = committed.clone();
+            full.extend_from_slice(&out);
+            let want = simulate_order_fromscratch(
+                &tasks,
+                &full,
+                &p,
+                init,
+                SimOptions::default(),
+            )
+            .makespan;
+            assert!(
+                (r.predicted_done - want).abs() == 0.0,
+                "seed {seed} dev {} full {full:?}: {} vs {want}",
+                p.name,
+                r.predicted_done
+            );
+
+            // Never worse than the incumbent.
+            let mut inc_full = committed.clone();
+            inc_full.extend_from_slice(&incumbent);
+            let m_inc = simulate_order_fromscratch(
+                &tasks,
+                &inc_full,
+                &p,
+                init,
+                SimOptions::default(),
+            )
+            .makespan;
+            assert!(
+                r.predicted_done <= m_inc,
+                "seed {seed} dev {}: replanned {} worse than incumbent {m_inc}",
+                p.name,
+                r.predicted_done
+            );
+            if !r.replanned {
+                assert_eq!(out, incumbent, "unreplanned result must be verbatim");
+            }
+        }
+    }
+}
+
+fn sub(worker: usize, seq: usize) -> Submission {
+    Submission {
+        worker,
+        batch_seq: seq,
+        task: TaskSpec::simple("t", 10, KernelSpec::Timed { secs: 1e-4 }, 10),
+        done: Event::new(),
+        submitted_at: 0.0,
+    }
+}
+
+#[test]
+fn prop_steal_preserves_order_and_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x57EA + seed);
+        let lanes = 2 + rng.below(3) as usize;
+        let sharded = ShardedBuffer::new(lanes);
+        // Random pushes: worker w -> lane w % lanes; record each lane's
+        // expected FIFO.
+        let mut expected: Vec<Vec<(usize, usize)>> = vec![Vec::new(); lanes];
+        for _ in 0..(4 + rng.below(20)) {
+            let w = rng.below(12) as usize;
+            let seq = rng.below(4) as usize;
+            sharded.push(sub(w, seq));
+            expected[w % lanes].push((w, seq));
+        }
+        let thief = rng.below(lanes as u64) as usize;
+        let before: Vec<usize> =
+            (0..lanes).map(|l| sharded.lane(l).len()).collect();
+        let hottest = (0..lanes)
+            .filter(|&l| l != thief)
+            .max_by_key(|&l| (before[l], std::cmp::Reverse(l)))
+            .unwrap();
+
+        let mut stolen = Vec::new();
+        let max = 1 + rng.below(8) as usize;
+        let got = sharded.steal_from_hottest(thief, max, &mut stolen);
+        assert_eq!(got, stolen.len());
+
+        if before[hottest] < 2 {
+            assert_eq!(got, 0, "seed {seed}: stole from a cold ring");
+            continue;
+        }
+        // Bounded: at most half the victim's backlog, never its last.
+        assert!(got <= max && got <= before[hottest] / 2, "seed {seed}");
+        assert!(sharded.lane(hottest).len() >= before[hottest] - got);
+        assert!(sharded.lane(hottest).len() >= 1);
+        // Oldest-first prefix of the victim's FIFO...
+        let want_prefix: Vec<(usize, usize)> =
+            expected[hottest][..got].to_vec();
+        let got_pairs: Vec<(usize, usize)> =
+            stolen.iter().map(|s| (s.worker, s.batch_seq)).collect();
+        assert_eq!(got_pairs, want_prefix, "seed {seed}");
+        // ...and the victim keeps the exact remainder, in order: stolen
+        // prefix + retained tail = original FIFO (so no per-worker
+        // reordering is even representable).
+        let rest = sharded
+            .lane(hottest)
+            .drain(usize::MAX, std::time::Duration::ZERO)
+            .unwrap();
+        let rest_pairs: Vec<(usize, usize)> =
+            rest.iter().map(|s| (s.worker, s.batch_seq)).collect();
+        assert_eq!(rest_pairs, expected[hottest][got..].to_vec(), "seed {seed}");
+    }
+}
