@@ -65,6 +65,9 @@ struct Cell {
     sched_share: f64,
     drift: f64,
     n_groups: usize,
+    n_cands_pruned: f64,
+    n_rollouts_early_exit: f64,
+    n_twin_collapsed: f64,
 }
 
 fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell {
@@ -75,6 +78,9 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
     let mut share = Vec::with_capacity(reps);
     let mut drift = Vec::with_capacity(reps);
     let mut groups = Vec::with_capacity(reps);
+    let mut pruned = Vec::with_capacity(reps);
+    let mut early = Vec::with_capacity(reps);
+    let mut twins = Vec::with_capacity(reps);
     for _ in 0..reps {
         let coord = LaneCoordinator::homogeneous(
             profile.clone(),
@@ -100,6 +106,15 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
             .fold((0.0, 0.0), |(b, p), l| (b + l.busy_secs, p + l.predicted_secs));
         drift.push(if pred > 0.0 { busy / pred } else { 1.0 });
         groups.push(m.n_groups as f64);
+        let (mut np, mut ne, mut nt) = (0u64, 0u64, 0u64);
+        for l in &m.per_lane {
+            np += l.n_cands_pruned;
+            ne += l.n_rollouts_early_exit;
+            nt += l.n_twin_collapsed;
+        }
+        pruned.push(np as f64);
+        early.push(ne as f64);
+        twins.push(nt as f64);
     }
     Cell {
         workers,
@@ -114,6 +129,9 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
         // formation depends on settle-window timing, so a single rep's
         // count is scheduling noise.
         n_groups: stats::median(&groups).round() as usize,
+        n_cands_pruned: stats::median(&pruned),
+        n_rollouts_early_exit: stats::median(&early),
+        n_twin_collapsed: stats::median(&twins),
     }
 }
 
@@ -160,6 +178,9 @@ fn main() {
                     ("sched_overhead_share", Json::num(c.sched_share)),
                     ("measured_vs_predicted", Json::num(c.drift)),
                     ("n_groups", Json::num(c.n_groups as f64)),
+                    ("n_cands_pruned", Json::num(c.n_cands_pruned)),
+                    ("n_rollouts_early_exit", Json::num(c.n_rollouts_early_exit)),
+                    ("n_twin_collapsed", Json::num(c.n_twin_collapsed)),
                 ]));
                 cells.push(c);
             }

@@ -97,17 +97,26 @@ struct CellResult {
     fire_rate: f64,
     /// Median steal count per rep (rep-count independent).
     steals_per_rep: f64,
+    /// Median bound-gated pruning counters per rep (rep-count
+    /// independent), summed across lanes.
+    pruned_per_rep: f64,
+    early_exit_per_rep: f64,
+    twin_collapsed_per_rep: f64,
     n_tasks: usize,
 }
 
 fn summarize(m: &LaneMetrics) -> CellResult {
     let mut replans: Vec<f64> = Vec::new();
     let (mut fired, mut considered, mut steals) = (0usize, 0usize, 0usize);
+    let (mut pruned, mut early, mut twins) = (0u64, 0u64, 0u64);
     for l in &m.per_lane {
         replans.extend(l.replan_secs.iter().copied());
         fired += l.n_replans;
         considered += l.n_replan_considered;
         steals += l.n_stolen;
+        pruned += l.n_cands_pruned;
+        early += l.n_rollouts_early_exit;
+        twins += l.n_twin_collapsed;
     }
     CellResult {
         makespan: m.total_secs,
@@ -116,6 +125,9 @@ fn summarize(m: &LaneMetrics) -> CellResult {
         replans_per_rep: fired as f64,
         fire_rate: if considered == 0 { 0.0 } else { fired as f64 / considered as f64 },
         steals_per_rep: steals as f64,
+        pruned_per_rep: pruned as f64,
+        early_exit_per_rep: early as f64,
+        twin_collapsed_per_rep: twins as f64,
         n_tasks: m.n_tasks,
     }
 }
@@ -137,6 +149,9 @@ fn run_cell(
     let mut fire_rates = Vec::with_capacity(reps);
     let mut replan_counts = Vec::with_capacity(reps);
     let mut steal_counts = Vec::with_capacity(reps);
+    let mut pruned_counts = Vec::with_capacity(reps);
+    let mut early_counts = Vec::with_capacity(reps);
+    let mut twin_counts = Vec::with_capacity(reps);
     let mut replans: Vec<f64> = Vec::new();
     for _ in 0..reps {
         let c = coordinator(lanes, group_cap, online);
@@ -148,6 +163,9 @@ fn run_cell(
         fire_rates.push(r.fire_rate);
         replan_counts.push(r.replans_per_rep);
         steal_counts.push(r.steals_per_rep);
+        pruned_counts.push(r.pruned_per_rep);
+        early_counts.push(r.early_exit_per_rep);
+        twin_counts.push(r.twin_collapsed_per_rep);
         replans.extend(r.replans);
     }
     CellResult {
@@ -157,6 +175,9 @@ fn run_cell(
         replans_per_rep: stats::median(&replan_counts),
         fire_rate: stats::median(&fire_rates),
         steals_per_rep: stats::median(&steal_counts),
+        pruned_per_rep: stats::median(&pruned_counts),
+        early_exit_per_rep: stats::median(&early_counts),
+        twin_collapsed_per_rep: stats::median(&twin_counts),
         n_tasks: expect_tasks,
     }
 }
@@ -294,6 +315,12 @@ fn emit_cell(
         ("steal_count", Json::num(online.steals_per_rep)),
         ("sched_overhead_share", Json::num(online.sched_share)),
         ("baseline_sched_overhead_share", Json::num(base.sched_share)),
+        ("n_cands_pruned", Json::num(online.pruned_per_rep)),
+        ("n_rollouts_early_exit", Json::num(online.early_exit_per_rep)),
+        ("n_twin_collapsed", Json::num(online.twin_collapsed_per_rep)),
+        ("baseline_n_cands_pruned", Json::num(base.pruned_per_rep)),
+        ("baseline_n_rollouts_early_exit", Json::num(base.early_exit_per_rep)),
+        ("baseline_n_twin_collapsed", Json::num(base.twin_collapsed_per_rep)),
     ]));
     cells.push((format!("{label}/{shape}/{workers}w{lanes}l"), ratio));
 }

@@ -3,7 +3,10 @@
 //! resumable-cursor implementation and the pre-refactor from-scratch
 //! replay baseline, plus the width-1 (pure Algorithm-1) variant — and,
 //! since the sharded-pipeline PR, parallel-vs-serial reorder cases at
-//! T = 16/24 (multi-lane candidate scoring over a persistent pool).
+//! T = 16/24 (multi-lane candidate scoring over a persistent pool), and,
+//! since the bound-gated-search PR, pruned-vs-unpruned serial cases at
+//! T = 16/24 on twin-rich catalog groups (identical orders asserted,
+//! prune/early-exit/twin counters recorded).
 //!
 //! Emits `BENCH_sched_overhead.json` (array of rows with mean/p50/p99
 //! seconds per (device, T, impl) and per-point speedups) so future PRs
@@ -20,6 +23,8 @@ use oclcc::sched::heuristic::{
 };
 use oclcc::sched::parallel::{batch_reorder_beam_parallel_into, ParBeamScratch};
 use oclcc::task::real::real_benchmark;
+use oclcc::task::synthetic::synthetic_benchmark;
+use oclcc::task::TaskSpec;
 use oclcc::util::bench::{bench_mode, BenchResult, Bencher};
 use oclcc::util::json::Json;
 use oclcc::util::rng::Pcg64;
@@ -179,6 +184,98 @@ fn main() {
         }
     }
 
+    // ---- bound-gated pruning at coordinator-scale group sizes: the
+    // serial search with the pruning layer off vs on, over twin-rich
+    // BK-catalog groups (the 4-spec BK50 catalog cycled to T, the shape
+    // a lane drains when several workers submit identical kernels). The
+    // orders are asserted identical — pruning is provably result-
+    // invariant — and the efficacy counters are asserted > 0 so the
+    // trajectory records a genuine reduction in simulated-event work.
+    let mut prune_speedups: Vec<(String, usize, f64)> = Vec::new();
+    for dev in ["amd_r9", "k20c"] {
+        let profile = profile_by_name(dev).unwrap();
+        for t in [16usize, 24] {
+            let g = synthetic_benchmark("BK50", &profile, 1.0).unwrap();
+            let tasks: Vec<TaskSpec> =
+                (0..t).map(|i| g.tasks[i % g.len()].clone()).collect();
+
+            let mut plain = BeamScratch::with_pruning(false);
+            let mut order: Vec<usize> = Vec::new();
+            let off = b
+                .bench(&format!("reorder {dev} T={t} pruned_off"), || {
+                    batch_reorder_beam_into(
+                        &tasks,
+                        &profile,
+                        EngineState::default(),
+                        DEFAULT_BEAM_WIDTH,
+                        &mut plain,
+                        &mut order,
+                    );
+                    order.len()
+                })
+                .clone();
+            json_rows.push(row(dev, t, "pruned_off", &off));
+
+            let mut pruned = BeamScratch::new();
+            let mut pruned_order: Vec<usize> = Vec::new();
+            let on = b
+                .bench(&format!("reorder {dev} T={t} pruned_on"), || {
+                    batch_reorder_beam_into(
+                        &tasks,
+                        &profile,
+                        EngineState::default(),
+                        DEFAULT_BEAM_WIDTH,
+                        &mut pruned,
+                        &mut pruned_order,
+                    );
+                    pruned_order.len()
+                })
+                .clone();
+            json_rows.push(row(dev, t, "pruned_on", &on));
+            assert_eq!(
+                pruned_order, order,
+                "pruned order diverged from unpruned ({dev} T={t})"
+            );
+            // Counters for the trajectory: one warm call's worth, not the
+            // cumulative total over the Bencher's adaptive iteration
+            // count (which would scale with machine speed / fast mode).
+            pruned.reset_prune_counters();
+            batch_reorder_beam_into(
+                &tasks,
+                &profile,
+                EngineState::default(),
+                DEFAULT_BEAM_WIDTH,
+                &mut pruned,
+                &mut pruned_order,
+            );
+            let c = pruned.prune_counters();
+            assert!(
+                c.n_cands_pruned + c.n_rollouts_early_exit > 0,
+                "bound layer never fired on twin-rich {dev} T={t}: {c:?}"
+            );
+            assert!(
+                c.n_twin_collapsed > 0,
+                "twin collapse never fired on twin-rich {dev} T={t}: {c:?}"
+            );
+
+            let speedup = off.mean / on.mean.max(1e-12);
+            prune_speedups.push((dev.to_string(), t, speedup));
+            json_rows.push(Json::obj(vec![
+                ("device", Json::str(dev)),
+                ("t", Json::num(t as f64)),
+                ("impl", Json::str("speedup_pruned_vs_unpruned")),
+                ("speedup_mean", Json::num(speedup)),
+                ("speedup_p50", Json::num(off.median / on.median.max(1e-12))),
+                ("n_cands_pruned", Json::num(c.n_cands_pruned as f64)),
+                (
+                    "n_rollouts_early_exit",
+                    Json::num(c.n_rollouts_early_exit as f64),
+                ),
+                ("n_twin_collapsed", Json::num(c.n_twin_collapsed as f64)),
+            ]));
+        }
+    }
+
     println!("== Table 6 counterpart: heuristic CPU time ==");
     print!("{}", b.report());
     println!("paper budget (K20c, Core 2 Quad): 0.06 / 0.10 / 0.22 ms for T=4/6/8");
@@ -189,6 +286,10 @@ fn main() {
     println!("\nparallel vs serial reorder (mean):");
     for (dev, t, threads, s) in &par_speedups {
         println!("  {dev} T={t} threads={threads}: {s:.2}x");
+    }
+    println!("\npruned vs unpruned serial reorder (mean, twin-rich groups):");
+    for (dev, t, s) in &prune_speedups {
+        println!("  {dev} T={t}: {s:.2}x");
     }
 
     // Self-describing header: the effective OCLCC_BENCH_FAST mode, so a

@@ -102,6 +102,19 @@ impl DeviceProfile {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow::anyhow!("profile missing field {k}"))
         };
+        // sigma >= 1 is a documented invariant (duplex contention can
+        // only slow transfers down); the scheduler's admissible lower
+        // bounds assume solo rates are the fastest the model ever
+        // grants, so a "duplex speedup" profile must be rejected here
+        // rather than silently mis-prune. The loggp calibrator clamps
+        // its measurement to >= 1.0 for the same reason.
+        let sigma = f("duplex_slowdown")?;
+        if sigma < 1.0 || sigma.is_nan() {
+            anyhow::bail!(
+                "profile duplex_slowdown must be >= 1.0 (got {sigma}): the \
+                 partial-overlap model divides solo rates by it"
+            );
+        }
         Ok(DeviceProfile {
             name: j
                 .get("name")
@@ -111,7 +124,7 @@ impl DeviceProfile {
             dma_engines: f("dma_engines")? as u8,
             htd: LinkParams { latency: f("htd_latency")?, bytes_per_sec: f("htd_bandwidth")? },
             dth: LinkParams { latency: f("dth_latency")?, bytes_per_sec: f("dth_bandwidth")? },
-            duplex_slowdown: f("duplex_slowdown")?,
+            duplex_slowdown: sigma,
             kernel_launch_overhead: f("kernel_launch_overhead")?,
             cke_tail_overlap: f("cke_tail_overlap")?,
             time_scale: f("time_scale")?,
@@ -231,5 +244,19 @@ mod tests {
     #[test]
     fn unknown_profile_errors() {
         assert!(profile_by_name("gtx680").is_err());
+    }
+
+    #[test]
+    fn duplex_speedup_profiles_are_rejected() {
+        // A sigma < 1 would make duplex transfers FASTER than solo,
+        // breaking the scheduler's admissible lower bounds.
+        let mut p = profile_by_name("amd_r9").unwrap();
+        p.duplex_slowdown = 0.9;
+        let err = DeviceProfile::from_json(&p.to_json()).unwrap_err().to_string();
+        assert!(err.contains("duplex_slowdown"), "{err}");
+        p.duplex_slowdown = f64::NAN;
+        assert!(DeviceProfile::from_json(&p.to_json()).is_err());
+        p.duplex_slowdown = 1.0;
+        assert!(DeviceProfile::from_json(&p.to_json()).is_ok());
     }
 }

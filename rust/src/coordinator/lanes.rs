@@ -153,6 +153,14 @@ pub struct LaneStats {
     /// Online mode: wall seconds of each fired re-plan (the online bench
     /// reports p50/p99). Also accumulated into `sched_overhead_secs`.
     pub replan_secs: Vec<f64>,
+    /// Candidates the bound-gated search layer skipped outright (static
+    /// admissible floor above the admission cutoff).
+    pub n_cands_pruned: u64,
+    /// Candidate rollouts aborted mid-simulation by the clock cutoff.
+    pub n_rollouts_early_exit: u64,
+    /// Candidates that reused a spec-twin representative's score (serial
+    /// collapse or transposition-memo hit) instead of simulating.
+    pub n_twin_collapsed: u64,
 }
 
 /// Aggregate metrics of one sharded run (single-lane degenerates to the
@@ -217,6 +225,9 @@ fn empty_lane_stats(lane: usize) -> LaneStats {
         n_replan_considered: 0,
         n_stolen: 0,
         replan_secs: Vec::new(),
+        n_cands_pruned: 0,
+        n_rollouts_early_exit: 0,
+        n_twin_collapsed: 0,
     }
 }
 
@@ -472,6 +483,10 @@ fn lane_proxy(
             std::panic::resume_unwind(payload);
         }
     }
+    let pc = scratch.prune_counters();
+    stats.n_cands_pruned = pc.n_cands_pruned;
+    stats.n_rollouts_early_exit = pc.n_rollouts_early_exit;
+    stats.n_twin_collapsed = pc.n_twin_collapsed;
     LaneOutcome { stats, latencies, group_makespans }
 }
 
@@ -830,6 +845,10 @@ fn online_lane_proxy(
     let (fired, considered) = gate.counts();
     stats.n_replans = fired;
     stats.n_replan_considered = considered;
+    let pc = scratch.prune_counters();
+    stats.n_cands_pruned = pc.n_cands_pruned;
+    stats.n_rollouts_early_exit = pc.n_rollouts_early_exit;
+    stats.n_twin_collapsed = pc.n_twin_collapsed;
     LaneOutcome { stats, latencies, group_makespans }
 }
 

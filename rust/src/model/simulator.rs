@@ -50,6 +50,18 @@
 //! simulated as one contiguous timeline, bit-identical to a single
 //! concatenated from-scratch run — see rust/tests/prop_online.rs.
 //!
+//! # Bounded probes ([`SimCursor::run_to_quiescence_bounded`])
+//!
+//! The schedulers' branch-and-bound layer scores candidate rollouts with
+//! a *cutoff*: the simulated clock is monotone and never exceeds the
+//! final makespan, so the instant it strictly passes the cutoff the
+//! rollout is proven strictly worse than an already-admitted score and
+//! the event loop aborts — admissibly, leaving the cursor resumable
+//! bit-for-bit. [`SimCursor::lower_bound`] complements it with an O(1)
+//! incrementally-maintained makespan envelope (max of per-engine
+//! busy-work sums from their initial free times and the committed clock)
+//! that the schedulers consult before paying for any simulation at all.
+//!
 //! `simulate` / `simulate_order` / `makespan_of_order` remain as thin
 //! wrappers that drive a fresh cursor, and
 //! [`simulate_order_fromscratch`] preserves the pre-refactor single-shot
@@ -79,16 +91,10 @@ pub struct EngineState {
 }
 
 /// Simulation knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct SimOptions {
     /// Record per-command start/end times (skip for scheduling hot path).
     pub record_timeline: bool,
-}
-
-impl Default for SimOptions {
-    fn default() -> Self {
-        SimOptions { record_timeline: false }
-    }
 }
 
 #[derive(Clone, Debug)]
@@ -136,6 +142,14 @@ pub(crate) struct ProfileParams {
 
 impl ProfileParams {
     pub(crate) fn of(p: &DeviceProfile) -> Self {
+        // The admissible busy-sum envelope (`SimCursor::lower_bound`)
+        // relies on solo rates being the fastest the model grants, i.e.
+        // sigma >= 1 — enforced at every profile ingress (builtins,
+        // `DeviceProfile::from_json`, loggp calibration clamp).
+        debug_assert!(
+            p.dma_engines < 2 || p.duplex_slowdown >= 1.0,
+            "duplex_slowdown < 1.0 breaks lower-bound admissibility"
+        );
         ProfileParams {
             single_dma: p.dma_engines < 2,
             htd_latency: p.htd.latency,
@@ -193,6 +207,19 @@ pub struct SimCursor {
     task_end: Vec<f64>,
     timeline: Vec<CmdRecord>,
     finished: bool,
+    /// A bounded finishing drain ([`SimCursor::run_to_quiescence_bounded`])
+    /// was aborted mid-run: the cursor may be *finished* again (the event
+    /// loop continues bit-exactly) but must not accept pushes — on 1-DMA
+    /// devices a finishing drain may already have released DtH commands
+    /// that a longer order would have held back.
+    mid_finish: bool,
+    /// Per-engine busy-work sums (solo-rate seconds) over every task
+    /// pushed so far, maintained incrementally by the push paths and
+    /// backing [`SimCursor::lower_bound`]. Pure bound metadata: never read
+    /// by the event loop, so it cannot perturb simulation results.
+    busy_htd: f64,
+    busy_k: f64,
+    busy_dth: f64,
     /// Paused snapshot at the committed frontier (see
     /// [`SimCursor::commit_frontier`]). Lazily boxed once and retained
     /// across resets/retractions so warm commit/replan cycles perform no
@@ -262,6 +289,10 @@ impl SimCursor {
         self.task_end.clear();
         self.timeline.clear();
         self.finished = false;
+        self.mid_finish = false;
+        self.busy_htd = 0.0;
+        self.busy_k = 0.0;
+        self.busy_dth = 0.0;
         // Keep the snapshot box (its buffers are warm) but invalidate it.
         self.commit_valid = false;
     }
@@ -308,18 +339,26 @@ impl SimCursor {
             "SimCursor::push_task after run_to_quiescence; snapshot before \
              finishing instead"
         );
+        debug_assert!(
+            !self.mid_finish,
+            "SimCursor::push_task after an aborted bounded finish; \
+             resume_from/reset the cursor first"
+        );
         let slot = self.task_end.len();
         for (j, &b) in task.htd_bytes.iter().enumerate() {
             self.q_htd.push((slot, j, b));
+            self.busy_htd += self.prof.htd_latency + b as f64 / self.prof.htd_bps;
         }
         for (j, &b) in task.dth_bytes.iter().enumerate() {
             self.q_dth.push((slot, j, b));
+            self.busy_dth += self.prof.dth_latency + b as f64 / self.prof.dth_bps;
         }
         self.htd_pending.push(task.htd_bytes.len() as u32);
         self.dth_pending.push(task.dth_bytes.len() as u32);
         self.k_done.push(false);
-        self.kernel_secs
-            .push(task.kernel.est_secs() + self.prof.kernel_launch_overhead);
+        let k = task.kernel.est_secs() + self.prof.kernel_launch_overhead;
+        self.kernel_secs.push(k);
+        self.busy_k += k;
         self.task_end.push(0.0);
         self.drain(false);
     }
@@ -335,6 +374,11 @@ impl SimCursor {
             !self.finished,
             "SimCursor::push_task_compiled after run_to_quiescence; snapshot \
              before finishing instead"
+        );
+        debug_assert!(
+            !self.mid_finish,
+            "SimCursor::push_task_compiled after an aborted bounded finish; \
+             resume_from/reset the cursor first"
         );
         debug_assert!(
             table.params() == self.prof,
@@ -353,6 +397,10 @@ impl SimCursor {
         self.dth_pending.push(dth.len() as u32);
         self.k_done.push(false);
         self.kernel_secs.push(table.kernel_secs(i));
+        // Same solo-rate arithmetic the table precomputed per row.
+        self.busy_htd += table.htd_secs(i);
+        self.busy_dth += table.dth_secs(i);
+        self.busy_k += table.kernel_secs(i);
         self.task_end.push(0.0);
         self.drain(false);
     }
@@ -412,6 +460,79 @@ impl SimCursor {
         self.drain(true);
         self.finished = true;
         self.now
+    }
+
+    /// Bounded probe finish: run the remaining events only while the
+    /// simulated clock stays at or below `cutoff`, aborting the instant it
+    /// strictly exceeds it. The clock is monotone and the final makespan
+    /// is at least the clock at every event, so `None` proves the finished
+    /// makespan would strictly exceed `cutoff` — an *admissible* early
+    /// exit for branch-and-bound candidate scoring (the schedulers prune
+    /// only candidates this proves strictly worse than an already-admitted
+    /// score, so returned orders are bit-identical to unbounded search).
+    ///
+    /// `Some(makespan)` is bit-identical to [`SimCursor::run_to_quiescence`]
+    /// (a `cutoff` of `f64::INFINITY` never aborts). An aborted cursor is
+    /// left mid-drain in a consistent state: calling this again (with a
+    /// larger cutoff) continues the event loop bit-exactly, but pushing
+    /// further tasks is forbidden (debug-asserted) — the finishing drain
+    /// may already have released DtH commands a longer order would have
+    /// held back. NaN cutoffs never abort (a degenerate profile must not
+    /// turn the bound into a wrong-answer path).
+    pub fn run_to_quiescence_bounded(&mut self, cutoff: f64) -> Option<f64> {
+        if self.drain_bounded(true, cutoff) {
+            self.finished = true;
+            Some(self.now)
+        } else {
+            self.mid_finish = true;
+            None
+        }
+    }
+
+    /// Admissible lower bound on the final makespan of everything pushed
+    /// so far: the maximum of the current clock and the per-engine
+    /// envelopes `engine_free_at + total solo-rate busy work` (commands
+    /// run serially per engine, can never start before the engine's
+    /// initial free time, and solo rates are the fastest the model ever
+    /// grants — duplex contention only slows transfers down). On 1-DMA
+    /// devices the shared transfer engine additionally serializes both
+    /// directions. Maintained incrementally by the push paths (O(1) per
+    /// command), monotone under further pushes and event processing.
+    ///
+    /// The bound is *mathematically* admissible; accumulated float
+    /// rounding may differ from the event loop's by ULPs (and the loop's
+    /// EPS tolerances are absolute), so callers comparing it against
+    /// exact scores must keep the relative + absolute safety margins of
+    /// `sched::search_util::provably_worse`.
+    pub fn lower_bound(&self) -> f64 {
+        self.lower_bound_with_remaining(0.0, 0.0, 0.0)
+    }
+
+    /// [`SimCursor::lower_bound`] extended by *remaining* (not yet
+    /// pushed) per-engine solo-rate work: a lower bound on the final
+    /// makespan of any completion that will eventually push tasks
+    /// totalling `rem_htd`/`rem_k`/`rem_dth` engine seconds on top of
+    /// what this cursor already carries. The schedulers feed it the
+    /// suffix-aggregate sums compiled per group (whole-group totals at
+    /// the seed stage, mask scans per surviving prefix), giving each
+    /// candidate an O(1) admissible floor before any simulation.
+    pub fn lower_bound_with_remaining(
+        &self,
+        rem_htd: f64,
+        rem_k: f64,
+        rem_dth: f64,
+    ) -> f64 {
+        let htd = self.busy_htd + rem_htd;
+        let dth = self.busy_dth + rem_dth;
+        let mut lb = self.now;
+        lb = lb.max(self.init.k_free + self.busy_k + rem_k);
+        lb = lb.max(self.init.htd_free + htd);
+        lb = lb.max(self.init.dth_free + dth);
+        if self.prof.single_dma {
+            let start = self.init.htd_free.min(self.init.dth_free);
+            lb = lb.max(start + htd + dth);
+        }
+        lb
     }
 
     /// Pin every task pushed so far as **committed** — already submitted
@@ -497,6 +618,21 @@ impl SimCursor {
     /// until then), so pause/resume replays the from-scratch event
     /// sequence bit for bit.
     fn drain(&mut self, finishing: bool) {
+        let done = self.drain_bounded(finishing, f64::INFINITY);
+        debug_assert!(done, "unbounded drain can never abort");
+    }
+
+    /// [`SimCursor::drain`] with the early-exit cutoff of
+    /// [`SimCursor::run_to_quiescence_bounded`]: returns `false` — leaving
+    /// the loop state consistent and resumable — the moment the clock
+    /// strictly exceeds `cutoff` (checked only at event boundaries, where
+    /// in-flight work has been burned and completions processed). The
+    /// plain `>` deliberately never fires on NaN/infinite cutoffs, and an
+    /// infinite cutoff makes this bit-identical to the unbounded drain.
+    fn drain_bounded(&mut self, finishing: bool, cutoff: f64) -> bool {
+        if self.now > cutoff {
+            return false;
+        }
         loop {
             // ---- Activation phase: move ready queue heads into engines.
             // HtD engine.
@@ -561,7 +697,7 @@ impl SimCursor {
             // the clock where a future task's first HtD would slot in.
             if !finishing && self.act_h.is_none() && self.h_next >= self.q_htd.len()
             {
-                return;
+                return true;
             }
 
             // ---- Termination: nothing active and nothing activatable.
@@ -571,7 +707,7 @@ impl SimCursor {
                     && self.d_next >= self.q_dth.len()
                     && self.k_next >= self.k_done.len()
                 {
-                    return;
+                    return true;
                 }
                 // Engines blocked purely by init free-times: jump forward.
                 // Only consider queue heads whose *dependencies* are
@@ -601,6 +737,9 @@ impl SimCursor {
                     self.now
                 );
                 self.now = jump;
+                if self.now > cutoff {
+                    return false;
+                }
                 continue;
             }
 
@@ -630,6 +769,9 @@ impl SimCursor {
             let done_k = advance_cmd(&mut self.act_k, 1.0, dt);
             for done in [done_h, done_d, done_k].into_iter().flatten() {
                 self.complete(done);
+            }
+            if self.now > cutoff {
+                return false;
             }
         }
     }
@@ -723,6 +865,10 @@ impl SimCursor {
         self.task_end.clone_from(&src.task_end);
         self.timeline.clone_from(&src.timeline);
         self.finished = src.finished;
+        self.mid_finish = src.mid_finish;
+        self.busy_htd = src.busy_htd;
+        self.busy_k = src.busy_k;
+        self.busy_dth = src.busy_dth;
     }
 }
 
@@ -750,6 +896,10 @@ impl Clone for SimCursor {
             task_end: self.task_end.clone(),
             timeline: self.timeline.clone(),
             finished: self.finished,
+            mid_finish: self.mid_finish,
+            busy_htd: self.busy_htd,
+            busy_k: self.busy_k,
+            busy_dth: self.busy_dth,
             commit_snap: self.commit_snap.clone(),
             commit_valid: self.commit_valid,
         }
@@ -1384,6 +1534,65 @@ mod tests {
         cur.push_task(&g.tasks[2]);
         assert_eq!(cur.commit_frontier(), 2);
         assert_eq!(cur.replan_suffix(), 0);
+    }
+
+    #[test]
+    fn bounded_run_aborts_resumes_and_matches_unbounded() {
+        for dev in ["amd_r9", "xeon_phi"] {
+            let p = profile_by_name(dev).unwrap();
+            let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+            let mut full = SimCursor::new(&p, EngineState::default());
+            for t in &g.tasks {
+                full.push_task(t);
+            }
+            let want = full.clone().run_to_quiescence();
+
+            // Infinite cutoff: bit-identical to the unbounded run.
+            let mut inf = full.clone();
+            assert_eq!(inf.run_to_quiescence_bounded(f64::INFINITY), Some(want));
+            assert!(inf.is_finished());
+
+            // A cutoff below the makespan aborts; the aborted cursor can
+            // be finished later and still lands on the exact same bits.
+            let mut bounded = full.clone();
+            assert_eq!(bounded.run_to_quiescence_bounded(want * 0.5), None, "{dev}");
+            assert!(!bounded.is_finished());
+            assert!(bounded.clock() <= want);
+            assert_eq!(bounded.run_to_quiescence_bounded(want * 0.75), None);
+            assert_eq!(bounded.run_to_quiescence_bounded(f64::INFINITY), Some(want));
+
+            // A cutoff at (or above) the makespan never aborts.
+            let mut at = full.clone();
+            assert_eq!(at.run_to_quiescence_bounded(want), Some(want), "{dev}");
+        }
+    }
+
+    #[test]
+    fn lower_bound_is_admissible_and_monotone() {
+        for dev in ["amd_r9", "k20c", "xeon_phi"] {
+            let p = profile_by_name(dev).unwrap();
+            let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+            let init = EngineState { htd_free: 1e-3, k_free: 2e-3, dth_free: 0.5e-3 };
+            let mut cur = SimCursor::new(&p, init);
+            let mut prev_lb = 0.0f64;
+            for t in &g.tasks {
+                cur.push_task(t);
+                let lb = cur.lower_bound();
+                assert!(lb >= prev_lb, "{dev}: envelope must be monotone");
+                prev_lb = lb;
+            }
+            let lb = cur.lower_bound();
+            let m = cur.run_to_quiescence();
+            // Admissible modulo float accumulation (margins mirror the
+            // schedulers' provably_worse guard: relative + absolute).
+            assert!(
+                lb * (1.0 - 1e-9) - 1e-9 <= m,
+                "{dev}: lower_bound {lb} vs makespan {m}"
+            );
+            assert!(lb > 0.0);
+            // The finished clock is itself part of the envelope.
+            assert!(cur.lower_bound() >= m);
+        }
     }
 
     #[test]

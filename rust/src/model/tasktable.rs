@@ -17,7 +17,14 @@
 //!   floor and the dominance class are precomputed, so scheduler ranking
 //!   passes ([`sched::heuristic`]'s first-task sort, LPT keys in
 //!   [`sched::multidevice`]) read contiguous `f64` slices instead of
-//!   recomputing `stage_secs` per comparison.
+//!   recomputing `stage_secs` per comparison;
+//! * spec-twin equivalence classes (`twin_class`, full-key proven) and
+//!   group-aggregate stage sums / minimum kernel+DtH tail are compiled
+//!   once, feeding the searches' bound-gated pruning layer: twin
+//!   candidates collapse to one simulated representative per prefix, and
+//!   the seed-stage admissible floors read the aggregates directly
+//!   (surviving prefixes re-scan only their unplaced rows, O(T) per
+//!   parent per depth instead of per candidate).
 //!
 //! Compilation is `O(commands)` and reuses buffers via
 //! [`TaskTable::compile_into`], so a warm table performs no heap
@@ -64,11 +71,29 @@ pub struct TaskTable {
     /// times (the comparison then defaults to `DominantKernel` on both
     /// paths).
     dominant_transfer: Vec<bool>,
-    /// FNV of each row's `write_row_sig` encoding, plus the reused sig
-    /// buffer, backing the twin check below.
+    /// FNV of each row's `write_row_sig` encoding (prefilter for the
+    /// full-key compares below).
     row_hash: Vec<u64>,
-    sig_scratch: Vec<u64>,
+    /// All row signatures concatenated (`sig_off` delimits row `i` as
+    /// `sig_buf[sig_off[i]..sig_off[i+1]]`), so twin classification does
+    /// full-key compares without re-encoding.
+    sig_buf: Vec<u64>,
+    sig_off: Vec<u32>,
+    /// Spec-twin equivalence classes: `twin_class[i]` is the lowest row
+    /// index whose simulation-relevant encoding equals row `i`'s (proven
+    /// by full-key compare — the hash is only a prefilter). A row is its
+    /// own class representative iff `twin_class[i] == i`. Twin rows are
+    /// interchangeable for the simulator, which the searches exploit to
+    /// collapse candidates (serial twin collapse, parallel memo).
+    twin_class: Vec<u32>,
     has_twins: bool,
+    /// Group-aggregate solo stage sums and the smallest kernel+DtH tail,
+    /// feeding the searches' seed-stage admissible floors without any
+    /// per-call scan (partial prefixes re-scan their unplaced rows).
+    total_htd: f64,
+    total_k: f64,
+    total_dth: f64,
+    min_tail: f64,
 }
 
 impl TaskTable {
@@ -100,6 +125,10 @@ impl TaskTable {
         self.dominant_transfer.clear();
         self.htd_off.push(0);
         self.dth_off.push(0);
+        self.total_htd = 0.0;
+        self.total_k = 0.0;
+        self.total_dth = 0.0;
+        self.min_tail = 0.0;
         for task in tasks {
             self.htd_raw.extend_from_slice(&task.htd_bytes);
             self.htd_off.push(self.htd_raw.len() as u32);
@@ -118,34 +147,96 @@ impl TaskTable {
             self.k_minus_htd.push(k - htd);
             self.seq_secs.push(htd + k + dth);
             self.dominant_transfer.push(htd + dth > k);
+            self.total_htd += htd;
+            self.total_k += k;
+            self.total_dth += dth;
+            let tail = k + dth;
+            if self.kernel.len() == 1 || tail < self.min_tail {
+                self.min_tail = tail;
+            }
         }
-        // Twin detection for the parallel search's transposition memo:
-        // the memo can only ever hit when two rows share a simulation-
-        // relevant encoding, so groups of all-distinct specs skip it
-        // entirely. A hash collision here can only enable the memo
-        // spuriously — memo hits themselves are proven by full-key
-        // comparison, never by hash.
+        // Spec-twin classification: rows whose simulation-relevant
+        // encodings are byte-identical are interchangeable for the
+        // simulator; the searches collapse such candidates (one simulated
+        // representative per class per prefix) and the parallel
+        // transposition memo can only ever hit when a class has more than
+        // one member, so all-distinct groups skip key building entirely.
+        // Every class assignment is proven by full-key comparison — the
+        // FNV hash is only a prefilter.
         self.row_hash.clear();
+        self.twin_class.clear();
+        self.sig_off.clear();
+        self.sig_off.push(0);
         self.has_twins = false;
-        let mut sig = std::mem::take(&mut self.sig_scratch);
+        let mut buf = std::mem::take(&mut self.sig_buf);
+        buf.clear();
         for i in 0..self.kernel.len() {
-            sig.clear();
-            self.write_row_sig(i, &mut sig);
-            let h = fnv64(&sig);
-            if self.row_hash.contains(&h) {
-                self.has_twins = true;
+            let start = buf.len();
+            self.write_row_sig(i, &mut buf);
+            let len = buf.len() - start;
+            let h = fnv64(&buf[start..]);
+            let mut class = i as u32;
+            for j in 0..i {
+                if self.row_hash[j] != h {
+                    continue;
+                }
+                let (js, je) =
+                    (self.sig_off[j] as usize, self.sig_off[j + 1] as usize);
+                if je - js == len && buf[js..je] == buf[start..start + len] {
+                    class = self.twin_class[j];
+                    self.has_twins = true;
+                    break;
+                }
             }
             self.row_hash.push(h);
+            self.twin_class.push(class);
+            self.sig_off.push(buf.len() as u32);
         }
-        self.sig_scratch = sig;
+        self.sig_buf = buf;
     }
 
     /// Whether any two rows share a simulation-relevant encoding (spec
-    /// twins). Gates the transposition memo in `sched::parallel`: with
+    /// twins), i.e. any [`TaskTable::twin_class`] has more than one
+    /// member. Gates the transposition memo in `sched::parallel`: with
     /// all-distinct rows no memo key can ever repeat, so building keys
     /// would be pure serialized overhead.
     pub(crate) fn has_spec_twins(&self) -> bool {
         self.has_twins
+    }
+
+    /// Spec-twin equivalence class of row `i`: the lowest row index whose
+    /// simulation-relevant encoding is byte-identical to row `i`'s
+    /// (full-key proven). Rows in one class are interchangeable for the
+    /// simulator — pushing either produces bit-identical state.
+    #[inline]
+    pub(crate) fn twin_class(&self, i: usize) -> u32 {
+        self.twin_class[i]
+    }
+
+    /// Group-aggregate solo HtD seconds (Σ [`TaskTable::htd_secs`]).
+    #[inline]
+    pub(crate) fn total_htd_secs(&self) -> f64 {
+        self.total_htd
+    }
+
+    /// Group-aggregate kernel seconds (Σ [`TaskTable::kernel_secs`]).
+    #[inline]
+    pub(crate) fn total_kernel_secs(&self) -> f64 {
+        self.total_k
+    }
+
+    /// Group-aggregate solo DtH seconds (Σ [`TaskTable::dth_secs`]).
+    #[inline]
+    pub(crate) fn total_dth_secs(&self) -> f64 {
+        self.total_dth
+    }
+
+    /// Smallest kernel+DtH tail over all rows (0.0 for an empty table):
+    /// whatever task ends up last in an order still owes at least this
+    /// after its final HtD — the seed-stage chain floor's tail term.
+    #[inline]
+    pub(crate) fn min_kd_tail(&self) -> f64 {
+        self.min_tail
     }
 
     /// Number of compiled tasks.
@@ -301,6 +392,9 @@ mod tests {
         assert_eq!(sig(0), sig(1), "identical specs, different names");
         assert_ne!(sig(0), sig(2));
         assert!(t.has_spec_twins());
+        assert_eq!(t.twin_class(0), 0);
+        assert_eq!(t.twin_class(1), 0, "twin maps to lowest class member");
+        assert_eq!(t.twin_class(2), 2);
         let distinct = TaskTable::compile(
             &[
                 TaskSpec::simple("a", 1000, KernelSpec::Timed { secs: 1e-3 }, 500),
@@ -309,6 +403,41 @@ mod tests {
             &p,
         );
         assert!(!distinct.has_spec_twins());
+        assert_eq!(distinct.twin_class(0), 0);
+        assert_eq!(distinct.twin_class(1), 1);
+    }
+
+    #[test]
+    fn twin_classes_chain_to_lowest_representative() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mk = |n| TaskSpec::simple(n, 1000, KernelSpec::Timed { secs: 1e-3 }, 500);
+        let other =
+            TaskSpec::simple("x", 7000, KernelSpec::Timed { secs: 2e-3 }, 100);
+        let t = TaskTable::compile(&[mk("a"), other, mk("b"), mk("c")], &p);
+        assert_eq!(t.twin_class(0), 0);
+        assert_eq!(t.twin_class(1), 1);
+        assert_eq!(t.twin_class(2), 0);
+        assert_eq!(t.twin_class(3), 0, "chained twin resolves to the root");
+    }
+
+    #[test]
+    fn aggregate_totals_sum_rows() {
+        let p = profile_by_name("k20c").unwrap();
+        let g = synthetic_benchmark("BK75", &p, 1.0).unwrap();
+        let t = TaskTable::compile(&g.tasks, &p);
+        let (mut htd, mut k, mut dth) = (0.0f64, 0.0f64, 0.0f64);
+        let mut tail = f64::INFINITY;
+        for i in 0..t.len() {
+            htd += t.htd_secs(i);
+            k += t.kernel_secs(i);
+            dth += t.dth_secs(i);
+            tail = tail.min(t.kernel_secs(i) + t.dth_secs(i));
+        }
+        assert_eq!(t.total_htd_secs(), htd);
+        assert_eq!(t.total_kernel_secs(), k);
+        assert_eq!(t.total_dth_secs(), dth);
+        assert_eq!(t.min_kd_tail(), tail);
+        assert_eq!(TaskTable::compile(&[], &p).min_kd_tail(), 0.0);
     }
 
     #[test]

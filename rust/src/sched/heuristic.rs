@@ -20,20 +20,35 @@
 //! The returned order is a permutation of `0..tasks.len()` over the input
 //! slice.
 //!
-//! # Cost (post-refactor)
+//! # Cost (post-refactor, bound-gated)
 //!
 //! The search runs on [`SimCursor`]s: every surviving beam prefix is
 //! simulated **once** up to its committed frontier and kept paused inside
 //! its [`BeamScratch`] entry; each candidate extension is scored by
-//! `resume_from` + `push_task_compiled` + `run_to_quiescence` on a pooled
-//! probe cursor instead of replaying the prefix from scratch. Total event
-//! work drops from O(w·T³·C) to amortized O(w·T²·C), membership tests are
-//! bitmask words instead of `Vec::contains` scans (the old O(T²) term),
-//! the group is compiled once per call into a [`TaskTable`] (so every
-//! push reads contiguous SoA slices, never a `TaskSpec`), and the whole
-//! inner loop performs **zero heap allocations** after warm-up: beam
-//! entries, masks, candidate lists, the table and the cursors all live in
-//! the reusable [`BeamScratch`] arena (thread-local for the convenience
+//! `resume_from` + `push_task_compiled` + a **bounded** finish on a pooled
+//! probe cursor instead of replaying the prefix from scratch. On top of
+//! the amortized O(w·T²·C) resume structure sits a branch-and-bound layer
+//! (see `sched::search_util`): each expansion round carries a running
+//! admission cutoff — the w-th best score seen, seeded from the sorted
+//! parent beam's w-th admitted score — and a candidate is simulated only
+//! when (a) its static admissible floor (paused prefix clock + remaining
+//! solo HtD work + smallest remaining kernel+DtH tail, and its own
+//! sequential floor) cannot prove it strictly worse, and (b) no spec-twin
+//! representative of it was already scored for the same prefix
+//! (`TaskTable::twin_class` collapse). Survivors run under the cutoff and
+//! abort the instant the simulated clock — a monotone lower bound on the
+//! final makespan — strictly exceeds it. Pruning fires only on *strict*
+//! dominance (margin-guarded for analytic floors, exact for the clock),
+//! so the returned permutation is bit-identical to the unpruned search
+//! for every width, profile and thread count — `rust/tests/prop_bounds.rs`
+//! pins this; worst-case cost is unchanged, but on twin-rich groups most
+//! provable losers now cost O(1) instead of a full O(T·C) rollout.
+//!
+//! Membership tests are bitmask words, the group is compiled once per
+//! call into a [`TaskTable`], and the whole inner loop performs **zero
+//! heap allocations** after warm-up: beam entries, masks, candidate
+//! lists, cutoff buffers, the table and the cursors all live in the
+//! reusable [`BeamScratch`] arena (thread-local for the convenience
 //! wrappers, caller-owned via [`batch_reorder_beam_into`]). For larger
 //! groups, `sched::parallel` fans candidate scoring out over a persistent
 //! thread pool while returning bit-identical orders. The pre-refactor
@@ -43,13 +58,19 @@
 //!
 //! All f64 score comparisons use `f64::total_cmp`: a NaN from a
 //! degenerate profile must not panic the coordinator's proxy thread
-//! mid-drain (it sorts last instead).
+//! mid-drain (it sorts last instead, and never admits a prune).
 
 use std::cell::RefCell;
 
 use crate::config::DeviceProfile;
 use crate::model::simulator::{simulate_order_fromscratch, SimCursor};
 use crate::model::{EngineState, SimOptions, TaskTable};
+use crate::sched::search_util::{
+    cand_cmp, debug_assert_mask_sized, entry_at, gated_score, mask_contains,
+    mask_set, mask_words, remaining_floor, rollout_score_bounded,
+    score_candidate_bounded, set_mask_len, BeamEntry, Cand, PruneCounters,
+    RunningCutoff,
+};
 use crate::task::TaskSpec;
 
 /// Beam width of the generalized greedy. Width 1 is Algorithm 1's pure
@@ -58,56 +79,11 @@ use crate::task::TaskSpec;
 /// below the Table-6 overhead envelope.
 pub const DEFAULT_BEAM_WIDTH: usize = 3;
 
-#[inline]
-pub(crate) fn mask_words(n: usize) -> usize {
-    n.div_ceil(64)
-}
-
-#[inline]
-pub(crate) fn mask_contains(mask: &[u64], i: usize) -> bool {
-    mask[i >> 6] & (1u64 << (i & 63)) != 0
-}
-
-#[inline]
-pub(crate) fn mask_set(mask: &mut [u64], i: usize) {
-    mask[i >> 6] |= 1u64 << (i & 63);
-}
-
-/// One surviving beam prefix: its order, membership bitmask, pruning
-/// score, and the paused simulation of exactly that prefix. Shared with
-/// the parallel search in `sched::parallel`.
-pub(crate) struct BeamEntry {
-    pub(crate) order: Vec<usize>,
-    pub(crate) mask: Vec<u64>,
-    pub(crate) cursor: SimCursor,
-    pub(crate) score: f64,
-}
-
-impl BeamEntry {
-    fn placeholder() -> BeamEntry {
-        BeamEntry {
-            order: Vec::new(),
-            mask: Vec::new(),
-            cursor: SimCursor::detached(),
-            score: 0.0,
-        }
-    }
-}
-
-/// A candidate extension generated during one expansion step. `parent`
-/// and `cand` double as the deterministic tie-break, reproducing the
-/// stable generation order of the pre-refactor sort.
-#[derive(Clone, Copy)]
-pub(crate) struct Cand {
-    pub(crate) parent: u32,
-    pub(crate) cand: u32,
-    pub(crate) score: f64,
-}
-
 /// Reusable arena for the beam search: compiled task table, cursors, beam
-/// entry pools, candidate list and rollout ranking. After the first call
-/// at a given (T, command-count) size, subsequent calls through the same
-/// scratch perform no heap allocations.
+/// entry pools, candidate list, rollout ranking and the pruning layer's
+/// cutoff buffer. After the first call at a given (T, command-count)
+/// size, subsequent calls through the same scratch perform no heap
+/// allocations.
 pub struct BeamScratch {
     table: TaskTable,
     base: SimCursor,
@@ -118,10 +94,23 @@ pub struct BeamScratch {
     cands: Vec<Cand>,
     firsts: Vec<usize>,
     greedy: Vec<usize>,
+    pruning: bool,
+    cutoff: RunningCutoff,
+    counters: PruneCounters,
 }
 
 impl BeamScratch {
     pub fn new() -> BeamScratch {
+        Self::with_pruning(true)
+    }
+
+    /// `pruning: false` disables the whole bound-gated layer (static
+    /// floors, twin collapse, bounded rollouts) — every candidate is
+    /// simulated to quiescence exactly as before the layer existed. The
+    /// results are bit-identical either way (property-tested); the switch
+    /// exists for that test and for the pruned-vs-unpruned overhead rows
+    /// in `benches/table6_overhead.rs`.
+    pub fn with_pruning(pruning: bool) -> BeamScratch {
         BeamScratch {
             table: TaskTable::new(),
             base: SimCursor::detached(),
@@ -132,7 +121,24 @@ impl BeamScratch {
             cands: Vec::new(),
             firsts: Vec::new(),
             greedy: Vec::new(),
+            pruning,
+            cutoff: RunningCutoff::default(),
+            counters: PruneCounters::default(),
         }
+    }
+
+    pub fn set_pruning(&mut self, pruning: bool) {
+        self.pruning = pruning;
+    }
+
+    /// Pruning efficacy counters accumulated since construction (or the
+    /// last [`BeamScratch::reset_prune_counters`]).
+    pub fn prune_counters(&self) -> PruneCounters {
+        self.counters
+    }
+
+    pub fn reset_prune_counters(&mut self) {
+        self.counters = PruneCounters::default();
     }
 }
 
@@ -214,30 +220,87 @@ pub(crate) fn beam_over_table(
     let words = mask_words(n);
 
     {
-        let BeamScratch { base, probe, beam, next, beam_len, cands, firsts, .. } =
-            scratch;
+        let BeamScratch {
+            base,
+            probe,
+            beam,
+            next,
+            beam_len,
+            cands,
+            firsts,
+            pruning,
+            cutoff,
+            counters,
+            ..
+        } = scratch;
+        let prune = *pruning;
 
         rank_firsts(table, firsts);
         base.reset_params(table.params(), init);
 
         // ---- seed the beam. Width 1 reproduces Algorithm 1 exactly: the
         // first task comes from the short-HtD/long-K rule. Wider beams
-        // consider every starter and let the rollout score prune, which
-        // strictly dominates the hand rule when more than one prefix
-        // survives.
+        // consider every starter — walked in rollout-rank order so
+        // spec-twin seeds collapse onto one simulated representative —
+        // and let the rollout score prune, which strictly dominates the
+        // hand rule when more than one prefix survives.
         *beam_len = 0;
-        let n_seeds = if width == 1 { 1 } else { n };
-        for s in 0..n_seeds {
-            let seed = if width == 1 { firsts[0] } else { s };
-            let e = entry_at(beam, *beam_len);
+        if width == 1 {
+            let seed = firsts[0];
+            let e = entry_at(beam, 0);
             e.order.clear();
             e.order.push(seed);
             set_mask_len(&mut e.mask, words);
             mask_set(&mut e.mask, seed);
             e.cursor.resume_from(base);
             e.cursor.push_task_compiled(table, seed);
-            e.score = rollout_score(probe, &e.cursor, &e.mask, firsts, table);
-            *beam_len += 1;
+            e.score = rollout_score_bounded(
+                probe,
+                &e.cursor,
+                &e.mask,
+                firsts,
+                table,
+                |p| p,
+                f64::INFINITY,
+            )
+            .expect("unbounded rollout always completes");
+            *beam_len = 1;
+        } else {
+            cutoff.reset(width, f64::INFINITY);
+            // Static floor shared by every seed: nothing is placed yet,
+            // so the remaining work is exactly the table's compiled
+            // group aggregates — no scan needed.
+            let common = base
+                .lower_bound_with_remaining(
+                    table.total_htd_secs(),
+                    table.total_kernel_secs(),
+                    table.total_dth_secs(),
+                )
+                .max(base.clock() + table.total_htd_secs() + table.min_kd_tail());
+            let mut prev: Option<(u32, f64)> = None;
+            for &seed in firsts.iter() {
+                let e = entry_at(beam, *beam_len);
+                e.order.clear();
+                e.order.push(seed);
+                set_mask_len(&mut e.mask, words);
+                mask_set(&mut e.mask, seed);
+                e.cursor.resume_from(base);
+                e.cursor.push_task_compiled(table, seed);
+                e.score = gated_score(
+                    prune,
+                    cutoff,
+                    counters,
+                    &mut prev,
+                    table.twin_class(seed),
+                    common.max(base.clock() + table.sequential_secs(seed)),
+                    |thr| {
+                        rollout_score_bounded(
+                            probe, &e.cursor, &e.mask, firsts, table, |p| p, thr,
+                        )
+                    },
+                );
+                *beam_len += 1;
+            }
         }
         beam[..*beam_len].sort_unstable_by(|a, b| {
             a.score.total_cmp(&b.score).then(a.order[0].cmp(&b.order[0]))
@@ -245,24 +308,63 @@ pub(crate) fn beam_over_table(
         *beam_len = (*beam_len).min(width);
 
         // ---- greedy expansion: extend each surviving prefix by every
-        // absent candidate, score by resuming the prefix cursor (never by
-        // replaying the prefix), keep the `width` best.
+        // absent candidate (walked in rollout-rank order so spec twins
+        // collapse), score survivors by resuming the prefix cursor under
+        // the round's admission cutoff, keep the `width` best. The cutoff
+        // seed is sound because each sorted parent's firsts-head
+        // extension replays the parent's own rollout bit-exactly.
         for _depth in 1..n {
             cands.clear();
+            let seed_thr = if prune && *beam_len >= width {
+                beam[width - 1].score
+            } else {
+                f64::INFINITY
+            };
+            cutoff.reset(width, seed_thr);
             for p in 0..*beam_len {
                 let parent = &beam[p];
-                for cand in 0..n {
+                debug_assert_mask_sized(&parent.mask, n);
+                let p_bound = if prune {
+                    let (rem_htd, rem_k, rem_dth, min_tail) = remaining_floor(
+                        n,
+                        table,
+                        |pos| pos,
+                        |pos| mask_contains(&parent.mask, pos),
+                    );
+                    parent
+                        .cursor
+                        .lower_bound_with_remaining(rem_htd, rem_k, rem_dth)
+                        .max(parent.cursor.clock() + rem_htd + min_tail)
+                } else {
+                    0.0
+                };
+                let mut prev: Option<(u32, f64)> = None;
+                for &cand in firsts.iter() {
                     if mask_contains(&parent.mask, cand) {
                         continue;
                     }
-                    probe.resume_from(&parent.cursor);
-                    probe.push_task_compiled(table, cand);
-                    for &r in firsts.iter() {
-                        if r != cand && !mask_contains(&parent.mask, r) {
-                            probe.push_task_compiled(table, r);
-                        }
-                    }
-                    let score = probe.run_to_quiescence();
+                    let score = gated_score(
+                        prune,
+                        cutoff,
+                        counters,
+                        &mut prev,
+                        table.twin_class(cand),
+                        p_bound.max(
+                            parent.cursor.clock() + table.sequential_secs(cand),
+                        ),
+                        |thr| {
+                            score_candidate_bounded(
+                                probe,
+                                &parent.cursor,
+                                &parent.mask,
+                                cand,
+                                firsts,
+                                table,
+                                |p| p,
+                                thr,
+                            )
+                        },
+                    );
                     cands.push(Cand {
                         parent: p as u32,
                         cand: cand as u32,
@@ -288,9 +390,11 @@ pub(crate) fn beam_over_table(
         }
 
         // ---- final orders are complete, so their score IS the simulated
-        // makespan; the beam is sorted ascending with the generation-order
-        // tie-break, so beam[0] is exactly what the replay path's
-        // `min_by` (first of equal minima) selects.
+        // makespan (pruned candidates can never be kept: every prune is a
+        // proof of strict exclusion from the top-w); the beam is sorted
+        // ascending with the generation-order tie-break, so beam[0] is
+        // exactly what the replay path's `min_by` (first of equal minima)
+        // selects.
         out.clone_from(&beam[0].order);
         if width == 1 {
             return;
@@ -327,54 +431,6 @@ pub(crate) fn rank_firsts(table: &TaskTable, firsts: &mut Vec<usize>) {
             .then(table.dth_secs(b).total_cmp(&table.dth_secs(a)))
             .then(a.cmp(&b))
     });
-}
-
-/// The deterministic candidate ordering: ascending score, generation
-/// order (parent, cand) as the tie-break. Shared with `sched::parallel`
-/// so the merge of parallel-scored candidates is bit-identical.
-pub(crate) fn cand_cmp(a: &Cand, b: &Cand) -> std::cmp::Ordering {
-    a.score
-        .total_cmp(&b.score)
-        .then(a.parent.cmp(&b.parent))
-        .then(a.cand.cmp(&b.cand))
-}
-
-/// Fetch (or lazily grow) the pooled entry at `idx`.
-pub(crate) fn entry_at(pool: &mut Vec<BeamEntry>, idx: usize) -> &mut BeamEntry {
-    while pool.len() <= idx {
-        pool.push(BeamEntry::placeholder());
-    }
-    &mut pool[idx]
-}
-
-pub(crate) fn set_mask_len(mask: &mut Vec<u64>, words: usize) {
-    mask.clear();
-    mask.resize(words, 0);
-}
-
-/// Pruning score of a paused prefix cursor: the simulated makespan of the
-/// prefix *completed by a cheap deterministic rollout* of the remaining
-/// tasks (sorted by descending K - HtD, the select_first rule applied
-/// repeatedly). A pure prefix-makespan or lower-bound score is loose
-/// exactly on the branches that later turn bad, which mis-prunes the
-/// beam; a rollout scores every prefix by a *realizable* full completion,
-/// so the kept prefixes are the ones that can actually finish early. For
-/// a complete order the rollout is empty and the score is the exact
-/// simulated makespan.
-pub(crate) fn rollout_score(
-    probe: &mut SimCursor,
-    prefix: &SimCursor,
-    mask: &[u64],
-    rollout_rank: &[usize],
-    table: &TaskTable,
-) -> f64 {
-    probe.resume_from(prefix);
-    for &r in rollout_rank {
-        if !mask_contains(mask, r) {
-            probe.push_task_compiled(table, r);
-        }
-    }
-    probe.run_to_quiescence()
 }
 
 /// Exact simulated makespan of a complete order, on a pooled cursor.
@@ -638,8 +694,8 @@ mod tests {
 
     #[test]
     fn matches_replay_on_catalogs() {
-        // The resumable search must return exactly the order the
-        // pre-refactor implementation returned.
+        // The resumable (and pruned) search must return exactly the order
+        // the pre-refactor implementation returned.
         for dev in ["amd_r9", "k20c", "xeon_phi"] {
             let p = profile_by_name(dev).unwrap();
             for label in benchmark_labels() {
@@ -661,6 +717,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pruned_matches_unpruned_and_counters_fire_on_twins() {
+        // Twin-rich group: the 4-spec BK50 catalog repeated to T=12.
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let tasks: Vec<crate::task::TaskSpec> =
+            (0..12).map(|i| g.tasks[i % 4].clone()).collect();
+        let mut pruned = BeamScratch::new();
+        let mut plain = BeamScratch::with_pruning(false);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for width in [1usize, 3] {
+            batch_reorder_beam_into(
+                &tasks,
+                &p,
+                EngineState::default(),
+                width,
+                &mut pruned,
+                &mut a,
+            );
+            batch_reorder_beam_into(
+                &tasks,
+                &p,
+                EngineState::default(),
+                width,
+                &mut plain,
+                &mut b,
+            );
+            assert_eq!(a, b, "width {width}");
+        }
+        let c = pruned.prune_counters();
+        assert!(c.n_twin_collapsed > 0, "twin-rich group never collapsed: {c:?}");
+        assert!(
+            c.n_cands_pruned + c.n_rollouts_early_exit > 0,
+            "bound layer never fired: {c:?}"
+        );
+        let c0 = plain.prune_counters();
+        assert_eq!(c0.total_saved(), 0, "pruning-off scratch must not count");
     }
 
     #[test]

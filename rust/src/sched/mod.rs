@@ -11,6 +11,12 @@
 //!   stream: the uncommitted suffix is re-scored against a committed
 //!   prefix's paused cursor state, admission-controlled by a
 //!   predicted-vs-measured drift gate.
+//! * `search_util` — plumbing shared by the three beam searches (pooled
+//!   entries, membership masks, the deterministic candidate ordering) and
+//!   the bound-gated pruning layer (admission cutoffs, admissible floors,
+//!   bounded rollouts, spec-twin collapse) they all consult — provably
+//!   result-invariant, so every search stays bit-identical with pruning
+//!   on or off.
 //! * `bruteforce` — exhaustive / sampled permutation evaluation (the
 //!   NoReorder experimental setup of §6.2).
 //! * `baselines` — classic orderings (FIFO, random, SJF, LPT-kernel,
@@ -22,6 +28,7 @@ pub mod heuristic;
 pub mod multidevice;
 pub mod online;
 pub mod parallel;
+pub mod search_util;
 
 pub use bruteforce::{permutations, OrderStats};
 pub use heuristic::{batch_reorder, batch_reorder_beam_into, BeamScratch};
@@ -31,3 +38,4 @@ pub use parallel::{
     batch_reorder_beam_parallel_into, batch_reorder_table_parallel_into,
     ParBeamScratch, ScoringPool,
 };
+pub use search_util::PruneCounters;

@@ -51,14 +51,26 @@
 //! thief's suffix, so they flow through the same gate + re-plan path;
 //! per-worker FIFO is preserved because a worker never has two
 //! submissions outstanding at once.
+//!
+//! The suffix beam shares the bound-gated pruning layer of
+//! `sched::search_util`: per-round admission cutoffs, admissible
+//! remaining-work floors against the committed prefix's paused clock,
+//! spec-twin candidate collapse and bounded rollouts — all provably
+//! result-invariant, so re-plans stay bit-identical with pruning on or
+//! off while most provable losers cost O(1) instead of a full suffix
+//! simulation. Efficacy counters surface through
+//! [`OnlineScratch::prune_counters`] into `LaneStats`.
 
 use std::time::Duration;
 
 use crate::model::simulator::SimCursor;
 use crate::model::TaskTable;
-use crate::sched::heuristic::{
-    cand_cmp, entry_at, mask_contains, mask_set, mask_words, set_mask_len,
-    BeamEntry, Cand, DEFAULT_BEAM_WIDTH,
+use crate::sched::heuristic::DEFAULT_BEAM_WIDTH;
+use crate::sched::search_util::{
+    cand_cmp, debug_assert_mask_sized, entry_at, gated_score, mask_contains,
+    mask_set, mask_words, remaining_floor, rollout_score_bounded,
+    score_candidate_bounded, set_mask_len, BeamEntry, Cand, PruneCounters,
+    RunningCutoff,
 };
 
 /// Knobs of the online (mid-group) rescheduling runtime. Consumed by
@@ -190,8 +202,9 @@ pub struct Replan {
 }
 
 /// Reusable arena for suffix re-plans: pooled beam entries, probe cursor,
-/// candidate list and rollout ranking. After warm-up at a given suffix
-/// size, re-plans through the same scratch perform no heap allocation.
+/// candidate list, rollout ranking and the pruning layer's cutoff buffer.
+/// After warm-up at a given suffix size, re-plans through the same
+/// scratch perform no heap allocation.
 pub struct OnlineScratch {
     probe: SimCursor,
     beam: Vec<BeamEntry>,
@@ -204,10 +217,21 @@ pub struct OnlineScratch {
     greedy: Vec<usize>,
     /// Beam result buffer (row values), compared against the incumbent.
     best: Vec<usize>,
+    pruning: bool,
+    cutoff: RunningCutoff,
+    counters: PruneCounters,
 }
 
 impl OnlineScratch {
     pub fn new() -> OnlineScratch {
+        Self::with_pruning(true)
+    }
+
+    /// `pruning: false` disables the bound-gated layer — every candidate
+    /// suffix rollout is simulated to quiescence. Results are
+    /// bit-identical either way (rust/tests/prop_bounds.rs); the switch
+    /// backs that test.
+    pub fn with_pruning(pruning: bool) -> OnlineScratch {
         OnlineScratch {
             probe: SimCursor::detached(),
             beam: Vec::new(),
@@ -217,7 +241,24 @@ impl OnlineScratch {
             firsts: Vec::new(),
             greedy: Vec::new(),
             best: Vec::new(),
+            pruning,
+            cutoff: RunningCutoff::default(),
+            counters: PruneCounters::default(),
         }
+    }
+
+    pub fn set_pruning(&mut self, pruning: bool) {
+        self.pruning = pruning;
+    }
+
+    /// Pruning efficacy counters accumulated since construction (or the
+    /// last [`OnlineScratch::reset_prune_counters`]).
+    pub fn prune_counters(&self) -> PruneCounters {
+        self.counters
+    }
+
+    pub fn reset_prune_counters(&mut self) {
+        self.counters = PruneCounters::default();
     }
 }
 
@@ -305,8 +346,19 @@ fn beam_suffix(
     let words = mask_words(m);
 
     {
-        let OnlineScratch { probe, beam, next, beam_len, cands, firsts, .. } =
-            scratch;
+        let OnlineScratch {
+            probe,
+            beam,
+            next,
+            beam_len,
+            cands,
+            firsts,
+            pruning,
+            cutoff,
+            counters,
+            ..
+        } = scratch;
+        let prune = *pruning;
 
         // Rollout rank over suffix positions: Algorithm 1's select-first
         // key (K - HtD desc, DtH desc, position asc), read off the table.
@@ -320,20 +372,68 @@ fn beam_suffix(
                 .then(a.cmp(&b))
         });
 
-        // ---- seed the beam (same policy as the closed-group search).
+        // ---- seed the beam (same policy as the closed-group search,
+        // walked in rollout-rank order so spec-twin seeds collapse).
         *beam_len = 0;
-        let n_seeds = if width == 1 { 1 } else { m };
-        for s in 0..n_seeds {
-            let seed = if width == 1 { firsts[0] } else { s };
-            let e = entry_at(beam, *beam_len);
+        if width == 1 {
+            let seed = firsts[0];
+            let e = entry_at(beam, 0);
             e.order.clear();
             e.order.push(seed);
             set_mask_len(&mut e.mask, words);
             mask_set(&mut e.mask, seed);
             e.cursor.resume_from(base);
             e.cursor.push_task_compiled(table, rows[seed]);
-            e.score = suffix_rollout(probe, &e.cursor, &e.mask, firsts, rows, table);
-            *beam_len += 1;
+            e.score = rollout_score_bounded(
+                probe,
+                &e.cursor,
+                &e.mask,
+                firsts,
+                table,
+                |pos| rows[pos],
+                f64::INFINITY,
+            )
+            .expect("unbounded rollout always completes");
+            *beam_len = 1;
+        } else {
+            cutoff.reset(width, f64::INFINITY);
+            // The suffix is an arbitrary row subset, so the whole-group
+            // aggregates don't apply: scan the suffix once.
+            let (rem_htd, rem_k, rem_dth, min_tail) =
+                remaining_floor(m, table, |pos| rows[pos], |_| false);
+            let common = base
+                .lower_bound_with_remaining(rem_htd, rem_k, rem_dth)
+                .max(base.clock() + rem_htd + min_tail);
+            let mut prev: Option<(u32, f64)> = None;
+            for &seed in firsts.iter() {
+                let e = entry_at(beam, *beam_len);
+                e.order.clear();
+                e.order.push(seed);
+                set_mask_len(&mut e.mask, words);
+                mask_set(&mut e.mask, seed);
+                e.cursor.resume_from(base);
+                e.cursor.push_task_compiled(table, rows[seed]);
+                e.score = gated_score(
+                    prune,
+                    cutoff,
+                    counters,
+                    &mut prev,
+                    table.twin_class(rows[seed]),
+                    common.max(base.clock() + table.sequential_secs(rows[seed])),
+                    |thr| {
+                        rollout_score_bounded(
+                            probe,
+                            &e.cursor,
+                            &e.mask,
+                            firsts,
+                            table,
+                            |pos| rows[pos],
+                            thr,
+                        )
+                    },
+                );
+                *beam_len += 1;
+            }
         }
         beam[..*beam_len].sort_unstable_by(|a, b| {
             a.score.total_cmp(&b.score).then(a.order[0].cmp(&b.order[0]))
@@ -341,26 +441,66 @@ fn beam_suffix(
         *beam_len = (*beam_len).min(width);
 
         // ---- expansion: extend each surviving prefix by every absent
-        // position, scored by resume (never by prefix replay).
+        // position (walked in rollout-rank order so spec twins collapse),
+        // scored by bounded resume under the round's admission cutoff
+        // (never by prefix replay).
         for _depth in 1..m {
             cands.clear();
+            let seed_thr = if prune && *beam_len >= width {
+                beam[width - 1].score
+            } else {
+                f64::INFINITY
+            };
+            cutoff.reset(width, seed_thr);
             for p in 0..*beam_len {
                 let parent = &beam[p];
-                for cand in 0..m {
+                debug_assert_mask_sized(&parent.mask, m);
+                let p_bound = if prune {
+                    let (rem_htd, rem_k, rem_dth, min_tail) = remaining_floor(
+                        m,
+                        table,
+                        |pos| rows[pos],
+                        |pos| mask_contains(&parent.mask, pos),
+                    );
+                    parent
+                        .cursor
+                        .lower_bound_with_remaining(rem_htd, rem_k, rem_dth)
+                        .max(parent.cursor.clock() + rem_htd + min_tail)
+                } else {
+                    0.0
+                };
+                let mut prev: Option<(u32, f64)> = None;
+                for &cand in firsts.iter() {
                     if mask_contains(&parent.mask, cand) {
                         continue;
                     }
-                    probe.resume_from(&parent.cursor);
-                    probe.push_task_compiled(table, rows[cand]);
-                    for &r in firsts.iter() {
-                        if r != cand && !mask_contains(&parent.mask, r) {
-                            probe.push_task_compiled(table, rows[r]);
-                        }
-                    }
+                    let score = gated_score(
+                        prune,
+                        cutoff,
+                        counters,
+                        &mut prev,
+                        table.twin_class(rows[cand]),
+                        p_bound.max(
+                            parent.cursor.clock()
+                                + table.sequential_secs(rows[cand]),
+                        ),
+                        |thr| {
+                            score_candidate_bounded(
+                                probe,
+                                &parent.cursor,
+                                &parent.mask,
+                                cand,
+                                firsts,
+                                table,
+                                |pos| rows[pos],
+                                thr,
+                            )
+                        },
+                    );
                     cands.push(Cand {
                         parent: p as u32,
                         cand: cand as u32,
-                        score: probe.run_to_quiescence(),
+                        score,
                     });
                 }
             }
@@ -402,25 +542,6 @@ fn beam_suffix(
     };
     scratch.greedy = greedy;
     chosen
-}
-
-/// Rollout completion of a suffix prefix: resume the paused prefix on the
-/// probe, push every absent suffix row in rank order, finish.
-fn suffix_rollout(
-    probe: &mut SimCursor,
-    prefix: &SimCursor,
-    mask: &[u64],
-    rank: &[usize],
-    rows: &[usize],
-    table: &TaskTable,
-) -> f64 {
-    probe.resume_from(prefix);
-    for &pos in rank {
-        if !mask_contains(mask, pos) {
-            probe.push_task_compiled(table, rows[pos]);
-        }
-    }
-    probe.run_to_quiescence()
 }
 
 #[cfg(test)]

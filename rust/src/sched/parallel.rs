@@ -31,6 +31,22 @@
 //!   the memo outright: no key could ever repeat, so building keys would
 //!   only serialize work on the coordinating thread.
 //!
+//! # Bound-gated pruning (post-PR-4)
+//!
+//! The serial search's branch-and-bound layer (see `sched::search_util`)
+//! applies here too: the coordinator statically prunes candidates whose
+//! admissible floor (parent prefix clock + remaining-work floor, or the
+//! candidate's sequential floor) provably and strictly exceeds the parent
+//! beam's w-th admitted score, and each stripe scores its survivors with
+//! *bounded* rollouts under a per-stripe running cutoff (seeded from the
+//! same w-th admitted score). Pruned candidates are marked `INFINITY`;
+//! every prune is a proof of strict exclusion from the kept top-w, so the
+//! merge — and therefore the returned order — is bit-identical to the
+//! unpruned search for every thread count (rust/tests/prop_bounds.rs).
+//! Prune/early-exit/twin counters are surfaced via
+//! `ParBeamScratch::prune_counters` into `LaneStats` and the
+//! BENCH_*.json trajectories.
+//!
 //! # Determinism
 //!
 //! Work is partitioned by candidate index (stride = stripe count), every
@@ -48,9 +64,12 @@ use crate::config::DeviceProfile;
 use crate::model::simulator::SimCursor;
 use crate::model::tasktable::fnv64;
 use crate::model::{EngineState, TaskTable};
-use crate::sched::heuristic::{
-    cand_cmp, entry_at, mask_contains, mask_set, mask_words, order_makespan,
-    rank_firsts, rollout_score, set_mask_len, BeamEntry, Cand,
+use crate::sched::heuristic::{order_makespan, rank_firsts};
+use crate::sched::search_util::{
+    cand_cmp, debug_assert_mask_sized, entry_at, mask_contains, mask_set,
+    mask_words, provably_worse, remaining_floor, rollout_score_bounded,
+    score_candidate_bounded, set_mask_len, BeamEntry, Cand, PruneCounters,
+    RunningCutoff,
 };
 use crate::task::TaskSpec;
 
@@ -328,6 +347,9 @@ impl SpecMemo {
 pub struct ParBeamScratch {
     pool: ScoringPool,
     probes: Vec<Mutex<SimCursor>>,
+    /// Per-stripe running admission cutoffs (pooled so warm rounds stay
+    /// allocation-free; each stripe locks only its own slot).
+    cutoffs: Vec<Mutex<RunningCutoff>>,
     table: TaskTable,
     base: SimCursor,
     beam: Vec<BeamEntry>,
@@ -342,6 +364,11 @@ pub struct ParBeamScratch {
     sig_buf: Vec<u64>,
     sig_off: Vec<(u32, u32)>,
     memo: SpecMemo,
+    pruning: bool,
+    /// Coordinator-side static prunes.
+    counters: PruneCounters,
+    /// Stripe-side bounded-rollout aborts.
+    early_exits: AtomicU64,
 }
 
 impl ParBeamScratch {
@@ -351,9 +378,13 @@ impl ParBeamScratch {
         let pool = ScoringPool::new(threads);
         let probes =
             (0..pool.stripes()).map(|_| Mutex::new(SimCursor::detached())).collect();
+        let cutoffs = (0..pool.stripes())
+            .map(|_| Mutex::new(RunningCutoff::default()))
+            .collect();
         ParBeamScratch {
             pool,
             probes,
+            cutoffs,
             table: TaskTable::new(),
             base: SimCursor::detached(),
             beam: Vec::new(),
@@ -368,6 +399,9 @@ impl ParBeamScratch {
             sig_buf: Vec::new(),
             sig_off: Vec::new(),
             memo: SpecMemo::default(),
+            pruning: true,
+            counters: PruneCounters::default(),
+            early_exits: AtomicU64::new(0),
         }
     }
 
@@ -379,7 +413,29 @@ impl ParBeamScratch {
     pub fn memo_stats(&self) -> (usize, usize) {
         (self.memo.hits, self.memo.misses)
     }
+
+    /// Disable/enable the bound-gated pruning layer (results are
+    /// bit-identical either way; the switch backs the equivalence
+    /// property tests and the pruned-vs-unpruned bench rows).
+    pub fn set_pruning(&mut self, pruning: bool) {
+        self.pruning = pruning;
+    }
+
+    /// Pruning efficacy since construction: coordinator-side static
+    /// prunes, stripe-side bounded-rollout aborts, and transposition-memo
+    /// hits (the parallel path's twin collapse).
+    pub fn prune_counters(&self) -> PruneCounters {
+        PruneCounters {
+            n_cands_pruned: self.counters.n_cands_pruned,
+            n_rollouts_early_exit: self.early_exits.load(Ordering::Relaxed),
+            n_twin_collapsed: self.memo.hits as u64,
+        }
+    }
 }
+
+/// `cand_slot` marker for statically-pruned candidates (no scoring slot;
+/// the merge fills in the `INFINITY` exclusion marker directly).
+const PRUNED_SLOT: u32 = u32::MAX;
 
 /// Truncate-or-grow the score slots without shrinking capacity.
 fn resize_scores(scores: &mut Vec<AtomicU64>, n: usize) {
@@ -448,6 +504,7 @@ fn parallel_over_table(
         let ParBeamScratch {
             pool,
             probes,
+            cutoffs,
             base,
             beam,
             next,
@@ -460,14 +517,21 @@ fn parallel_over_table(
             sig_buf,
             sig_off,
             memo,
+            pruning,
+            counters,
+            early_exits,
             ..
         } = scratch;
+        let prune = *pruning;
 
         rank_firsts(table, firsts);
         base.reset_params(table.params(), init);
 
         // ---- seed the beam (same seeds as the serial search), then
-        // score every seed's rollout in parallel.
+        // score every seed's rollout in parallel — bounded by a
+        // per-stripe running cutoff (no cross-parent guarantee exists
+        // yet, so each stripe's cutoff starts at infinity and tightens
+        // with its own exact scores).
         *beam_len = 0;
         let n_seeds = if width == 1 { 1 } else { n };
         for s in 0..n_seeds {
@@ -487,6 +551,8 @@ fn parallel_over_table(
             let scores_ro: &[AtomicU64] = scores;
             let firsts_ro: &[usize] = firsts;
             let probes_ro: &[Mutex<SimCursor>] = probes;
+            let cutoffs_ro: &[Mutex<RunningCutoff>] = cutoffs;
+            let early_ro: &AtomicU64 = early_exits;
             let stripes = pool.stripes();
             let job = move |stripe: usize| {
                 // Poison-tolerant: every probe use starts with
@@ -496,13 +562,31 @@ fn parallel_over_table(
                 let mut probe = probes_ro[stripe]
                     .lock()
                     .unwrap_or_else(PoisonError::into_inner);
+                let mut co = cutoffs_ro[stripe]
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                co.reset(width, f64::INFINITY);
                 let mut i = stripe;
                 while i < beam_ro.len() {
                     let e = &beam_ro[i];
-                    let m = rollout_score(
+                    let thr =
+                        if prune { co.threshold() } else { f64::INFINITY };
+                    match rollout_score_bounded(
                         &mut probe, &e.cursor, &e.mask, firsts_ro, table,
-                    );
-                    scores_ro[i].store(m.to_bits(), Ordering::Relaxed);
+                        |p| p, thr,
+                    ) {
+                        Some(m) => {
+                            co.offer(m);
+                            scores_ro[i].store(m.to_bits(), Ordering::Relaxed);
+                        }
+                        None => {
+                            early_ro.fetch_add(1, Ordering::Relaxed);
+                            scores_ro[i].store(
+                                f64::INFINITY.to_bits(),
+                                Ordering::Relaxed,
+                            );
+                        }
+                    }
                     i += stripes;
                 }
             };
@@ -516,10 +600,11 @@ fn parallel_over_table(
         });
         *beam_len = (*beam_len).min(width);
 
-        // ---- expansion: generate candidates on the coordinator (with
-        // memo dedup), score unique candidates in parallel stripes,
-        // merge deterministically. The memo can only ever hit when the
-        // group carries spec twins, so all-distinct groups skip the key
+        // ---- expansion: generate candidates on the coordinator (static
+        // bound pre-prune + memo dedup), score surviving unique
+        // candidates in parallel stripes under bounded rollouts, merge
+        // deterministically. The memo can only ever hit when the group
+        // carries spec twins, so all-distinct groups skip the key
         // building entirely — it would be pure serialized overhead on
         // the coordinating thread.
         let use_memo = table.has_spec_twins();
@@ -534,14 +619,53 @@ fn parallel_over_table(
                     sig_off.push((off as u32, (sig_buf.len() - off) as u32));
                 }
             }
+            // Round admission cutoff: each sorted parent's firsts-head
+            // extension achieves the parent's score bit-exactly, so a
+            // full beam guarantees `width` candidates at or below its
+            // w-th admitted score before anything is simulated.
+            let round_cutoff = if prune && *beam_len >= width {
+                beam[width - 1].score
+            } else {
+                f64::INFINITY
+            };
             cands.clear();
             cand_slot.clear();
             items.clear();
             for p in 0..*beam_len {
                 let parent = &beam[p];
+                debug_assert_mask_sized(&parent.mask, n);
+                let p_bound = if prune {
+                    let (rem_htd, rem_k, rem_dth, min_tail) = remaining_floor(
+                        n,
+                        table,
+                        |pos| pos,
+                        |pos| mask_contains(&parent.mask, pos),
+                    );
+                    parent
+                        .cursor
+                        .lower_bound_with_remaining(rem_htd, rem_k, rem_dth)
+                        .max(parent.cursor.clock() + rem_htd + min_tail)
+                } else {
+                    0.0
+                };
                 for cand in 0..n {
                     if mask_contains(&parent.mask, cand) {
                         continue;
+                    }
+                    if prune {
+                        let bound = p_bound.max(
+                            parent.cursor.clock() + table.sequential_secs(cand),
+                        );
+                        if provably_worse(bound, round_cutoff) {
+                            counters.n_cands_pruned += 1;
+                            cand_slot.push(PRUNED_SLOT);
+                            cands.push(Cand {
+                                parent: p as u32,
+                                cand: cand as u32,
+                                score: 0.0,
+                            });
+                            continue;
+                        }
                     }
                     let slot = if use_memo {
                         let (soff, slen) = sig_off[p];
@@ -575,36 +699,60 @@ fn parallel_over_table(
                 let scores_ro: &[AtomicU64] = scores;
                 let firsts_ro: &[usize] = firsts;
                 let probes_ro: &[Mutex<SimCursor>] = probes;
+                let cutoffs_ro: &[Mutex<RunningCutoff>] = cutoffs;
+                let early_ro: &AtomicU64 = early_exits;
                 let items_ro: &[(u32, u32)] = items;
                 let stripes = pool.stripes();
                 let job = move |stripe: usize| {
                     let mut probe = probes_ro[stripe]
                         .lock()
                         .unwrap_or_else(PoisonError::into_inner);
+                    let mut co = cutoffs_ro[stripe]
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner);
+                    co.reset(width, round_cutoff);
                     let mut i = stripe;
                     while i < items_ro.len() {
                         let (p, cand) = items_ro[i];
                         let parent = &beam_ro[p as usize];
-                        probe.resume_from(&parent.cursor);
-                        probe.push_task_compiled(table, cand as usize);
-                        for &r in firsts_ro {
-                            if r != cand as usize
-                                && !mask_contains(&parent.mask, r)
-                            {
-                                probe.push_task_compiled(table, r);
+                        let thr =
+                            if prune { co.threshold() } else { f64::INFINITY };
+                        match score_candidate_bounded(
+                            &mut probe,
+                            &parent.cursor,
+                            &parent.mask,
+                            cand as usize,
+                            firsts_ro,
+                            table,
+                            |p| p,
+                            thr,
+                        ) {
+                            Some(m) => {
+                                co.offer(m);
+                                scores_ro[i]
+                                    .store(m.to_bits(), Ordering::Relaxed);
+                            }
+                            None => {
+                                early_ro.fetch_add(1, Ordering::Relaxed);
+                                scores_ro[i].store(
+                                    f64::INFINITY.to_bits(),
+                                    Ordering::Relaxed,
+                                );
                             }
                         }
-                        let m = probe.run_to_quiescence();
-                        scores_ro[i].store(m.to_bits(), Ordering::Relaxed);
                         i += stripes;
                     }
                 };
                 pool.run(&job);
             }
             for (k, c) in cands.iter_mut().enumerate() {
-                c.score = f64::from_bits(
-                    scores[cand_slot[k] as usize].load(Ordering::Relaxed),
-                );
+                c.score = if cand_slot[k] == PRUNED_SLOT {
+                    f64::INFINITY
+                } else {
+                    f64::from_bits(
+                        scores[cand_slot[k] as usize].load(Ordering::Relaxed),
+                    )
+                };
             }
             cands.sort_unstable_by(cand_cmp);
             let keep = width.min(cands.len());

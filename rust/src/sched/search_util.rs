@@ -1,0 +1,483 @@
+//! Shared plumbing of the three beam searches (`sched::heuristic`,
+//! `sched::parallel`, `sched::online`) plus the **bound-gated pruning
+//! layer** they all consult before paying for a rollout simulation.
+//!
+//! The plumbing half (pooled beam entries, u64-word membership masks, the
+//! deterministic candidate ordering) used to live in `sched::heuristic`
+//! and was reached into cross-module via `pub(crate)` imports; it is
+//! hoisted here so the online replanner and any future search reuse it
+//! without reach-ins.
+//!
+//! # The pruning layer, and why it cannot change any result
+//!
+//! Every candidate in the searches is scored by a *full completion*: the
+//! prefix extended by the candidate and a deterministic rollout of every
+//! remaining task. Candidates are then ranked by `cand_cmp` — score
+//! first (`total_cmp`), generation order as the tie-break — and the best
+//! `w` survive. A candidate whose true score **strictly** exceeds the
+//! `w`-th admitted score therefore cannot survive under any tie-break, so
+//! skipping its simulation is invisible in the returned order. Three
+//! mechanisms prove "strictly worse" without paying for the simulation:
+//!
+//! 1. **Admission cutoffs** (`RunningCutoff`): the running `w`-th
+//!    smallest exact score seen this expansion round, seeded with the
+//!    parent beam's `w`-th admitted score — which is itself guaranteed to
+//!    be achieved bit-exactly by each sorted parent's firsts-head
+//!    extension (that extension replays the parent's own rollout).
+//! 2. **Static floors** (`remaining_floor` + the table's group
+//!    aggregates + `SimCursor::lower_bound_with_remaining`): per-engine
+//!    envelopes extended by the remaining solo-rate work, the paused
+//!    prefix clock plus remaining HtD work plus the smallest remaining
+//!    kernel+DtH tail, and the candidate's own sequential floor —
+//!    admissible completion bounds costing O(T) per parent and O(1) per
+//!    candidate. Compared through `provably_worse`, which keeps both a
+//!    relative and an absolute safety margin: the floors are
+//!    mathematically admissible but accumulate float rounding
+//!    differently from the event loop (whose EPS tolerances are
+//!    *absolute*, 1e-12 s per event), and the combined margin dwarfs any
+//!    such disagreement while costing no real pruning power.
+//! 3. **Early exit** (`SimCursor::run_to_quiescence_bounded`): the
+//!    simulated clock is monotone and never exceeds the final makespan,
+//!    so a rollout whose clock strictly passes the cutoff aborts — this
+//!    comparison shares the event loop's own arithmetic and needs no
+//!    margin at all.
+//!
+//! Spec-twin candidates (`TaskTable::twin_class`) collapse on top: two
+//! candidates of one parent that are adjacent among the parent's
+//! remaining tasks in rollout-rank order and share a twin class push
+//! byte-identical row sequences, so the representative's score (exact or
+//! pruned marker) is reused bit-for-bit.
+//!
+//! Pruned candidates are marked with `f64::INFINITY`; since they are
+//! proven out of the kept top-`w`, the marker only has to sort them after
+//! every admitted score, which `total_cmp` guarantees. All comparisons
+//! that *admit* a prune use plain `>` so NaN scores (degenerate profiles)
+//! never prune anything — they sort last exactly as before.
+
+use crate::model::simulator::SimCursor;
+use crate::model::TaskTable;
+
+#[inline]
+pub(crate) fn mask_words(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+#[inline]
+pub(crate) fn mask_contains(mask: &[u64], i: usize) -> bool {
+    debug_assert!(
+        i >> 6 < mask.len(),
+        "membership mask not sized for index {i}; call set_mask_len first"
+    );
+    mask[i >> 6] & (1u64 << (i & 63)) != 0
+}
+
+#[inline]
+pub(crate) fn mask_set(mask: &mut [u64], i: usize) {
+    debug_assert!(
+        i >> 6 < mask.len(),
+        "membership mask not sized for index {i}; call set_mask_len first"
+    );
+    mask[i >> 6] |= 1u64 << (i & 63);
+}
+
+pub(crate) fn set_mask_len(mask: &mut Vec<u64>, words: usize) {
+    mask.clear();
+    mask.resize(words, 0);
+}
+
+/// Debug guard against reusing scratch masks across differently-sized
+/// groups without re-sizing them: an oversized mask with stale high bits
+/// is panic-free but silently wrong (phantom members), an undersized one
+/// panics on index. Call at search loop entry with the group size.
+#[inline]
+pub(crate) fn debug_assert_mask_sized(mask: &[u64], n: usize) {
+    debug_assert!(
+        mask.len() == mask_words(n),
+        "membership mask has {} words but the group needs {}; size scratch \
+         masks via set_mask_len before use",
+        mask.len(),
+        mask_words(n)
+    );
+}
+
+/// One surviving beam prefix: its order, membership bitmask, pruning
+/// score, and the paused simulation of exactly that prefix. Shared by all
+/// three searches.
+pub(crate) struct BeamEntry {
+    pub(crate) order: Vec<usize>,
+    pub(crate) mask: Vec<u64>,
+    pub(crate) cursor: SimCursor,
+    pub(crate) score: f64,
+}
+
+impl BeamEntry {
+    fn placeholder() -> BeamEntry {
+        BeamEntry {
+            order: Vec::new(),
+            mask: Vec::new(),
+            cursor: SimCursor::detached(),
+            score: 0.0,
+        }
+    }
+}
+
+/// A candidate extension generated during one expansion step. `parent`
+/// and `cand` double as the deterministic tie-break, reproducing the
+/// stable generation order of the pre-refactor sort.
+#[derive(Clone, Copy)]
+pub(crate) struct Cand {
+    pub(crate) parent: u32,
+    pub(crate) cand: u32,
+    pub(crate) score: f64,
+}
+
+/// The deterministic candidate ordering: ascending score, generation
+/// order (parent, cand) as the tie-break. Total, so candidate generation
+/// order is irrelevant to the merge.
+pub(crate) fn cand_cmp(a: &Cand, b: &Cand) -> std::cmp::Ordering {
+    a.score
+        .total_cmp(&b.score)
+        .then(a.parent.cmp(&b.parent))
+        .then(a.cand.cmp(&b.cand))
+}
+
+/// Fetch (or lazily grow) the pooled entry at `idx`.
+pub(crate) fn entry_at(pool: &mut Vec<BeamEntry>, idx: usize) -> &mut BeamEntry {
+    while pool.len() <= idx {
+        pool.push(BeamEntry::placeholder());
+    }
+    &mut pool[idx]
+}
+
+// ---------------------------------------------------------------------------
+// Bound-gated pruning layer
+// ---------------------------------------------------------------------------
+
+/// Pruning efficacy counters, accumulated per search scratch and surfaced
+/// through `LaneStats` and the BENCH_*.json trajectories.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PruneCounters {
+    /// Candidates skipped outright: their static admissible floor already
+    /// proved them strictly worse than the round's admission cutoff.
+    pub n_cands_pruned: u64,
+    /// Bounded rollouts aborted mid-simulation by the clock cutoff.
+    pub n_rollouts_early_exit: u64,
+    /// Candidates that reused a spec-twin representative's score instead
+    /// of simulating (serial twin collapse; transposition-memo hits on
+    /// the parallel path).
+    pub n_twin_collapsed: u64,
+}
+
+impl PruneCounters {
+    pub fn merge(&mut self, other: &PruneCounters) {
+        self.n_cands_pruned += other.n_cands_pruned;
+        self.n_rollouts_early_exit += other.n_rollouts_early_exit;
+        self.n_twin_collapsed += other.n_twin_collapsed;
+    }
+
+    /// Total candidate simulations avoided or cut short.
+    pub fn total_saved(&self) -> u64 {
+        self.n_cands_pruned + self.n_rollouts_early_exit + self.n_twin_collapsed
+    }
+}
+
+/// Safety margins for comparisons between an *analytic* lower bound and
+/// an exactly-simulated score (see the module docs): the bound must beat
+/// the cutoff by the relative factor AND the absolute slack before a
+/// prune is admitted. The relative part covers ULP-level float
+/// disagreement between closed-form sums and the event loop's stepwise
+/// arithmetic; the absolute part covers the simulator's *absolute* EPS
+/// tolerances (commands may start up to 1e-12 s early against init free
+/// times, and completion forgives up to ~1e-12 s of residual work per
+/// event), which accumulate independently of the makespan's magnitude —
+/// a purely relative margin would be too thin for sub-millisecond
+/// makespans. 1e-9 s of slack over-covers any realistic event count by
+/// orders of magnitude while remaining negligible against the µs-to-ms
+/// score gaps pruning actually exploits. Clock-vs-cutoff comparisons
+/// inside the bounded event loop share the loop's own arithmetic and
+/// need NO margin.
+pub(crate) const PRUNE_MARGIN_REL: f64 = 1e-9;
+pub(crate) const PRUNE_MARGIN_ABS: f64 = 1e-9;
+
+/// Whether `bound` proves a score strictly worse than `cutoff`, with the
+/// `PRUNE_MARGIN_REL`/`PRUNE_MARGIN_ABS` safety factors. Plain `>` so a
+/// NaN on either side (degenerate profile) never admits a prune.
+#[inline]
+pub(crate) fn provably_worse(bound: f64, cutoff: f64) -> bool {
+    bound * (1.0 - PRUNE_MARGIN_REL) - PRUNE_MARGIN_ABS > cutoff
+}
+
+/// Running admission cutoff of one expansion round: tracks the `width`
+/// smallest exact scores offered so far and exposes the weaker of (the
+/// `width`-th smallest, the seed) as the pruning threshold. The seed is
+/// the parent beam's `width`-th admitted score when the beam is full —
+/// valid before any offer because each sorted parent's firsts-head
+/// extension achieves the parent's score bit-exactly — and `INFINITY`
+/// otherwise. Buffers are pooled (reset, never shrunk) so warm searches
+/// stay allocation-free.
+#[derive(Default)]
+pub(crate) struct RunningCutoff {
+    width: usize,
+    seed: f64,
+    top: Vec<f64>,
+}
+
+impl RunningCutoff {
+    /// Re-arm for a new round. `seed` must already be a valid admission
+    /// threshold (or `INFINITY` when no guarantee exists yet).
+    pub(crate) fn reset(&mut self, width: usize, seed: f64) {
+        self.width = width.max(1);
+        self.seed = seed;
+        self.top.clear();
+    }
+
+    /// Current threshold: any candidate whose score provably strictly
+    /// exceeds this cannot enter the kept top-`width`. A never-reset
+    /// cutoff (width 0) never admits anything.
+    pub(crate) fn threshold(&self) -> f64 {
+        if self.width == 0 {
+            return f64::INFINITY;
+        }
+        if self.top.len() == self.width {
+            let wth = self.top[self.width - 1];
+            if wth.total_cmp(&self.seed).is_lt() {
+                return wth;
+            }
+        }
+        self.seed
+    }
+
+    /// Record one exactly-simulated candidate score.
+    pub(crate) fn offer(&mut self, score: f64) {
+        let pos = self.top.partition_point(|&s| s.total_cmp(&score).is_le());
+        if pos < self.width {
+            if self.top.len() == self.width {
+                self.top.pop();
+            }
+            self.top.insert(pos, score);
+        }
+    }
+}
+
+/// One candidate through the full prune gate, shared verbatim by the
+/// serial and online searches (the parallel path splits the same logic
+/// between coordinator and stripes): spec-twin collapse against the
+/// previous candidate in rank order, static-floor rejection against the
+/// running cutoff, then the bounded simulation — updating the cutoff,
+/// the counters and the collapse state. Returns the candidate's recorded
+/// score: exact, or the `INFINITY` exclusion marker (every marker is a
+/// proof of strict exclusion from the kept top-w). `simulate(thr)`
+/// performs the actual bounded scoring; `bound` is the candidate's
+/// admissible completion floor (ignored when pruning is off).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gated_score(
+    prune: bool,
+    cutoff: &mut RunningCutoff,
+    counters: &mut PruneCounters,
+    prev: &mut Option<(u32, f64)>,
+    class: u32,
+    bound: f64,
+    simulate: impl FnOnce(f64) -> Option<f64>,
+) -> f64 {
+    if prune {
+        if let Some((pc, ps)) = *prev {
+            if pc == class {
+                counters.n_twin_collapsed += 1;
+                return ps;
+            }
+        }
+    }
+    let thr = if prune { cutoff.threshold() } else { f64::INFINITY };
+    let score = if prune && provably_worse(bound, thr) {
+        counters.n_cands_pruned += 1;
+        f64::INFINITY
+    } else {
+        match simulate(thr) {
+            Some(m) => {
+                if prune {
+                    cutoff.offer(m);
+                }
+                m
+            }
+            None => {
+                counters.n_rollouts_early_exit += 1;
+                f64::INFINITY
+            }
+        }
+    };
+    *prev = Some((class, score));
+    score
+}
+
+/// Remaining-work floor of one parent prefix, scanned over the unplaced
+/// positions: `(Σ remaining solo HtD seconds, Σ remaining kernel seconds,
+/// Σ remaining solo DtH seconds, min remaining kernel+DtH tail)`.
+/// Admissible because every remaining command runs serially on its
+/// engine, every remaining HtD starts no earlier than the paused frontier
+/// clock, and the order's last task — whichever it turns out to be —
+/// still owes its own kernel and DtH after its final HtD. Positions map
+/// to table rows via `row_of` (identity for the closed-group searches,
+/// the suffix row list for the online replanner). Returns all zeros when
+/// nothing remains. The seed stage of the closed-group searches skips
+/// this scan entirely and reads the table's compiled group aggregates.
+pub(crate) fn remaining_floor(
+    n: usize,
+    table: &TaskTable,
+    row_of: impl Fn(usize) -> usize,
+    placed: impl Fn(usize) -> bool,
+) -> (f64, f64, f64, f64) {
+    let mut rem_htd = 0.0f64;
+    let mut rem_k = 0.0f64;
+    let mut rem_dth = 0.0f64;
+    let mut min_tail = f64::INFINITY;
+    let mut any = false;
+    for pos in 0..n {
+        if placed(pos) {
+            continue;
+        }
+        let r = row_of(pos);
+        rem_htd += table.htd_secs(r);
+        rem_k += table.kernel_secs(r);
+        rem_dth += table.dth_secs(r);
+        let tail = table.kernel_secs(r) + table.dth_secs(r);
+        if tail < min_tail {
+            min_tail = tail;
+        }
+        any = true;
+    }
+    if any {
+        (rem_htd, rem_k, rem_dth, min_tail)
+    } else {
+        (0.0, 0.0, 0.0, 0.0)
+    }
+}
+
+/// Bounded prefix rollout: resume the paused `prefix` on `probe`, push
+/// every unplaced position (mapped to table rows by `row_of`: identity
+/// for the closed-group searches, the suffix row list for the online
+/// replanner) in `rank` order, and finish under `cutoff`. `Some(score)`
+/// is exact and bit-identical to the unbounded rollout; `None` proves
+/// the score strictly exceeds `cutoff`. The clock is checked after every
+/// push as well — a rollout can exceed the cutoff long before
+/// quiescence.
+pub(crate) fn rollout_score_bounded(
+    probe: &mut SimCursor,
+    prefix: &SimCursor,
+    mask: &[u64],
+    rank: &[usize],
+    table: &TaskTable,
+    row_of: impl Fn(usize) -> usize,
+    cutoff: f64,
+) -> Option<f64> {
+    debug_assert_mask_sized(mask, rank.len());
+    probe.resume_from(prefix);
+    for &pos in rank {
+        if !mask_contains(mask, pos) {
+            probe.push_task_compiled(table, row_of(pos));
+            if probe.clock() > cutoff {
+                return None;
+            }
+        }
+    }
+    probe.run_to_quiescence_bounded(cutoff)
+}
+
+/// Bounded candidate score: `rollout_score_bounded` with position
+/// `cand` pushed first (the candidate under evaluation), then the
+/// rank-ordered rollout of every other unplaced position.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn score_candidate_bounded(
+    probe: &mut SimCursor,
+    prefix: &SimCursor,
+    mask: &[u64],
+    cand: usize,
+    rank: &[usize],
+    table: &TaskTable,
+    row_of: impl Fn(usize) -> usize,
+    cutoff: f64,
+) -> Option<f64> {
+    debug_assert_mask_sized(mask, rank.len());
+    probe.resume_from(prefix);
+    probe.push_task_compiled(table, row_of(cand));
+    if probe.clock() > cutoff {
+        return None;
+    }
+    for &pos in rank {
+        if pos != cand && !mask_contains(mask, pos) {
+            probe.push_task_compiled(table, row_of(pos));
+            if probe.clock() > cutoff {
+                return None;
+            }
+        }
+    }
+    probe.run_to_quiescence_bounded(cutoff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_cutoff_tracks_wth_smallest() {
+        let mut c = RunningCutoff::default();
+        c.reset(2, f64::INFINITY);
+        assert!(c.threshold().is_infinite());
+        c.offer(5.0);
+        assert!(c.threshold().is_infinite(), "one offer < width: no threshold");
+        c.offer(3.0);
+        assert_eq!(c.threshold(), 5.0);
+        c.offer(4.0);
+        assert_eq!(c.threshold(), 4.0);
+        c.offer(10.0);
+        assert_eq!(c.threshold(), 4.0, "worse offers never raise the cutoff");
+        c.offer(1.0);
+        assert_eq!(c.threshold(), 3.0);
+    }
+
+    #[test]
+    fn running_cutoff_seed_caps_threshold() {
+        let mut c = RunningCutoff::default();
+        c.reset(2, 6.0);
+        assert_eq!(c.threshold(), 6.0, "seed is valid before any offer");
+        c.offer(8.0);
+        c.offer(9.0);
+        assert_eq!(c.threshold(), 6.0, "seed stays when offers are worse");
+        c.offer(2.0);
+        c.offer(3.0);
+        assert_eq!(c.threshold(), 3.0);
+    }
+
+    #[test]
+    fn provably_worse_requires_margin_and_rejects_nan() {
+        assert!(provably_worse(2.0, 1.0));
+        assert!(!provably_worse(1.0, 1.0), "ties never prune");
+        assert!(
+            !provably_worse(1.0 + 1e-12, 1.0),
+            "sub-relative-margin excess never prunes"
+        );
+        assert!(
+            !provably_worse(1e-6 + 1e-10, 1e-6),
+            "sub-absolute-slack excess never prunes on tiny makespans"
+        );
+        assert!(provably_worse(1e-6 + 1e-8, 1e-6));
+        assert!(!provably_worse(f64::NAN, 1.0));
+        assert!(!provably_worse(2.0, f64::NAN));
+        assert!(!provably_worse(f64::INFINITY, f64::INFINITY));
+        assert!(provably_worse(f64::INFINITY, 1.0));
+    }
+
+    #[test]
+    fn mask_roundtrip() {
+        let mut m = Vec::new();
+        set_mask_len(&mut m, mask_words(130));
+        assert_eq!(m.len(), 3);
+        for i in [0usize, 63, 64, 129] {
+            assert!(!mask_contains(&m, i));
+            mask_set(&mut m, i);
+            assert!(mask_contains(&m, i));
+        }
+        set_mask_len(&mut m, mask_words(10));
+        assert_eq!(m.len(), 1);
+        assert!(!mask_contains(&m, 0), "resize clears stale bits");
+    }
+}

@@ -1,0 +1,284 @@
+//! Properties of the bound-gated search layer (seeded-random harness,
+//! like prop_incremental.rs: every failure prints the generating seed).
+//!
+//! Pins the branch-and-bound machinery to exactness:
+//!
+//! * `SimCursor::run_to_quiescence_bounded(f64::INFINITY)` is bit-identical
+//!   to `run_to_quiescence` (makespan, task ends, end state);
+//! * an *aborted* bounded rollout leaves the cursor resumable: finishing
+//!   it later — in one go or through several increasing cutoffs — lands
+//!   on the exact same bits as the uninterrupted run;
+//! * `SimCursor::lower_bound` is admissible at every prefix (never above
+//!   the final makespan, modulo the documented 1e-9 relative margin);
+//! * pruned-on and pruned-off searches return **identical orders** for
+//!   the serial beam (widths 1/3), the parallel beam (1..=8 threads) and
+//!   the online suffix re-planner, across all three device profiles and
+//!   random initial engine states — and the pruning layer actually fires
+//!   somewhere over the run (twin-rich groups guarantee collapses).
+
+use oclcc::config::{profile_by_name, DeviceProfile};
+use oclcc::model::simulator::SimCursor;
+use oclcc::model::{EngineState, TaskTable};
+use oclcc::sched::heuristic::{batch_reorder_beam_into, BeamScratch};
+use oclcc::sched::online::{replan_into, OnlineScratch};
+use oclcc::sched::parallel::{batch_reorder_beam_parallel_into, ParBeamScratch};
+use oclcc::task::{KernelSpec, TaskSpec};
+use oclcc::util::rng::Pcg64;
+
+const CASES: u64 = 24;
+
+/// Random task group: 1-8 tasks, 0-2 commands per transfer stage,
+/// durations spanning 0.05-10 ms. Half the draws duplicate an earlier
+/// task's spec, so twin collapse (and the memo) actually engage.
+fn random_group(rng: &mut Pcg64) -> Vec<TaskSpec> {
+    let n = 1 + rng.below(8) as usize;
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && rng.below(2) == 0 {
+            let src = rng.below(i as u64) as usize;
+            let mut dup = tasks[src].clone();
+            dup.name = format!("t{i}");
+            tasks.push(dup);
+            continue;
+        }
+        let n_htd = rng.below(3) as usize;
+        let n_dth = rng.below(3) as usize;
+        let htd: Vec<u64> =
+            (0..n_htd).map(|_| rng.below(30_000_000) + 10_000).collect();
+        let dth: Vec<u64> =
+            (0..n_dth).map(|_| rng.below(30_000_000) + 10_000).collect();
+        tasks.push(TaskSpec {
+            name: format!("t{i}"),
+            htd_bytes: htd,
+            kernel: KernelSpec::Timed { secs: rng.uniform(0.05e-3, 10e-3) },
+            dth_bytes: dth,
+        });
+    }
+    tasks
+}
+
+fn profiles() -> Vec<DeviceProfile> {
+    ["amd_r9", "k20c", "xeon_phi"]
+        .iter()
+        .map(|d| profile_by_name(d).unwrap())
+        .collect()
+}
+
+fn random_init(rng: &mut Pcg64) -> EngineState {
+    if rng.below(2) == 0 {
+        EngineState::default()
+    } else {
+        EngineState {
+            htd_free: rng.uniform(0.0, 4e-3),
+            k_free: rng.uniform(0.0, 4e-3),
+            dth_free: rng.uniform(0.0, 4e-3),
+        }
+    }
+}
+
+#[test]
+fn prop_bounded_inf_is_bit_identical_and_aborts_resume() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xB0B + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let mut cur = SimCursor::new(&p, init);
+            for t in &tasks {
+                cur.push_task(t);
+            }
+            let mut reference = cur.clone();
+            let want = reference.run_to_quiescence();
+
+            // Infinite cutoff: bit-identical (same bits, not just close).
+            let mut inf = cur.clone();
+            assert_eq!(
+                inf.run_to_quiescence_bounded(f64::INFINITY),
+                Some(want),
+                "seed {seed} dev {}",
+                p.name
+            );
+            assert_eq!(inf.task_end(), reference.task_end());
+            assert_eq!(inf.end_state(), reference.end_state());
+
+            // Aborting at increasing cutoffs then finishing lands on the
+            // same bits as the uninterrupted run.
+            let mut staged = cur.clone();
+            for frac in [0.3f64, 0.6, 0.9] {
+                let cutoff = want * frac;
+                if let Some(m) = staged.run_to_quiescence_bounded(cutoff) {
+                    // Only reachable when the whole makespan fits under
+                    // the cutoff (e.g. init-state dominated runs).
+                    assert_eq!(m, want, "seed {seed} dev {}", p.name);
+                    break;
+                }
+                assert!(
+                    staged.clock() <= want,
+                    "seed {seed} dev {}: clock overshot the makespan",
+                    p.name
+                );
+            }
+            if !staged.is_finished() {
+                assert_eq!(
+                    staged.run_to_quiescence_bounded(f64::INFINITY),
+                    Some(want),
+                    "seed {seed} dev {}: resumed finish diverged",
+                    p.name
+                );
+            }
+            assert_eq!(staged.task_end(), reference.task_end());
+            assert_eq!(staged.end_state(), reference.end_state());
+        }
+    }
+}
+
+#[test]
+fn prop_lower_bound_is_admissible_at_every_prefix() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x10B + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let mut cur = SimCursor::new(&p, init);
+            let mut probe = SimCursor::new(&p, init);
+            let mut prev_lb = 0.0f64;
+            for (i, t) in tasks.iter().enumerate() {
+                cur.push_task(t);
+                let lb = cur.lower_bound();
+                assert!(
+                    lb >= prev_lb,
+                    "seed {seed} dev {} step {i}: envelope not monotone",
+                    p.name
+                );
+                prev_lb = lb;
+                // The prefix's own finished makespan respects the bound
+                // under the documented prune margins (1e-9 relative +
+                // 1e-9 s absolute, mirroring provably_worse).
+                probe.resume_from(&cur);
+                let m = probe.run_to_quiescence();
+                assert!(
+                    lb * (1.0 - 1e-9) - 1e-9 <= m,
+                    "seed {seed} dev {} step {i}: lower_bound {lb} vs {m}",
+                    p.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pruned_searches_return_identical_orders() {
+    // Serial widths 1/3, parallel 1..=8 threads, all profiles, random
+    // init states; scratches reused across cases to exercise arena reuse.
+    let mut serial_on = BeamScratch::new();
+    let mut serial_off = BeamScratch::with_pruning(false);
+    let mut par_on: Vec<ParBeamScratch> =
+        (1usize..=8).map(ParBeamScratch::new).collect();
+    let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xB0D + seed);
+        let tasks = random_group(&mut rng);
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            for width in [1usize, 3] {
+                batch_reorder_beam_into(
+                    &tasks, &p, init, width, &mut serial_off, &mut a,
+                );
+                batch_reorder_beam_into(
+                    &tasks, &p, init, width, &mut serial_on, &mut b,
+                );
+                assert_eq!(
+                    b, a,
+                    "seed {seed} dev {} width {width}: serial pruned diverged",
+                    p.name
+                );
+                for scratch in par_on.iter_mut() {
+                    batch_reorder_beam_parallel_into(
+                        &tasks, &p, init, width, scratch, &mut c,
+                    );
+                    assert_eq!(
+                        c,
+                        a,
+                        "seed {seed} dev {} width {width} threads {}: \
+                         parallel pruned diverged",
+                        p.name,
+                        scratch.threads()
+                    );
+                }
+            }
+        }
+    }
+    // The layer must have actually engaged over the run: the duplicated
+    // specs guarantee twin collapses, and the cutoffs fire on any
+    // non-degenerate group.
+    let counters = serial_on.prune_counters();
+    assert!(
+        counters.total_saved() > 0,
+        "pruning layer never fired across {CASES} twin-rich cases: {counters:?}"
+    );
+    assert_eq!(serial_off.prune_counters().total_saved(), 0);
+}
+
+#[test]
+fn prop_pruned_replan_matches_unpruned() {
+    let mut on = OnlineScratch::new();
+    let mut off = OnlineScratch::with_pruning(false);
+    let (mut out_on, mut out_off) = (Vec::new(), Vec::new());
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x0CB + seed);
+        let tasks = random_group(&mut rng);
+        if tasks.len() < 2 {
+            continue;
+        }
+        for p in profiles() {
+            let init = random_init(&mut rng);
+            let table = TaskTable::compile(&tasks, &p);
+            // Commit a random prefix, re-plan the shuffled remainder.
+            let n_committed = rng.below(tasks.len() as u64 - 1) as usize;
+            let mut committed = SimCursor::new(&p, init);
+            for i in 0..n_committed {
+                committed.push_task_compiled(&table, i);
+            }
+            committed.commit_frontier();
+            let mut incumbent: Vec<usize> =
+                (n_committed..tasks.len()).collect();
+            rng.shuffle(&mut incumbent);
+
+            let mut committed_off = committed.clone();
+            let r_off = replan_into(
+                &table,
+                &mut committed_off,
+                &incumbent,
+                3,
+                &mut off,
+                &mut out_off,
+            );
+            let r_on = replan_into(
+                &table,
+                &mut committed,
+                &incumbent,
+                3,
+                &mut on,
+                &mut out_on,
+            );
+            assert_eq!(
+                out_on, out_off,
+                "seed {seed} dev {}: pruned re-plan diverged",
+                p.name
+            );
+            assert_eq!(
+                r_on.predicted_done.to_bits(),
+                r_off.predicted_done.to_bits(),
+                "seed {seed} dev {}: predicted clocks diverged",
+                p.name
+            );
+            assert_eq!(r_on.replanned, r_off.replanned);
+        }
+    }
+    assert!(
+        on.prune_counters().total_saved() > 0,
+        "online pruning layer never fired: {:?}",
+        on.prune_counters()
+    );
+    assert_eq!(off.prune_counters().total_saved(), 0);
+}

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_sched_overhead.json trajectory files cell by cell.
+
+Used by the CI bench-smoke job: the previous run's ``bench-json`` artifact
+is downloaded and every matching ``(device, t, impl)`` timing cell is
+compared against the freshly measured file. A regression of more than
+``--threshold`` (relative, on the mean) fails the job with a readable
+table; new cells, removed cells and speedup rows are reported but never
+fatal. Exits 0 with a note when either file is missing or unparsable, so
+the very first run (no artifact yet) passes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    """-> (bench_mode, {(device, t, impl): mean_s}) or None on any error."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"bench-diff: cannot read {path}: {exc}")
+        return None
+    mode = doc.get("bench_mode", "unknown")
+    cells = {}
+    for row in doc.get("rows", []):
+        bench = row.get("bench")
+        if not isinstance(bench, dict):
+            continue  # speedup/counter rows carry no timing cell
+        key = (row.get("device"), row.get("t"), row.get("impl"))
+        mean = bench.get("mean_s")
+        if None in key or not isinstance(mean, (int, float)) or mean <= 0:
+            continue
+        cells[key] = float(mean)
+    return mode, cells
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("previous", help="previous run's BENCH_sched_overhead.json")
+    ap.add_argument("current", help="this run's BENCH_sched_overhead.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="relative mean_s regression that fails the diff (default 0.15)",
+    )
+    args = ap.parse_args()
+
+    prev = load_rows(args.previous)
+    curr = load_rows(args.current)
+    if prev is None or curr is None:
+        print("bench-diff: missing/unreadable input, skipping comparison")
+        return 0
+    prev_mode, prev_cells = prev
+    curr_mode, curr_cells = curr
+    if prev_mode != curr_mode:
+        print(
+            f"bench-diff: bench_mode changed ({prev_mode} -> {curr_mode}), "
+            "numbers are not comparable; skipping"
+        )
+        return 0
+
+    rows = []
+    regressions = 0
+    for key in sorted(curr_cells, key=str):
+        new = curr_cells[key]
+        old = prev_cells.get(key)
+        if old is None:
+            rows.append((key, None, new, None, "new"))
+            continue
+        ratio = new / old
+        status = "ok"
+        if ratio > 1.0 + args.threshold:
+            status = "REGRESSED"
+            regressions += 1
+        elif ratio < 1.0 - args.threshold:
+            status = "improved"
+        rows.append((key, old, new, ratio, status))
+    removed = sorted(set(prev_cells) - set(curr_cells), key=str)
+
+    name_w = max((len(f"{d} T={t} {i}") for (d, t, i) in curr_cells), default=20)
+    print(f"bench-diff ({curr_mode} mode, threshold {args.threshold:.0%}):")
+    print(f"{'cell':<{name_w}} {'prev':>12} {'curr':>12} {'ratio':>7}  status")
+    for (d, t, i), old, new, ratio, status in rows:
+        name = f"{d} T={t} {i}"
+        old_s = f"{old * 1e6:.1f}us" if old is not None else "-"
+        ratio_s = f"{ratio:.2f}x" if ratio is not None else "-"
+        print(
+            f"{name:<{name_w}} {old_s:>12} {new * 1e6:>10.1f}us "
+            f"{ratio_s:>7}  {status}"
+        )
+    for key in removed:
+        d, t, i = key
+        print(f"{d} T={t} {i}: removed (was {prev_cells[key] * 1e6:.1f}us)")
+
+    if regressions:
+        print(
+            f"\nbench-diff: {regressions} cell(s) regressed more than "
+            f"{args.threshold:.0%} vs the previous run's artifact"
+        )
+        return 1
+    print("\nbench-diff: no cell regressed beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
