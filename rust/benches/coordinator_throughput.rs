@@ -92,6 +92,7 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
                 group_cap,
                 scoring_threads: 1,
                 online: None,
+                recalibrate: None,
             },
         );
         let m = coord.run(workloads(workers, SCALE));

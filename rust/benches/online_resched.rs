@@ -15,7 +15,16 @@
 //!   Table-6 overhead budget now applies to re-plans);
 //! * `drift_gate_fire_rate` — fired / considered gate consultations;
 //! * `steal_count` — submissions moved between lanes;
-//! * `sched_overhead_share` for both runtimes.
+//! * `sched_overhead_share` for both runtimes;
+//! * `model_drift` — pooled |measured/predicted − 1| of the lane models.
+//!
+//! A second sweep runs **calibrated vs static** cells on deliberately
+//! miscalibrated planning models (link bandwidths 2x reality, via
+//! `LaneCoordinator::with_plan_model`): the static model plans on the
+//! wrong rates for the whole run, the calibrated one feeds measured
+//! per-engine times back through `LaneOptions::recalibrate` and must show
+//! reduced model drift. Rows carry shapes `miscal_static` /
+//! `miscal_calibrated` plus the adopted correction factors.
 //!
 //! Emits `BENCH_online_resched.json` with a self-describing
 //! `bench_mode` header; uploaded by CI's bench-smoke job next to the
@@ -24,10 +33,11 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use oclcc::config::profile_by_name;
+use oclcc::config::{profile_by_name, DeviceProfile};
 use oclcc::coordinator::lanes::{LaneCoordinator, LaneMetrics, LaneOptions};
 use oclcc::coordinator::runner::Policy;
 use oclcc::device::executor::SpinExecutor;
+use oclcc::model::CalibrateOptions;
 use oclcc::sched::online::OnlineOptions;
 use oclcc::task::synthetic::synthetic_benchmark;
 use oclcc::task::TaskSpec;
@@ -73,7 +83,19 @@ fn skewed_workloads(label: &str, loaded: usize) -> Vec<Vec<TaskSpec>> {
 }
 
 fn coordinator(lanes: usize, group_cap: usize, online: Option<OnlineOptions>) -> LaneCoordinator {
-    LaneCoordinator::homogeneous(
+    coordinator_calibrated(lanes, group_cap, online, None, None)
+}
+
+/// [`coordinator`] with an optional planning-model override (the
+/// miscalibrated-model cells) and optional online recalibration.
+fn coordinator_calibrated(
+    lanes: usize,
+    group_cap: usize,
+    online: Option<OnlineOptions>,
+    plan_model: Option<DeviceProfile>,
+    recalibrate: Option<CalibrateOptions>,
+) -> LaneCoordinator {
+    let c = LaneCoordinator::homogeneous(
         profile_by_name("amd_r9").unwrap(),
         Arc::new(SpinExecutor),
         LaneOptions {
@@ -83,8 +105,22 @@ fn coordinator(lanes: usize, group_cap: usize, online: Option<OnlineOptions>) ->
             group_cap,
             scoring_threads: 1,
             online,
+            recalibrate,
         },
-    )
+    );
+    match plan_model {
+        Some(m) => c.with_plan_model(m),
+        None => c,
+    }
+}
+
+/// amd_r9 with both link bandwidths doubled: a model that believes
+/// transfers run 2x faster than the device actually paces them.
+fn miscalibrated_model() -> DeviceProfile {
+    let mut m = profile_by_name("amd_r9").unwrap();
+    m.htd.bytes_per_sec *= 2.0;
+    m.dth.bytes_per_sec *= 2.0;
+    m
 }
 
 struct CellResult {
@@ -102,6 +138,14 @@ struct CellResult {
     pruned_per_rep: f64,
     early_exit_per_rep: f64,
     twin_collapsed_per_rep: f64,
+    /// Pooled model drift |measured/predicted - 1| across lanes.
+    model_drift: f64,
+    /// Median corrected-model adoptions per rep, summed across lanes.
+    recalibrations_per_rep: f64,
+    /// Mean adopted correction factors across lanes (1.0 = static).
+    calib_htd: f64,
+    calib_kernel: f64,
+    calib_dth: f64,
     n_tasks: usize,
 }
 
@@ -109,6 +153,9 @@ fn summarize(m: &LaneMetrics) -> CellResult {
     let mut replans: Vec<f64> = Vec::new();
     let (mut fired, mut considered, mut steals) = (0usize, 0usize, 0usize);
     let (mut pruned, mut early, mut twins) = (0u64, 0u64, 0u64);
+    let (mut busy, mut pred) = (0.0f64, 0.0f64);
+    let mut recals = 0usize;
+    let (mut ch, mut ck, mut cd) = (0.0f64, 0.0f64, 0.0f64);
     for l in &m.per_lane {
         replans.extend(l.replan_secs.iter().copied());
         fired += l.n_replans;
@@ -117,7 +164,14 @@ fn summarize(m: &LaneMetrics) -> CellResult {
         pruned += l.n_cands_pruned;
         early += l.n_rollouts_early_exit;
         twins += l.n_twin_collapsed;
+        busy += l.busy_secs;
+        pred += l.predicted_secs;
+        recals += l.n_recalibrations;
+        ch += l.calib_htd;
+        ck += l.calib_kernel;
+        cd += l.calib_dth;
     }
+    let lanes = m.per_lane.len().max(1) as f64;
     CellResult {
         makespan: m.total_secs,
         sched_share: m.sched_overhead_share(),
@@ -128,19 +182,23 @@ fn summarize(m: &LaneMetrics) -> CellResult {
         pruned_per_rep: pruned as f64,
         early_exit_per_rep: early as f64,
         twin_collapsed_per_rep: twins as f64,
+        model_drift: if pred > 0.0 { (busy / pred - 1.0).abs() } else { 0.0 },
+        recalibrations_per_rep: recals as f64,
+        calib_htd: ch / lanes,
+        calib_kernel: ck / lanes,
+        calib_dth: cd / lanes,
         n_tasks: m.n_tasks,
     }
 }
 
 /// Median-of-reps run of one (workload, lanes, mode) cell. Count metrics
-/// (re-plans, steals) are per-rep medians so fast (2-rep) and full
-/// (5-rep) trajectories stay comparable; only the re-plan *latency*
-/// samples are pooled across reps, for a denser p50/p99.
+/// (re-plans, steals, recalibrations) are per-rep medians so fast
+/// (2-rep) and full (5-rep) trajectories stay comparable; only the
+/// re-plan *latency* samples are pooled across reps, for a denser
+/// p50/p99. `build` constructs a fresh coordinator per rep.
 fn run_cell(
+    build: &dyn Fn() -> LaneCoordinator,
     mk: &dyn Fn() -> Vec<Vec<TaskSpec>>,
-    lanes: usize,
-    group_cap: usize,
-    online: Option<OnlineOptions>,
     reps: usize,
     expect_tasks: usize,
 ) -> CellResult {
@@ -152,9 +210,14 @@ fn run_cell(
     let mut pruned_counts = Vec::with_capacity(reps);
     let mut early_counts = Vec::with_capacity(reps);
     let mut twin_counts = Vec::with_capacity(reps);
+    let mut drifts = Vec::with_capacity(reps);
+    let mut recal_counts = Vec::with_capacity(reps);
+    let mut calib_h = Vec::with_capacity(reps);
+    let mut calib_k = Vec::with_capacity(reps);
+    let mut calib_d = Vec::with_capacity(reps);
     let mut replans: Vec<f64> = Vec::new();
     for _ in 0..reps {
-        let c = coordinator(lanes, group_cap, online);
+        let c = build();
         let m = c.run(mk());
         assert_eq!(m.n_tasks, expect_tasks, "lost tasks in cell");
         let r = summarize(&m);
@@ -166,6 +229,11 @@ fn run_cell(
         pruned_counts.push(r.pruned_per_rep);
         early_counts.push(r.early_exit_per_rep);
         twin_counts.push(r.twin_collapsed_per_rep);
+        drifts.push(r.model_drift);
+        recal_counts.push(r.recalibrations_per_rep);
+        calib_h.push(r.calib_htd);
+        calib_k.push(r.calib_kernel);
+        calib_d.push(r.calib_dth);
         replans.extend(r.replans);
     }
     CellResult {
@@ -178,6 +246,11 @@ fn run_cell(
         pruned_per_rep: stats::median(&pruned_counts),
         early_exit_per_rep: stats::median(&early_counts),
         twin_collapsed_per_rep: stats::median(&twin_counts),
+        model_drift: stats::median(&drifts),
+        recalibrations_per_rep: stats::median(&recal_counts),
+        calib_htd: stats::median(&calib_h),
+        calib_kernel: stats::median(&calib_k),
+        calib_dth: stats::median(&calib_d),
         n_tasks: expect_tasks,
     }
 }
@@ -212,14 +285,13 @@ fn main() {
                 let cap = workers.div_ceil(lanes).div_ceil(2).max(2);
                 let mk = move || workloads(label, workers);
                 let online = run_cell(
+                    &|| coordinator(lanes, cap, Some(OnlineOptions::default())),
                     &mk,
-                    lanes,
-                    cap,
-                    Some(OnlineOptions::default()),
                     reps,
                     expect,
                 );
-                let base = run_cell(&mk, lanes, cap, None, reps, expect);
+                let base =
+                    run_cell(&|| coordinator(lanes, cap, None), &mk, reps, expect);
                 emit_cell(
                     &mut rows,
                     &mut cells,
@@ -237,9 +309,13 @@ fn main() {
         let loaded = 4usize;
         let expect = loaded * BATCH;
         let mk = move || skewed_workloads(label, loaded);
-        let online =
-            run_cell(&mk, 2, 2, Some(OnlineOptions::default()), reps, expect);
-        let base = run_cell(&mk, 2, 2, None, reps, expect);
+        let online = run_cell(
+            &|| coordinator(2, 2, Some(OnlineOptions::default())),
+            &mk,
+            reps,
+            expect,
+        );
+        let base = run_cell(&|| coordinator(2, 2, None), &mk, reps, expect);
         emit_cell(
             &mut rows,
             &mut cells,
@@ -250,6 +326,64 @@ fn main() {
             &online,
             &base,
         );
+    }
+
+    // ---- calibrated vs static model on miscalibrated profiles --------
+    //
+    // The planning model believes both links are 2x faster than the
+    // device paces them. The static cells plan on the wrong rates
+    // forever; the calibrated cells adopt measured-rate corrections and
+    // must show reduced model drift (and the correction factors pulling
+    // toward ~2x). BK0 is the transfer-dominant pole where the planted
+    // error distorts ordering most; BK100 bounds the kernel-dominant
+    // side.
+    println!("\n== online recalibration vs static model (links modeled 2x too fast) ==");
+    println!(
+        "{:>7} {:>11} {:>11} {:>9} {:>9} {:>7} {:>7}",
+        "load", "static", "calibrated", "driftS", "driftC", "recals", "htd_fx"
+    );
+    for label in ["BK0", "BK100"] {
+        let workers = 4usize;
+        let lanes = 1usize;
+        let cap = 2usize;
+        let expect = workers * BATCH;
+        let mk = move || workloads(label, workers);
+        let online = Some(OnlineOptions::default());
+        let stat = run_cell(
+            &|| coordinator_calibrated(lanes, cap, online, Some(miscalibrated_model()), None),
+            &mk,
+            reps,
+            expect,
+        );
+        let cal = run_cell(
+            &|| {
+                coordinator_calibrated(
+                    lanes,
+                    cap,
+                    online,
+                    Some(miscalibrated_model()),
+                    Some(CalibrateOptions::default()),
+                )
+            },
+            &mk,
+            reps,
+            expect,
+        );
+        println!(
+            "{:>7} {:>9.3}ms {:>9.3}ms {:>8.1}% {:>8.1}% {:>7.1} {:>6.2}x",
+            label,
+            stat.makespan * 1e3,
+            cal.makespan * 1e3,
+            stat.model_drift * 100.0,
+            cal.model_drift * 100.0,
+            cal.recalibrations_per_rep,
+            cal.calib_htd,
+        );
+        // Both sides are first-class trajectory cells (distinct shapes
+        // keep the (workload, shape, workers, lanes) diff key unique);
+        // neither joins the online-vs-drain headline geomean.
+        emit_miscal_cell(&mut rows, label, "miscal_static", workers, lanes, &stat);
+        emit_miscal_cell(&mut rows, label, "miscal_calibrated", workers, lanes, &cal);
     }
 
     // Headline: geometric-mean speedup of online over drain-then-plan.
@@ -315,6 +449,8 @@ fn emit_cell(
         ("steal_count", Json::num(online.steals_per_rep)),
         ("sched_overhead_share", Json::num(online.sched_share)),
         ("baseline_sched_overhead_share", Json::num(base.sched_share)),
+        ("model_drift", Json::num(online.model_drift)),
+        ("baseline_model_drift", Json::num(base.model_drift)),
         ("n_cands_pruned", Json::num(online.pruned_per_rep)),
         ("n_rollouts_early_exit", Json::num(online.early_exit_per_rep)),
         ("n_twin_collapsed", Json::num(online.twin_collapsed_per_rep)),
@@ -323,4 +459,33 @@ fn emit_cell(
         ("baseline_n_twin_collapsed", Json::num(base.twin_collapsed_per_rep)),
     ]));
     cells.push((format!("{label}/{shape}/{workers}w{lanes}l"), ratio));
+}
+
+/// One calibrated-vs-static trajectory row (shapes `miscal_static` /
+/// `miscal_calibrated`): the cell's own makespan, model drift and
+/// calibration telemetry — no drain-then-plan baseline pairing.
+fn emit_miscal_cell(
+    rows: &mut Vec<Json>,
+    label: &str,
+    shape: &str,
+    workers: usize,
+    lanes: usize,
+    cell: &CellResult,
+) {
+    rows.push(Json::obj(vec![
+        ("workload", Json::str(label)),
+        ("shape", Json::str(shape)),
+        ("workers", Json::num(workers as f64)),
+        ("lanes", Json::num(lanes as f64)),
+        ("n_tasks", Json::num(cell.n_tasks as f64)),
+        ("makespan_s", Json::num(cell.makespan)),
+        ("model_drift", Json::num(cell.model_drift)),
+        ("sched_overhead_share", Json::num(cell.sched_share)),
+        ("drift_gate_fire_rate", Json::num(cell.fire_rate)),
+        ("replan_count", Json::num(cell.replans_per_rep)),
+        ("n_recalibrations", Json::num(cell.recalibrations_per_rep)),
+        ("calib_htd", Json::num(cell.calib_htd)),
+        ("calib_kernel", Json::num(cell.calib_kernel)),
+        ("calib_dth", Json::num(cell.calib_dth)),
+    ]));
 }

@@ -34,6 +34,17 @@ impl LinkParams {
     pub fn bytes_for_secs(&self, secs: f64) -> u64 {
         (((secs - self.latency).max(0.0)) * self.bytes_per_sec) as u64
     }
+
+    /// Scale this link's transfer *time* by `s` (> 1 = slower): latency
+    /// multiplies, bandwidth divides, so in real arithmetic
+    /// `scaled(s).transfer_secs(b) == s * transfer_secs(b)` for every
+    /// byte count. `scaled(1.0)` is a bitwise identity (IEEE-754
+    /// multiplication/division by 1.0 is exact), which is what makes an
+    /// identity `model::calibrate::CalibratedProfile` compile
+    /// bit-identical tables.
+    pub fn scaled(&self, s: f64) -> LinkParams {
+        LinkParams { latency: self.latency * s, bytes_per_sec: self.bytes_per_sec / s }
+    }
 }
 
 /// A device profile (paper Table 1 row + measured link constants).
@@ -239,6 +250,17 @@ mod tests {
             assert!((p.duplex_slowdown - q.duplex_slowdown).abs() < 1e-12);
             assert!((p.htd.bytes_per_sec - q.htd.bytes_per_sec).abs() < 1.0);
         }
+    }
+
+    #[test]
+    fn scaled_link_stretches_time_and_is_identity_at_one() {
+        let l = LinkParams { latency: 20e-6, bytes_per_sec: 6e9 };
+        let s = l.scaled(2.0);
+        let b = 6_000_000u64;
+        assert!((s.transfer_secs(b) - 2.0 * l.transfer_secs(b)).abs() < 1e-15);
+        let id = l.scaled(1.0);
+        assert_eq!(id.latency.to_bits(), l.latency.to_bits());
+        assert_eq!(id.bytes_per_sec.to_bits(), l.bytes_per_sec.to_bits());
     }
 
     #[test]

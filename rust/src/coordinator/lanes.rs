@@ -50,6 +50,27 @@
 //! restart is exactly what [`LaneStats`] drift records and the gate
 //! consumes.
 //!
+//! # Online recalibration ([`LaneOptions::recalibrate`])
+//!
+//! With `recalibrate: Some(..)` a lane closes the model-accuracy loop the
+//! drift gate only *measures*: each executed group's per-command device
+//! timeline is folded into per-task measured engine times and fed to a
+//! `model::calibrate::Calibrator` (robust per-engine EWMA over
+//! implied-rate residuals, outlier-clipped, warm-up-gated). Matured
+//! corrections are **adopted atomically at planning-timeline
+//! boundaries** — the legacy proxy adopts per drained group, the online
+//! proxy only when the lane goes fully idle and the contiguous carry
+//! chain restarts — by rebuilding the lane's `CalibratedProfile`,
+//! recompiling the pending table against it and rewinding the planning
+//! cursor *from that table* ([`SimCursor::reset_for_table`]). Cursor and
+//! table therefore always share one model generation, so the bound-gated
+//! search's floors and rollouts keep their exactness proofs unchanged.
+//! With `recalibrate: None` the pipeline is bit-identical to the
+//! pre-calibration code (rust/tests/prop_calibrate.rs).
+//! [`LaneCoordinator::with_plan_model`] decouples the planning model from
+//! the device profile, which is how the online bench runs deliberately
+//! miscalibrated models against a truthful device.
+//!
 //! **Steal invariants** (bounded work-stealing, `OnlineOptions::steal_max`):
 //! an idle lane steals *whole uncommitted submissions* from the hottest
 //! sibling's buffer — never more than half the victim's backlog, never
@@ -79,7 +100,10 @@ use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submiss
 use crate::coordinator::runner::Policy;
 use crate::device::executor::KernelExecutor;
 use crate::device::vdev::VirtualDevice;
-use crate::model::{EngineState, SimCursor, TaskTable};
+use crate::model::{
+    fold_timeline_stage_secs, CalibrateOptions, CalibratedProfile, Calibrator,
+    CmdRecord, EngineSecs, EngineState, SimCursor, TaskTable,
+};
 use crate::queue::event::Event;
 use crate::sched::heuristic::DEFAULT_BEAM_WIDTH;
 use crate::sched::online::{replan_into, DriftGate, OnlineOptions, OnlineScratch};
@@ -111,6 +135,15 @@ pub struct LaneOptions {
     /// (mid-group merge + drift-gated suffix re-planning + bounded
     /// work-stealing); `None` keeps the classic drain-then-plan rounds.
     pub online: Option<OnlineOptions>,
+    /// `Some` feeds each executed group's measured per-engine times back
+    /// into the lane's planning model (`model::calibrate`): robust EWMA
+    /// rate corrections are *adopted* only at planning-timeline
+    /// boundaries — the table recompile and the cursor rewind happen from
+    /// one [`CalibratedProfile`] generation, so the bound-gated search's
+    /// exactness proofs apply unchanged. `None` (the default) keeps the
+    /// static model, bit-identical to the pre-calibration pipeline
+    /// (pinned by rust/tests/prop_calibrate.rs).
+    pub recalibrate: Option<CalibrateOptions>,
 }
 
 impl Default for LaneOptions {
@@ -122,6 +155,7 @@ impl Default for LaneOptions {
             group_cap: 0,
             scoring_threads: 1,
             online: None,
+            recalibrate: None,
         }
     }
 }
@@ -161,6 +195,19 @@ pub struct LaneStats {
     /// Candidates that reused a spec-twin representative's score (serial
     /// collapse or transposition-memo hit) instead of simulating.
     pub n_twin_collapsed: u64,
+    /// Recalibration: corrected-model generations this lane adopted
+    /// (0 with `LaneOptions::recalibrate: None`).
+    pub n_recalibrations: usize,
+    /// Recalibration: accepted per-engine residual observations.
+    pub n_calib_obs: u64,
+    /// Recalibration: observations whose residual hit the clip bound.
+    pub n_calib_clipped: u64,
+    /// Recalibration: the correction factors the lane's model carried at
+    /// shutdown (`1.0` each when recalibration is off or never adopted;
+    /// > 1 = the engine runs slower than the base model claimed).
+    pub calib_htd: f64,
+    pub calib_kernel: f64,
+    pub calib_dth: f64,
 }
 
 /// Aggregate metrics of one sharded run (single-lane degenerates to the
@@ -228,12 +275,22 @@ fn empty_lane_stats(lane: usize) -> LaneStats {
         n_cands_pruned: 0,
         n_rollouts_early_exit: 0,
         n_twin_collapsed: 0,
+        n_recalibrations: 0,
+        n_calib_obs: 0,
+        n_calib_clipped: 0,
+        calib_htd: 1.0,
+        calib_kernel: 1.0,
+        calib_dth: 1.0,
     }
 }
 
 /// The sharded multi-worker runtime (see module docs).
 pub struct LaneCoordinator {
     devices: Vec<Arc<VirtualDevice>>,
+    /// Planning model override: the profile the lane proxies *predict*
+    /// with, decoupled from the device they execute on. `None` plans
+    /// against each device's own profile (the pre-calibration behavior).
+    plan_model: Option<DeviceProfile>,
     opts: LaneOptions,
 }
 
@@ -242,7 +299,7 @@ impl LaneCoordinator {
     /// proxy schedules against its own device's profile).
     pub fn with_devices(devices: Vec<Arc<VirtualDevice>>, opts: LaneOptions) -> Self {
         assert!(!devices.is_empty(), "need at least one lane device");
-        LaneCoordinator { devices, opts }
+        LaneCoordinator { devices, plan_model: None, opts }
     }
 
     /// `opts.lanes` identical lanes over copies of one profile/executor.
@@ -256,7 +313,17 @@ impl LaneCoordinator {
                 Arc::new(VirtualDevice::new(profile.clone(), executor.clone()))
             })
             .collect();
-        LaneCoordinator { devices, opts }
+        LaneCoordinator { devices, plan_model: None, opts }
+    }
+
+    /// Plan against `model` instead of each device's own profile — the
+    /// fitted-model-vs-reality split online recalibration corrects for.
+    /// The online bench uses this to run deliberately *miscalibrated*
+    /// models against a truthful device; with `LaneOptions::recalibrate`
+    /// the measured-rate feedback pulls the model back toward reality.
+    pub fn with_plan_model(mut self, model: DeviceProfile) -> Self {
+        self.plan_model = Some(model);
+        self
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -321,6 +388,12 @@ impl LaneCoordinator {
             let proxy_handles: Vec<_> = (0..lanes)
                 .map(|l| {
                     let device = Arc::clone(&self.devices[l]);
+                    // Base planning model: the override, or the device's
+                    // own profile (model == reality, as before).
+                    let base_model = self
+                        .plan_model
+                        .clone()
+                        .unwrap_or_else(|| device.profile().clone());
                     let opts = self.opts;
                     // group_cap = 0: one full round of THIS lane's workers
                     // (those with w % lanes == l) — a global ceil(T/lanes)
@@ -339,12 +412,14 @@ impl LaneCoordinator {
                         .name(format!("lane-proxy-{l}"))
                         .spawn_scoped(s, move || match opts.online {
                             Some(online) => online_lane_proxy(
-                                l, sharded, device, opts, online, cap, epoch,
+                                l, sharded, device, base_model, opts, online, cap,
+                                epoch,
                             ),
                             None => lane_proxy(
                                 l,
                                 sharded.lane(l).clone(),
                                 device,
+                                base_model,
                                 opts,
                                 cap,
                                 epoch,
@@ -388,15 +463,16 @@ impl LaneCoordinator {
 /// device run → completion signals. All per-group buffers are reused, so
 /// a warm lane performs no allocation on its drain path beyond the task
 /// clones handed to the device.
+#[allow(clippy::too_many_arguments)]
 fn lane_proxy(
     lane: usize,
     buffer: SharedBuffer,
     device: Arc<VirtualDevice>,
+    base_model: DeviceProfile,
     opts: LaneOptions,
     cap: usize,
     epoch: Instant,
 ) -> LaneOutcome {
-    let profile = device.profile().clone();
     let mut scratch = ParBeamScratch::new(opts.scoring_threads);
     let mut order: Vec<usize> = Vec::new();
     let mut drained: Vec<Submission> = Vec::new();
@@ -408,6 +484,17 @@ fn lane_proxy(
     // reports its chosen order's makespan itself).
     let mut lane_table = TaskTable::new();
     let mut lane_cursor = SimCursor::detached();
+    // Calibration: identity profile when off (bit-identical compiles);
+    // corrections adopt atomically at each group boundary — the compile
+    // below and any cursor rewind read the same model generation. The
+    // recorded probe replays each submitted order through the model so
+    // predicted per-command durations carry the *modeled* duplex
+    // contention, symmetric with the device's measured durations.
+    let mut cal_prof = CalibratedProfile::identity(&base_model);
+    let mut calibrator = opts.recalibrate.map(Calibrator::new);
+    let mut calib_probe = SimCursor::detached();
+    calib_probe.set_record_timeline(true);
+    let mut pred_stages: Vec<EngineSecs> = Vec::new();
 
     let mut latencies = Vec::new();
     let mut group_makespans = Vec::new();
@@ -417,16 +504,24 @@ fn lane_proxy(
         let group = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             tasks.clear();
             tasks.extend(drained.iter().map(|s| s.task.clone()));
+            // Group boundary = timeline boundary: adopt any matured rate
+            // corrections before compiling this group's table.
+            if let Some(cal) = calibrator.as_mut() {
+                if let Some(c) = cal.adopt() {
+                    cal_prof = CalibratedProfile::new(&base_model, c);
+                    stats.n_recalibrations += 1;
+                }
+            }
             // Compiled once per drained group; shared by the search and
             // the prediction bookkeeping.
-            lane_table.compile_into(&tasks, &profile);
+            lane_table.compile_calibrated_into(&tasks, &cal_prof);
             match opts.policy {
                 Policy::NoReorder => {
                     order.clear();
                     order.extend(0..tasks.len());
                     // Model prediction for the arrival order
                     // (allocation-free replay through the lane cursor).
-                    lane_cursor.reset(&profile, EngineState::default());
+                    lane_cursor.reset_for_table(&lane_table, EngineState::default());
                     for &i in &order {
                         lane_cursor.push_task_compiled(&lane_table, i);
                     }
@@ -459,6 +554,27 @@ fn lane_proxy(
                 sub.done.complete(now - run.makespan + run.task_end[slot]);
                 latencies.push(now - sub.submitted_at);
             }
+            // Measured-rate feedback, after the completion signals so
+            // the replay never delays worker unblocking: predicted
+            // per-slot stage seconds from a recorded model replay of
+            // the submitted order (so modeled duplex contention matches
+            // the measured side — solo stage secs would double-count
+            // sigma) against the device's measured per-command
+            // timeline. The device runs each group from idle, so the
+            // replay starts from idle too.
+            if let Some(cal) = calibrator.as_mut() {
+                calib_probe.reset_for_table(&lane_table, EngineState::default());
+                for &i in &order {
+                    calib_probe.push_task_compiled(&lane_table, i);
+                }
+                calib_probe.run_to_quiescence();
+                fold_timeline_stage_secs(
+                    order.len(),
+                    calib_probe.timeline(),
+                    &mut pred_stages,
+                );
+                cal.observe_group(&pred_stages, &run.timeline);
+            }
             stats.n_groups += 1;
             stats.n_tasks += drained.len();
         }));
@@ -487,7 +603,21 @@ fn lane_proxy(
     stats.n_cands_pruned = pc.n_cands_pruned;
     stats.n_rollouts_early_exit = pc.n_rollouts_early_exit;
     stats.n_twin_collapsed = pc.n_twin_collapsed;
+    record_calib_stats(&mut stats, calibrator.as_ref());
     LaneOutcome { stats, latencies, group_makespans }
+}
+
+/// Fold a lane's final calibration state into its [`LaneStats`].
+fn record_calib_stats(stats: &mut LaneStats, calibrator: Option<&Calibrator>) {
+    if let Some(cal) = calibrator {
+        let c = cal.counts();
+        stats.n_calib_obs = c.n_obs;
+        stats.n_calib_clipped = c.n_clipped;
+        let f = cal.applied();
+        stats.calib_htd = f.htd;
+        stats.calib_kernel = f.k;
+        stats.calib_dth = f.dth;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -502,6 +632,9 @@ struct RunDone {
     makespan: f64,
     n_tasks: usize,
     latencies: Vec<f64>,
+    /// Measured per-command records (slot-indexed in submitted order) —
+    /// the calibrator's feedback substrate. Empty on a device panic.
+    timeline: Vec<CmdRecord>,
     /// A device panic, deferred so the proxy can run its liveness
     /// protocol before surfacing it.
     panicked: Option<Box<dyn std::any::Any + Send>>,
@@ -517,22 +650,34 @@ fn online_lane_proxy(
     lane: usize,
     sharded: ShardedBuffer,
     device: Arc<VirtualDevice>,
+    base_model: DeviceProfile,
     opts: LaneOptions,
     online: OnlineOptions,
     cap: usize,
     epoch: Instant,
 ) -> LaneOutcome {
     let own = sharded.lane(lane).clone();
-    let profile = device.profile().clone();
 
     // Planner state: the contiguous lane cursor carries EngineState
     // across back-to-back groups (committed prefix = everything handed to
     // the runner); the table is recompiled over the pending suffix on
-    // every merge.
+    // every merge. Calibration adopts a corrected model only when the
+    // contiguous timeline restarts (lane fully idle), so the cursor and
+    // every table it pairs with always share one model generation.
     let mut table = TaskTable::new();
     let mut lane_cursor = SimCursor::detached();
     let mut scratch = OnlineScratch::new();
     let mut gate = DriftGate::new(online.drift_threshold);
+    let mut cal_prof = CalibratedProfile::identity(&base_model);
+    let mut calibrator = opts.recalibrate.map(Calibrator::new);
+    // Recorded replay probe + predicted per-slot stage seconds of the
+    // group in flight (captured at submit: the table may be recompiled
+    // by merges while it runs). The replay carries the modeled duplex
+    // contention, symmetric with the device's measured durations, and
+    // starts from idle because the device runs each group from idle.
+    let mut calib_probe = SimCursor::detached();
+    calib_probe.set_record_timeline(true);
+    let mut inflight_pred: Vec<EngineSecs> = Vec::new();
 
     let mut pending_subs: Vec<Submission> = Vec::new();
     let mut pending_tasks: Vec<TaskSpec> = Vec::new();
@@ -571,6 +716,7 @@ fn online_lane_proxy(
                                 makespan: run.makespan,
                                 n_tasks: subs.len(),
                                 latencies: lat,
+                                timeline: run.timeline,
                                 panicked: None,
                             }
                         }
@@ -586,6 +732,7 @@ fn online_lane_proxy(
                                 makespan: 0.0,
                                 n_tasks: subs.len(),
                                 latencies: Vec::new(),
+                                timeline: Vec::new(),
                                 panicked: Some(p),
                             }
                         }
@@ -617,6 +764,12 @@ fn online_lane_proxy(
                             stats.busy_secs += done.makespan;
                             stats.predicted_secs += pred;
                             gate.observe(done.makespan, pred);
+                            // Measured-rate feedback: the submitted
+                            // order's predicted stage seconds against the
+                            // device's measured per-command timeline.
+                            if let Some(cal) = calibrator.as_mut() {
+                                cal.observe_group(&inflight_pred, &done.timeline);
+                            }
                             group_makespans.push(done.makespan);
                             latencies.extend(done.latencies);
                             stats.n_groups += 1;
@@ -640,7 +793,7 @@ fn online_lane_proxy(
                                         &mut drained,
                                     ) {
                                         DrainPoll::Drained(_) => merge_arrivals(
-                                            &profile,
+                                            &cal_prof,
                                             true,
                                             &mut drained,
                                             &mut pending_subs,
@@ -668,7 +821,7 @@ fn online_lane_proxy(
                                                 if got > 0 {
                                                     stats.n_stolen += got;
                                                     merge_arrivals(
-                                                        &profile,
+                                                        &cal_prof,
                                                         true,
                                                         &mut drained,
                                                         &mut pending_subs,
@@ -749,6 +902,26 @@ fn online_lane_proxy(
                     last_commit_pred = pred_done;
                     inflight = Some(contribution);
                     job_tx.send(ordered_subs).expect("lane device runner alive");
+                    // Capture the order's predicted per-slot stage
+                    // seconds for calibration feedback via a recorded
+                    // model replay — AFTER the send, so the replay
+                    // overlaps the device run instead of delaying it
+                    // (the proxy is single-threaded: `table` and
+                    // `incumbent` cannot change before this finishes,
+                    // and the earliest RunDone is received on the next
+                    // loop iteration).
+                    if calibrator.is_some() {
+                        calib_probe.reset_for_table(&table, EngineState::default());
+                        for &i in incumbent.iter() {
+                            calib_probe.push_task_compiled(&table, i);
+                        }
+                        calib_probe.run_to_quiescence();
+                        fold_timeline_stage_secs(
+                            incumbent.len(),
+                            calib_probe.timeline(),
+                            &mut inflight_pred,
+                        );
+                    }
                     pending_tasks.clear();
                     incumbent.clear();
                     suffix_planned = false;
@@ -760,9 +933,19 @@ fn online_lane_proxy(
                 }
                 // Fully idle: the physical device has drained, so the
                 // contiguous planning timeline ends; the next arrival
-                // starts a fresh one. Probe our own lane briefly, then
-                // steal from the hottest sibling if we stay dry.
+                // starts a fresh one. This is the only place a corrected
+                // model may be adopted — the next merge rewinds the
+                // cursor from a table compiled against it, so cursor and
+                // table always share one model generation. Probe our own
+                // lane briefly, then steal from the hottest sibling if we
+                // stay dry.
                 planner_live = false;
+                if let Some(cal) = calibrator.as_mut() {
+                    if let Some(c) = cal.adopt() {
+                        cal_prof = CalibratedProfile::new(&base_model, c);
+                        stats.n_recalibrations += 1;
+                    }
+                }
                 match own.drain_into_timeout(
                     cap,
                     online.poll,
@@ -770,7 +953,7 @@ fn online_lane_proxy(
                     &mut drained,
                 ) {
                     DrainPoll::Drained(_) => merge_arrivals(
-                        &profile,
+                        &cal_prof,
                         false,
                         &mut drained,
                         &mut pending_subs,
@@ -794,7 +977,7 @@ fn online_lane_proxy(
                             if got > 0 {
                                 stats.n_stolen += got;
                                 merge_arrivals(
-                                    &profile,
+                                    &cal_prof,
                                     false,
                                     &mut drained,
                                     &mut pending_subs,
@@ -849,18 +1032,22 @@ fn online_lane_proxy(
     stats.n_cands_pruned = pc.n_cands_pruned;
     stats.n_rollouts_early_exit = pc.n_rollouts_early_exit;
     stats.n_twin_collapsed = pc.n_twin_collapsed;
+    record_calib_stats(&mut stats, calibrator.as_ref());
     LaneOutcome { stats, latencies, group_makespans }
 }
 
 /// Append drained (or stolen) submissions to the lane's uncommitted
-/// suffix and recompile the pending table. Starts a fresh contiguous
-/// planning timeline when the lane was idle. `mid_group` marks arrivals
-/// that extend a live plan (suffix non-empty or a group in flight) — the
-/// "merge into the uncommitted suffix instead of queueing a fresh group"
-/// events counted by [`LaneStats::n_merges`].
+/// suffix and recompile the pending table against the lane's current
+/// (possibly calibrated) planning model. Starts a fresh contiguous
+/// planning timeline when the lane was idle — rewinding the cursor *from
+/// the freshly compiled table* so cursor and table can never disagree
+/// about the model generation. `mid_group` marks arrivals that extend a
+/// live plan (suffix non-empty or a group in flight) — the "merge into
+/// the uncommitted suffix instead of queueing a fresh group" events
+/// counted by [`LaneStats::n_merges`].
 #[allow(clippy::too_many_arguments)]
 fn merge_arrivals(
-    profile: &DeviceProfile,
+    cal_prof: &CalibratedProfile,
     mid_group: bool,
     drained: &mut Vec<Submission>,
     pending_subs: &mut Vec<Submission>,
@@ -876,13 +1063,6 @@ fn merge_arrivals(
     if drained.is_empty() {
         return;
     }
-    if !*planner_live {
-        // Idle device: engines free now; the carry chain restarts.
-        lane_cursor.reset(profile, EngineState::default());
-        lane_cursor.commit_frontier();
-        *planner_live = true;
-        *last_commit_pred = 0.0;
-    }
     if mid_group || !pending_subs.is_empty() {
         stats.n_merges += 1;
     }
@@ -891,7 +1071,15 @@ fn merge_arrivals(
         pending_tasks.push(sub.task.clone());
         pending_subs.push(sub);
     }
-    table.compile_into(pending_tasks, profile);
+    table.compile_calibrated_into(pending_tasks, cal_prof);
+    if !*planner_live {
+        // Idle device: engines free now; the carry chain restarts on the
+        // current model generation.
+        lane_cursor.reset_for_table(table, EngineState::default());
+        lane_cursor.commit_frontier();
+        *planner_live = true;
+        *last_commit_pred = 0.0;
+    }
     *plan_dirty = true;
 }
 
@@ -1211,5 +1399,120 @@ mod tests {
         let m = c.run(Vec::new());
         assert_eq!(m.n_tasks, 0);
         assert_eq!(m.n_groups, 0);
+    }
+
+    // ---- online recalibration --------------------------------------
+
+    /// amd_r9 with both link bandwidths doubled: a model that believes
+    /// transfers run twice as fast as the device actually paces them.
+    fn miscalibrated_model() -> crate::config::DeviceProfile {
+        let mut m = profile_by_name("amd_r9").unwrap();
+        m.htd.bytes_per_sec *= 2.0;
+        m.dth.bytes_per_sec *= 2.0;
+        m
+    }
+
+    #[test]
+    fn recalibration_off_reports_identity_factors() {
+        let c = coordinator(1, Policy::Heuristic);
+        let m = c.run(workload(3, 2, 0.1));
+        assert_eq!(m.n_tasks, 6);
+        for l in &m.per_lane {
+            assert_eq!(l.n_recalibrations, 0);
+            assert_eq!(l.n_calib_obs, 0);
+            assert_eq!(l.calib_htd, 1.0);
+            assert_eq!(l.calib_kernel, 1.0);
+            assert_eq!(l.calib_dth, 1.0);
+        }
+    }
+
+    #[test]
+    fn recalibration_corrects_miscalibrated_links_legacy_path() {
+        let _t = crate::util::timing::timing_test_lock();
+        // Device executes the true amd_r9 pacing; the lane plans with a
+        // model whose links are 2x too fast. The measured-rate feedback
+        // must pull the transfer corrections well above 1 (toward ~2)
+        // and adopt at least one corrected generation.
+        let c = LaneCoordinator::homogeneous(
+            profile_by_name("amd_r9").unwrap(),
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 1,
+                policy: Policy::Heuristic,
+                recalibrate: Some(crate::model::CalibrateOptions::default()),
+                ..LaneOptions::default()
+            },
+        )
+        .with_plan_model(miscalibrated_model());
+        let m = c.run(workload(4, 3, 0.2));
+        assert_eq!(m.n_tasks, 12);
+        let l = &m.per_lane[0];
+        assert!(l.n_calib_obs > 0, "{l:?}");
+        assert!(l.n_recalibrations >= 1, "{l:?}");
+        assert!(
+            l.calib_htd > 1.3 && l.calib_dth > 1.3,
+            "transfer corrections should move toward ~2x: {l:?}"
+        );
+        // Kernel pacing is truthful, so its correction stays near 1.
+        assert!(
+            l.calib_kernel > 0.5 && l.calib_kernel < 1.5,
+            "kernel correction should stay near identity: {l:?}"
+        );
+    }
+
+    #[test]
+    fn recalibration_on_truthful_model_keeps_factors_near_identity() {
+        let _t = crate::util::timing::timing_test_lock();
+        // Model == device: the feedback must NOT absorb the duplex
+        // contention stretch into link corrections — the predicted side
+        // comes from a recorded replay that models the same contention,
+        // so residuals stay near 1 and factors near identity. (With
+        // solo-stage predictions this drifts toward 1 + overlap*(σ-1).)
+        let c = LaneCoordinator::homogeneous(
+            profile_by_name("amd_r9").unwrap(),
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 1,
+                policy: Policy::Heuristic,
+                recalibrate: Some(crate::model::CalibrateOptions::default()),
+                ..LaneOptions::default()
+            },
+        );
+        let m = c.run(workload(4, 3, 0.2));
+        assert_eq!(m.n_tasks, 12);
+        let l = &m.per_lane[0];
+        assert!(l.n_calib_obs > 0, "{l:?}");
+        for (name, f) in [
+            ("htd", l.calib_htd),
+            ("kernel", l.calib_kernel),
+            ("dth", l.calib_dth),
+        ] {
+            assert!(
+                f > 0.7 && f < 1.3,
+                "{name} factor drifted on a truthful model: {l:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn recalibration_online_mode_observes_and_completes() {
+        let _t = crate::util::timing::timing_test_lock();
+        let c = LaneCoordinator::homogeneous(
+            profile_by_name("amd_r9").unwrap(),
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 1,
+                policy: Policy::Heuristic,
+                online: Some(OnlineOptions::default()),
+                recalibrate: Some(crate::model::CalibrateOptions::default()),
+                ..LaneOptions::default()
+            },
+        )
+        .with_plan_model(miscalibrated_model());
+        let m = c.run(workload(4, 3, 0.2));
+        assert_eq!(m.n_tasks, 12);
+        assert_eq!(m.latencies.len(), 12);
+        let l = &m.per_lane[0];
+        assert!(l.n_calib_obs > 0, "online lane never observed: {l:?}");
     }
 }

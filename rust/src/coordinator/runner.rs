@@ -77,6 +77,7 @@ impl Coordinator {
                 group_cap: 0,
                 scoring_threads: 1,
                 online: None,
+                recalibrate: None,
             },
         );
         let m = lane.run(workloads);

@@ -1,0 +1,539 @@
+//! Online recalibration of the temporal model — measured-rate feedback
+//! from executed groups into the per-device rate model.
+//!
+//! The paper treats the model's LogGP constants as fixed, measured once
+//! by a micro-benchmark; PR 3's `DriftGate` already *measures* how far
+//! reality has drifted from those constants but only uses the signal to
+//! admit re-plans. This module closes the loop, the way OpenCL
+//! performance-prediction systems (Johnston et al.) and PySchedCL treat
+//! per-device rate models: as fitted, updatable artifacts.
+//!
+//! * [`Calibrator`] ingests each completed task's measured per-engine
+//!   times (HtD, kernel, DtH — summed from the device's [`CmdRecord`]
+//!   timeline) against the model's predicted per-engine times for the
+//!   same order (summed from a *recorded model replay*, so duplex
+//!   contention appears symmetrically on both sides — see
+//!   [`Calibrator::observe_group`]), and maintains one robust EWMA per
+//!   engine over the *implied-rate residuals* `measured / predicted`.
+//!   Residuals are outlier-clipped
+//!   (a single jittered µs-scale transfer must not yank the model) and
+//!   the resulting corrections are warm-up-gated (identity until enough
+//!   samples accumulated) and clamped to a bounded range so the derived
+//!   profile always satisfies every `DeviceProfile` invariant.
+//! * [`CalibratedProfile`] turns a correction triple into a planning
+//!   model: an *effective* [`DeviceProfile`] whose link times are scaled
+//!   (latency multiplied, bandwidth divided — see [`LinkParams::scaled`])
+//!   plus a kernel time scale applied at [`TaskTable`] compilation
+//!   (kernel estimates live per task, not in the profile, so the scale
+//!   rides with the compile). `duplex_slowdown` is never touched, so the
+//!   sigma >= 1 invariant behind `SimCursor::lower_bound` admissibility
+//!   is preserved by construction.
+//!
+//! # Atomic adoption, and why the bound-gated search stays exact
+//!
+//! A correction is *adopted* only at a planning-timeline boundary: the
+//! lane recompiles the group's [`TaskTable`] against the calibrated
+//! profile **and** rewinds its planning cursor from that same table
+//! ([`SimCursor::reset_for_table`]) in one step. Every floor the pruning
+//! layer consults (`lower_bound_with_remaining` busy sums, the table's
+//! group aggregates, `remaining_floor` row scans) and every rollout it
+//! scores then derive from one `(table, ProfileParams)` generation, so
+//! the admissibility and bit-exactness proofs of `sched::search_util`
+//! apply unchanged — corrections may speed *or* slow engine rates
+//! without ever mixing generations inside one search. Envelopes from an
+//! older generation are never compared against scores from a newer one
+//! (the reset is the generation barrier).
+//!
+//! With recalibration off (`LaneOptions::recalibrate: None`) the
+//! pipeline is **bit-identical** to the pre-calibration code: an
+//! identity [`CalibratedProfile`] compiles bitwise-equal tables
+//! (`x * 1.0` and `x / 1.0` are exact in IEEE-754), pinned by
+//! `rust/tests/prop_calibrate.rs`.
+//!
+//! Calibrated planning is table-path only: `SimCursor::push_task` (the
+//! `TaskSpec` walk) knows nothing of the kernel scale, so calibrated
+//! simulation must go through [`SimCursor::push_task_compiled`] — which
+//! is the only push every scheduler hot path uses.
+//!
+//! [`CmdRecord`]: crate::model::timeline::CmdRecord
+//! [`LinkParams::scaled`]: crate::config::LinkParams::scaled
+//! [`TaskTable`]: crate::model::TaskTable
+//! [`SimCursor::reset_for_table`]: crate::model::SimCursor::reset_for_table
+//! [`SimCursor::push_task_compiled`]: crate::model::SimCursor::push_task_compiled
+
+use crate::config::DeviceProfile;
+use crate::model::timeline::{CmdKind, CmdRecord};
+
+/// Knobs of the online recalibration loop. Consumed by
+/// `coordinator::lanes` via `LaneOptions::recalibrate`.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrateOptions {
+    /// EWMA smoothing factor over per-task implied-rate residuals,
+    /// in (0, 1]. Higher = faster adaptation, noisier corrections.
+    pub alpha: f64,
+    /// Accepted observations an engine needs before its correction
+    /// leaves identity (warm-up gate: a single jittered sample must not
+    /// start steering the model).
+    pub warmup: usize,
+    /// Per-observation residual clip: `measured / predicted` is clamped
+    /// into `[1/clip, clip]` before entering the EWMA (>= 1). Clipped
+    /// observations still count — a persistent regime shift beyond the
+    /// clip converges to the clip bound instead of being discarded.
+    pub clip: f64,
+    /// Bound on the *applied* correction factor: corrections are clamped
+    /// into `[1/max_correction, max_correction]`, keeping the effective
+    /// profile's bandwidths finite and positive (>= 1).
+    pub max_correction: f64,
+    /// Relative dead-band of [`Calibrator::adopt`]: a fresh correction
+    /// replaces the applied one only when some engine's factor moved by
+    /// more than this fraction — otherwise every EWMA tick would churn a
+    /// new model generation per group for noise-level changes.
+    pub adopt_margin: f64,
+}
+
+impl Default for CalibrateOptions {
+    fn default() -> Self {
+        CalibrateOptions {
+            alpha: 0.3,
+            warmup: 3,
+            clip: 4.0,
+            max_correction: 8.0,
+            adopt_margin: 0.02,
+        }
+    }
+}
+
+/// Per-engine seconds triple: predicted solo stage times (from a
+/// compiled [`TaskTable`] row) or measured engine-busy times (summed
+/// from a device timeline).
+///
+/// [`TaskTable`]: crate::model::TaskTable
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EngineSecs {
+    pub htd: f64,
+    pub k: f64,
+    pub dth: f64,
+}
+
+/// Per-engine time-scale corrections relative to the *base* model
+/// (> 1 = the engine runs slower than modeled, so modeled times stretch).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Corrections {
+    pub htd: f64,
+    pub k: f64,
+    pub dth: f64,
+}
+
+impl Corrections {
+    pub fn identity() -> Corrections {
+        Corrections { htd: 1.0, k: 1.0, dth: 1.0 }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.htd == 1.0 && self.k == 1.0 && self.dth == 1.0
+    }
+}
+
+impl Default for Corrections {
+    fn default() -> Self {
+        Corrections::identity()
+    }
+}
+
+/// Observation counters, surfaced through `LaneStats` and the online
+/// bench trajectory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CalibCounts {
+    /// Accepted per-engine residual observations.
+    pub n_obs: u64,
+    /// Observations whose residual hit the `clip` bound.
+    pub n_clipped: u64,
+}
+
+/// One engine's residual estimator.
+#[derive(Clone, Copy, Debug, Default)]
+struct Ewma {
+    value: Option<f64>,
+    n: usize,
+}
+
+impl Ewma {
+    fn observe(&mut self, residual: f64, alpha: f64) {
+        self.value = Some(match self.value {
+            None => residual,
+            Some(e) => e + alpha * (residual - e),
+        });
+        self.n += 1;
+    }
+
+    /// Warm-up-gated, clamped correction factor.
+    fn correction(&self, warmup: usize, max_correction: f64) -> f64 {
+        match self.value {
+            Some(e) if self.n >= warmup => e.clamp(1.0 / max_correction, max_correction),
+            _ => 1.0,
+        }
+    }
+}
+
+/// Robust per-engine rate-residual tracker (see module docs). One per
+/// lane; feed it every completed group, consult [`Calibrator::adopt`] at
+/// planning-timeline boundaries.
+#[derive(Clone, Debug)]
+pub struct Calibrator {
+    opts: CalibrateOptions,
+    htd: Ewma,
+    k: Ewma,
+    dth: Ewma,
+    /// Corrections the caller's current model generation already carries
+    /// — incoming predictions are divided back to base-model units so the
+    /// EWMA always estimates the *total* scale vs the base model (no
+    /// compounding feedback).
+    applied: Corrections,
+    counts: CalibCounts,
+    /// Reused per-group measured-seconds scratch (slot-indexed).
+    meas: Vec<EngineSecs>,
+}
+
+/// Predicted stage times below this are too small for a meaningful rate
+/// residual (µs-scale OS jitter would dominate the implied rate).
+const MIN_PREDICTED_SECS: f64 = 1e-9;
+
+impl Calibrator {
+    pub fn new(opts: CalibrateOptions) -> Calibrator {
+        assert!(
+            opts.alpha > 0.0 && opts.alpha <= 1.0,
+            "calibration alpha must be in (0, 1]"
+        );
+        assert!(opts.clip >= 1.0, "residual clip must be >= 1");
+        assert!(opts.max_correction >= 1.0, "max_correction must be >= 1");
+        assert!(opts.adopt_margin >= 0.0, "adopt_margin must be >= 0");
+        Calibrator {
+            opts,
+            htd: Ewma::default(),
+            k: Ewma::default(),
+            dth: Ewma::default(),
+            applied: Corrections::identity(),
+            counts: CalibCounts::default(),
+            meas: Vec::new(),
+        }
+    }
+
+    /// Record one completed task: `predicted` in *current-model* units
+    /// (the compiled table rows the plan used), `measured` from the
+    /// device. Degenerate samples (non-finite, non-positive, or predicted
+    /// below the meaningful-rate floor) are skipped per engine.
+    pub fn observe_task(&mut self, predicted: EngineSecs, measured: EngineSecs) {
+        let applied = self.applied;
+        let (opts, counts) = (self.opts, &mut self.counts);
+        let mut one = |est: &mut Ewma, pred: f64, meas: f64, scale: f64| {
+            // Back to base-model units, so the EWMA estimates the total
+            // correction vs the base model, not a compounding increment.
+            let pred_base = pred / scale;
+            if !(pred_base.is_finite() && meas.is_finite())
+                || pred_base < MIN_PREDICTED_SECS
+                || meas <= 0.0
+            {
+                return;
+            }
+            let raw = meas / pred_base;
+            let clipped = raw.clamp(1.0 / opts.clip, opts.clip);
+            if clipped != raw {
+                counts.n_clipped += 1;
+            }
+            counts.n_obs += 1;
+            est.observe(clipped, opts.alpha);
+        };
+        one(&mut self.htd, predicted.htd, measured.htd, applied.htd);
+        one(&mut self.k, predicted.k, measured.k, applied.k);
+        one(&mut self.dth, predicted.dth, measured.dth, applied.dth);
+    }
+
+    /// Record one executed group: `predicted[slot]` is the submitted
+    /// order's per-slot predicted stage seconds (current-model units);
+    /// `timeline` is the device's measured per-command record, whose
+    /// `task` indices are slots in the same order. Slots missing from
+    /// the timeline contribute zero measured time and are skipped by the
+    /// per-engine degenerate-sample guard.
+    ///
+    /// **Contention symmetry:** measured transfer durations include the
+    /// device's duplex-contention stretch (commands paced at `bw/sigma`
+    /// while the opposite direction is active), so `predicted` must
+    /// include the *modeled* contention too — fold a recorded model
+    /// replay of the same order via [`fold_timeline_stage_secs`], do NOT
+    /// pass solo stage seconds. Solo predictions would double-count
+    /// sigma into the corrections: a perfectly calibrated model on an
+    /// overlap-rich workload would read as "links too slow", adopt a
+    /// slowed generation, and then over-predict once the simulator
+    /// applies sigma on top of the absorbed correction.
+    pub fn observe_group(&mut self, predicted: &[EngineSecs], timeline: &[CmdRecord]) {
+        let mut meas = std::mem::take(&mut self.meas);
+        fold_timeline_stage_secs(predicted.len(), timeline, &mut meas);
+        for (slot, &pred) in predicted.iter().enumerate() {
+            self.observe_task(pred, meas[slot]);
+        }
+        self.meas = meas;
+    }
+
+    /// Current warm-up-gated, clamped correction triple vs the base
+    /// model (identity until each engine has `warmup` accepted samples).
+    pub fn corrections(&self) -> Corrections {
+        let (w, m) = (self.opts.warmup, self.opts.max_correction);
+        Corrections {
+            htd: self.htd.correction(w, m),
+            k: self.k.correction(w, m),
+            dth: self.dth.correction(w, m),
+        }
+    }
+
+    /// Corrections the caller last adopted (identity initially).
+    pub fn applied(&self) -> Corrections {
+        self.applied
+    }
+
+    /// Consult at a planning-timeline boundary: returns `Some(fresh)` —
+    /// and records it as applied — when some engine's correction moved by
+    /// more than `adopt_margin` relative to the applied one, else `None`
+    /// (keep the current model generation). The caller must rebuild its
+    /// [`CalibratedProfile`] (and recompile tables / reset cursors) from
+    /// the returned triple before planning anything else.
+    pub fn adopt(&mut self) -> Option<Corrections> {
+        let fresh = self.corrections();
+        let moved = |a: f64, b: f64| (a - b).abs() > self.opts.adopt_margin * b.abs();
+        if moved(fresh.htd, self.applied.htd)
+            || moved(fresh.k, self.applied.k)
+            || moved(fresh.dth, self.applied.dth)
+        {
+            self.applied = fresh;
+            Some(fresh)
+        } else {
+            None
+        }
+    }
+
+    pub fn counts(&self) -> CalibCounts {
+        self.counts
+    }
+}
+
+/// Fold a per-command timeline (simulated or device-measured; `task`
+/// indices are submission-order slots) into per-slot engine seconds —
+/// the duration substrate both sides of a calibration observation are
+/// built from. Out-of-range slots are ignored; `out` is cleared and
+/// resized (capacity reused across calls).
+pub fn fold_timeline_stage_secs(
+    n_slots: usize,
+    timeline: &[CmdRecord],
+    out: &mut Vec<EngineSecs>,
+) {
+    out.clear();
+    out.resize(n_slots, EngineSecs::default());
+    for r in timeline {
+        let Some(m) = out.get_mut(r.task) else { continue };
+        match r.kind {
+            CmdKind::HtD => m.htd += r.dur(),
+            CmdKind::Kernel => m.k += r.dur(),
+            CmdKind::DtH => m.dth += r.dur(),
+        }
+    }
+}
+
+/// A base model plus adopted corrections, materialized as the planning
+/// profile a lane compiles tables against (see module docs).
+#[derive(Clone, Debug)]
+pub struct CalibratedProfile {
+    scales: Corrections,
+    effective: DeviceProfile,
+}
+
+impl CalibratedProfile {
+    /// Corrections applied to `base`. Scales must be finite and positive
+    /// (the [`Calibrator`] clamp guarantees this for adopted triples);
+    /// `duplex_slowdown` is deliberately untouched.
+    pub fn new(base: &DeviceProfile, scales: Corrections) -> CalibratedProfile {
+        for s in [scales.htd, scales.k, scales.dth] {
+            assert!(
+                s.is_finite() && s > 0.0,
+                "calibration scale must be finite and positive (got {s})"
+            );
+        }
+        let effective = DeviceProfile {
+            htd: base.htd.scaled(scales.htd),
+            dth: base.dth.scaled(scales.dth),
+            ..base.clone()
+        };
+        CalibratedProfile { scales, effective }
+    }
+
+    /// Identity calibration: the effective profile is bitwise equal to
+    /// `base` (scaling by 1.0 is exact), so planning through an identity
+    /// [`CalibratedProfile`] is bit-identical to planning on `base`.
+    pub fn identity(base: &DeviceProfile) -> CalibratedProfile {
+        CalibratedProfile::new(base, Corrections::identity())
+    }
+
+    /// The corrected [`DeviceProfile`] (link scales baked in): reset
+    /// cursors and read engine rates from this.
+    pub fn effective(&self) -> &DeviceProfile {
+        &self.effective
+    }
+
+    /// Kernel time scale, applied at [`TaskTable`] compilation (kernel
+    /// estimates are per task, not in the profile).
+    ///
+    /// [`TaskTable`]: crate::model::TaskTable
+    pub fn kernel_scale(&self) -> f64 {
+        self.scales.k
+    }
+
+    /// The correction triple this profile carries.
+    pub fn scales(&self) -> Corrections {
+        self.scales
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+
+    fn secs(htd: f64, k: f64, dth: f64) -> EngineSecs {
+        EngineSecs { htd, k, dth }
+    }
+
+    #[test]
+    fn warmup_gates_then_converges() {
+        let mut c = Calibrator::new(CalibrateOptions::default());
+        assert!(c.corrections().is_identity());
+        // measured = 1.8x predicted on every engine.
+        for _ in 0..2 {
+            c.observe_task(secs(1e-3, 2e-3, 0.5e-3), secs(1.8e-3, 3.6e-3, 0.9e-3));
+            assert!(c.corrections().is_identity(), "warm-up must gate");
+        }
+        for _ in 0..10 {
+            c.observe_task(secs(1e-3, 2e-3, 0.5e-3), secs(1.8e-3, 3.6e-3, 0.9e-3));
+        }
+        let f = c.corrections();
+        for s in [f.htd, f.k, f.dth] {
+            assert!((s - 1.8).abs() < 1e-9, "converged factor {s}");
+        }
+        assert_eq!(c.counts().n_clipped, 0);
+        assert_eq!(c.counts().n_obs, 36);
+    }
+
+    #[test]
+    fn outliers_clip_and_count() {
+        let opts = CalibrateOptions { warmup: 1, ..CalibrateOptions::default() };
+        let mut c = Calibrator::new(opts);
+        c.observe_task(secs(1e-3, 0.0, 0.0), secs(1.0, 0.0, 0.0)); // 1000x
+        assert_eq!(c.counts().n_clipped, 1);
+        assert!(c.corrections().htd <= opts.clip);
+        // Non-positive / non-finite / sub-floor samples are skipped.
+        let before = c.counts().n_obs;
+        c.observe_task(secs(1e-3, 1e-3, 1e-3), secs(-1.0, f64::NAN, 0.0));
+        c.observe_task(secs(0.0, f64::INFINITY, 1e-12), secs(1e-3, 1e-3, 1e-3));
+        assert_eq!(c.counts().n_obs, before);
+    }
+
+    #[test]
+    fn observations_rebase_against_applied_scales() {
+        // After adopting a 2x correction, predictions arrive in
+        // corrected units; residuals must keep estimating the TOTAL
+        // scale vs base, not compound toward 4x.
+        let opts = CalibrateOptions {
+            warmup: 1,
+            adopt_margin: 0.0,
+            ..CalibrateOptions::default()
+        };
+        let mut c = Calibrator::new(opts);
+        for _ in 0..20 {
+            c.observe_task(secs(1e-3, 1e-3, 1e-3), secs(2e-3, 2e-3, 2e-3));
+        }
+        let adopted = c.adopt().expect("2x shift must adopt");
+        assert!((adopted.htd - 2.0).abs() < 1e-6);
+        // Model now predicts 2e-3 (corrected units); device still 2e-3.
+        for _ in 0..20 {
+            c.observe_task(secs(2e-3, 2e-3, 2e-3), secs(2e-3, 2e-3, 2e-3));
+        }
+        let f = c.corrections();
+        assert!((f.htd - 2.0).abs() < 1e-6, "stable at total scale: {f:?}");
+        assert!(c.adopt().is_none(), "no further adoption when stable");
+    }
+
+    #[test]
+    fn adopt_dead_band() {
+        let opts =
+            CalibrateOptions { warmup: 1, adopt_margin: 0.05, ..Default::default() };
+        let mut c = Calibrator::new(opts);
+        for _ in 0..20 {
+            c.observe_task(secs(1e-3, 1e-3, 1e-3), secs(1.03e-3, 1e-3, 1e-3));
+        }
+        assert!(c.adopt().is_none(), "3% drift inside 5% dead-band");
+        for _ in 0..20 {
+            c.observe_task(secs(1e-3, 1e-3, 1e-3), secs(1.4e-3, 1e-3, 1e-3));
+        }
+        let a = c.adopt().expect("40% drift adopts");
+        assert!(a.htd > 1.2);
+        assert_eq!(c.applied(), a);
+    }
+
+    #[test]
+    fn group_observation_folds_timeline_by_slot() {
+        let mut c = Calibrator::new(CalibrateOptions {
+            warmup: 1,
+            ..CalibrateOptions::default()
+        });
+        let predicted = [secs(1e-3, 2e-3, 0.0), secs(0.0, 1e-3, 1e-3)];
+        let rec = |task, kind, start: f64, end: f64| CmdRecord {
+            task,
+            kind,
+            seq: 0,
+            start,
+            end,
+        };
+        let timeline = vec![
+            // Slot 0: two HtD commands summing 1.5e-3, kernel 2e-3.
+            rec(0, CmdKind::HtD, 0.0, 1e-3),
+            rec(0, CmdKind::HtD, 1e-3, 1.5e-3),
+            rec(0, CmdKind::Kernel, 1.5e-3, 3.5e-3),
+            // Slot 1: kernel 1e-3, DtH 2e-3.
+            rec(1, CmdKind::Kernel, 3.5e-3, 4.5e-3),
+            rec(1, CmdKind::DtH, 4.5e-3, 6.5e-3),
+            // Out-of-range slot is ignored, not a panic.
+            rec(9, CmdKind::DtH, 0.0, 1.0),
+        ];
+        c.observe_group(&predicted, &timeline);
+        let f = c.corrections();
+        assert!((f.htd - 1.5).abs() < 1e-9, "{f:?}");
+        assert!((f.k - 1.0).abs() < 1e-9, "kernel 2e-3/2e-3 then 1e-3/1e-3");
+        assert!((f.dth - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrated_profile_scales_links_and_keeps_invariants() {
+        let base = profile_by_name("amd_r9").unwrap();
+        let cal =
+            CalibratedProfile::new(&base, Corrections { htd: 2.0, k: 1.5, dth: 1.0 });
+        let e = cal.effective();
+        assert_eq!(e.htd.bytes_per_sec, base.htd.bytes_per_sec / 2.0);
+        assert_eq!(e.htd.latency, base.htd.latency * 2.0);
+        // dth scale 1.0 is bitwise identity.
+        assert_eq!(e.dth.bytes_per_sec.to_bits(), base.dth.bytes_per_sec.to_bits());
+        assert_eq!(e.dth.latency.to_bits(), base.dth.latency.to_bits());
+        assert_eq!(e.duplex_slowdown, base.duplex_slowdown, "sigma untouched");
+        assert_eq!(cal.kernel_scale(), 1.5);
+        // The effective profile still passes every from_json invariant.
+        assert!(crate::config::DeviceProfile::from_json(&e.to_json()).is_ok());
+        // Identity is bitwise equal to base everywhere.
+        let id = CalibratedProfile::identity(&base);
+        assert_eq!(id.effective().htd.bytes_per_sec.to_bits(), base.htd.bytes_per_sec.to_bits());
+        assert_eq!(id.effective().htd.latency.to_bits(), base.htd.latency.to_bits());
+        assert_eq!(id.kernel_scale(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn degenerate_scale_rejected() {
+        let base = profile_by_name("k20c").unwrap();
+        let _ = CalibratedProfile::new(&base, Corrections { htd: 0.0, k: 1.0, dth: 1.0 });
+    }
+}

@@ -17,15 +17,24 @@
 //!   pre-resolved kernel durations, precomputed stage seconds and
 //!   dominance) so the scheduler hot path pushes tasks from contiguous
 //!   slices instead of walking `TaskSpec` structs.
+//! * `calibrate` — online recalibration of the model: measured per-engine
+//!   times from executed groups feed robust EWMA rate corrections
+//!   ([`Calibrator`]) that materialize as a [`CalibratedProfile`] the
+//!   lane coordinator recompiles its tables against.
 //! * `timeline` — per-command records, ASCII Gantt rendering and overlap
 //!   metrics used by reports and tests.
 
+pub mod calibrate;
 pub mod kernel;
 pub mod simulator;
 pub mod tasktable;
 pub mod timeline;
 pub mod transfer;
 
+pub use calibrate::{
+    fold_timeline_stage_secs, CalibCounts, CalibrateOptions, CalibratedProfile,
+    Calibrator, Corrections, EngineSecs,
+};
 pub use simulator::{
     simulate, simulate_order, simulate_order_compiled, EngineState, SimCursor,
     SimOptions, SimResult,

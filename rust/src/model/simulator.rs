@@ -265,6 +265,26 @@ impl SimCursor {
         self.reset_params(ProfileParams::of(profile), init);
     }
 
+    /// [`SimCursor::reset`] against the device constants a [`TaskTable`]
+    /// was compiled with. This is the adoption-safe rewind for calibrated
+    /// planning (`model::calibrate`): resetting from the table itself
+    /// makes it impossible to pair a cursor from one model generation
+    /// with a table from another — the pair the
+    /// [`SimCursor::push_task_compiled`] params assertion guards.
+    pub fn reset_for_table(&mut self, table: &TaskTable, init: EngineState) {
+        self.reset_params(table.params(), init);
+    }
+
+    /// Toggle per-command timeline recording on an existing cursor
+    /// (construction-time `SimOptions::record_timeline` for pooled
+    /// cursors that are `reset` rather than rebuilt — e.g. the lanes'
+    /// calibration replay, which needs the model's predicted
+    /// per-command durations). Takes effect from the next push; the
+    /// recorded timeline is cleared by every reset.
+    pub fn set_record_timeline(&mut self, on: bool) {
+        self.record = on;
+    }
+
     /// [`SimCursor::reset`] with pre-extracted device constants — lets a
     /// [`TaskTable`] holder rewind a cursor without re-touching the
     /// `DeviceProfile`.

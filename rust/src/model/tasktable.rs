@@ -38,6 +38,13 @@
 //! bit-identical to spec-driven simulation — property-tested in
 //! `rust/tests/prop_parallel.rs`.
 //!
+//! [`TaskTable::compile_calibrated_into`] compiles the same group against
+//! a *calibrated* planning model (`model::calibrate`): corrected link
+//! rates arrive via the effective profile and kernel durations are scaled
+//! at compile time, so every derived row value — stage secs, dominance,
+//! twin classes, the group-aggregate floors — is re-derived from the
+//! corrected model in one recompile.
+//!
 //! [`SimCursor::push_task`]: crate::model::SimCursor::push_task
 //! [`SimCursor::push_task_compiled`]: crate::model::SimCursor::push_task_compiled
 //! [`sched::heuristic`]: crate::sched::heuristic
@@ -112,6 +119,37 @@ impl TaskTable {
     /// Recompile in place, retaining every buffer's capacity: a warm table
     /// recompiled for a same-or-smaller group performs no heap allocation.
     pub fn compile_into(&mut self, tasks: &[TaskSpec], profile: &DeviceProfile) {
+        self.compile_impl(tasks, profile, 1.0);
+    }
+
+    /// [`TaskTable::compile_into`] against a calibrated planning model
+    /// (`model::calibrate`): link corrections are already baked into the
+    /// effective profile, and kernel durations are additionally scaled by
+    /// [`CalibratedProfile::kernel_scale`] (kernel estimates live per
+    /// task, not in the profile, so the scale rides with the compile).
+    /// With an identity calibration this is bit-identical to
+    /// `compile_into(tasks, base)` — scaling by 1.0 is exact — which is
+    /// what pins the recalibration-off pipeline to today's orders
+    /// (rust/tests/prop_calibrate.rs). Calibrated tables must be
+    /// simulated through [`SimCursor::push_task_compiled`] only: the
+    /// `TaskSpec` push path knows nothing of the kernel scale.
+    ///
+    /// [`CalibratedProfile::kernel_scale`]: crate::model::calibrate::CalibratedProfile::kernel_scale
+    /// [`SimCursor::push_task_compiled`]: crate::model::SimCursor::push_task_compiled
+    pub fn compile_calibrated_into(
+        &mut self,
+        tasks: &[TaskSpec],
+        cal: &crate::model::calibrate::CalibratedProfile,
+    ) {
+        self.compile_impl(tasks, cal.effective(), cal.kernel_scale());
+    }
+
+    fn compile_impl(
+        &mut self,
+        tasks: &[TaskSpec],
+        profile: &DeviceProfile,
+        kernel_scale: f64,
+    ) {
         self.prof = ProfileParams::of(profile);
         self.htd_raw.clear();
         self.htd_off.clear();
@@ -140,7 +178,11 @@ impl TaskTable {
                 task.htd_bytes.iter().map(|&b| profile.htd.transfer_secs(b)).sum();
             let dth: f64 =
                 task.dth_bytes.iter().map(|&b| profile.dth.transfer_secs(b)).sum();
-            let k = task.kernel.est_secs() + profile.kernel_launch_overhead;
+            // kernel_scale is 1.0 on the uncalibrated path, and x * 1.0
+            // is bitwise x — the calibrated compile shares this body
+            // without perturbing the plain one.
+            let k = (task.kernel.est_secs() + profile.kernel_launch_overhead)
+                * kernel_scale;
             self.kernel.push(k);
             self.htd_secs.push(htd);
             self.dth_secs.push(dth);
@@ -438,6 +480,43 @@ mod tests {
         assert_eq!(t.total_dth_secs(), dth);
         assert_eq!(t.min_kd_tail(), tail);
         assert_eq!(TaskTable::compile(&[], &p).min_kd_tail(), 0.0);
+    }
+
+    #[test]
+    fn calibrated_compile_rescales_rows_identity_stays_bitwise() {
+        use crate::model::calibrate::{CalibratedProfile, Corrections};
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let plain = TaskTable::compile(&g.tasks, &p);
+        // Identity calibration: every derived row value is bitwise equal.
+        let mut id = TaskTable::new();
+        id.compile_calibrated_into(&g.tasks, &CalibratedProfile::identity(&p));
+        for i in 0..plain.len() {
+            assert_eq!(id.kernel_secs(i).to_bits(), plain.kernel_secs(i).to_bits());
+            assert_eq!(id.htd_secs(i).to_bits(), plain.htd_secs(i).to_bits());
+            assert_eq!(id.dth_secs(i).to_bits(), plain.dth_secs(i).to_bits());
+            assert_eq!(id.k_minus_htd(i).to_bits(), plain.k_minus_htd(i).to_bits());
+            assert_eq!(
+                id.sequential_secs(i).to_bits(),
+                plain.sequential_secs(i).to_bits()
+            );
+            assert_eq!(id.dominance(i), plain.dominance(i));
+            assert_eq!(id.twin_class(i), plain.twin_class(i));
+        }
+        assert_eq!(id.min_kd_tail().to_bits(), plain.min_kd_tail().to_bits());
+        // Skewed calibration: scaled engines re-derive, untouched ones
+        // stay bitwise (dth scale 1.0).
+        let cal =
+            CalibratedProfile::new(&p, Corrections { htd: 2.0, k: 1.5, dth: 1.0 });
+        let mut t = TaskTable::new();
+        t.compile_calibrated_into(&g.tasks, &cal);
+        for i in 0..plain.len() {
+            let k = plain.kernel_secs(i);
+            let h = plain.htd_secs(i);
+            assert!((t.kernel_secs(i) - 1.5 * k).abs() <= 1e-12 * k.abs());
+            assert!((t.htd_secs(i) - 2.0 * h).abs() <= 1e-12 * h.abs());
+            assert_eq!(t.dth_secs(i).to_bits(), plain.dth_secs(i).to_bits());
+        }
     }
 
     #[test]

@@ -200,6 +200,23 @@ pub fn batch_reorder_beam_into(
     scratch.table = table;
 }
 
+/// [`batch_reorder_beam_into`] over a caller-compiled [`TaskTable`] — the
+/// serial counterpart of
+/// `sched::parallel::batch_reorder_table_parallel_into`, for callers that
+/// already hold the group compiled (a lane sharing one table between
+/// search and prediction, or a table compiled against a *calibrated*
+/// planning model via `model::calibrate` — the search is model-parametric
+/// and runs bit-exactly over whatever rates the table carries).
+pub fn batch_reorder_table_into(
+    table: &TaskTable,
+    init: EngineState,
+    width: usize,
+    scratch: &mut BeamScratch,
+    out: &mut Vec<usize>,
+) {
+    beam_over_table(table, init, width, scratch, out);
+}
+
 /// The search proper, over a pre-compiled table. Split out so the width-1
 /// greedy floor (and the parallel search's serial fallback) recurse
 /// without recompiling the table.

@@ -31,7 +31,9 @@ pub mod parallel;
 pub mod search_util;
 
 pub use bruteforce::{permutations, OrderStats};
-pub use heuristic::{batch_reorder, batch_reorder_beam_into, BeamScratch};
+pub use heuristic::{
+    batch_reorder, batch_reorder_beam_into, batch_reorder_table_into, BeamScratch,
+};
 pub use multidevice::{schedule_multi, MultiSchedule};
 pub use online::{replan_into, DriftGate, OnlineOptions, OnlineScratch, Replan};
 pub use parallel::{

@@ -126,10 +126,16 @@ impl DriftGate {
     }
 
     /// Record one executed group's measured makespan against the model's
-    /// predicted contribution. Non-finite or non-positive inputs are
-    /// ignored (a degenerate profile must not wedge the gate open).
+    /// predicted contribution. Non-finite or non-positive inputs — on
+    /// *either* side — are ignored: a NaN/inf value would poison the EWMA
+    /// silently, and a non-positive measurement (e.g. the zero makespan a
+    /// panicked device run reports) would register as 100% drift and
+    /// wedge the gate open.
     pub fn observe(&mut self, measured: f64, predicted: f64) {
-        if !(measured.is_finite() && predicted.is_finite()) || predicted <= 0.0 {
+        if !(measured.is_finite() && predicted.is_finite())
+            || predicted <= 0.0
+            || measured <= 0.0
+        {
             return;
         }
         let dev = (measured / predicted - 1.0).abs();
@@ -728,6 +734,9 @@ mod tests {
         g3.observe(f64::NAN, 1.0);
         g3.observe(1.0, 0.0);
         assert!(g3.drift().is_infinite());
+        g3.observe(0.0, 1.0);
+        g3.observe(-1.0, 1.0);
+        assert!(g3.drift().is_infinite(), "non-positive measured must not count");
 
         // Initial plans bypass a finite threshold: an accurate model
         // (low drift) gates RE-plans off but a fresh suffix still gets
@@ -741,5 +750,75 @@ mod tests {
         let mut g5 = DriftGate::new(f64::INFINITY);
         assert!(!g5.should_plan_initial());
         assert_eq!(g5.counts(), (0, 1));
+    }
+
+    // Direct edge-threshold coverage (previously exercised mostly through
+    // coordinator integration): each boundary behavior pinned on its own.
+
+    #[test]
+    fn drift_gate_zero_threshold_always_fires() {
+        let mut g = DriftGate::new(0.0);
+        // Before any observation, after a perfect observation, and after
+        // a noisy one: a zero threshold re-plans on every suffix change.
+        assert!(g.should_replan());
+        g.observe(1.0, 1.0);
+        assert!(g.should_replan());
+        g.observe(5.0, 1.0);
+        assert!(g.should_replan());
+        assert_eq!(g.counts(), (3, 3));
+        assert!((g.fire_rate() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn drift_gate_infinite_threshold_never_fires() {
+        let mut g = DriftGate::new(f64::INFINITY);
+        // Unmeasured (drift == inf): inf >= inf, but planning is off.
+        assert!(!g.should_replan());
+        assert!(!g.should_plan_initial());
+        // Even an arbitrarily large measured drift never admits a plan.
+        g.observe(1e6, 1.0);
+        assert!(!g.should_replan());
+        assert!(!g.should_plan_initial());
+        assert_eq!(g.counts(), (0, 4));
+        assert_eq!(g.fire_rate(), 0.0);
+    }
+
+    #[test]
+    fn drift_gate_first_observation_bypasses_finite_thresholds() {
+        // An unmeasured gate reports infinite drift, so ANY finite
+        // threshold admits the first re-plan — a lane that has never
+        // executed must not trust the model blindly.
+        for thr in [0.0, 0.1, 1.0, 1e12] {
+            let mut g = DriftGate::new(thr);
+            assert!(g.drift().is_infinite());
+            assert!(g.should_replan(), "threshold {thr} must admit unmeasured");
+        }
+        // After one accurate observation, a finite threshold gates off.
+        let mut g = DriftGate::new(0.1);
+        g.observe(1.0, 1.0);
+        assert!(!g.should_replan());
+    }
+
+    #[test]
+    fn drift_gate_rejects_degenerate_measurements_after_valid_ones() {
+        // A valid observation, then a stream of garbage: the EWMA keeps
+        // its value (garbage neither poisons nor resets it).
+        let mut g = DriftGate::new(0.2);
+        g.observe(1.1, 1.0);
+        let drift = g.drift();
+        assert!((drift - 0.1).abs() < 1e-12);
+        for (m, p) in [
+            (f64::NAN, 1.0),
+            (1.0, f64::NAN),
+            (f64::INFINITY, 1.0),
+            (1.0, f64::INFINITY),
+            (0.0, 1.0),
+            (-3.0, 1.0),
+            (1.0, 0.0),
+            (1.0, -2.0),
+        ] {
+            g.observe(m, p);
+            assert_eq!(g.drift(), drift, "({m}, {p}) must be ignored");
+        }
     }
 }

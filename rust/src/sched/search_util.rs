@@ -53,6 +53,15 @@
 //! every admitted score, which `total_cmp` guarantees. All comparisons
 //! that *admit* a prune use plain `>` so NaN scores (degenerate profiles)
 //! never prune anything — they sort last exactly as before.
+//!
+//! The whole layer is **model-parametric**: every floor and every rollout
+//! reads rates exclusively from one `(TaskTable, ProfileParams)` pair, so
+//! the proofs hold verbatim for tables compiled against a *calibrated*
+//! planning model (`model::calibrate`) — corrections may speed or slow
+//! engine rates freely, as long as adoption is atomic (table recompile +
+//! cursor rewind from the same generation, which the lane coordinator
+//! guarantees by construction). Exactness under skewed calibrations is
+//! pinned in rust/tests/prop_calibrate.rs.
 
 use crate::model::simulator::SimCursor;
 use crate::model::TaskTable;
@@ -464,6 +473,38 @@ mod tests {
         assert!(!provably_worse(2.0, f64::NAN));
         assert!(!provably_worse(f64::INFINITY, f64::INFINITY));
         assert!(provably_worse(f64::INFINITY, 1.0));
+    }
+
+    #[test]
+    fn remaining_floor_rederives_from_calibrated_tables() {
+        use crate::config::profile_by_name;
+        use crate::model::calibrate::{CalibratedProfile, Corrections};
+        use crate::task::synthetic::synthetic_benchmark;
+
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let plain = TaskTable::compile(&g.tasks, &p);
+        let cal =
+            CalibratedProfile::new(&p, Corrections { htd: 2.0, k: 1.5, dth: 1.0 });
+        let mut t = TaskTable::new();
+        t.compile_calibrated_into(&g.tasks, &cal);
+
+        let (h0, k0, d0, _) = remaining_floor(plain.len(), &plain, |i| i, |_| false);
+        let (h1, k1, d1, _) = remaining_floor(t.len(), &t, |i| i, |_| false);
+        // Scaled engines re-derive with the corrected rates...
+        assert!((h1 - 2.0 * h0).abs() <= 1e-12 * h0.abs(), "{h1} vs {}", 2.0 * h0);
+        assert!((k1 - 1.5 * k0).abs() <= 1e-12 * k0.abs());
+        // ...and the untouched engine stays bitwise (scale 1.0 is exact).
+        assert_eq!(d1.to_bits(), d0.to_bits());
+        // Identity calibration: the whole floor is bitwise unchanged.
+        let mut id = TaskTable::new();
+        id.compile_calibrated_into(&g.tasks, &CalibratedProfile::identity(&p));
+        let (hi, ki, di, ti) = remaining_floor(id.len(), &id, |i| i, |_| false);
+        let (hp, kp, dp, tp) = remaining_floor(plain.len(), &plain, |i| i, |_| false);
+        assert_eq!(
+            [hi.to_bits(), ki.to_bits(), di.to_bits(), ti.to_bits()],
+            [hp.to_bits(), kp.to_bits(), dp.to_bits(), tp.to_bits()]
+        );
     }
 
     #[test]

@@ -1,24 +1,105 @@
 #!/usr/bin/env python3
-"""Compare two BENCH_sched_overhead.json trajectory files cell by cell.
+"""Compare BENCH_*.json perf trajectories cell by cell.
 
-Used by the CI bench-smoke job: the previous run's ``bench-json`` artifact
-is downloaded and every matching ``(device, t, impl)`` timing cell is
-compared against the freshly measured file. A regression of more than
-``--threshold`` (relative, on the mean) fails the job with a readable
-table; new cells, removed cells and speedup rows are reported but never
-fatal. Exits 0 with a note when either file is missing or unparsable, so
-the very first run (no artifact yet) passes.
+Used by the CI bench-smoke job: the previous main run's ``bench-json``
+artifact is downloaded and every matching cell of every known trajectory
+file is compared against the freshly measured one. Each trajectory has
+its own key fields, metric, direction and regression threshold (see
+``TRAJECTORIES``):
+
+* ``BENCH_sched_overhead.json`` — reorder overhead per (device, T, impl),
+  mean seconds, lower is better, 15%;
+* ``BENCH_coordinator_throughput.json`` — tasks/sec per
+  (workers, lanes, group cap), higher is better, 30% (live-pipeline
+  timing is noisier than the microbench);
+* ``BENCH_online_resched.json`` — online makespan per
+  (workload, shape, workers, lanes), lower is better, 30%.
+
+Invocation: ``bench_diff.py PREVIOUS CURRENT`` where both arguments are
+either two files (config picked by basename) or two directories (every
+known trajectory found under both roots is compared; one side missing a
+file is a per-file soft skip). A regression beyond a file's threshold
+fails the run with a readable combined table; new cells, removed cells
+and rows without the metric are reported but never fatal. Missing or
+unparsable files and ``bench_mode`` changes (fast vs full numbers are not
+comparable) soft-skip, so the very first run passes.
+
+Unit-tested by ``tools/test_bench_diff.py`` (run in the CI lint job).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+from dataclasses import dataclass
 
 
-def load_rows(path):
-    """-> (bench_mode, {(device, t, impl): mean_s}) or None on any error."""
+@dataclass(frozen=True)
+class Trajectory:
+    """Per-file diff configuration."""
+
+    name: str
+    key_fields: tuple
+    metric_path: tuple
+    higher_is_better: bool
+    threshold: float
+
+    def metric_name(self):
+        return ".".join(self.metric_path)
+
+
+TRAJECTORIES = (
+    Trajectory(
+        name="BENCH_sched_overhead.json",
+        key_fields=("device", "t", "impl"),
+        metric_path=("bench", "mean_s"),
+        higher_is_better=False,
+        threshold=0.15,
+    ),
+    Trajectory(
+        name="BENCH_coordinator_throughput.json",
+        key_fields=("workers", "lanes", "t_group_cap"),
+        metric_path=("tasks_per_sec",),
+        higher_is_better=True,
+        threshold=0.30,
+    ),
+    Trajectory(
+        name="BENCH_online_resched.json",
+        key_fields=("workload", "shape", "workers", "lanes"),
+        metric_path=("makespan_s",),
+        higher_is_better=False,
+        threshold=0.30,
+    ),
+)
+
+
+def trajectory_for(path):
+    """Config matching a file's basename, or None."""
+    base = os.path.basename(path)
+    for traj in TRAJECTORIES:
+        if traj.name == base:
+            return traj
+    return None
+
+
+def metric_of(row, metric_path):
+    """Walk ``metric_path`` into ``row``; positive float or None."""
+    node = row
+    for part in metric_path:
+        if not isinstance(node, dict):
+            return None
+        node = node.get(part)
+    if isinstance(node, bool) or not isinstance(node, (int, float)):
+        return None
+    if node <= 0:
+        return None
+    return float(node)
+
+
+def load_rows(path, traj):
+    """-> (bench_mode, {key_tuple: metric}) or None on any read error."""
     try:
         with open(path, "r", encoding="utf-8") as fh:
             doc = json.load(fh)
@@ -28,43 +109,35 @@ def load_rows(path):
     mode = doc.get("bench_mode", "unknown")
     cells = {}
     for row in doc.get("rows", []):
-        bench = row.get("bench")
-        if not isinstance(bench, dict):
-            continue  # speedup/counter rows carry no timing cell
-        key = (row.get("device"), row.get("t"), row.get("impl"))
-        mean = bench.get("mean_s")
-        if None in key or not isinstance(mean, (int, float)) or mean <= 0:
+        if not isinstance(row, dict):
             continue
-        cells[key] = float(mean)
+        key = tuple(row.get(f) for f in traj.key_fields)
+        value = metric_of(row, traj.metric_path)
+        if None in key or value is None:
+            continue  # speedup/counter rows carry no comparable cell
+        cells[key] = value
     return mode, cells
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("previous", help="previous run's BENCH_sched_overhead.json")
-    ap.add_argument("current", help="this run's BENCH_sched_overhead.json")
-    ap.add_argument(
-        "--threshold",
-        type=float,
-        default=0.15,
-        help="relative mean_s regression that fails the diff (default 0.15)",
-    )
-    args = ap.parse_args()
+def classify(old, new, traj, threshold):
+    """-> (ratio, status) with status in ok / REGRESSED / improved."""
+    ratio = new / old
+    if traj.higher_is_better:
+        if ratio < 1.0 - threshold:
+            return ratio, "REGRESSED"
+        if ratio > 1.0 + threshold:
+            return ratio, "improved"
+    else:
+        if ratio > 1.0 + threshold:
+            return ratio, "REGRESSED"
+        if ratio < 1.0 - threshold:
+            return ratio, "improved"
+    return ratio, "ok"
 
-    prev = load_rows(args.previous)
-    curr = load_rows(args.current)
-    if prev is None or curr is None:
-        print("bench-diff: missing/unreadable input, skipping comparison")
-        return 0
-    prev_mode, prev_cells = prev
-    curr_mode, curr_cells = curr
-    if prev_mode != curr_mode:
-        print(
-            f"bench-diff: bench_mode changed ({prev_mode} -> {curr_mode}), "
-            "numbers are not comparable; skipping"
-        )
-        return 0
 
+def diff_cells(prev_cells, curr_cells, traj, threshold):
+    """-> (rows, removed_keys, n_regressions); rows are
+    (key, old, new, ratio, status) with ratio/old None for new cells."""
     rows = []
     regressions = 0
     for key in sorted(curr_cells, key=str):
@@ -73,38 +146,125 @@ def main():
         if old is None:
             rows.append((key, None, new, None, "new"))
             continue
-        ratio = new / old
-        status = "ok"
-        if ratio > 1.0 + args.threshold:
-            status = "REGRESSED"
+        ratio, status = classify(old, new, traj, threshold)
+        if status == "REGRESSED":
             regressions += 1
-        elif ratio < 1.0 - args.threshold:
-            status = "improved"
         rows.append((key, old, new, ratio, status))
     removed = sorted(set(prev_cells) - set(curr_cells), key=str)
+    return rows, removed, regressions
 
-    name_w = max((len(f"{d} T={t} {i}") for (d, t, i) in curr_cells), default=20)
-    print(f"bench-diff ({curr_mode} mode, threshold {args.threshold:.0%}):")
+
+def fmt_value(traj, v):
+    if v is None:
+        return "-"
+    if traj.metric_path[-1].endswith("_s"):
+        return f"{v * 1e6:.1f}us"
+    return f"{v:.1f}/s"
+
+
+def render(traj, mode, threshold, rows, removed, prev_cells):
+    """Print one trajectory's section of the combined table."""
+    names = [" ".join(str(p) for p in key) for key, *_ in rows]
+    name_w = max([len(n) for n in names] + [20])
+    better = "higher" if traj.higher_is_better else "lower"
+    print(
+        f"\n{traj.name} ({mode} mode, {traj.metric_name()}, {better} is "
+        f"better, threshold {threshold:.0%}):"
+    )
     print(f"{'cell':<{name_w}} {'prev':>12} {'curr':>12} {'ratio':>7}  status")
-    for (d, t, i), old, new, ratio, status in rows:
-        name = f"{d} T={t} {i}"
-        old_s = f"{old * 1e6:.1f}us" if old is not None else "-"
+    for name, (_, old, new, ratio, status) in zip(names, rows):
         ratio_s = f"{ratio:.2f}x" if ratio is not None else "-"
         print(
-            f"{name:<{name_w}} {old_s:>12} {new * 1e6:>10.1f}us "
-            f"{ratio_s:>7}  {status}"
+            f"{name:<{name_w}} {fmt_value(traj, old):>12} "
+            f"{fmt_value(traj, new):>12} {ratio_s:>7}  {status}"
         )
     for key in removed:
-        d, t, i = key
-        print(f"{d} T={t} {i}: removed (was {prev_cells[key] * 1e6:.1f}us)")
+        name = " ".join(str(p) for p in key)
+        print(f"{name}: removed (was {fmt_value(traj, prev_cells[key])})")
 
-    if regressions:
+
+def compare_files(prev_path, curr_path, traj, threshold=None):
+    """Diff one trajectory pair; returns the regression count (0 on any
+    soft skip: unreadable file or bench_mode change)."""
+    thr = traj.threshold if threshold is None else threshold
+    prev = load_rows(prev_path, traj)
+    curr = load_rows(curr_path, traj)
+    if prev is None or curr is None:
+        print(f"bench-diff: {traj.name}: missing/unreadable input, skipping")
+        return 0
+    prev_mode, prev_cells = prev
+    curr_mode, curr_cells = curr
+    if prev_mode != curr_mode:
         print(
-            f"\nbench-diff: {regressions} cell(s) regressed more than "
-            f"{args.threshold:.0%} vs the previous run's artifact"
+            f"bench-diff: {traj.name}: bench_mode changed "
+            f"({prev_mode} -> {curr_mode}), numbers are not comparable; "
+            "skipping"
+        )
+        return 0
+    rows, removed, regressions = diff_cells(prev_cells, curr_cells, traj, thr)
+    render(traj, curr_mode, thr, rows, removed, prev_cells)
+    return regressions
+
+
+def find_file(root, name):
+    """First path named ``name`` under ``root`` (skipping .git), or None."""
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != ".git"]
+        if name in filenames:
+            return os.path.join(dirpath, name)
+    return None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("previous", help="previous run's file or artifact directory")
+    ap.add_argument("current", help="this run's file or checkout directory")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=None,
+        help="override every trajectory's own regression threshold",
+    )
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if os.path.isdir(args.previous) and os.path.isdir(args.current):
+        for traj in TRAJECTORIES:
+            prev = find_file(args.previous, traj.name)
+            curr = find_file(args.current, traj.name)
+            if prev is None or curr is None:
+                side = "previous" if prev is None else "current"
+                print(f"bench-diff: {traj.name}: not found on {side} side, skipping")
+                continue
+            pairs.append((prev, curr, traj))
+    else:
+        traj = trajectory_for(args.current) or trajectory_for(args.previous)
+        if traj is None:
+            # Unknown basename: fall back to the table6 config, matching
+            # the pre-multi-trajectory behavior for ad-hoc file names.
+            traj = TRAJECTORIES[0]
+            print(
+                f"bench-diff: unrecognized file name, defaulting to the "
+                f"{traj.name} configuration"
+            )
+        pairs.append((args.previous, args.current, traj))
+
+    total = 0
+    compared = 0
+    for prev, curr, traj in pairs:
+        total += compare_files(prev, curr, traj, args.threshold)
+        compared += 1
+
+    if compared == 0:
+        print("\nbench-diff: nothing comparable on both sides; skipping")
+        return 0
+    if total:
+        print(
+            f"\nbench-diff: {total} cell(s) regressed beyond their "
+            "trajectory's threshold vs the previous run's artifact"
         )
         return 1
-    print("\nbench-diff: no cell regressed beyond the threshold")
+    print("\nbench-diff: no cell regressed beyond its threshold")
     return 0
 
 

@@ -1,0 +1,179 @@
+"""Unit tests for tools/bench_diff.py (run by the CI lint job via
+``python -m pytest tools/``). Covers cell-key extraction, missing-cell
+handling, bench_mode soft-skips, both regression directions, threshold
+overrides and the directory-mode combined exit code."""
+
+import json
+
+import bench_diff as bd
+
+
+def traj(name):
+    for t in bd.TRAJECTORIES:
+        if t.name == name:
+            return t
+    raise AssertionError(f"unknown trajectory {name}")
+
+
+T6 = traj("BENCH_sched_overhead.json")
+COORD = traj("BENCH_coordinator_throughput.json")
+ONLINE = traj("BENCH_online_resched.json")
+
+
+def write_doc(path, mode, rows):
+    path.write_text(json.dumps({"bench_mode": mode, "rows": rows}))
+    return str(path)
+
+
+def t6_row(device="amd_r9", t=16, impl="resumable", mean=1e-4):
+    return {"device": device, "t": t, "impl": impl, "bench": {"mean_s": mean}}
+
+
+def coord_row(workers=4, lanes=2, cap=2, tps=1000.0):
+    return {
+        "workers": workers,
+        "lanes": lanes,
+        "t_group_cap": cap,
+        "tasks_per_sec": tps,
+    }
+
+
+def online_row(workload="BK0", shape="balanced", workers=4, lanes=1, mk=1e-2):
+    return {
+        "workload": workload,
+        "shape": shape,
+        "workers": workers,
+        "lanes": lanes,
+        "makespan_s": mk,
+    }
+
+
+# ---- loading & key extraction ---------------------------------------------
+
+
+def test_load_rows_extracts_keys_and_skips_rowless_metrics(tmp_path):
+    p = write_doc(
+        tmp_path / T6.name,
+        "fast",
+        [
+            t6_row(mean=2e-4),
+            # Speedup-style row without a bench dict: ignored.
+            {"device": "amd_r9", "t": 16, "speedup": 1.4},
+            # Non-positive metric: ignored.
+            t6_row(impl="fromscratch", mean=0.0),
+        ],
+    )
+    mode, cells = bd.load_rows(p, T6)
+    assert mode == "fast"
+    assert cells == {("amd_r9", 16, "resumable"): 2e-4}
+
+
+def test_load_rows_unreadable_returns_none(tmp_path):
+    bad = tmp_path / T6.name
+    bad.write_text("{not json")
+    assert bd.load_rows(str(bad), T6) is None
+    assert bd.load_rows(str(tmp_path / "absent.json"), T6) is None
+
+
+# ---- classification --------------------------------------------------------
+
+
+def test_lower_is_better_classification():
+    assert bd.classify(1.0, 1.3, T6, 0.15)[1] == "REGRESSED"
+    assert bd.classify(1.0, 1.1, T6, 0.15)[1] == "ok"
+    assert bd.classify(1.0, 0.5, T6, 0.15)[1] == "improved"
+
+
+def test_higher_is_better_classification():
+    # tasks/sec dropping is the regression.
+    assert bd.classify(1000.0, 500.0, COORD, 0.30)[1] == "REGRESSED"
+    assert bd.classify(1000.0, 900.0, COORD, 0.30)[1] == "ok"
+    assert bd.classify(1000.0, 2000.0, COORD, 0.30)[1] == "improved"
+
+
+def test_missing_cells_are_not_fatal():
+    prev = {("a", 1, "x"): 1.0}
+    curr = {("b", 2, "y"): 1.0}
+    rows, removed, regressions = bd.diff_cells(prev, curr, T6, 0.15)
+    assert regressions == 0
+    assert [r[-1] for r in rows] == ["new"]
+    assert removed == [("a", 1, "x")]
+
+
+# ---- file-level comparisons ------------------------------------------------
+
+
+def test_mode_change_soft_skips_despite_regression(tmp_path):
+    prev = write_doc(tmp_path / "prev.json", "full", [t6_row(mean=1e-4)])
+    curr = write_doc(tmp_path / "curr.json", "fast", [t6_row(mean=9e-4)])
+    assert bd.compare_files(prev, curr, T6) == 0
+
+
+def test_regression_detected_in_file_pair(tmp_path):
+    prev = write_doc(tmp_path / "prev.json", "fast", [t6_row(mean=1e-4)])
+    curr = write_doc(tmp_path / "curr.json", "fast", [t6_row(mean=2e-4)])
+    assert bd.compare_files(prev, curr, T6) == 1
+
+
+def test_threshold_override_loosens_gate(tmp_path):
+    prev = write_doc(tmp_path / "prev.json", "fast", [t6_row(mean=1e-4)])
+    curr = write_doc(tmp_path / "curr.json", "fast", [t6_row(mean=2e-4)])
+    assert bd.compare_files(prev, curr, T6, threshold=1.5) == 0
+
+
+def test_online_trajectory_keys_include_shape(tmp_path):
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [online_row(shape="miscal_static"), online_row(shape="miscal_calibrated")],
+    )
+    # The calibrated cell regresses; the static one is unchanged.
+    curr = write_doc(
+        tmp_path / "curr.json",
+        "fast",
+        [
+            online_row(shape="miscal_static"),
+            online_row(shape="miscal_calibrated", mk=5e-2),
+        ],
+    )
+    assert bd.compare_files(prev, curr, ONLINE) == 1
+
+
+# ---- main / directory discovery -------------------------------------------
+
+
+def test_main_single_missing_file_soft_skips(tmp_path):
+    curr = write_doc(tmp_path / T6.name, "fast", [t6_row()])
+    assert bd.main([str(tmp_path / "nope.json"), curr]) == 0
+
+
+def test_main_directory_mode_combines_all_trajectories(tmp_path):
+    prev = tmp_path / "prev"
+    curr = tmp_path / "curr"
+    (prev / "nested").mkdir(parents=True)
+    curr.mkdir()
+    # table6 ok, coordinator regressed (throughput halved), online absent
+    # on the previous side (soft skip).
+    write_doc(prev / "nested" / T6.name, "fast", [t6_row(mean=1e-4)])
+    write_doc(curr / T6.name, "fast", [t6_row(mean=1.05e-4)])
+    write_doc(prev / COORD.name, "fast", [coord_row(tps=1000.0)])
+    write_doc(curr / COORD.name, "fast", [coord_row(tps=400.0)])
+    write_doc(curr / ONLINE.name, "fast", [online_row()])
+    assert bd.main([str(prev), str(curr)]) == 1
+    # With the coordinator side healthy, the combined run passes.
+    write_doc(curr / COORD.name, "fast", [coord_row(tps=950.0)])
+    assert bd.main([str(prev), str(curr)]) == 0
+
+
+def test_main_empty_directories_skip_cleanly(tmp_path):
+    prev = tmp_path / "prev"
+    curr = tmp_path / "curr"
+    prev.mkdir()
+    curr.mkdir()
+    assert bd.main([str(prev), str(curr)]) == 0
+
+
+def test_main_unknown_single_file_falls_back_to_table6(tmp_path):
+    prev = write_doc(tmp_path / "a.json", "fast", [t6_row(mean=1e-4)])
+    curr = write_doc(tmp_path / "b.json", "fast", [t6_row(mean=5e-4)])
+    assert bd.main([prev, curr]) == 1
