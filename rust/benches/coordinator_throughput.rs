@@ -93,6 +93,7 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
                 scoring_threads: 1,
                 online: None,
                 recalibrate: None,
+                recovery: None,
             },
         );
         let m = coord.run(workloads(workers, SCALE));

@@ -106,6 +106,7 @@ fn coordinator_calibrated(
             scoring_threads: 1,
             online,
             recalibrate,
+            recovery: None,
         },
     );
     match plan_model {

@@ -1,0 +1,286 @@
+//! `cargo bench --bench recovery` — goodput under injected faults, per
+//! (recovery policy × fault rate) cell on the online lane pipeline.
+//!
+//! Each lane's virtual device is wrapped in a deterministic
+//! [`ChaosDevice`] (seeded per lane, so every run of a cell sees the
+//! same fault schedule) and driven through `LaneOptions::recovery`:
+//!
+//! * `none / 0%` — no wrapper, no recovery: the pre-fault-tolerance
+//!   pipeline, the transparency baseline;
+//! * `retry / {0,10,30}%` — transient `Err` injections absorbed by
+//!   [`RetryBackoff`] (the 0% cell must match the baseline — the cost of
+//!   *arming* recovery);
+//! * `blacklist / {0,10,30}%` — same faults under [`BlacklistAfterN`]
+//!   (quarantine + sibling rescue instead of unbounded same-lane
+//!   retries);
+//! * `deadline / 15%` — artificial device hangs caught by the
+//!   run-deadline watchdog (`predicted × slack + floor`), lane
+//!   quarantined, backlog rescued by the healthy sibling.
+//!
+//! Recorded per cell: goodput (`tasks_per_sec` — every task completes
+//! exactly once, so goodput is throughput), p99 task latency, and the
+//! six `LaneStats` fault counters summed across lanes. Emits
+//! `BENCH_recovery.json` with a self-describing `bench_mode` header;
+//! CI's bench-smoke job diffs `tasks_per_sec` per (policy, fault_pct)
+//! cell against the previous run (higher is better, 30% threshold).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oclcc::config::profile_by_name;
+use oclcc::coordinator::lanes::{LaneCoordinator, LaneMetrics, LaneOptions};
+use oclcc::coordinator::recovery::{
+    BlacklistAfterN, DeadlineOptions, QuarantineOptions, RecoveryOptions,
+    RetryBackoff,
+};
+use oclcc::coordinator::runner::Policy;
+use oclcc::device::executor::SpinExecutor;
+use oclcc::device::vdev::VirtualDevice;
+use oclcc::device::{ChaosDevice, ChaosOptions, Device};
+use oclcc::sched::online::OnlineOptions;
+use oclcc::task::synthetic::synthetic_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::bench::{bench_mode, fast_mode_from_env};
+use oclcc::util::json::Json;
+use oclcc::util::stats;
+
+const OUT_PATH: &str = "BENCH_recovery.json";
+
+/// Time compression (same rationale as the other coordinator benches).
+const SCALE: f64 = 0.05;
+
+const WORKERS: usize = 4;
+const LANES: usize = 2;
+const BATCH: usize = 3;
+
+fn workloads() -> Vec<Vec<TaskSpec>> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let g = synthetic_benchmark("BK50", &p, SCALE).unwrap();
+    (0..WORKERS)
+        .map(|w| (0..BATCH).map(|i| g.tasks[(w + i) % g.len()].clone()).collect())
+        .collect()
+}
+
+/// One lane device: a real paced virtual device, chaos-wrapped when any
+/// fault probability is set. Seeded per lane so the whole fleet's fault
+/// schedule is a deterministic function of the cell.
+fn lane_device(lane: usize, chaos: Option<&ChaosOptions>) -> Arc<dyn Device> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let vdev = Arc::new(VirtualDevice::new(p, Arc::new(SpinExecutor)));
+    match chaos {
+        None => vdev,
+        Some(opts) => Arc::new(ChaosDevice::new(
+            vdev,
+            ChaosOptions { seed: opts.seed + lane as u64, ..opts.clone() },
+        )),
+    }
+}
+
+fn coordinator(
+    chaos: Option<&ChaosOptions>,
+    recovery: Option<RecoveryOptions>,
+) -> LaneCoordinator {
+    let devices =
+        (0..LANES).map(|l| lane_device(l, chaos)).collect::<Vec<_>>();
+    LaneCoordinator::with_devices(
+        devices,
+        LaneOptions {
+            lanes: LANES,
+            policy: Policy::Heuristic,
+            settle: Duration::from_micros(200),
+            group_cap: 2,
+            scoring_threads: 1,
+            online: Some(OnlineOptions::default()),
+            recalibrate: None,
+            recovery,
+        },
+    )
+}
+
+struct CellResult {
+    tasks_per_sec: f64,
+    p99_latency: f64,
+    n_faults: usize,
+    n_retries: usize,
+    n_timeouts: usize,
+    n_requeued: usize,
+    n_quarantine_trips: usize,
+    n_halfopen_probes: usize,
+    n_stolen: usize,
+}
+
+fn summarize(m: &LaneMetrics) -> CellResult {
+    let mut r = CellResult {
+        tasks_per_sec: m.tasks_per_sec,
+        p99_latency: m.p99_latency(),
+        n_faults: 0,
+        n_retries: 0,
+        n_timeouts: 0,
+        n_requeued: 0,
+        n_quarantine_trips: 0,
+        n_halfopen_probes: 0,
+        n_stolen: 0,
+    };
+    for l in &m.per_lane {
+        r.n_faults += l.n_faults;
+        r.n_retries += l.n_retries;
+        r.n_timeouts += l.n_timeouts;
+        r.n_requeued += l.n_requeued;
+        r.n_quarantine_trips += l.n_quarantine_trips;
+        r.n_halfopen_probes += l.n_halfopen_probes;
+        r.n_stolen += l.n_stolen;
+    }
+    r
+}
+
+/// Median-of-reps run of one cell; every rep must complete every task
+/// exactly once (`LaneMetrics` counts completion events).
+fn run_cell(
+    chaos: Option<&ChaosOptions>,
+    recovery: Option<&RecoveryOptions>,
+    reps: usize,
+) -> CellResult {
+    let expect = WORKERS * BATCH;
+    let mut tps = Vec::with_capacity(reps);
+    let mut p99 = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let c = coordinator(chaos, recovery.cloned());
+        let m = c.run(workloads());
+        assert_eq!(m.n_tasks, expect, "lost or duplicated tasks in cell");
+        assert_eq!(m.latencies.len(), expect, "latency per completed task");
+        let r = summarize(&m);
+        tps.push(r.tasks_per_sec);
+        p99.push(r.p99_latency);
+        last = Some(r);
+    }
+    let mut r = last.expect("reps >= 1");
+    r.tasks_per_sec = stats::median(&tps);
+    r.p99_latency = stats::median(&p99);
+    r
+}
+
+fn chaos_error(fault_pct: u32) -> ChaosOptions {
+    ChaosOptions {
+        seed: 0xc0de,
+        p_error: fault_pct as f64 / 100.0,
+        transient: true,
+        ..ChaosOptions::default()
+    }
+}
+
+fn retry_policy() -> RecoveryOptions {
+    RecoveryOptions::retry(RetryBackoff {
+        base: Duration::from_micros(100),
+        cap: Duration::from_millis(2),
+        ..RetryBackoff::default()
+    })
+}
+
+fn blacklist_policy() -> RecoveryOptions {
+    RecoveryOptions {
+        quarantine: QuarantineOptions { cooldown: Duration::from_millis(5) },
+        ..RecoveryOptions::blacklist(BlacklistAfterN::default())
+    }
+}
+
+fn main() {
+    let fast = fast_mode_from_env();
+    let reps = if fast { 2 } else { 5 };
+
+    println!("== goodput under injected faults (policy x fault rate) ==");
+    println!(
+        "{:>10} {:>6} {:>12} {:>10} {:>7} {:>8} {:>9} {:>6}",
+        "policy", "fault%", "goodput", "p99", "faults", "retries", "timeouts",
+        "quar"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut zero_fault_tps: Vec<(String, f64)> = Vec::new();
+
+    // Transparency baseline: no wrapper, no recovery.
+    let base = run_cell(None, None, reps);
+    let baseline_tps = base.tasks_per_sec;
+    emit(&mut rows, "none", 0, &base);
+
+    for (policy_name, policy) in
+        [("retry", retry_policy()), ("blacklist", blacklist_policy())]
+    {
+        for fault_pct in [0u32, 10, 30] {
+            let chaos = chaos_error(fault_pct);
+            let cell = run_cell(Some(&chaos), Some(&policy), reps);
+            if fault_pct == 0 {
+                zero_fault_tps
+                    .push((policy_name.to_string(), cell.tasks_per_sec));
+            }
+            emit(&mut rows, policy_name, fault_pct, &cell);
+        }
+    }
+
+    // Hang cell: the watchdog (not the device) detects the fault.
+    let hang = ChaosOptions {
+        seed: 0xdead,
+        p_hang: 0.15,
+        hang: Duration::from_millis(30),
+        transient: true,
+        ..ChaosOptions::default()
+    };
+    let deadline = RecoveryOptions {
+        deadline: Some(DeadlineOptions {
+            slack: 4.0,
+            floor: Duration::from_millis(10),
+        }),
+        quarantine: QuarantineOptions { cooldown: Duration::from_millis(5) },
+        ..RecoveryOptions::blacklist(BlacklistAfterN::default())
+    };
+    let cell = run_cell(Some(&hang), Some(&deadline), reps);
+    emit(&mut rows, "deadline", 15, &cell);
+
+    // The cost of arming recovery: zero-fault cells vs the unwrapped
+    // baseline (informational — the CI gate diffs across commits).
+    for (name, tps) in &zero_fault_tps {
+        println!(
+            "\n{name}/0% vs baseline: {:.3}x (1.0 = wrapper + policy free)",
+            tps / baseline_tps.max(1e-12)
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench_mode", Json::str(bench_mode())),
+        ("rows", Json::arr(rows)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}, mode={}]", bench_mode()),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
+}
+
+fn emit(rows: &mut Vec<Json>, policy: &str, fault_pct: u32, r: &CellResult) {
+    println!(
+        "{:>10} {:>6} {:>9.1}/s {:>7.2}ms {:>7} {:>8} {:>9} {:>6}",
+        policy,
+        fault_pct,
+        r.tasks_per_sec,
+        r.p99_latency * 1e3,
+        r.n_faults,
+        r.n_retries,
+        r.n_timeouts,
+        r.n_quarantine_trips,
+    );
+    rows.push(Json::obj(vec![
+        ("policy", Json::str(policy)),
+        ("fault_pct", Json::num(fault_pct as f64)),
+        ("workers", Json::num(WORKERS as f64)),
+        ("lanes", Json::num(LANES as f64)),
+        ("n_tasks", Json::num((WORKERS * BATCH) as f64)),
+        ("tasks_per_sec", Json::num(r.tasks_per_sec)),
+        ("p99_latency_s", Json::num(r.p99_latency)),
+        ("n_faults", Json::num(r.n_faults as f64)),
+        ("n_retries", Json::num(r.n_retries as f64)),
+        ("n_timeouts", Json::num(r.n_timeouts as f64)),
+        ("n_requeued", Json::num(r.n_requeued as f64)),
+        ("n_quarantine_trips", Json::num(r.n_quarantine_trips as f64)),
+        ("n_halfopen_probes", Json::num(r.n_halfopen_probes as f64)),
+        ("n_stolen", Json::num(r.n_stolen as f64)),
+    ]));
+}

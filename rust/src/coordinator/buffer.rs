@@ -14,11 +14,24 @@
 //! work-stealing of uncommitted submissions: oldest first, at most half
 //! of the hottest sibling's backlog, never its last entry; per-worker
 //! FIFO holds because a worker never has two submissions outstanding).
+//!
+//! Fault tolerance (see `coordinator::recovery`) adds three primitives:
+//! [`SharedBuffer::requeue_front`] (a quarantined lane hands unstarted
+//! work back to the *front* of its own buffer, preserving FIFO),
+//! [`SharedBuffer::take_into`] (unbounded front-drain of a quarantined
+//! sibling's backlog — the owner cannot make progress, so the
+//! half-and-never-last steal bounds are deliberately lifted) and
+//! [`ShardedBuffer::steal_with_health`] (prefer quarantined victims).
+//! A *poisoned* buffer lock (a worker or proxy panicked mid-operation)
+//! maps to the `Closed` drain outcome instead of cascading the panic
+//! across every thread parked on the condvar; non-draining operations
+//! recover the guard, since the queue itself is never left mid-mutation.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
+use crate::coordinator::recovery::FleetHealth;
 use crate::queue::event::Event;
 use crate::task::TaskSpec;
 
@@ -64,9 +77,18 @@ impl SharedBuffer {
         Self::default()
     }
 
+    // Recovering lock for non-draining operations: every critical
+    // section below leaves `State` consistent even if the *holder*
+    // panics for unrelated reasons, so poisoning carries no information
+    // here — cascading it would turn one dead worker into a fleet-wide
+    // abort (exactly what the recovery layer exists to prevent).
+    fn lock_state(&self) -> MutexGuard<'_, State> {
+        self.inner.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn push(&self, s: Submission) {
-        let (m, cv) = &*self.inner;
-        let mut g = m.lock().unwrap();
+        let (_, cv) = &*self.inner;
+        let mut g = self.lock_state();
         assert!(!g.closed, "push after close");
         g.queue.push_back(s);
         cv.notify_all();
@@ -74,8 +96,8 @@ impl SharedBuffer {
 
     /// Declare no further submissions will arrive.
     pub fn close(&self) {
-        let (m, cv) = &*self.inner;
-        m.lock().unwrap().closed = true;
+        let (_, cv) = &*self.inner;
+        self.lock_state().closed = true;
         cv.notify_all();
     }
 
@@ -93,7 +115,9 @@ impl SharedBuffer {
     /// hot path of the lane proxies: `out` is cleared and refilled, so a
     /// warm proxy loop performs no allocation per drained group. Returns
     /// the number of submissions drained, or `None` once the buffer is
-    /// closed and empty.
+    /// closed and empty. A poisoned lock (a peer panicked mid-operation)
+    /// also reports `None` — the draining proxy winds down instead of
+    /// re-raising a panic it did not cause.
     pub fn drain_into(
         &self,
         max: usize,
@@ -102,7 +126,7 @@ impl SharedBuffer {
     ) -> Option<usize> {
         out.clear();
         let (m, cv) = &*self.inner;
-        let mut g = m.lock().unwrap();
+        let Ok(mut g) = m.lock() else { return None };
         loop {
             if !g.queue.is_empty() {
                 break;
@@ -110,7 +134,8 @@ impl SharedBuffer {
             if g.closed {
                 return None;
             }
-            g = cv.wait(g).unwrap();
+            let Ok(ng) = cv.wait(g) else { return None };
+            g = ng;
         }
         if !settle.is_zero() {
             // Give other workers a window to join this TG. A full batch or
@@ -122,7 +147,9 @@ impl SharedBuffer {
                     Some(d) => d,
                     None => break,
                 };
-                let (ng, timeout) = cv.wait_timeout(g, left).unwrap();
+                let Ok((ng, timeout)) = cv.wait_timeout(g, left) else {
+                    return None;
+                };
                 g = ng;
                 if timeout.timed_out() {
                     break;
@@ -140,7 +167,8 @@ impl SharedBuffer {
     /// as [`DrainPoll::Empty`] instead of blocking forever. The online
     /// lane proxy alternates this with device-completion polling and
     /// steal probes, none of which may park the proxy indefinitely.
-    /// `wait == Duration::ZERO` is a pure non-blocking poll.
+    /// `wait == Duration::ZERO` is a pure non-blocking poll. A poisoned
+    /// lock maps to [`DrainPoll::Closed`] — see [`SharedBuffer::drain_into`].
     pub fn drain_into_timeout(
         &self,
         max: usize,
@@ -150,7 +178,7 @@ impl SharedBuffer {
     ) -> DrainPoll {
         out.clear();
         let (m, cv) = &*self.inner;
-        let mut g = m.lock().unwrap();
+        let Ok(mut g) = m.lock() else { return DrainPoll::Closed };
         if g.queue.is_empty() {
             let deadline = std::time::Instant::now() + wait;
             loop {
@@ -166,7 +194,9 @@ impl SharedBuffer {
                     Some(d) if !d.is_zero() => d,
                     _ => return DrainPoll::Empty,
                 };
-                let (ng, _) = cv.wait_timeout(g, left).unwrap();
+                let Ok((ng, _)) = cv.wait_timeout(g, left) else {
+                    return DrainPoll::Closed;
+                };
                 g = ng;
             }
         }
@@ -179,7 +209,9 @@ impl SharedBuffer {
                     Some(d) => d,
                     None => break,
                 };
-                let (ng, timeout) = cv.wait_timeout(g, left).unwrap();
+                let Ok((ng, timeout)) = cv.wait_timeout(g, left) else {
+                    return DrainPoll::Closed;
+                };
                 g = ng;
                 if timeout.timed_out() {
                     break;
@@ -198,14 +230,54 @@ impl SharedBuffer {
     /// the count. Never blocks; an empty or single-entry queue yields 0.
     pub fn steal_into(&self, max: usize, out: &mut Vec<Submission>) -> usize {
         let (m, _cv) = &*self.inner;
-        let mut g = m.lock().unwrap();
+        let Ok(mut g) = m.lock() else { return 0 };
         let take = max.min(g.queue.len() / 2);
         out.extend(g.queue.drain(..take));
         take
     }
 
+    /// Unbounded front-drain: take up to `max` submissions oldest-first
+    /// with *none* of [`SharedBuffer::steal_into`]'s half/last-entry
+    /// bounds. Only correct against a lane that cannot make progress
+    /// (quarantined — see [`ShardedBuffer::steal_with_health`]): leaving
+    /// work "for the owner" there strands it. Appends to `out`; never
+    /// blocks; a poisoned lock yields 0.
+    pub fn take_into(&self, max: usize, out: &mut Vec<Submission>) -> usize {
+        let (m, _cv) = &*self.inner;
+        let Ok(mut g) = m.lock() else { return 0 };
+        let take = max.min(g.queue.len());
+        out.extend(g.queue.drain(..take));
+        take
+    }
+
+    /// Hand unstarted submissions back to the *front* of the queue in
+    /// their original order (element 0 of `subs` drains first again), so
+    /// a quarantined lane's undispatched work keeps its FIFO position
+    /// ahead of anything queued behind it. Permitted on a closed buffer:
+    /// close only promises no *new* worker submissions, and requeued
+    /// work is not new. Drains `subs` and returns the count.
+    pub fn requeue_front(&self, subs: &mut Vec<Submission>) -> usize {
+        let (_, cv) = &*self.inner;
+        let mut g = self.lock_state();
+        let n = subs.len();
+        for s in subs.drain(..).rev() {
+            g.queue.push_front(s);
+        }
+        if n > 0 {
+            cv.notify_all();
+        }
+        n
+    }
+
+    /// Whether no submission will ever be drained from this buffer again
+    /// — the exit condition a quarantined (non-draining) proxy polls.
+    pub fn is_closed_and_empty(&self) -> bool {
+        let g = self.lock_state();
+        g.closed && g.queue.is_empty()
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.0.lock().unwrap().queue.len()
+        self.lock_state().queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -289,6 +361,44 @@ impl ShardedBuffer {
         match victim {
             Some(v) => self.lanes[v].steal_into(max, out),
             None => 0,
+        }
+    }
+
+    /// Health-aware stealing: prefer a *quarantined* sibling (breaker
+    /// Open — see `coordinator::recovery`), taking from the one with the
+    /// longest backlog with the steal bounds lifted
+    /// ([`SharedBuffer::take_into`]): its owner cannot run anything, so
+    /// the half/never-last courtesy of the classic steal would strand
+    /// work. With no quarantined sibling this is exactly
+    /// [`ShardedBuffer::steal_from_hottest`]. Per-worker FIFO is
+    /// preserved for the same reason as every steal: a worker never has
+    /// two submissions outstanding.
+    pub fn steal_with_health(
+        &self,
+        thief: usize,
+        max: usize,
+        health: &FleetHealth,
+        out: &mut Vec<Submission>,
+    ) -> usize {
+        if max == 0 || self.lanes.len() < 2 {
+            return 0;
+        }
+        debug_assert_eq!(health.n_lanes(), self.lanes.len());
+        let mut victim = None;
+        let mut longest = 0usize; // any queued entry of a dead lane counts
+        for (l, lane) in self.lanes.iter().enumerate() {
+            if l == thief || !health.is_quarantined(l) {
+                continue;
+            }
+            let len = lane.len();
+            if len > longest {
+                longest = len;
+                victim = Some(l);
+            }
+        }
+        match victim {
+            Some(v) => self.lanes[v].take_into(max, out),
+            None => self.steal_from_hottest(thief, max, out),
         }
     }
 
@@ -526,6 +636,97 @@ mod tests {
         out.clear();
         assert_eq!(s.steal_from_hottest(2, 8, &mut out), 1);
         assert!(out.iter().all(|x| x.worker % 3 == 1));
+    }
+
+    #[test]
+    fn poisoned_lock_maps_to_closed_not_panic() {
+        // Deliberately poison the state mutex: a thread panics while
+        // holding it (the queue is consistent — the panic is unrelated).
+        let b = SharedBuffer::new();
+        b.push(sub(0, 0));
+        let b2 = b.clone();
+        let r = std::thread::spawn(move || {
+            let _g = b2.inner.0.lock().unwrap();
+            panic!("poison the buffer lock");
+        })
+        .join();
+        assert!(r.is_err(), "the poisoning thread must have panicked");
+        // Draining paths report end-of-stream instead of cascading.
+        let mut out = Vec::new();
+        assert!(b.drain_into(4, Duration::ZERO, &mut out).is_none());
+        assert_eq!(
+            b.drain_into_timeout(4, Duration::ZERO, Duration::ZERO, &mut out),
+            DrainPoll::Closed
+        );
+        assert_eq!(b.steal_into(4, &mut out), 0);
+        assert_eq!(b.take_into(4, &mut out), 0);
+        assert!(out.is_empty());
+        // Non-draining operations recover the guard and keep working.
+        assert_eq!(b.len(), 1);
+        b.push(sub(1, 0));
+        assert_eq!(b.len(), 2);
+        b.close();
+        assert!(!b.is_closed_and_empty(), "still holds two submissions");
+    }
+
+    #[test]
+    fn requeue_front_preserves_order_even_after_close() {
+        let b = SharedBuffer::new();
+        b.push(sub(10, 0));
+        b.close();
+        // A quarantined lane hands back its undispatched group [1, 2]:
+        // it must drain ahead of the older backlog entry, in order.
+        let mut back = vec![sub(1, 0), sub(2, 0)];
+        assert_eq!(b.requeue_front(&mut back), 2);
+        assert!(back.is_empty());
+        assert!(!b.is_closed_and_empty());
+        let got = b.drain(8, Duration::ZERO).unwrap();
+        let order: Vec<usize> = got.iter().map(|s| s.worker).collect();
+        assert_eq!(order, vec![1, 2, 10]);
+        assert!(b.is_closed_and_empty());
+    }
+
+    #[test]
+    fn take_into_lifts_steal_bounds() {
+        let b = SharedBuffer::new();
+        let mut out = Vec::new();
+        b.push(sub(0, 0));
+        // steal_into refuses a singleton; take_into does not.
+        assert_eq!(b.steal_into(4, &mut out), 0);
+        assert_eq!(b.take_into(4, &mut out), 1);
+        assert!(b.is_empty());
+        for w in 0..5 {
+            b.push(sub(w, 0));
+        }
+        out.clear();
+        // The whole backlog is takeable, oldest first.
+        assert_eq!(b.take_into(8, &mut out), 5);
+        let order: Vec<usize> = out.iter().map(|s| s.worker).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn steal_with_health_prefers_quarantined_backlog() {
+        use crate::coordinator::recovery::FleetHealth;
+        let s = ShardedBuffer::new(3);
+        let health = FleetHealth::new(3);
+        let mut out = Vec::new();
+        // Lane 2 is hottest (4 entries) but healthy; lane 1 holds a
+        // single entry and is quarantined.
+        s.push(sub(1, 0));
+        for w in [2usize, 5, 2, 5] {
+            s.push(sub(w, 0));
+        }
+        health.lane(1).trip();
+        // The quarantined singleton is taken in full (bounds lifted).
+        assert_eq!(s.steal_with_health(0, 8, &health, &mut out), 1);
+        assert_eq!(out[0].worker, 1);
+        assert_eq!(s.lane(1).len(), 0);
+        // No quarantined victim left: falls back to the classic steal
+        // (half of the hottest sibling).
+        out.clear();
+        assert_eq!(s.steal_with_health(0, 8, &health, &mut out), 2);
+        assert!(out.iter().all(|x| x.worker % 3 == 2));
     }
 
     #[test]

@@ -71,6 +71,31 @@
 //! the device profile, which is how the online bench runs deliberately
 //! miscalibrated models against a truthful device.
 //!
+//! # Fault tolerance ([`LaneOptions::recovery`])
+//!
+//! With `recovery: Some(..)` device-run faults stop being fatal: an
+//! `Err` from [`Device::run_group`], a panic out of it, or a hang caught
+//! by the run-deadline watchdog is routed through the configured
+//! [`RecoveryPolicy`] (`coordinator::recovery`). Retries re-run the
+//! *same committed group* on the same lane after a backoff; quarantine
+//! trips the lane's circuit breaker ([`FleetHealth`]) — the lane
+//! requeues its *unstarted* submissions to the front of its own buffer
+//! (FIFO preserved) and stops draining, so idle siblings absorb the
+//! backlog through [`ShardedBuffer::steal_with_health`] with the steal
+//! bounds lifted; after the cooldown the lane re-probes half-open (the
+//! next own-lane group decides: success closes the breaker, failure
+//! re-opens it). Online runs additionally execute under a watchdog
+//! deadline derived from the group's *predicted* makespan
+//! (`predicted × slack + floor`); a deadline miss counts as a timeout
+//! fault and quarantines the lane, while the overdue run's eventual
+//! completion still unblocks its workers. Failed, retried and timed-out
+//! runs **never** feed the [`DriftGate`] or the `Calibrator` — a
+//! partial or skewed timeline would register as huge drift. All of it
+//! is observable in [`LaneStats`] (`n_faults`, `n_retries`,
+//! `n_timeouts`, `n_requeued`, `n_quarantine_trips`,
+//! `n_halfopen_probes`). With `recovery: None` (default) any device
+//! fault aborts the run — bit-identical to the pre-recovery pipeline.
+//!
 //! **Steal invariants** (bounded work-stealing, `OnlineOptions::steal_max`):
 //! an idle lane steals *whole uncommitted submissions* from the hottest
 //! sibling's buffer — never more than half the victim's backlog, never
@@ -90,16 +115,25 @@
 //!
 //! [`CoordMetrics`]: crate::coordinator::runner::CoordMetrics
 //! [`ShardedBuffer`]: crate::coordinator::buffer::ShardedBuffer
+//! [`ShardedBuffer::steal_with_health`]: crate::coordinator::buffer::ShardedBuffer::steal_with_health
 //! [`DriftGate`]: crate::sched::online::DriftGate
+//! [`Device::run_group`]: crate::device::Device::run_group
+//! [`RecoveryPolicy`]: crate::coordinator::recovery::RecoveryPolicy
+//! [`FleetHealth`]: crate::coordinator::recovery::FleetHealth
 
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::DeviceProfile;
 use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
+use crate::coordinator::recovery::{
+    BreakerState, FailureCtx, FaultKind, FleetHealth, LaneBreaker,
+    RecoveryAction, RecoveryOptions,
+};
 use crate::coordinator::runner::Policy;
 use crate::device::executor::KernelExecutor;
 use crate::device::vdev::VirtualDevice;
+use crate::device::{Device, DeviceRun};
 use crate::model::{
     fold_timeline_stage_secs, CalibrateOptions, CalibratedProfile, Calibrator,
     CmdRecord, EngineSecs, EngineState, SimCursor, TaskTable,
@@ -112,7 +146,7 @@ use crate::task::TaskSpec;
 use crate::util::stats;
 
 /// Knobs of the sharded runtime.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct LaneOptions {
     /// Lane count for [`LaneCoordinator::homogeneous`] (ignored by
     /// [`LaneCoordinator::with_devices`], which derives it from the
@@ -144,6 +178,15 @@ pub struct LaneOptions {
     /// static model, bit-identical to the pre-calibration pipeline
     /// (pinned by rust/tests/prop_calibrate.rs).
     pub recalibrate: Option<CalibrateOptions>,
+    /// `Some` arms fault tolerance (see the module docs and
+    /// `coordinator::recovery`): device-run faults route through the
+    /// pluggable [`RecoveryPolicy`], online runs execute under the
+    /// run-deadline watchdog, and quarantined lanes hand their backlog
+    /// to healthy siblings. `None` (the default) keeps today's behavior
+    /// bit-identical: any device fault aborts the coordinator run.
+    ///
+    /// [`RecoveryPolicy`]: crate::coordinator::recovery::RecoveryPolicy
+    pub recovery: Option<RecoveryOptions>,
 }
 
 impl Default for LaneOptions {
@@ -156,6 +199,7 @@ impl Default for LaneOptions {
             scoring_threads: 1,
             online: None,
             recalibrate: None,
+            recovery: None,
         }
     }
 }
@@ -208,6 +252,22 @@ pub struct LaneStats {
     pub calib_htd: f64,
     pub calib_kernel: f64,
     pub calib_dth: f64,
+    /// Recovery: failed device runs (error, panic or watchdog timeout)
+    /// this lane observed. 0 with `LaneOptions::recovery: None`.
+    pub n_faults: usize,
+    /// Recovery: same-lane re-runs of a failed group (includes the
+    /// legacy path's quarantine re-probes of the held group).
+    pub n_retries: usize,
+    /// Recovery: runs declared dead by the run-deadline watchdog.
+    pub n_timeouts: usize,
+    /// Recovery: submissions handed back to the lane's buffer front on
+    /// quarantine (unstarted work made visible to siblings).
+    pub n_requeued: usize,
+    /// Recovery: Closed → Open breaker transitions (re-trips of an
+    /// already-open breaker are not counted).
+    pub n_quarantine_trips: usize,
+    /// Recovery: Open → HalfOpen probe admissions after cooldown.
+    pub n_halfopen_probes: usize,
 }
 
 /// Aggregate metrics of one sharded run (single-lane degenerates to the
@@ -281,12 +341,18 @@ fn empty_lane_stats(lane: usize) -> LaneStats {
         calib_htd: 1.0,
         calib_kernel: 1.0,
         calib_dth: 1.0,
+        n_faults: 0,
+        n_retries: 0,
+        n_timeouts: 0,
+        n_requeued: 0,
+        n_quarantine_trips: 0,
+        n_halfopen_probes: 0,
     }
 }
 
 /// The sharded multi-worker runtime (see module docs).
 pub struct LaneCoordinator {
-    devices: Vec<Arc<VirtualDevice>>,
+    devices: Vec<Arc<dyn Device>>,
     /// Planning model override: the profile the lane proxies *predict*
     /// with, decoupled from the device they execute on. `None` plans
     /// against each device's own profile (the pre-calibration behavior).
@@ -297,7 +363,7 @@ pub struct LaneCoordinator {
 impl LaneCoordinator {
     /// One lane per entry of `devices` (heterogeneous lanes allowed; each
     /// proxy schedules against its own device's profile).
-    pub fn with_devices(devices: Vec<Arc<VirtualDevice>>, opts: LaneOptions) -> Self {
+    pub fn with_devices(devices: Vec<Arc<dyn Device>>, opts: LaneOptions) -> Self {
         assert!(!devices.is_empty(), "need at least one lane device");
         LaneCoordinator { devices, plan_model: None, opts }
     }
@@ -311,6 +377,7 @@ impl LaneCoordinator {
         let devices = (0..opts.lanes.max(1))
             .map(|_| {
                 Arc::new(VirtualDevice::new(profile.clone(), executor.clone()))
+                    as Arc<dyn Device>
             })
             .collect();
         LaneCoordinator { devices, plan_model: None, opts }
@@ -336,6 +403,7 @@ impl LaneCoordinator {
         let t_workers = workloads.len();
         let lanes = self.devices.len();
         let sharded = ShardedBuffer::new(lanes);
+        let health = FleetHealth::new(lanes);
         let epoch = Instant::now();
 
         let mut outcomes: Vec<LaneOutcome> = Vec::with_capacity(lanes);
@@ -394,7 +462,7 @@ impl LaneCoordinator {
                         .plan_model
                         .clone()
                         .unwrap_or_else(|| device.profile().clone());
-                    let opts = self.opts;
+                    let opts = self.opts.clone();
                     // group_cap = 0: one full round of THIS lane's workers
                     // (those with w % lanes == l) — a global ceil(T/lanes)
                     // would make under-populated lanes sleep out the whole
@@ -408,12 +476,13 @@ impl LaneCoordinator {
                     // steal from sibling lanes); legacy proxies only see
                     // their own lane.
                     let sharded = sharded.clone();
+                    let health = health.clone();
                     std::thread::Builder::new()
                         .name(format!("lane-proxy-{l}"))
                         .spawn_scoped(s, move || match opts.online {
                             Some(online) => online_lane_proxy(
-                                l, sharded, device, base_model, opts, online, cap,
-                                epoch,
+                                l, sharded, device, base_model, opts, online,
+                                health, cap, epoch,
                             ),
                             None => lane_proxy(
                                 l,
@@ -421,6 +490,7 @@ impl LaneCoordinator {
                                 device,
                                 base_model,
                                 opts,
+                                health,
                                 cap,
                                 epoch,
                             ),
@@ -428,8 +498,25 @@ impl LaneCoordinator {
                         .expect("spawn lane proxy")
                 })
                 .collect();
-            for h in proxy_handles {
-                outcomes.push(h.join().expect("lane proxy panicked"));
+            // Join EVERY proxy before surfacing any panic: aborting the
+            // loop at the first poisoned handle would drop the remaining
+            // JoinHandles while their threads still run, and the scope
+            // would re-join them only after the panic already unwound
+            // through `outcomes` bookkeeping.
+            let joined: Vec<_> =
+                proxy_handles.into_iter().map(|h| h.join()).collect();
+            let mut first_panic = None;
+            for r in joined {
+                match r {
+                    Ok(o) => outcomes.push(o),
+                    Err(payload) if first_panic.is_none() => {
+                        first_panic = Some(payload)
+                    }
+                    Err(_) => {}
+                }
+            }
+            if let Some(payload) = first_panic {
+                std::panic::resume_unwind(payload);
             }
         });
 
@@ -467,12 +554,18 @@ impl LaneCoordinator {
 fn lane_proxy(
     lane: usize,
     buffer: SharedBuffer,
-    device: Arc<VirtualDevice>,
+    device: Arc<dyn Device>,
     base_model: DeviceProfile,
     opts: LaneOptions,
+    health: FleetHealth,
     cap: usize,
     epoch: Instant,
 ) -> LaneOutcome {
+    // Recovery state. The legacy proxy owns its buffer exclusively, so
+    // "quarantine" degenerates to holding the failed group and re-probing
+    // after cooldown — there is no sibling to requeue toward.
+    let breaker = health.lane(lane);
+    let mut consec_failures = 0usize;
     let mut scratch = ParBeamScratch::new(opts.scoring_threads);
     let mut order: Vec<usize> = Vec::new();
     let mut drained: Vec<Submission> = Vec::new();
@@ -543,7 +636,21 @@ fn lane_proxy(
 
             ordered.clear();
             ordered.extend(order.iter().map(|&i| tasks[i].clone()));
-            let run = device.run_group(&ordered);
+            let (run, attempts) = match opts.recovery.as_ref() {
+                Some(rec) => run_group_with_recovery(
+                    device.as_ref(),
+                    &ordered,
+                    lane,
+                    rec,
+                    breaker,
+                    &mut consec_failures,
+                    &mut stats,
+                ),
+                None => match device.run_group(&ordered) {
+                    Ok(run) => (run, 1),
+                    Err(e) => panic!("lane {lane} device fault: {e:#}"),
+                },
+            };
             group_makespans.push(run.makespan);
             stats.busy_secs += run.makespan;
             let now = epoch.elapsed().as_secs_f64();
@@ -561,19 +668,24 @@ fn lane_proxy(
             // the measured side — solo stage secs would double-count
             // sigma) against the device's measured per-command
             // timeline. The device runs each group from idle, so the
-            // replay starts from idle too.
-            if let Some(cal) = calibrator.as_mut() {
-                calib_probe.reset_for_table(&lane_table, EngineState::default());
-                for &i in &order {
-                    calib_probe.push_task_compiled(&lane_table, i);
+            // replay starts from idle too. Retried groups (attempts > 1)
+            // are excluded: their wall-clock includes the failed attempts
+            // and backoff sleeps, which would poison the rate estimate.
+            if attempts == 1 {
+                if let Some(cal) = calibrator.as_mut() {
+                    calib_probe
+                        .reset_for_table(&lane_table, EngineState::default());
+                    for &i in &order {
+                        calib_probe.push_task_compiled(&lane_table, i);
+                    }
+                    calib_probe.run_to_quiescence();
+                    fold_timeline_stage_secs(
+                        order.len(),
+                        calib_probe.timeline(),
+                        &mut pred_stages,
+                    );
+                    cal.observe_group(&pred_stages, &run.timeline);
                 }
-                calib_probe.run_to_quiescence();
-                fold_timeline_stage_secs(
-                    order.len(),
-                    calib_probe.timeline(),
-                    &mut pred_stages,
-                );
-                cal.observe_group(&pred_stages, &run.timeline);
             }
             stats.n_groups += 1;
             stats.n_tasks += drained.len();
@@ -607,6 +719,78 @@ fn lane_proxy(
     LaneOutcome { stats, latencies, group_makespans }
 }
 
+/// Drive one group to completion under a [`RecoveryPolicy`] (the legacy
+/// blocking proxy's recovery loop; the online proxy re-submits through
+/// its runner channel instead). Returns the successful run plus the
+/// attempt count — callers skip calibration feedback when `attempts > 1`
+/// because a retried group's wall-clock carries the failed attempts.
+///
+/// The legacy proxy has no sibling lane to hand work to, so a
+/// `Quarantine` verdict degenerates to the breaker's cooldown +
+/// half-open-probe cycle on the *held* group: the lane sleeps out the
+/// cooldown and re-probes with the same tasks. A persistently faulting
+/// device therefore re-probes forever here — by design, the fail-fast
+/// escape is picking a policy that says so.
+fn run_group_with_recovery(
+    device: &dyn Device,
+    ordered: &[TaskSpec],
+    lane: usize,
+    rec: &RecoveryOptions,
+    breaker: &LaneBreaker,
+    consec_failures: &mut usize,
+    stats: &mut LaneStats,
+) -> (DeviceRun, usize) {
+    let mut attempt = 1usize;
+    loop {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            device.run_group(ordered)
+        }));
+        let (kind, message, payload) = match res {
+            Ok(Ok(run)) => {
+                if breaker.state() != BreakerState::Closed {
+                    breaker.probe_succeeded();
+                }
+                *consec_failures = 0;
+                return (run, attempt);
+            }
+            Ok(Err(e)) => (FaultKind::Error, format!("{e:#}"), None),
+            Err(p) => (FaultKind::Panic, "device panicked".to_string(), Some(p)),
+        };
+        stats.n_faults += 1;
+        *consec_failures += 1;
+        let ctx = FailureCtx {
+            lane,
+            attempt,
+            lane_consecutive_failures: *consec_failures,
+            kind,
+        };
+        match rec.policy.on_failure(&ctx) {
+            RecoveryAction::FailFast => match payload {
+                Some(p) => std::panic::resume_unwind(p),
+                None => panic!(
+                    "lane {lane} device fault after {attempt} attempt(s): \
+                     {message}"
+                ),
+            },
+            RecoveryAction::Retry { backoff } => {
+                stats.n_retries += 1;
+                std::thread::sleep(backoff);
+            }
+            RecoveryAction::Quarantine => {
+                if breaker.trip() {
+                    stats.n_quarantine_trips += 1;
+                }
+                std::thread::sleep(rec.quarantine.cooldown);
+                if breaker.try_half_open(rec.quarantine.cooldown) {
+                    stats.n_halfopen_probes += 1;
+                }
+                stats.n_retries += 1;
+            }
+        }
+        attempt += 1;
+    }
+}
+
 /// Fold a lane's final calibration state into its [`LaneStats`].
 fn record_calib_stats(stats: &mut LaneStats, calibrator: Option<&Calibrator>) {
     if let Some(cal) = calibrator {
@@ -624,20 +808,51 @@ fn record_calib_stats(stats: &mut LaneStats, calibrator: Option<&Calibrator>) {
 // Online (open-stream) lane proxy
 // ---------------------------------------------------------------------------
 
-/// Completion notice from a lane's device-runner thread. The runner
-/// signals the submissions' completion events itself (so workers unblock
-/// without waiting for the proxy, which may be mid-re-plan), then reports
-/// the measured numbers back.
+/// Completion notice from a lane's device-runner thread. On success the
+/// runner signals the submissions' completion events itself (so workers
+/// unblock without waiting for the proxy, which may be mid-re-plan),
+/// then reports the measured numbers back. On a fault it hands the
+/// *unsignalled* submissions back so the proxy can retry or requeue them
+/// — a retried run must produce bit-identical completions, so the events
+/// stay pending until a successful attempt (or a fail-fast unwind).
 struct RunDone {
-    makespan: f64,
     n_tasks: usize,
-    latencies: Vec<f64>,
-    /// Measured per-command records (slot-indexed in submitted order) —
-    /// the calibrator's feedback substrate. Empty on a device panic.
-    timeline: Vec<CmdRecord>,
-    /// A device panic, deferred so the proxy can run its liveness
-    /// protocol before surfacing it.
-    panicked: Option<Box<dyn std::any::Any + Send>>,
+    outcome: RunOutcome,
+}
+
+enum RunOutcome {
+    Done {
+        makespan: f64,
+        latencies: Vec<f64>,
+        /// Measured per-command records (slot-indexed in submitted
+        /// order) — the calibrator's feedback substrate.
+        timeline: Vec<CmdRecord>,
+    },
+    Fault {
+        kind: FaultKind,
+        message: String,
+        /// The device panic payload, deferred so the proxy can decide
+        /// between retry, quarantine and fail-fast re-raise.
+        payload: Option<Box<dyn std::any::Any + Send>>,
+        /// The submitted group, returned un-completed for re-dispatch.
+        subs: Vec<Submission>,
+    },
+}
+
+/// Proxy-side record of the group in flight on the runner thread.
+struct InFlight {
+    /// Predicted makespan contribution on the contiguous lane timeline.
+    pred: f64,
+    /// Watchdog deadline (`predicted × slack + floor` past submit), when
+    /// a run-deadline is configured.
+    deadline: Option<Instant>,
+    /// 1 on first submission; grows on same-lane retries.
+    attempt: usize,
+    /// The watchdog already declared this run dead (the lane is
+    /// quarantined and its backlog requeued); when the zombie run
+    /// eventually surfaces, its numbers must not feed the drift gate or
+    /// the calibrator.
+    timed_out: bool,
 }
 
 /// One lane's online proxy loop (see the module docs): device execution
@@ -649,14 +864,24 @@ struct RunDone {
 fn online_lane_proxy(
     lane: usize,
     sharded: ShardedBuffer,
-    device: Arc<VirtualDevice>,
+    device: Arc<dyn Device>,
     base_model: DeviceProfile,
     opts: LaneOptions,
     online: OnlineOptions,
+    health: FleetHealth,
     cap: usize,
     epoch: Instant,
 ) -> LaneOutcome {
     let own = sharded.lane(lane).clone();
+    let rec = opts.recovery.clone();
+    let breaker = health.lane(lane);
+    let mut consec_failures = 0usize;
+    // Watchdog deadline for a group predicted to take `pred` seconds.
+    let deadline_at = |rec: Option<&RecoveryOptions>, pred: f64| {
+        rec.and_then(|r| {
+            r.deadline.map(|d| Instant::now() + d.deadline_for(pred))
+        })
+    };
 
     // Planner state: the contiguous lane cursor carries EngineState
     // across back-to-back groups (committed prefix = everything handed to
@@ -705,7 +930,7 @@ fn online_lane_proxy(
                     );
                     let now = epoch.elapsed().as_secs_f64();
                     let msg = match res {
-                        Ok(run) => {
+                        Ok(Ok(run)) => {
                             let mut lat = Vec::with_capacity(subs.len());
                             for (slot, sub) in subs.iter().enumerate() {
                                 sub.done
@@ -713,31 +938,54 @@ fn online_lane_proxy(
                                 lat.push(now - sub.submitted_at);
                             }
                             RunDone {
-                                makespan: run.makespan,
                                 n_tasks: subs.len(),
-                                latencies: lat,
-                                timeline: run.timeline,
-                                panicked: None,
+                                outcome: RunOutcome::Done {
+                                    makespan: run.makespan,
+                                    latencies: lat,
+                                    timeline: run.timeline,
+                                },
                             }
                         }
-                        Err(p) => {
-                            // Liveness first: blocked workers must always
-                            // unblock, even on a device failure.
-                            for sub in &subs {
-                                if !sub.done.is_complete() {
-                                    sub.done.complete(now);
-                                }
-                            }
-                            RunDone {
-                                makespan: 0.0,
-                                n_tasks: subs.len(),
-                                latencies: Vec::new(),
-                                timeline: Vec::new(),
-                                panicked: Some(p),
-                            }
+                        // Faulted runs hand their submissions back with
+                        // the completion events still pending: the proxy
+                        // may retry the exact group, and a re-run must be
+                        // the one that signals the workers (an event can
+                        // complete only once).
+                        Ok(Err(e)) => RunDone {
+                            n_tasks: subs.len(),
+                            outcome: RunOutcome::Fault {
+                                kind: FaultKind::Error,
+                                message: format!("{e:#}"),
+                                payload: None,
+                                subs,
+                            },
+                        },
+                        Err(p) => RunDone {
+                            n_tasks: subs.len(),
+                            outcome: RunOutcome::Fault {
+                                kind: FaultKind::Panic,
+                                message: "device panicked".to_string(),
+                                payload: Some(p),
+                                subs,
+                            },
+                        },
+                    };
+                    // If the proxy already unwound (receiver gone), no
+                    // retry will ever happen: complete any still-pending
+                    // events ourselves so blocked workers can exit.
+                    let fault_events: Vec<Event> = match &msg.outcome {
+                        RunOutcome::Fault { subs, .. } => {
+                            subs.iter().map(|s| s.done.clone()).collect()
                         }
+                        RunOutcome::Done { .. } => Vec::new(),
                     };
                     if done_tx.send(msg).is_err() {
+                        let now = epoch.elapsed().as_secs_f64();
+                        for ev in &fault_events {
+                            if !ev.is_complete() {
+                                ev.complete(now);
+                            }
+                        }
                         break;
                     }
                 }
@@ -752,38 +1000,175 @@ fn online_lane_proxy(
             let mut suffix_planned = false;
             let mut pred_done = 0.0f64;
             let mut last_commit_pred = 0.0f64;
-            // Predicted makespan contribution of the group in flight.
-            let mut inflight: Option<f64> = None;
+            // The group in flight on the runner thread, if any.
+            let mut inflight: Option<InFlight> = None;
             let mut closed = false;
 
             loop {
-                if let Some(pred) = inflight {
+                if inflight.is_some() {
                     match done_rx.recv_timeout(online.poll) {
                         Ok(done) => {
-                            inflight = None;
-                            stats.busy_secs += done.makespan;
-                            stats.predicted_secs += pred;
-                            gate.observe(done.makespan, pred);
-                            // Measured-rate feedback: the submitted
-                            // order's predicted stage seconds against the
-                            // device's measured per-command timeline.
-                            if let Some(cal) = calibrator.as_mut() {
-                                cal.observe_group(&inflight_pred, &done.timeline);
-                            }
-                            group_makespans.push(done.makespan);
-                            latencies.extend(done.latencies);
-                            stats.n_groups += 1;
-                            stats.n_tasks += done.n_tasks;
-                            if let Some(p) = done.panicked {
-                                std::panic::resume_unwind(p);
+                            let fl = inflight.take().expect("inflight set");
+                            match done.outcome {
+                                RunOutcome::Done {
+                                    makespan,
+                                    latencies: lat,
+                                    timeline,
+                                } => {
+                                    if !fl.timed_out && breaker.state() != BreakerState::Closed {
+                                        breaker.probe_succeeded();
+                                    }
+                                    if !fl.timed_out {
+                                        consec_failures = 0;
+                                    }
+                                    stats.busy_secs += makespan;
+                                    stats.predicted_secs += fl.pred;
+                                    // Drift-gate and measured-rate
+                                    // feedback come ONLY from clean
+                                    // first-attempt runs: retried groups
+                                    // carry backoff sleeps and zombie
+                                    // (timed-out) runs by definition blew
+                                    // their prediction for reasons the
+                                    // model shouldn't learn.
+                                    if fl.attempt == 1 && !fl.timed_out {
+                                        gate.observe(makespan, fl.pred);
+                                        if let Some(cal) = calibrator.as_mut()
+                                        {
+                                            cal.observe_group(
+                                                &inflight_pred,
+                                                &timeline,
+                                            );
+                                        }
+                                    }
+                                    group_makespans.push(makespan);
+                                    latencies.extend(lat);
+                                    stats.n_groups += 1;
+                                    stats.n_tasks += done.n_tasks;
+                                }
+                                RunOutcome::Fault {
+                                    kind,
+                                    message,
+                                    payload,
+                                    subs,
+                                } => {
+                                    stats.n_faults += 1;
+                                    consec_failures += 1;
+                                    // A watchdog-condemned run that then
+                                    // faults stays condemned: quarantine,
+                                    // never a same-lane retry.
+                                    let action = if fl.timed_out {
+                                        RecoveryAction::Quarantine
+                                    } else {
+                                        match rec.as_ref() {
+                                            Some(r) => {
+                                                r.policy.on_failure(&FailureCtx {
+                                                    lane,
+                                                    attempt: fl.attempt,
+                                                    lane_consecutive_failures:
+                                                        consec_failures,
+                                                    kind,
+                                                })
+                                            }
+                                            None => RecoveryAction::FailFast,
+                                        }
+                                    };
+                                    match action {
+                                        RecoveryAction::FailFast => {
+                                            // No retry is coming: unblock
+                                            // the group's workers before
+                                            // unwinding.
+                                            let now =
+                                                epoch.elapsed().as_secs_f64();
+                                            for sub in &subs {
+                                                if !sub.done.is_complete() {
+                                                    sub.done.complete(now);
+                                                }
+                                            }
+                                            match payload {
+                                                Some(p) => {
+                                                    std::panic::resume_unwind(p)
+                                                }
+                                                None => panic!(
+                                                    "lane {lane} device fault \
+                                                     after {} attempt(s): \
+                                                     {message}",
+                                                    fl.attempt
+                                                ),
+                                            }
+                                        }
+                                        RecoveryAction::Retry { backoff } => {
+                                            stats.n_retries += 1;
+                                            std::thread::sleep(backoff);
+                                            inflight = Some(InFlight {
+                                                pred: fl.pred,
+                                                deadline: deadline_at(
+                                                    rec.as_ref(),
+                                                    fl.pred,
+                                                ),
+                                                attempt: fl.attempt + 1,
+                                                timed_out: false,
+                                            });
+                                            job_tx
+                                                .send(subs)
+                                                .expect("lane device runner alive");
+                                        }
+                                        RecoveryAction::Quarantine => {
+                                            if breaker.trip() {
+                                                stats.n_quarantine_trips += 1;
+                                            }
+                                            // Requeue the failed group in
+                                            // front of the unsubmitted
+                                            // backlog so per-worker FIFO
+                                            // survives, then make it all
+                                            // visible to sibling thieves.
+                                            let mut back = subs;
+                                            back.append(&mut pending_subs);
+                                            stats.n_requeued += back.len();
+                                            own.requeue_front(&mut back);
+                                            pending_tasks.clear();
+                                            incumbent.clear();
+                                            planner_live = false;
+                                            plan_dirty = false;
+                                            suffix_planned = false;
+                                        }
+                                    }
+                                }
                             }
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {
+                            // Run-deadline watchdog: a run past its
+                            // deadline is declared dead — quarantine the
+                            // lane and requeue the *unstarted* backlog so
+                            // siblings can rescue it. The zombie run
+                            // itself cannot be cancelled (the runner
+                            // thread is blocked inside the device); its
+                            // eventual RunDone is handled above with
+                            // `timed_out` set.
+                            if let Some(fl) = inflight.as_mut() {
+                                if !fl.timed_out
+                                    && fl.deadline.is_some_and(|dl| Instant::now() >= dl)
+                                {
+                                    fl.timed_out = true;
+                                    stats.n_timeouts += 1;
+                                    if breaker.trip() {
+                                        stats.n_quarantine_trips += 1;
+                                    }
+                                    stats.n_requeued += pending_subs.len();
+                                    own.requeue_front(&mut pending_subs);
+                                    pending_tasks.clear();
+                                    incumbent.clear();
+                                    planner_live = false;
+                                    plan_dirty = false;
+                                    suffix_planned = false;
+                                }
+                            }
                             // Device busy: absorb arrivals into the
                             // uncommitted suffix (stealing when our own
                             // stream runs dry), and overlap the re-plan
-                            // with the device run.
-                            if !closed {
+                            // with the device run. A quarantined lane
+                            // absorbs nothing — its backlog belongs to
+                            // the thieves now.
+                            if !closed && breaker.state() == BreakerState::Closed {
                                 let room = cap.saturating_sub(pending_subs.len());
                                 if room > 0 {
                                     match own.drain_into_timeout(
@@ -813,9 +1198,10 @@ fn online_lane_proxy(
                                                 // Bounded by the lane's
                                                 // group cap as well.
                                                 let got = sharded
-                                                    .steal_from_hottest(
+                                                    .steal_with_health(
                                                         lane,
                                                         online.steal_max.min(cap),
+                                                        &health,
                                                         &mut drained,
                                                     );
                                                 if got > 0 {
@@ -865,6 +1251,24 @@ fn online_lane_proxy(
                     continue;
                 }
 
+                // ---- quarantined & idle: sit out the cooldown, then
+                // admit ONE probe group (half-open). While open, this
+                // lane plans and submits nothing — its requeued backlog
+                // is rescued by sibling thieves via steal_with_health.
+                if let Some(r) = rec.as_ref() {
+                    if breaker.state() == BreakerState::Open {
+                        if breaker.try_half_open(r.quarantine.cooldown) {
+                            stats.n_halfopen_probes += 1;
+                        } else {
+                            if own.is_closed_and_empty() {
+                                break;
+                            }
+                            std::thread::sleep(online.poll);
+                            continue;
+                        }
+                    }
+                }
+
                 // ---- device idle: submit the planned suffix, if any.
                 if !pending_subs.is_empty() {
                     if plan_dirty {
@@ -900,7 +1304,12 @@ fn online_lane_proxy(
                     lane_cursor.commit_frontier();
                     let contribution = (pred_done - last_commit_pred).max(0.0);
                     last_commit_pred = pred_done;
-                    inflight = Some(contribution);
+                    inflight = Some(InFlight {
+                        pred: contribution,
+                        deadline: deadline_at(rec.as_ref(), contribution),
+                        attempt: 1,
+                        timed_out: false,
+                    });
                     job_tx.send(ordered_subs).expect("lane device runner alive");
                     // Capture the order's predicted per-slot stage
                     // seconds for calibration feedback via a recorded
@@ -968,10 +1377,14 @@ fn online_lane_proxy(
                     ),
                     DrainPoll::Closed => closed = true,
                     DrainPoll::Empty => {
-                        if online.steal_max > 0 {
-                            let got = sharded.steal_from_hottest(
+                        // A half-open lane only drains its own backlog
+                        // (one probe group at a time) — no stealing until
+                        // a probe closes the breaker again.
+                        if online.steal_max > 0 && breaker.state() == BreakerState::Closed {
+                            let got = sharded.steal_with_health(
                                 lane,
                                 online.steal_max.min(cap),
+                                &health,
                                 &mut drained,
                             );
                             if got > 0 {
@@ -1514,5 +1927,74 @@ mod tests {
         assert_eq!(m.latencies.len(), 12);
         let l = &m.per_lane[0];
         assert!(l.n_calib_obs > 0, "online lane never observed: {l:?}");
+    }
+
+    #[test]
+    fn fault_free_run_with_recovery_armed_reports_zero_fault_counters() {
+        // Arming recovery on a healthy device must be free: same task
+        // count, all six fault counters at zero, on both pipelines.
+        for online in [None, Some(OnlineOptions::default())] {
+            let c = LaneCoordinator::homogeneous(
+                profile_by_name("amd_r9").unwrap(),
+                Arc::new(SpinExecutor),
+                LaneOptions {
+                    lanes: 2,
+                    policy: Policy::Heuristic,
+                    online,
+                    recovery: Some(RecoveryOptions::default()),
+                    ..LaneOptions::default()
+                },
+            );
+            let m = c.run(workload(4, 2, 0.1));
+            assert_eq!(m.n_tasks, 8);
+            for l in &m.per_lane {
+                assert_eq!(l.n_faults, 0, "{l:?}");
+                assert_eq!(l.n_retries, 0, "{l:?}");
+                assert_eq!(l.n_timeouts, 0, "{l:?}");
+                assert_eq!(l.n_requeued, 0, "{l:?}");
+                assert_eq!(l.n_quarantine_trips, 0, "{l:?}");
+                assert_eq!(l.n_halfopen_probes, 0, "{l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_lane_retries_transient_device_error_to_completion() {
+        use crate::coordinator::recovery::RetryBackoff;
+        use crate::device::{ChaosDevice, ChaosOptions, SimDevice};
+
+        let p = profile_by_name("amd_r9").unwrap();
+        // Transient chaos: every first attempt of a faulting group errors,
+        // the immediate re-run is clean — the retry policy must absorb it.
+        let dev: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+            Arc::new(SimDevice::new(p)),
+            ChaosOptions {
+                seed: 0xfab1e,
+                p_error: 0.8,
+                transient: true,
+                ..ChaosOptions::default()
+            },
+        ));
+        let c = LaneCoordinator::with_devices(
+            vec![dev],
+            LaneOptions {
+                lanes: 1,
+                policy: Policy::Heuristic,
+                recovery: Some(RecoveryOptions::retry(RetryBackoff {
+                    base: Duration::from_micros(50),
+                    cap: Duration::from_micros(200),
+                    ..RetryBackoff::default()
+                })),
+                ..LaneOptions::default()
+            },
+        );
+        let m = c.run(workload(3, 2, 0.1));
+        assert_eq!(m.n_tasks, 6, "all tasks complete despite faults");
+        let l = &m.per_lane[0];
+        assert_eq!(l.n_retries, l.n_faults, "every fault was retried: {l:?}");
+        assert!(l.n_faults > 0, "chaos at p=0.8 never fired: {l:?}");
+        // Retried groups are excluded from calibration (none armed here,
+        // but the quarantine machinery must have stayed silent).
+        assert_eq!(l.n_quarantine_trips, 0, "{l:?}");
     }
 }

@@ -11,13 +11,23 @@
 //!   parallel candidate scoring), paused prediction cursors, and the
 //!   online open-stream pipeline (mid-group merge, drift-gated suffix
 //!   re-plans, cross-round `EngineState` carry, lane work-stealing).
+//! * `recovery` — fault tolerance: the pluggable [`RecoveryPolicy`]
+//!   trait (fail-fast / retry-with-backoff / blacklist-after-N), the
+//!   run-deadline watchdog formula, and the per-lane circuit breaker
+//!   ([`FleetHealth`]) behind lane quarantine and health-aware stealing.
 //! * `runner` — the classic single-proxy harness, now a single-lane
 //!   facade over `lanes`.
 
 pub mod buffer;
 pub mod lanes;
+pub mod recovery;
 pub mod runner;
 
 pub use buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
 pub use lanes::{LaneCoordinator, LaneMetrics, LaneOptions, LaneStats};
+pub use recovery::{
+    BlacklistAfterN, BreakerState, DeadlineOptions, FailFast, FailureCtx,
+    FaultKind, FleetHealth, LaneBreaker, QuarantineOptions, RecoveryAction,
+    RecoveryOptions, RecoveryPolicy, RetryBackoff,
+};
 pub use runner::{CoordMetrics, Coordinator, Policy};

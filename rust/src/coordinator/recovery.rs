@@ -1,0 +1,474 @@
+//! Fault-tolerance policy for the lane coordinator.
+//!
+//! The lane runtime (`coordinator::lanes`) executes device runs that can
+//! fail three ways: an `Err` from [`Device::run_group`], a panic out of
+//! it, or a hang (detected by the run-deadline watchdog). This module
+//! holds everything the runtime consults to decide what happens next:
+//!
+//! * [`RecoveryPolicy`] — a pluggable trait mapping a failure context to
+//!   an action, in the PySchedCL spirit of policy-as-trait. Shipped
+//!   impls: [`FailFast`] (today's behavior: re-raise), [`RetryBackoff`]
+//!   (exponential backoff with a per-group attempt cap) and
+//!   [`BlacklistAfterN`] (retry until a lane looks sick, then quarantine
+//!   it).
+//! * [`LaneBreaker`] / [`FleetHealth`] — a per-lane circuit breaker with
+//!   the classic three states: **Closed** (healthy), **Open**
+//!   (quarantined: the lane runs nothing and its backlog is fair game
+//!   for siblings via `ShardedBuffer::steal_with_health`), **HalfOpen**
+//!   (cooldown elapsed; the next own-lane group is a probe — success
+//!   closes the breaker, failure re-opens it).
+//! * [`DeadlineOptions`] — the watchdog formula
+//!   `deadline = predicted × slack + floor`: the predicted group
+//!   makespan comes from the planning model that scheduled the group, so
+//!   a hung run is declared dead relative to what the plan *promised*,
+//!   not a global constant.
+//!
+//! Failed, retried and timed-out runs never feed
+//! [`Calibrator`](crate::model::Calibrator) or
+//! [`DriftGate`](crate::sched::online::DriftGate) — a partial timeline
+//! would register as huge drift (the same bug class as the PR 5 zero
+//! makespan fix). The exclusion is enforced in `coordinator::lanes` and
+//! tested in `model::calibrate` and `rust/tests/prop_recovery.rs`.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How a device run failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `run_group` returned `Err` (transient transport/backend fault).
+    Error,
+    /// `run_group` panicked (driver abort).
+    Panic,
+    /// The run-deadline watchdog fired before the run completed.
+    Timeout,
+}
+
+/// Everything a policy may condition on when a run fails.
+#[derive(Clone, Debug)]
+pub struct FailureCtx {
+    /// Lane the failure happened on.
+    pub lane: usize,
+    /// Attempt number of the failed run, starting at 1 (so `attempt`
+    /// runs of this group have now failed when the policy is consulted).
+    pub attempt: usize,
+    /// Consecutive failed runs on this lane (across groups), including
+    /// this one; reset by any clean completion.
+    pub lane_consecutive_failures: usize,
+    pub kind: FaultKind,
+}
+
+/// What the lane runtime should do about a failed run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Re-raise: propagate the fault as a lane panic (today's behavior).
+    FailFast,
+    /// Re-run the same group on the same lane after `backoff`.
+    Retry { backoff: Duration },
+    /// Trip the lane's breaker; requeue its unstarted work for siblings.
+    Quarantine,
+}
+
+/// Pluggable recovery policy (one impl per strategy, PySchedCL-style).
+pub trait RecoveryPolicy: Send + Sync + fmt::Debug {
+    fn on_failure(&self, ctx: &FailureCtx) -> RecoveryAction;
+    /// Stable name for stats/bench rows.
+    fn name(&self) -> &'static str;
+}
+
+/// Today's behavior: any fault aborts the coordinator run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FailFast;
+
+impl RecoveryPolicy for FailFast {
+    fn on_failure(&self, _ctx: &FailureCtx) -> RecoveryAction {
+        RecoveryAction::FailFast
+    }
+
+    fn name(&self) -> &'static str {
+        "fail_fast"
+    }
+}
+
+/// Retry with exponential backoff, capped per group.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryBackoff {
+    /// Backoff before the first retry.
+    pub base: Duration,
+    /// Multiplier per further attempt.
+    pub factor: f64,
+    /// Upper bound on any single backoff.
+    pub cap: Duration,
+    /// Total attempts allowed per group (including the first run);
+    /// exhausting them falls back to [`RecoveryAction::FailFast`].
+    pub max_attempts: usize,
+}
+
+impl Default for RetryBackoff {
+    fn default() -> Self {
+        RetryBackoff {
+            base: Duration::from_micros(500),
+            factor: 2.0,
+            cap: Duration::from_millis(20),
+            max_attempts: 4,
+        }
+    }
+}
+
+impl RetryBackoff {
+    /// Backoff after failed attempt `attempt` (1-based):
+    /// `base × factor^(attempt−1)`, capped.
+    pub fn backoff_for(&self, attempt: usize) -> Duration {
+        let exp = attempt.saturating_sub(1).min(i32::MAX as usize) as i32;
+        self.base.mul_f64(self.factor.powi(exp)).min(self.cap)
+    }
+}
+
+impl RecoveryPolicy for RetryBackoff {
+    fn on_failure(&self, ctx: &FailureCtx) -> RecoveryAction {
+        if ctx.attempt >= self.max_attempts {
+            return RecoveryAction::FailFast;
+        }
+        RecoveryAction::Retry { backoff: self.backoff_for(ctx.attempt) }
+    }
+
+    fn name(&self) -> &'static str {
+        "retry_backoff"
+    }
+}
+
+/// Retry like [`RetryBackoff`], but quarantine a lane once it has failed
+/// `n_failures` consecutive runs — the HTS move: drain around the sick
+/// unit instead of burning attempts on it.
+#[derive(Clone, Copy, Debug)]
+pub struct BlacklistAfterN {
+    pub retry: RetryBackoff,
+    pub n_failures: usize,
+}
+
+impl Default for BlacklistAfterN {
+    fn default() -> Self {
+        BlacklistAfterN { retry: RetryBackoff::default(), n_failures: 3 }
+    }
+}
+
+impl RecoveryPolicy for BlacklistAfterN {
+    fn on_failure(&self, ctx: &FailureCtx) -> RecoveryAction {
+        if ctx.lane_consecutive_failures >= self.n_failures {
+            return RecoveryAction::Quarantine;
+        }
+        self.retry.on_failure(ctx)
+    }
+
+    fn name(&self) -> &'static str {
+        "blacklist_after_n"
+    }
+}
+
+/// Watchdog configuration: `deadline = predicted × slack + floor`.
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineOptions {
+    /// Multiplier on the predicted group makespan. Generous by default:
+    /// the virtual device adds real scheduling jitter on a loaded host,
+    /// and a false timeout costs a full quarantine round-trip.
+    pub slack: f64,
+    /// Absolute floor so near-zero predictions keep a usable deadline.
+    pub floor: Duration,
+}
+
+impl Default for DeadlineOptions {
+    fn default() -> Self {
+        DeadlineOptions { slack: 8.0, floor: Duration::from_millis(250) }
+    }
+}
+
+impl DeadlineOptions {
+    /// Deadline for a group whose plan predicts `pred_secs` of makespan.
+    pub fn deadline_for(&self, pred_secs: f64) -> Duration {
+        Duration::from_secs_f64(pred_secs.max(0.0) * self.slack) + self.floor
+    }
+}
+
+/// Quarantine (breaker) configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct QuarantineOptions {
+    /// How long a tripped lane stays Open before a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for QuarantineOptions {
+    fn default() -> Self {
+        QuarantineOptions { cooldown: Duration::from_millis(10) }
+    }
+}
+
+/// Everything `LaneOptions::recovery` carries into the lane runtime.
+#[derive(Clone, Debug)]
+pub struct RecoveryOptions {
+    pub policy: Arc<dyn RecoveryPolicy>,
+    /// `None` disables the watchdog (hangs are then only bounded by the
+    /// coordinator's caller).
+    pub deadline: Option<DeadlineOptions>,
+    pub quarantine: QuarantineOptions,
+}
+
+impl Default for RecoveryOptions {
+    fn default() -> Self {
+        RecoveryOptions {
+            policy: Arc::new(RetryBackoff::default()),
+            deadline: Some(DeadlineOptions::default()),
+            quarantine: QuarantineOptions::default(),
+        }
+    }
+}
+
+impl RecoveryOptions {
+    /// Explicit fail-fast (distinct from `recovery: None` only in that
+    /// the watchdog still arms).
+    pub fn fail_fast() -> Self {
+        RecoveryOptions { policy: Arc::new(FailFast), ..Default::default() }
+    }
+
+    pub fn retry(retry: RetryBackoff) -> Self {
+        RecoveryOptions { policy: Arc::new(retry), ..Default::default() }
+    }
+
+    pub fn blacklist(b: BlacklistAfterN) -> Self {
+        RecoveryOptions { policy: Arc::new(b), ..Default::default() }
+    }
+}
+
+/// Circuit-breaker state of one lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: the lane plans and runs its own work.
+    Closed,
+    /// Quarantined: the lane runs nothing; siblings may take its backlog.
+    Open,
+    /// Cooldown elapsed: the next own-lane group is a probe.
+    HalfOpen,
+}
+
+#[derive(Debug)]
+struct BreakerInner {
+    state: BreakerState,
+    opened_at: Option<Instant>,
+}
+
+/// One lane's circuit breaker. All transitions are mutex-serialized;
+/// a poisoned lock recovers (breaker state stays valid across a lane
+/// panic — that is exactly when siblings need to read it).
+#[derive(Debug)]
+pub struct LaneBreaker {
+    inner: Mutex<BreakerInner>,
+}
+
+impl Default for LaneBreaker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LaneBreaker {
+    pub fn new() -> Self {
+        LaneBreaker {
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                opened_at: None,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BreakerInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.lock().state
+    }
+
+    /// Quarantine the lane (from any state; a failed half-open probe
+    /// re-opens with a fresh cooldown). Returns `true` only on the
+    /// Closed → Open edge — that is what counts as a "trip" in stats.
+    pub fn trip(&self) -> bool {
+        let mut g = self.lock();
+        let was_closed = g.state == BreakerState::Closed;
+        g.state = BreakerState::Open;
+        g.opened_at = Some(Instant::now());
+        was_closed
+    }
+
+    /// Open → HalfOpen once `cooldown` has elapsed since the trip.
+    /// Returns `true` iff the transition happened now.
+    pub fn try_half_open(&self, cooldown: Duration) -> bool {
+        let mut g = self.lock();
+        if g.state != BreakerState::Open {
+            return false;
+        }
+        let elapsed_ok =
+            g.opened_at.map(|t| t.elapsed() >= cooldown).unwrap_or(true);
+        if elapsed_ok {
+            g.state = BreakerState::HalfOpen;
+            return true;
+        }
+        false
+    }
+
+    /// Any clean, non-timed-out completion closes the breaker.
+    pub fn probe_succeeded(&self) {
+        let mut g = self.lock();
+        g.state = BreakerState::Closed;
+        g.opened_at = None;
+    }
+}
+
+/// Shared view of every lane's breaker — what `steal_with_health` and
+/// the proxies consult.
+#[derive(Clone)]
+pub struct FleetHealth {
+    lanes: Arc<[LaneBreaker]>,
+}
+
+impl FleetHealth {
+    pub fn new(n_lanes: usize) -> Self {
+        FleetHealth {
+            lanes: (0..n_lanes).map(|_| LaneBreaker::new()).collect(),
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane(&self, lane: usize) -> &LaneBreaker {
+        &self.lanes[lane]
+    }
+
+    /// Whether a lane's backlog is up for grabs. Only **Open** counts:
+    /// a HalfOpen lane is about to probe and keeps its own backlog.
+    pub fn is_quarantined(&self, lane: usize) -> bool {
+        self.lanes[lane].state() == BreakerState::Open
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(attempt: usize, consec: usize) -> FailureCtx {
+        FailureCtx {
+            lane: 0,
+            attempt,
+            lane_consecutive_failures: consec,
+            kind: FaultKind::Error,
+        }
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let r = RetryBackoff {
+            base: Duration::from_millis(1),
+            factor: 2.0,
+            cap: Duration::from_millis(6),
+            max_attempts: 10,
+        };
+        assert_eq!(r.backoff_for(1), Duration::from_millis(1));
+        assert_eq!(r.backoff_for(2), Duration::from_millis(2));
+        assert_eq!(r.backoff_for(3), Duration::from_millis(4));
+        assert_eq!(r.backoff_for(4), Duration::from_millis(6)); // capped
+        assert_eq!(r.backoff_for(9), Duration::from_millis(6));
+    }
+
+    #[test]
+    fn retry_policy_respects_attempt_cap() {
+        let r = RetryBackoff { max_attempts: 3, ..RetryBackoff::default() };
+        assert!(matches!(
+            r.on_failure(&ctx(1, 1)),
+            RecoveryAction::Retry { .. }
+        ));
+        assert!(matches!(
+            r.on_failure(&ctx(2, 2)),
+            RecoveryAction::Retry { .. }
+        ));
+        assert_eq!(r.on_failure(&ctx(3, 3)), RecoveryAction::FailFast);
+    }
+
+    #[test]
+    fn blacklist_quarantines_at_threshold_else_delegates() {
+        let b = BlacklistAfterN {
+            retry: RetryBackoff { max_attempts: 10, ..RetryBackoff::default() },
+            n_failures: 2,
+        };
+        assert!(matches!(
+            b.on_failure(&ctx(1, 1)),
+            RecoveryAction::Retry { .. }
+        ));
+        assert_eq!(b.on_failure(&ctx(1, 2)), RecoveryAction::Quarantine);
+        assert_eq!(b.on_failure(&ctx(5, 7)), RecoveryAction::Quarantine);
+    }
+
+    #[test]
+    fn deadline_formula_applies_slack_and_floor() {
+        let d = DeadlineOptions { slack: 2.0, floor: Duration::from_millis(10) };
+        assert_eq!(d.deadline_for(0.0), Duration::from_millis(10));
+        assert_eq!(d.deadline_for(-1.0), Duration::from_millis(10));
+        let dl = d.deadline_for(0.5);
+        assert!((dl.as_secs_f64() - 1.01).abs() < 1e-9, "{dl:?}");
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let b = LaneBreaker::new();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.trip(), "Closed -> Open is the counted trip");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.trip(), "re-trip while Open is not a new trip");
+        // Cooldown not yet elapsed: stays Open.
+        assert!(!b.try_half_open(Duration::from_secs(3600)));
+        assert_eq!(b.state(), BreakerState::Open);
+        // Zero cooldown: probe allowed immediately.
+        assert!(b.try_half_open(Duration::ZERO));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.try_half_open(Duration::ZERO), "only from Open");
+        b.probe_succeeded();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_cooldown() {
+        let b = LaneBreaker::new();
+        assert!(b.trip());
+        assert!(b.try_half_open(Duration::ZERO));
+        // The probe failed: back to Open, and it was not a fresh "trip".
+        assert!(!b.trip());
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.try_half_open(Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn fleet_health_only_open_counts_as_quarantined() {
+        let h = FleetHealth::new(3);
+        assert_eq!(h.n_lanes(), 3);
+        assert!(!h.is_quarantined(1));
+        h.lane(1).trip();
+        assert!(h.is_quarantined(1));
+        h.lane(1).try_half_open(Duration::ZERO);
+        assert!(!h.is_quarantined(1), "HalfOpen keeps its backlog");
+        h.lane(1).probe_succeeded();
+        assert!(!h.is_quarantined(1));
+    }
+
+    #[test]
+    fn breaker_survives_a_poisoning_panic() {
+        let b = Arc::new(LaneBreaker::new());
+        let b2 = Arc::clone(&b);
+        let _ = std::thread::spawn(move || {
+            let _g = b2.inner.lock().unwrap();
+            panic!("poison the breaker lock");
+        })
+        .join();
+        assert!(b.trip());
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+}

@@ -69,7 +69,7 @@ impl Coordinator {
     /// completed (the paper's batch dependency).
     pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> CoordMetrics {
         let lane = LaneCoordinator::with_devices(
-            vec![Arc::clone(&self.device)],
+            vec![Arc::clone(&self.device) as Arc<dyn crate::device::Device>],
             LaneOptions {
                 lanes: 1,
                 policy: self.policy,
@@ -78,6 +78,7 @@ impl Coordinator {
                 scoring_threads: 1,
                 online: None,
                 recalibrate: None,
+                recovery: None,
             },
         );
         let m = lane.run(workloads);

@@ -1,0 +1,390 @@
+//! Deterministic fault injection: [`ChaosDevice`] wraps any [`Device`].
+//!
+//! The wrapper draws a fixed number of uniforms per task from a seeded
+//! [`Pcg64`](crate::util::rng::Pcg64) **per `run_group` call**, so the
+//! fault schedule is a pure function of `(seed, call index, group size)`
+//! — never of wall-clock time or thread interleaving. That makes chaos
+//! runs replayable: the same seed injects the same faults at the same
+//! calls, which is what lets `rust/tests/prop_recovery.rs` assert exact
+//! properties (no task lost, retries bit-identical) instead of
+//! statistical ones.
+//!
+//! Injected failure modes, in decision order per call:
+//!
+//! 1. **hang** — sleep [`ChaosOptions::hang`] before proceeding
+//!    (emulates a stuck command queue; the recovery watchdog's prey);
+//! 2. **transient error** — return `Err` without running the group;
+//! 3. **panic** — unwind out of `run_group` (emulates a driver abort);
+//! 4. otherwise run the inner device, optionally **skewing** result
+//!    timestamps per task (emulates measurement jitter — exercises the
+//!    calibration-exclusion paths without failing the run).
+//!
+//! With [`ChaosOptions::transient`] set (the default), a call directly
+//! following a faulted call suppresses all injection and passes through
+//! bit-identically — modelling faults that clear on retry, and making
+//! "retry equals clean run" provable on a deterministic inner device.
+//! All probabilities default to zero; a zero-probability wrapper is a
+//! bitwise-transparent passthrough.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::config::DeviceProfile;
+use crate::device::{Device, DeviceRun};
+use crate::task::TaskSpec;
+use crate::util::rng::Pcg64;
+
+/// Fault-injection configuration. All probabilities are per *task* in
+/// the submitted group (a bigger group is likelier to fault, mirroring
+/// real exposure); at most one terminal fault fires per call.
+#[derive(Clone, Debug)]
+pub struct ChaosOptions {
+    /// RNG seed; every fault schedule is a deterministic function of it.
+    pub seed: u64,
+    /// Per-task probability of a transient `Err` return.
+    pub p_error: f64,
+    /// Per-task probability of a panic out of `run_group`.
+    pub p_panic: f64,
+    /// Per-task probability of an artificial hang before the run.
+    pub p_hang: f64,
+    /// How long a hang stalls the call.
+    pub hang: Duration,
+    /// Per-task probability of result-time skew (run still succeeds).
+    pub p_skew: f64,
+    /// Max fractional stretch of a skewed task's command durations.
+    pub skew_max: f64,
+    /// Suppress all injection on the call after a fault (fault clears on
+    /// retry); `false` makes faults persistent.
+    pub transient: bool,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        ChaosOptions {
+            seed: 0x5eed,
+            p_error: 0.0,
+            p_panic: 0.0,
+            p_hang: 0.0,
+            hang: Duration::from_millis(50),
+            p_skew: 0.0,
+            skew_max: 0.2,
+            transient: true,
+        }
+    }
+}
+
+/// What the wrapper has injected so far (cumulative, all calls).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosCounts {
+    pub n_runs: u64,
+    pub n_errors: u64,
+    pub n_panics: u64,
+    pub n_hangs: u64,
+    pub n_skewed_tasks: u64,
+    /// Calls where `transient` suppressed a would-be fault schedule.
+    pub n_suppressed: u64,
+}
+
+struct ChaosState {
+    rng: Pcg64,
+    last_faulted: bool,
+    counts: ChaosCounts,
+}
+
+/// The per-call injection decision, fully drawn under the state lock so
+/// the schedule depends only on the call index.
+struct Decision {
+    hang: bool,
+    error: Option<usize>,
+    panic_at: Option<usize>,
+    /// (task index, duration stretch factor) for skewed tasks.
+    skew: Vec<(usize, f64)>,
+}
+
+/// A [`Device`] wrapper injecting deterministic faults around `inner`.
+pub struct ChaosDevice {
+    inner: Arc<dyn Device>,
+    opts: ChaosOptions,
+    state: Mutex<ChaosState>,
+}
+
+impl ChaosDevice {
+    pub fn new(inner: Arc<dyn Device>, opts: ChaosOptions) -> Self {
+        let rng = Pcg64::seeded(opts.seed);
+        ChaosDevice {
+            inner,
+            opts,
+            state: Mutex::new(ChaosState {
+                rng,
+                last_faulted: false,
+                counts: ChaosCounts::default(),
+            }),
+        }
+    }
+
+    /// Cumulative injection counters (test/bench introspection).
+    pub fn counts(&self) -> ChaosCounts {
+        self.lock_state().counts
+    }
+
+    // A panic mid-`run_group` (injected or from the inner device) can
+    // poison the state mutex; the counters and RNG stay valid, so
+    // recover the guard instead of cascading the panic to later calls.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, ChaosState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Draw this call's full fault schedule. Exactly four uniforms per
+    /// task are consumed in a fixed order regardless of outcomes, so
+    /// call `k` always sees the same draws whatever calls `0..k` did.
+    fn decide(&self, n_tasks: usize) -> Decision {
+        let mut st = self.lock_state();
+        st.counts.n_runs += 1;
+        let mut d = Decision {
+            hang: false,
+            error: None,
+            panic_at: None,
+            skew: Vec::new(),
+        };
+        let mut raw_fault = false;
+        for i in 0..n_tasks {
+            let e = st.rng.next_f64();
+            let p = st.rng.next_f64();
+            let h = st.rng.next_f64();
+            let s = st.rng.next_f64();
+            if h < self.opts.p_hang {
+                d.hang = true;
+            }
+            if e < self.opts.p_error && d.error.is_none() {
+                d.error = Some(i);
+            }
+            if p < self.opts.p_panic && d.panic_at.is_none() {
+                d.panic_at = Some(i);
+            }
+            if s < self.opts.p_skew {
+                // Reuse the draw to pick the stretch inside (1, 1+max]:
+                // s / p_skew is uniform in [0, 1) given s < p_skew.
+                d.skew.push((i, 1.0 + self.opts.skew_max * (s / self.opts.p_skew)));
+            }
+            raw_fault |= d.hang || d.error.is_some() || d.panic_at.is_some();
+        }
+        if self.opts.transient && st.last_faulted {
+            // Fault cleared: this call is a bitwise-clean passthrough.
+            if raw_fault || !d.skew.is_empty() {
+                st.counts.n_suppressed += 1;
+            }
+            st.last_faulted = false;
+            return Decision { hang: false, error: None, panic_at: None, skew: Vec::new() };
+        }
+        st.last_faulted = d.hang || d.error.is_some() || d.panic_at.is_some();
+        if d.hang {
+            st.counts.n_hangs += 1;
+        }
+        if st.last_faulted {
+            // A terminal fault means the run never completes normally;
+            // drop the skew so accounting reflects what actually fired.
+            d.skew.clear();
+        }
+        if d.error.is_some() {
+            st.counts.n_errors += 1;
+        } else if d.panic_at.is_some() {
+            st.counts.n_panics += 1;
+        }
+        st.counts.n_skewed_tasks += d.skew.len() as u64;
+        d
+    }
+}
+
+impl Device for ChaosDevice {
+    fn profile(&self) -> &DeviceProfile {
+        self.inner.profile()
+    }
+
+    fn run_group(&self, tasks: &[TaskSpec]) -> anyhow::Result<DeviceRun> {
+        let d = self.decide(tasks.len());
+        if d.hang {
+            // The hang is not terminal by itself: the call proceeds after
+            // the stall (a real stuck queue eventually drains too). The
+            // recovery watchdog decides whether the stall was fatal.
+            std::thread::sleep(self.opts.hang);
+        }
+        if let Some(i) = d.error {
+            return Err(anyhow!(
+                "chaos: injected transient error at task {i} (seed {:#x})",
+                self.opts.seed
+            ));
+        }
+        if let Some(i) = d.panic_at {
+            panic!(
+                "chaos: injected panic at task {i} (seed {:#x})",
+                self.opts.seed
+            );
+        }
+        let mut run = self.inner.run_group(tasks)?;
+        for &(task, factor) in &d.skew {
+            for rec in run.timeline.iter_mut().filter(|r| r.task == task) {
+                rec.end = rec.start + (rec.end - rec.start) * factor;
+            }
+            let end = run
+                .timeline
+                .iter()
+                .filter(|r| r.task == task)
+                .map(|r| r.end)
+                .fold(f64::NEG_INFINITY, f64::max);
+            if end.is_finite() {
+                run.task_end[task] = end;
+            }
+        }
+        if !d.skew.is_empty() {
+            run.makespan = run
+                .timeline
+                .iter()
+                .map(|r| r.end)
+                .fold(run.makespan, f64::max);
+        }
+        Ok(run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::device::SimDevice;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    fn sim() -> Arc<dyn Device> {
+        Arc::new(SimDevice::new(profile_by_name("amd_r9").unwrap()))
+    }
+
+    fn group() -> Vec<TaskSpec> {
+        let p = profile_by_name("amd_r9").unwrap();
+        synthetic_benchmark("BK50", &p, 0.25).unwrap().tasks
+    }
+
+    fn bitwise_eq(a: &DeviceRun, b: &DeviceRun) {
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.task_end.len(), b.task_end.len());
+        for (x, y) in a.task_end.iter().zip(&b.task_end) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.timeline.len(), b.timeline.len());
+        for (x, y) in a.timeline.iter().zip(&b.timeline) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.start.to_bits(), y.start.to_bits());
+            assert_eq!(x.end.to_bits(), y.end.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_probability_wrapper_is_bitwise_transparent() {
+        let tasks = group();
+        let clean = sim().run_group(&tasks).unwrap();
+        let chaos = ChaosDevice::new(sim(), ChaosOptions::default());
+        for _ in 0..3 {
+            bitwise_eq(&chaos.run_group(&tasks).unwrap(), &clean);
+        }
+        assert_eq!(chaos.counts().n_errors, 0);
+        assert_eq!(chaos.counts().n_runs, 3);
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_seed() {
+        let tasks = group();
+        let opts = ChaosOptions {
+            seed: 42,
+            p_error: 0.3,
+            transient: false,
+            ..ChaosOptions::default()
+        };
+        let a = ChaosDevice::new(sim(), opts.clone());
+        let b = ChaosDevice::new(sim(), opts);
+        for _ in 0..20 {
+            let ra = a.run_group(&tasks);
+            let rb = b.run_group(&tasks);
+            assert_eq!(ra.is_err(), rb.is_err());
+        }
+        assert_eq!(a.counts(), b.counts());
+        assert!(a.counts().n_errors > 0, "schedule never fired at p=0.3");
+    }
+
+    #[test]
+    fn transient_fault_clears_on_retry_bit_identically() {
+        let tasks = group();
+        let clean = sim().run_group(&tasks).unwrap();
+        let chaos = ChaosDevice::new(
+            sim(),
+            ChaosOptions { p_error: 1.0, ..ChaosOptions::default() },
+        );
+        assert!(chaos.run_group(&tasks).is_err());
+        let retry = chaos.run_group(&tasks).unwrap();
+        bitwise_eq(&retry, &clean);
+        assert_eq!(chaos.counts().n_errors, 1);
+        assert_eq!(chaos.counts().n_suppressed, 1);
+    }
+
+    #[test]
+    fn persistent_faults_keep_firing_without_transient() {
+        let tasks = group();
+        let chaos = ChaosDevice::new(
+            sim(),
+            ChaosOptions {
+                p_error: 1.0,
+                transient: false,
+                ..ChaosOptions::default()
+            },
+        );
+        for _ in 0..4 {
+            assert!(chaos.run_group(&tasks).is_err());
+        }
+        assert_eq!(chaos.counts().n_errors, 4);
+    }
+
+    #[test]
+    fn skew_stretches_results_but_run_succeeds() {
+        let tasks = group();
+        let clean = sim().run_group(&tasks).unwrap();
+        let chaos = ChaosDevice::new(
+            sim(),
+            ChaosOptions {
+                p_skew: 1.0,
+                skew_max: 0.5,
+                ..ChaosOptions::default()
+            },
+        );
+        let skewed = chaos.run_group(&tasks).unwrap();
+        assert_eq!(chaos.counts().n_skewed_tasks, tasks.len() as u64);
+        assert!(skewed.makespan >= clean.makespan);
+        // task_end stays consistent with the (stretched) timeline.
+        for (t, &end) in skewed.task_end.iter().enumerate() {
+            let max_rec = skewed
+                .timeline
+                .iter()
+                .filter(|r| r.task == t)
+                .map(|r| r.end)
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert!((end - max_rec).abs() < 1e-12, "task {t}");
+        }
+    }
+
+    #[test]
+    fn injected_panic_unwinds_and_later_calls_still_work() {
+        let tasks = group();
+        let chaos = Arc::new(ChaosDevice::new(
+            sim(),
+            ChaosOptions { p_panic: 1.0, ..ChaosOptions::default() },
+        ));
+        let c2 = Arc::clone(&chaos);
+        let t2 = tasks.clone();
+        let r = std::thread::spawn(move || {
+            let _ = c2.run_group(&t2);
+        })
+        .join();
+        assert!(r.is_err(), "expected injected panic");
+        // transient: the call after the fault passes through.
+        assert!(chaos.run_group(&tasks).is_ok());
+        assert_eq!(chaos.counts().n_panics, 1);
+    }
+}

@@ -12,11 +12,42 @@
 //! The device is intentionally *not* the model: prediction error measured
 //! against it (Fig. 7) reflects genuine asynchrony, jitter and pacing
 //! granularity, as the paper measures against real hardware.
+//!
+//! The coordinator drives devices through the [`Device`] trait so the
+//! execution substrate is swappable: [`VirtualDevice`] (threads + paced
+//! transfers), [`SimDevice`] (instant, bit-deterministic model replay —
+//! the substrate for bit-identity property tests) and
+//! [`chaos::ChaosDevice`] (deterministic fault injection around any
+//! inner device — the substrate for the recovery tests and benches).
 
 pub mod bus;
+pub mod chaos;
 pub mod executor;
+pub mod simdev;
 pub mod vdev;
 
 pub use bus::Bus;
+pub use chaos::{ChaosCounts, ChaosDevice, ChaosOptions};
 pub use executor::{KernelExecutor, SpinExecutor};
+pub use simdev::SimDevice;
 pub use vdev::{DeviceRun, VirtualDevice};
+
+use crate::config::DeviceProfile;
+use crate::task::TaskSpec;
+
+/// An execution substrate the coordinator can drive.
+///
+/// `run_group` executes an ordered task group to completion and reports
+/// measured per-command timestamps. It is *fallible*: a device may
+/// refuse a run (transient transport error, backend fault) by returning
+/// `Err`, and may panic or hang — the recovery layer
+/// (`coordinator::recovery`) is responsible for containing all three.
+/// The inherent `VirtualDevice::run_group` remains infallible for
+/// direct (non-coordinated) callers.
+pub trait Device: Send + Sync {
+    /// The device profile groups are compiled/planned against.
+    fn profile(&self) -> &DeviceProfile;
+
+    /// Execute `tasks` in order; blocks until the group drains.
+    fn run_group(&self, tasks: &[TaskSpec]) -> anyhow::Result<DeviceRun>;
+}

@@ -1,0 +1,90 @@
+//! A model-backed [`Device`]: instant, bit-deterministic "execution".
+//!
+//! `SimDevice` answers `run_group` by running the §4 temporal simulator
+//! instead of real engine threads, so a "run" finishes in microseconds
+//! and two identical calls return bit-identical results. It is the
+//! substrate for the recovery property tests
+//! (`rust/tests/prop_recovery.rs`): bit-identity claims — a retried
+//! transient fault replays to exactly the clean-run result, a fault-free
+//! pipeline with the recovery policy enabled matches today's — are only
+//! provable on a deterministic device, never on the jittery
+//! [`VirtualDevice`](crate::device::VirtualDevice).
+//!
+//! It is *not* a measurement substrate: calibration against it converges
+//! to identity by construction (measured == predicted).
+
+use std::sync::Arc;
+
+use crate::config::DeviceProfile;
+use crate::device::{Device, DeviceRun};
+use crate::model::{simulate, EngineState, SimOptions};
+use crate::task::TaskSpec;
+
+/// Device whose "measurements" are the temporal model's predictions.
+pub struct SimDevice {
+    profile: Arc<DeviceProfile>,
+}
+
+impl SimDevice {
+    pub fn new(profile: DeviceProfile) -> Self {
+        SimDevice { profile: Arc::new(profile) }
+    }
+}
+
+impl Device for SimDevice {
+    fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    fn run_group(&self, tasks: &[TaskSpec]) -> anyhow::Result<DeviceRun> {
+        let r = simulate(
+            tasks,
+            &self.profile,
+            EngineState::default(),
+            SimOptions { record_timeline: true },
+        );
+        Ok(DeviceRun {
+            makespan: r.makespan,
+            timeline: r.timeline,
+            task_end: r.task_end,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    #[test]
+    fn sim_device_is_bit_deterministic() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 0.25).unwrap();
+        let dev = SimDevice::new(p);
+        let a = dev.run_group(&g.tasks).unwrap();
+        let b = dev.run_group(&g.tasks).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.task_end.len(), b.task_end.len());
+        for (x, y) in a.task_end.iter().zip(&b.task_end) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.timeline.len(), b.timeline.len());
+    }
+
+    #[test]
+    fn sim_device_matches_direct_simulation() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 0.25).unwrap();
+        let direct = simulate(
+            &g.tasks,
+            &p,
+            EngineState::default(),
+            SimOptions { record_timeline: true },
+        );
+        let dev = SimDevice::new(p);
+        let run = dev.run_group(&g.tasks).unwrap();
+        assert_eq!(run.makespan.to_bits(), direct.makespan.to_bits());
+        assert_eq!(run.timeline.len(), direct.timeline.len());
+    }
+}

@@ -88,6 +88,19 @@ impl VirtualDevice {
     }
 }
 
+impl crate::device::Device for VirtualDevice {
+    fn profile(&self) -> &DeviceProfile {
+        VirtualDevice::profile(self)
+    }
+
+    // The virtual device has no failure modes of its own (an engine-thread
+    // panic propagates as a panic, which the recovery layer also contains),
+    // so the trait impl simply wraps the infallible inherent method.
+    fn run_group(&self, tasks: &[TaskSpec]) -> anyhow::Result<DeviceRun> {
+        Ok(VirtualDevice::run_group(self, tasks))
+    }
+}
+
 /// In-order consumption of one engine's command queue.
 #[allow(clippy::too_many_arguments)]
 fn engine_loop(

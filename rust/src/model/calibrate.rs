@@ -536,4 +536,34 @@ mod tests {
         let base = profile_by_name("k20c").unwrap();
         let _ = CalibratedProfile::new(&base, Corrections { htd: 0.0, k: 1.0, dth: 1.0 });
     }
+
+    #[test]
+    fn aborted_group_timeline_yields_zero_observations() {
+        // An aborted or faulted device run hands back an empty (or
+        // truncated) timeline. The recovery layer never calls
+        // observe_group for such runs, but even if a partial timeline
+        // slipped through, slots with zero measured seconds must be
+        // skipped by the degenerate-sample guard — the corrections stay
+        // identity and n_obs stays 0.
+        let mut c = Calibrator::new(CalibrateOptions::default());
+        let predicted =
+            vec![secs(1e-3, 2e-3, 0.5e-3), secs(1e-3, 2e-3, 0.5e-3)];
+        // Empty timeline: the whole group aborted before any command ran.
+        c.observe_group(&predicted, &[]);
+        assert_eq!(c.counts().n_obs, 0, "empty timeline observed");
+        assert!(c.corrections().is_identity());
+        // Truncated timeline: only slot 0's HtD ever executed — exactly
+        // one engine of one slot may observe, every other slot/engine is
+        // guarded out.
+        let partial = [CmdRecord {
+            task: 0,
+            kind: CmdKind::HtD,
+            seq: 0,
+            start: 0.0,
+            end: 1.5e-3,
+        }];
+        c.observe_group(&predicted, &partial);
+        assert_eq!(c.counts().n_obs, 1, "only the executed command counts");
+        assert!(c.adopt().is_none(), "one sample can't mature past warm-up");
+    }
 }

@@ -131,6 +131,15 @@ impl DriftGate {
     /// silently, and a non-positive measurement (e.g. the zero makespan a
     /// panicked device run reports) would register as 100% drift and
     /// wedge the gate open.
+    ///
+    /// **Recovery contract:** with `LaneOptions::recovery` armed, the
+    /// lane runtime calls this only for clean *first-attempt* runs —
+    /// failed, retried and watchdog-timed-out runs are excluded upstream
+    /// (`coordinator::lanes`, pinned by rust/tests/prop_recovery.rs): a
+    /// retried group's wall-clock includes backoff sleeps, and a zombie
+    /// run's makespan includes the hang the watchdog condemned. The
+    /// degenerate-input guard here is the last line of defense, not the
+    /// exclusion mechanism.
     pub fn observe(&mut self, measured: f64, predicted: f64) {
         if !(measured.is_finite() && predicted.is_finite())
             || predicted <= 0.0
@@ -820,5 +829,31 @@ mod tests {
             g.observe(m, p);
             assert_eq!(g.drift(), drift, "({m}, {p}) must be ignored");
         }
+    }
+
+    #[test]
+    fn drift_gate_is_insulated_from_faulted_run_shapes() {
+        // The recovery layer never calls observe() for failed, retried or
+        // timed-out runs (see observe()'s recovery contract). This pins
+        // the backstop for the shapes such runs would report if the
+        // exclusion ever regressed: a faulted run's zero makespan is
+        // ignored outright, and a hung run's wildly-late makespan moves
+        // the EWMA but cannot wedge the gate permanently — subsequent
+        // clean observations pull the drift back under the threshold.
+        let mut g = DriftGate::new(0.2);
+        g.observe(1.0, 1.0);
+        assert!(!g.should_replan());
+        // Faulted-run shape (makespan 0): ignored outright.
+        g.observe(0.0, 1.0);
+        assert_eq!(g.drift(), 0.0);
+        // Hung-run shape (10x the prediction): drift spikes...
+        g.observe(10.0, 1.0);
+        assert!(g.drift() > 0.2);
+        // ...and clean runs decay it back below threshold (alpha 0.5).
+        for _ in 0..6 {
+            g.observe(1.0, 1.0);
+        }
+        assert!(g.drift() < 0.2, "gate recovered: {}", g.drift());
+        assert!(!g.should_replan());
     }
 }

@@ -1,0 +1,346 @@
+//! Chaos properties of the fault-tolerant coordinator
+//! (`coordinator::recovery` + `device::chaos`): no task is lost or
+//! duplicated under any deterministic fault schedule, transient retries
+//! reproduce the clean run bit for bit, quarantined lanes hand their
+//! backlog to healthy siblings, and failed/retried/timed-out runs never
+//! feed the calibrator.
+//!
+//! Fault schedules are pure functions of the chaos seed, so every
+//! property here is exact, not statistical. CI's chaos-tests step
+//! re-runs this file across four fixed seeds via `OCLCC_CHAOS_SEED`;
+//! locally the default seed set below is used.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oclcc::config::profile_by_name;
+use oclcc::coordinator::lanes::{LaneCoordinator, LaneOptions};
+use oclcc::coordinator::recovery::{
+    BlacklistAfterN, DeadlineOptions, QuarantineOptions, RecoveryOptions,
+    RetryBackoff,
+};
+use oclcc::coordinator::runner::Policy;
+use oclcc::device::{ChaosDevice, ChaosOptions, Device, SimDevice};
+use oclcc::model::CalibrateOptions;
+use oclcc::sched::online::OnlineOptions;
+use oclcc::task::TaskSpec;
+
+/// Chaos seeds under test. `OCLCC_CHAOS_SEED` (CI's chaos-tests matrix)
+/// pins a single seed; a malformed value is a hard error, not a silent
+/// fallback.
+fn seeds() -> Vec<u64> {
+    match std::env::var("OCLCC_CHAOS_SEED") {
+        Ok(s) => vec![s
+            .trim()
+            .parse::<u64>()
+            .unwrap_or_else(|e| panic!("bad OCLCC_CHAOS_SEED {s:?}: {e}"))],
+        Err(_) => vec![11, 23, 37, 53],
+    }
+}
+
+fn sim() -> Arc<SimDevice> {
+    Arc::new(SimDevice::new(profile_by_name("amd_r9").unwrap()))
+}
+
+fn group() -> Vec<TaskSpec> {
+    let p = profile_by_name("amd_r9").unwrap();
+    oclcc::task::synthetic::synthetic_benchmark("BK50", &p, 0.05)
+        .unwrap()
+        .tasks
+}
+
+/// `workers` dependent batches of `n` tasks each, dealt round-robin.
+fn workloads(workers: usize, n: usize) -> Vec<Vec<TaskSpec>> {
+    let g = group();
+    (0..workers)
+        .map(|w| (0..n).map(|i| g[(w + i) % g.len()].clone()).collect())
+        .collect()
+}
+
+/// Retry policy tuned for tests: tiny backoffs, effectively unbounded
+/// attempts, **no deadline** (the watchdog gets its own test).
+fn fast_retry() -> RecoveryOptions {
+    RecoveryOptions {
+        deadline: None,
+        ..RecoveryOptions::retry(RetryBackoff {
+            base: Duration::from_micros(20),
+            cap: Duration::from_micros(100),
+            max_attempts: 64,
+            ..RetryBackoff::default()
+        })
+    }
+}
+
+fn online_opts() -> LaneOptions {
+    LaneOptions {
+        policy: Policy::Heuristic,
+        settle: Duration::from_micros(200),
+        group_cap: 2,
+        online: Some(OnlineOptions::default()),
+        ..LaneOptions::default()
+    }
+}
+
+#[test]
+fn zero_probability_chaos_is_bitwise_transparent_for_every_seed() {
+    let tasks = group();
+    let clean = sim().run_group(&tasks).unwrap();
+    for seed in seeds() {
+        let chaos = ChaosDevice::new(
+            sim(),
+            ChaosOptions { seed, ..ChaosOptions::default() },
+        );
+        let run = chaos.run_group(&tasks).unwrap();
+        assert_eq!(run.makespan.to_bits(), clean.makespan.to_bits(), "{seed}");
+        for (a, b) in run.task_end.iter().zip(&clean.task_end) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn transient_retry_reproduces_the_clean_run_bit_for_bit() {
+    let tasks = group();
+    let clean = sim().run_group(&tasks).unwrap();
+    for seed in seeds() {
+        let chaos = ChaosDevice::new(
+            sim(),
+            ChaosOptions { seed, p_error: 1.0, ..ChaosOptions::default() },
+        );
+        assert!(chaos.run_group(&tasks).is_err(), "seed {seed}");
+        let retry = chaos.run_group(&tasks).unwrap();
+        assert_eq!(
+            retry.makespan.to_bits(),
+            clean.makespan.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(retry.timeline.len(), clean.timeline.len());
+        for (a, b) in retry.timeline.iter().zip(&clean.timeline) {
+            assert_eq!(a.start.to_bits(), b.start.to_bits(), "seed {seed}");
+            assert_eq!(a.end.to_bits(), b.end.to_bits(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn no_task_lost_or_duplicated_under_mixed_faults() {
+    // Mixed transient errors and panics on every lane; the retry policy
+    // must absorb them all. Duplication self-detects: completing an
+    // already-completed event panics ("event completed twice"), which
+    // would fail the run.
+    for seed in seeds() {
+        let lanes = 2usize;
+        let devices: Vec<Arc<dyn Device>> = (0..lanes)
+            .map(|l| {
+                Arc::new(ChaosDevice::new(
+                    sim(),
+                    ChaosOptions {
+                        seed: seed + l as u64,
+                        p_error: 0.3,
+                        p_panic: 0.1,
+                        ..ChaosOptions::default()
+                    },
+                )) as Arc<dyn Device>
+            })
+            .collect();
+        let c = LaneCoordinator::with_devices(
+            devices,
+            LaneOptions {
+                lanes,
+                recovery: Some(fast_retry()),
+                ..online_opts()
+            },
+        );
+        let m = c.run(workloads(4, 3));
+        assert_eq!(m.n_tasks, 12, "seed {seed}: lost tasks");
+        assert_eq!(m.latencies.len(), 12, "seed {seed}");
+        let faults: usize = m.per_lane.iter().map(|l| l.n_faults).sum();
+        let retries: usize = m.per_lane.iter().map(|l| l.n_retries).sum();
+        assert_eq!(retries, faults, "seed {seed}: every fault retried");
+    }
+}
+
+#[test]
+fn quarantined_lane_backlog_completes_on_healthy_sibling() {
+    // Lane 0's device fails persistently; lane 1 is clean. Workers only
+    // occupy even slots, so every submission initially routes to lane 0.
+    // BlacklistAfterN(1) quarantines lane 0 on its first fault; with a
+    // cooldown far longer than the test, every task must complete through
+    // lane 1's health-aware stealing.
+    for seed in seeds() {
+        let lane0: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+            sim(),
+            ChaosOptions {
+                seed,
+                p_error: 1.0,
+                transient: false,
+                ..ChaosOptions::default()
+            },
+        ));
+        let lane1: Arc<dyn Device> = sim();
+        let c = LaneCoordinator::with_devices(
+            vec![lane0, lane1],
+            LaneOptions {
+                lanes: 2,
+                recovery: Some(RecoveryOptions {
+                    deadline: None,
+                    quarantine: QuarantineOptions {
+                        cooldown: Duration::from_secs(600),
+                    },
+                    ..RecoveryOptions::blacklist(BlacklistAfterN {
+                        n_failures: 1,
+                        ..BlacklistAfterN::default()
+                    })
+                }),
+                ..online_opts()
+            },
+        );
+        // Workers 0 and 2 carry tasks; workers 1 and 3 are empty, so
+        // lane 1 contributes only by stealing.
+        let g = group();
+        let wl: Vec<Vec<TaskSpec>> = (0..4)
+            .map(|w| {
+                if w % 2 == 0 {
+                    (0..3).map(|i| g[(w + i) % g.len()].clone()).collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        let m = c.run(wl);
+        assert_eq!(m.n_tasks, 6, "seed {seed}: lost tasks");
+        let l0 = &m.per_lane[0];
+        let l1 = &m.per_lane[1];
+        assert!(l0.n_quarantine_trips >= 1, "seed {seed}: {l0:?}");
+        assert!(l0.n_requeued >= 1, "seed {seed}: {l0:?}");
+        assert!(l1.n_stolen >= 1, "seed {seed}: {l1:?}");
+        assert_eq!(l1.n_tasks, 6, "seed {seed}: sibling ran everything");
+    }
+}
+
+#[test]
+fn fault_free_run_with_recovery_enabled_is_bit_identical() {
+    // One worker's dependent batch forms deterministic single-task
+    // groups, so group makespans (simulated, not wall-clock) must match
+    // bit for bit between recovery-off and recovery-armed-but-unneeded.
+    let baseline = {
+        let c = LaneCoordinator::with_devices(
+            vec![sim() as Arc<dyn Device>],
+            LaneOptions { lanes: 1, ..online_opts() },
+        );
+        c.run(workloads(1, 4))
+    };
+    for seed in seeds() {
+        let chaos: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+            sim(),
+            ChaosOptions { seed, ..ChaosOptions::default() },
+        ));
+        let c = LaneCoordinator::with_devices(
+            vec![chaos],
+            LaneOptions {
+                lanes: 1,
+                recovery: Some(RecoveryOptions {
+                    deadline: Some(DeadlineOptions {
+                        slack: 1000.0,
+                        floor: Duration::from_secs(60),
+                    }),
+                    ..RecoveryOptions::default()
+                }),
+                ..online_opts()
+            },
+        );
+        let m = c.run(workloads(1, 4));
+        assert_eq!(m.n_tasks, baseline.n_tasks, "seed {seed}");
+        assert_eq!(
+            m.group_makespans.len(),
+            baseline.group_makespans.len(),
+            "seed {seed}"
+        );
+        for (a, b) in m.group_makespans.iter().zip(&baseline.group_makespans) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+        for l in &m.per_lane {
+            assert_eq!(l.n_faults, 0, "seed {seed}: {l:?}");
+            assert_eq!(l.n_retries, 0, "seed {seed}: {l:?}");
+            assert_eq!(l.n_timeouts, 0, "seed {seed}: {l:?}");
+            assert_eq!(l.n_quarantine_trips, 0, "seed {seed}: {l:?}");
+        }
+    }
+}
+
+#[test]
+fn watchdog_times_out_hung_runs_and_quarantines_the_lane() {
+    // Every call hangs 80ms; the deadline is predicted + 5ms, far below.
+    // The watchdog must declare the run dead and trip the breaker; the
+    // zombie run still completes its tasks afterwards (nothing is lost),
+    // and none of the condemned runs may feed the calibrator.
+    for seed in seeds() {
+        let chaos: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+            sim(),
+            ChaosOptions {
+                seed,
+                p_hang: 1.0,
+                hang: Duration::from_millis(80),
+                transient: false,
+                ..ChaosOptions::default()
+            },
+        ));
+        let c = LaneCoordinator::with_devices(
+            vec![chaos],
+            LaneOptions {
+                lanes: 1,
+                recalibrate: Some(CalibrateOptions::default()),
+                recovery: Some(RecoveryOptions {
+                    deadline: Some(DeadlineOptions {
+                        slack: 1.0,
+                        floor: Duration::from_millis(5),
+                    }),
+                    quarantine: QuarantineOptions {
+                        cooldown: Duration::from_millis(1),
+                    },
+                    ..RecoveryOptions::blacklist(BlacklistAfterN::default())
+                }),
+                ..online_opts()
+            },
+        );
+        let m = c.run(workloads(1, 3));
+        assert_eq!(m.n_tasks, 3, "seed {seed}: zombie runs still complete");
+        let l = &m.per_lane[0];
+        assert!(l.n_timeouts >= 1, "seed {seed}: {l:?}");
+        assert!(l.n_quarantine_trips >= 1, "seed {seed}: {l:?}");
+        assert_eq!(
+            l.n_calib_obs, 0,
+            "seed {seed}: timed-out runs fed the calibrator: {l:?}"
+        );
+    }
+}
+
+#[test]
+fn retried_runs_never_feed_the_calibrator() {
+    // p_error = 1.0 transient: every group fails once then succeeds on
+    // attempt 2. Successful-but-retried runs must be excluded from
+    // calibration (their wall-clock carries the failed attempt).
+    for seed in seeds() {
+        let chaos: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+            sim(),
+            ChaosOptions { seed, p_error: 1.0, ..ChaosOptions::default() },
+        ));
+        let c = LaneCoordinator::with_devices(
+            vec![chaos],
+            LaneOptions {
+                lanes: 1,
+                recalibrate: Some(CalibrateOptions::default()),
+                recovery: Some(fast_retry()),
+                ..online_opts()
+            },
+        );
+        let m = c.run(workloads(2, 3));
+        assert_eq!(m.n_tasks, 6, "seed {seed}");
+        let l = &m.per_lane[0];
+        assert!(l.n_retries >= 1, "seed {seed}: chaos never fired: {l:?}");
+        assert_eq!(
+            l.n_calib_obs, 0,
+            "seed {seed}: retried runs fed the calibrator: {l:?}"
+        );
+    }
+}

@@ -13,7 +13,10 @@ its own key fields, metric, direction and regression threshold (see
   (workers, lanes, group cap), higher is better, 30% (live-pipeline
   timing is noisier than the microbench);
 * ``BENCH_online_resched.json`` — online makespan per
-  (workload, shape, workers, lanes), lower is better, 30%.
+  (workload, shape, workers, lanes), lower is better, 30%;
+* ``BENCH_recovery.json`` — goodput under injected faults per
+  (policy, fault_pct), higher is better, 30% (chaos cells inherit the
+  live-pipeline noise floor plus backoff-sleep jitter).
 
 Invocation: ``bench_diff.py PREVIOUS CURRENT`` where both arguments are
 either two files (config picked by basename) or two directories (every
@@ -70,6 +73,13 @@ TRAJECTORIES = (
         key_fields=("workload", "shape", "workers", "lanes"),
         metric_path=("makespan_s",),
         higher_is_better=False,
+        threshold=0.30,
+    ),
+    Trajectory(
+        name="BENCH_recovery.json",
+        key_fields=("policy", "fault_pct"),
+        metric_path=("tasks_per_sec",),
+        higher_is_better=True,
         threshold=0.30,
     ),
 )

@@ -18,6 +18,7 @@ def traj(name):
 T6 = traj("BENCH_sched_overhead.json")
 COORD = traj("BENCH_coordinator_throughput.json")
 ONLINE = traj("BENCH_online_resched.json")
+REC = traj("BENCH_recovery.json")
 
 
 def write_doc(path, mode, rows):
@@ -45,6 +46,15 @@ def online_row(workload="BK0", shape="balanced", workers=4, lanes=1, mk=1e-2):
         "workers": workers,
         "lanes": lanes,
         "makespan_s": mk,
+    }
+
+
+def recovery_row(policy="retry", fault_pct=10, tps=800.0, n_retries=3):
+    return {
+        "policy": policy,
+        "fault_pct": fault_pct,
+        "tasks_per_sec": tps,
+        "n_retries": n_retries,
     }
 
 
@@ -137,6 +147,44 @@ def test_online_trajectory_keys_include_shape(tmp_path):
         ],
     )
     assert bd.compare_files(prev, curr, ONLINE) == 1
+
+
+def test_recovery_trajectory_is_recognized_by_basename(tmp_path):
+    assert bd.trajectory_for("artifacts/" + REC.name) is REC
+    assert REC.higher_is_better and REC.threshold == 0.30
+    p = write_doc(tmp_path / REC.name, "fast", [recovery_row()])
+    mode, cells = bd.load_rows(p, REC)
+    assert mode == "fast"
+    assert cells == {("retry", 10): 800.0}
+
+
+def test_recovery_goodput_drop_regresses_per_cell(tmp_path):
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [recovery_row(policy="none", fault_pct=0, tps=1000.0), recovery_row()],
+    )
+    # Goodput collapses in the retry/10% chaos cell only; the fault-free
+    # baseline cell is unchanged. Counter drift alone never gates.
+    curr = write_doc(
+        tmp_path / "curr.json",
+        "fast",
+        [
+            recovery_row(policy="none", fault_pct=0, tps=1000.0),
+            recovery_row(tps=300.0, n_retries=40),
+        ],
+    )
+    assert bd.compare_files(prev, curr, REC) == 1
+    # Faster is never a regression for a higher-is-better trajectory.
+    better = write_doc(
+        tmp_path / "better.json",
+        "fast",
+        [
+            recovery_row(policy="none", fault_pct=0, tps=1000.0),
+            recovery_row(tps=2000.0),
+        ],
+    )
+    assert bd.compare_files(prev, better, REC) == 0
 
 
 # ---- main / directory discovery -------------------------------------------
