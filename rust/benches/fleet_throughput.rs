@@ -1,0 +1,395 @@
+//! `cargo bench --bench fleet_throughput` — heterogeneous fleet
+//! scheduling vs the static multi-device scheduler and the round-robin
+//! baseline, plus the live fleet-coordinator cells (quarantine-rescue
+//! stealing, calibrated vs static placement models).
+//!
+//! Three row families in `BENCH_fleet.json`, all keyed `(cell, impl)`
+//! with `tasks_per_sec` as the gated metric:
+//!
+//! * **Static scheduling cells** (`hom2`, `het3` — two R9s, and the
+//!   paper's R9 + Xeon Phi + K20c trio): model-time throughput
+//!   `n_tasks / predicted group makespan` for `impl` = `fleet`
+//!   (bound-gated `schedule_fleet`), `static_multi` (`schedule_multi`,
+//!   which routes through the same fleet core — the row pins the
+//!   wrapper's bit-equality in the trajectory) and `round_robin`. The
+//!   bench asserts fleet ≤ static_multi and, on the heterogeneous cell,
+//!   fleet strictly beats round_robin, with non-zero placement-prune
+//!   counters. Scheduling *wall* time is reported per row
+//!   (`sched_wall_s`), pruned vs unpruned, so the bound-gating win is
+//!   visible alongside the model-time quality.
+//! * **`steal_rescue`** — the live [`FleetCoordinator`] on one
+//!   persistently-failing chaos device plus one healthy device:
+//!   quarantine trips, backlog shed, health-aware rescue stealing. The
+//!   bench asserts every task completes and the steal counter is
+//!   non-zero.
+//! * **`miscal_het3`** — the live fleet on three devices whose planning
+//!   models believe links run 2x faster than reality (`impl` =
+//!   `static_model` vs `calibrated`): the calibrated side adopts
+//!   per-device corrections and must show reduced pooled model drift.
+//!
+//! Wall-clock rows inherit the usual noise caveats of the coordinator
+//! benches; the static cells are model-time and bit-stable.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use oclcc::config::{profile_by_name, DeviceProfile};
+use oclcc::coordinator::{FleetCoordOptions, FleetCoordinator, FleetMetrics};
+use oclcc::device::{ChaosDevice, ChaosOptions, Device, SimDevice};
+use oclcc::model::CalibrateOptions;
+use oclcc::sched::fleet::{schedule_fleet, FleetOptions};
+use oclcc::sched::multidevice::{round_robin, schedule_multi, MultiSchedule};
+use oclcc::task::real::real_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::bench::{bench_mode, fast_mode_from_env};
+use oclcc::util::json::Json;
+use oclcc::util::rng::Pcg64;
+use oclcc::util::stats;
+
+const OUT_PATH: &str = "BENCH_fleet.json";
+
+/// Time compression for the live cells (ratios intact, cells in low
+/// milliseconds).
+const SCALE: f64 = 0.05;
+
+fn hom2() -> Vec<DeviceProfile> {
+    vec![
+        profile_by_name("amd_r9").unwrap(),
+        profile_by_name("amd_r9").unwrap(),
+    ]
+}
+
+fn het3() -> Vec<DeviceProfile> {
+    vec![
+        profile_by_name("amd_r9").unwrap(),
+        profile_by_name("xeon_phi").unwrap(),
+        profile_by_name("k20c").unwrap(),
+    ]
+}
+
+/// The jittered BK50 catalog the static cells schedule: enough tasks
+/// that placement quality (not just ordering) decides the makespan.
+fn static_tasks(n: usize) -> Vec<TaskSpec> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let mut rng = Pcg64::seeded(0xf1ee7);
+    real_benchmark("BK50", "amd_r9", &p, n, &mut rng, 1.0).unwrap().tasks
+}
+
+struct StaticCell {
+    makespan: f64,
+    tasks_per_sec: f64,
+    /// Median wall seconds to compute the schedule.
+    sched_wall: f64,
+}
+
+fn time_schedule(
+    reps: usize,
+    run: &dyn Fn() -> MultiSchedule,
+    n: usize,
+) -> StaticCell {
+    let mut walls = Vec::with_capacity(reps);
+    let mut makespan = 0.0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let s = run();
+        walls.push(t0.elapsed().as_secs_f64());
+        makespan = s.makespan();
+    }
+    StaticCell {
+        makespan,
+        tasks_per_sec: n as f64 / makespan,
+        sched_wall: stats::median(&walls),
+    }
+}
+
+fn push_static_row(
+    rows: &mut Vec<Json>,
+    cell: &str,
+    impl_name: &str,
+    n: usize,
+    r: &StaticCell,
+) {
+    rows.push(Json::obj(vec![
+        ("cell", Json::str(cell)),
+        ("impl", Json::str(impl_name)),
+        ("n_tasks", Json::num(n as f64)),
+        ("makespan_s", Json::num(r.makespan)),
+        ("tasks_per_sec", Json::num(r.tasks_per_sec)),
+        ("sched_wall_s", Json::num(r.sched_wall)),
+    ]));
+}
+
+fn push_runtime_row(rows: &mut Vec<Json>, cell: &str, impl_name: &str, m: &FleetMetrics) {
+    let drift = {
+        let (mut busy, mut pred) = (0.0f64, 0.0f64);
+        for l in &m.per_device {
+            busy += l.busy_secs;
+            pred += l.predicted_secs;
+        }
+        if pred > 0.0 { (busy / pred - 1.0).abs() } else { 0.0 }
+    };
+    rows.push(Json::obj(vec![
+        ("cell", Json::str(cell)),
+        ("impl", Json::str(impl_name)),
+        ("n_tasks", Json::num(m.n_tasks as f64)),
+        ("total_secs", Json::num(m.total_secs)),
+        ("tasks_per_sec", Json::num(m.tasks_per_sec)),
+        ("n_placements", Json::num(m.n_placements as f64)),
+        ("n_stolen", Json::num(m.n_stolen() as f64)),
+        ("n_steal_considered", Json::num(m.n_steal_considered as f64)),
+        ("n_steal_rejected", Json::num(m.n_steal_rejected as f64)),
+        ("placement_pruned", Json::num(m.placement_prune.n_cands_pruned as f64)),
+        (
+            "placement_early_exit",
+            Json::num(m.placement_prune.n_rollouts_early_exit as f64),
+        ),
+        ("model_drift", Json::num(drift)),
+        (
+            "n_recalibrations",
+            Json::num(m.per_device.iter().map(|l| l.n_recalibrations).sum::<usize>()
+                as f64),
+        ),
+        ("sched_overhead_share", Json::num(m.sched_overhead_share())),
+    ]));
+}
+
+/// Median-throughput run of a live fleet cell; `check` vets every rep.
+fn run_fleet_cell(
+    reps: usize,
+    build: &dyn Fn() -> FleetCoordinator,
+    mk: &dyn Fn() -> Vec<Vec<TaskSpec>>,
+    check: &dyn Fn(&FleetMetrics),
+) -> FleetMetrics {
+    let mut runs: Vec<FleetMetrics> = (0..reps)
+        .map(|_| {
+            let m = build().run(mk());
+            check(&m);
+            m
+        })
+        .collect();
+    runs.sort_by(|a, b| a.tasks_per_sec.total_cmp(&b.tasks_per_sec));
+    runs.swap_remove(runs.len() / 2)
+}
+
+fn workloads(workers: usize, batch: usize) -> Vec<Vec<TaskSpec>> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let g = oclcc::task::synthetic::synthetic_benchmark("BK50", &p, SCALE).unwrap();
+    (0..workers)
+        .map(|w| (0..batch).map(|i| g.tasks[(w + i) % g.len()].clone()).collect())
+        .collect()
+}
+
+/// Links modeled 2x too fast — the planted miscalibration.
+fn miscal(p: &DeviceProfile) -> DeviceProfile {
+    let mut m = p.clone();
+    m.htd.bytes_per_sec *= 2.0;
+    m.dth.bytes_per_sec *= 2.0;
+    m
+}
+
+fn main() {
+    let fast = fast_mode_from_env();
+    let reps = if fast { 2 } else { 5 };
+    let n = if fast { 24 } else { 48 };
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ---- static scheduling cells -------------------------------------
+    println!("== static fleet scheduling vs baselines (model time) ==");
+    println!(
+        "{:>5} {:>14} {:>12} {:>12} {:>9} {:>9}",
+        "cell", "impl", "makespan", "tasks/s", "wall", "rr_ratio"
+    );
+    let tasks = static_tasks(n);
+    for (cell, profs) in [("hom2", hom2()), ("het3", het3())] {
+        let fleet = time_schedule(
+            reps,
+            &|| {
+                let f = schedule_fleet(&tasks, &profs, &FleetOptions::default());
+                MultiSchedule {
+                    assignment: f.assignment,
+                    orders: f.orders,
+                    device_makespans: f.device_makespans,
+                }
+            },
+            n,
+        );
+        // Unpruned wall time, for the bound-gating comparison (the
+        // schedule itself is bit-identical — prop_fleet.rs).
+        let unpruned = time_schedule(
+            reps,
+            &|| {
+                let f = schedule_fleet(
+                    &tasks,
+                    &profs,
+                    &FleetOptions { prune: false, ..FleetOptions::default() },
+                );
+                MultiSchedule {
+                    assignment: f.assignment,
+                    orders: f.orders,
+                    device_makespans: f.device_makespans,
+                }
+            },
+            n,
+        );
+        let multi = time_schedule(reps, &|| schedule_multi(&tasks, &profs), n);
+        let rr = time_schedule(reps, &|| round_robin(&tasks, &profs), n);
+
+        // Acceptance: fleet never behind the static wrapper, and the
+        // placement actually pays off against round-robin on the
+        // heterogeneous cell (equal-profile cells can tie).
+        assert!(
+            fleet.makespan <= multi.makespan,
+            "{cell}: fleet ({}) worse than schedule_multi ({})",
+            fleet.makespan,
+            multi.makespan
+        );
+        assert!(
+            fleet.makespan <= rr.makespan,
+            "{cell}: fleet ({}) worse than round_robin ({})",
+            fleet.makespan,
+            rr.makespan
+        );
+        if cell == "het3" {
+            assert!(
+                fleet.makespan < rr.makespan,
+                "het3: fleet ({}) does not strictly beat round_robin ({})",
+                fleet.makespan,
+                rr.makespan
+            );
+        }
+        let s = schedule_fleet(&tasks, &profs, &FleetOptions::default());
+        assert!(
+            s.prune.total_saved() > 0,
+            "{cell}: placement pruning never fired: {:?}",
+            s.prune
+        );
+
+        for (name, r) in
+            [("fleet", &fleet), ("static_multi", &multi), ("round_robin", &rr)]
+        {
+            println!(
+                "{:>5} {:>14} {:>10.3}ms {:>12.1} {:>7.1}us {:>8.3}x",
+                cell,
+                name,
+                r.makespan * 1e3,
+                r.tasks_per_sec,
+                r.sched_wall * 1e6,
+                rr.makespan / r.makespan,
+            );
+            push_static_row(&mut rows, cell, name, n, r);
+        }
+        println!(
+            "{:>5} {:>14} {:>10}   {:>12} {:>7.1}us (pruned {:.2}x faster, \
+             pruned {} / early-exit {} / twins {})",
+            cell,
+            "fleet-unpruned",
+            "-",
+            "-",
+            unpruned.sched_wall * 1e6,
+            unpruned.sched_wall / fleet.sched_wall.max(1e-12),
+            s.prune.n_cands_pruned,
+            s.prune.n_rollouts_early_exit,
+            s.prune.n_twin_collapsed,
+        );
+    }
+
+    // ---- steal_rescue: live fleet, one device dies -------------------
+    println!("\n== live fleet: quarantine-rescue stealing ==");
+    {
+        use oclcc::coordinator::recovery::{
+            BlacklistAfterN, QuarantineOptions, RecoveryOptions,
+        };
+        let workers = 4usize;
+        let batch = 3usize;
+        let build = || {
+            let flaky: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+                Arc::new(SimDevice::new(profile_by_name("amd_r9").unwrap())),
+                ChaosOptions {
+                    seed: 0xdead,
+                    p_error: 1.0,
+                    transient: false,
+                    ..ChaosOptions::default()
+                },
+            ));
+            let steady: Arc<dyn Device> =
+                Arc::new(SimDevice::new(profile_by_name("amd_r9").unwrap()));
+            FleetCoordinator::with_devices(
+                vec![flaky, steady],
+                FleetCoordOptions {
+                    recovery: Some(RecoveryOptions {
+                        deadline: None,
+                        quarantine: QuarantineOptions {
+                            cooldown: Duration::from_secs(600),
+                        },
+                        ..RecoveryOptions::blacklist(BlacklistAfterN {
+                            n_failures: 1,
+                            ..BlacklistAfterN::default()
+                        })
+                    }),
+                    ..FleetCoordOptions::default()
+                },
+            )
+        };
+        let m = run_fleet_cell(reps, &build, &|| workloads(workers, batch), &|m| {
+            assert_eq!(m.n_tasks, workers * batch, "steal_rescue lost tasks");
+            assert!(
+                m.n_stolen() > 0,
+                "steal_rescue: quarantined backlog never rescued"
+            );
+        });
+        println!(
+            "steal_rescue: {:.1} tasks/s, {} stolen, {} quarantine trips",
+            m.tasks_per_sec,
+            m.n_stolen(),
+            m.per_device.iter().map(|l| l.n_quarantine_trips).sum::<usize>(),
+        );
+        push_runtime_row(&mut rows, "steal_rescue", "fleet", &m);
+    }
+
+    // ---- miscal_het3: calibrated vs static placement models ----------
+    println!("\n== live fleet: calibrated vs static placement models ==");
+    {
+        let workers = 6usize;
+        let batch = 3usize;
+        let build = |recal: Option<CalibrateOptions>| {
+            let devices: Vec<Arc<dyn Device>> = het3()
+                .into_iter()
+                .map(|p| Arc::new(SimDevice::new(p)) as Arc<dyn Device>)
+                .collect();
+            FleetCoordinator::with_devices(
+                devices,
+                FleetCoordOptions { recalibrate: recal, ..FleetCoordOptions::default() },
+            )
+            .with_plan_models(het3().iter().map(miscal).collect())
+        };
+        let stat = run_fleet_cell(
+            reps,
+            &|| build(None),
+            &|| workloads(workers, batch),
+            &|m| assert_eq!(m.n_tasks, workers * batch),
+        );
+        let cal = run_fleet_cell(
+            reps,
+            &|| build(Some(CalibrateOptions::default())),
+            &|| workloads(workers, batch),
+            &|m| assert_eq!(m.n_tasks, workers * batch),
+        );
+        println!(
+            "static {:.1} tasks/s, calibrated {:.1} tasks/s ({} adoptions)",
+            stat.tasks_per_sec,
+            cal.tasks_per_sec,
+            cal.per_device.iter().map(|l| l.n_recalibrations).sum::<usize>(),
+        );
+        push_runtime_row(&mut rows, "miscal_het3", "static_model", &stat);
+        push_runtime_row(&mut rows, "miscal_het3", "calibrated", &cal);
+    }
+
+    let doc = Json::obj(vec![
+        ("bench_mode", Json::str(bench_mode())),
+        ("rows", Json::arr(rows)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => println!("\n[saved {OUT_PATH}, mode={}]", bench_mode()),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
+}

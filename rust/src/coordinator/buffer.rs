@@ -294,6 +294,20 @@ pub struct ShardedBuffer {
     lanes: Arc<[SharedBuffer]>,
 }
 
+/// Provenance of a successful steal
+/// ([`ShardedBuffer::steal_with_health_traced`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct StealTrace {
+    /// Lane the submissions were taken from.
+    pub(crate) victim: usize,
+    /// Whether the victim was quarantined (backlog shed via
+    /// [`SharedBuffer::take_into`], bounds lifted) rather than a healthy
+    /// hottest-lane steal.
+    pub(crate) quarantined: bool,
+    /// Number of submissions moved into `out`.
+    pub(crate) n: usize,
+}
+
 impl ShardedBuffer {
     pub fn new(lanes: usize) -> Self {
         let lanes: Vec<SharedBuffer> =
@@ -317,6 +331,16 @@ impl ShardedBuffer {
     /// Route one submission to its worker's lane.
     pub fn push(&self, s: Submission) {
         self.lane_for_worker(s.worker).push(s);
+    }
+
+    /// Route one submission to an explicit lane, ignoring the `w % L`
+    /// worker mapping — the fleet coordinator places each submission on
+    /// the device its calibrated model predicts finishes it earliest,
+    /// so lane choice is a *scheduling* decision there, not a hash.
+    /// Per-worker FIFO still holds for the usual reason: a worker never
+    /// has two submissions outstanding.
+    pub fn push_to_lane(&self, l: usize, s: Submission) {
+        self.lanes[l].push(s);
     }
 
     /// Close every lane (no further submissions anywhere).
@@ -380,8 +404,25 @@ impl ShardedBuffer {
         health: &FleetHealth,
         out: &mut Vec<Submission>,
     ) -> usize {
+        self.steal_with_health_traced(thief, max, health, out)
+            .map_or(0, |t| t.n)
+    }
+
+    /// [`ShardedBuffer::steal_with_health`] with provenance: returns who
+    /// was robbed and whether they were quarantined, or `None` when
+    /// nothing moved. The fleet coordinator needs the victim's identity
+    /// to price the steal (its calibrated win predicate compares against
+    /// the *victim's* predicted remaining horizon) and to hand rejected
+    /// loot back to the right lane via [`SharedBuffer::requeue_front`].
+    pub(crate) fn steal_with_health_traced(
+        &self,
+        thief: usize,
+        max: usize,
+        health: &FleetHealth,
+        out: &mut Vec<Submission>,
+    ) -> Option<StealTrace> {
         if max == 0 || self.lanes.len() < 2 {
-            return 0;
+            return None;
         }
         debug_assert_eq!(health.n_lanes(), self.lanes.len());
         let mut victim = None;
@@ -396,10 +437,28 @@ impl ShardedBuffer {
                 victim = Some(l);
             }
         }
-        match victim {
-            Some(v) => self.lanes[v].take_into(max, out),
-            None => self.steal_from_hottest(thief, max, out),
+        if let Some(v) = victim {
+            // Matches `steal_with_health`: a quarantined victim is
+            // terminal — no fall-through to a healthy steal even when
+            // the take races to zero.
+            let n = self.lanes[v].take_into(max, out);
+            return (n > 0).then_some(StealTrace { victim: v, quarantined: true, n });
         }
+        let mut victim = None;
+        let mut hottest = 1usize; // require >= 2 queued to steal at all
+        for (l, lane) in self.lanes.iter().enumerate() {
+            if l == thief {
+                continue;
+            }
+            let len = lane.len();
+            if len > hottest {
+                hottest = len;
+                victim = Some(l);
+            }
+        }
+        let v = victim?;
+        let n = self.lanes[v].steal_into(max, out);
+        (n > 0).then_some(StealTrace { victim: v, quarantined: false, n })
     }
 
     /// Total queued submissions across lanes.
@@ -727,6 +786,46 @@ mod tests {
         out.clear();
         assert_eq!(s.steal_with_health(0, 8, &health, &mut out), 2);
         assert!(out.iter().all(|x| x.worker % 3 == 2));
+    }
+
+    #[test]
+    fn push_to_lane_bypasses_worker_hash() {
+        let s = ShardedBuffer::new(3);
+        // Worker 5 would hash to lane 2; the fleet coordinator routes it
+        // to lane 0 explicitly.
+        s.push_to_lane(0, sub(5, 0));
+        assert_eq!(s.lane(2).len(), 0);
+        let got = s.lane(0).drain(4, Duration::ZERO).unwrap();
+        assert_eq!(got[0].worker, 5);
+    }
+
+    #[test]
+    fn traced_steal_reports_victim_and_quarantine() {
+        use crate::coordinator::recovery::FleetHealth;
+        let s = ShardedBuffer::new(3);
+        let health = FleetHealth::new(3);
+        let mut out = Vec::new();
+        // Nothing queued anywhere: no trace.
+        assert_eq!(s.steal_with_health_traced(0, 8, &health, &mut out), None);
+        s.push(sub(1, 0));
+        for w in [2usize, 5, 2, 5] {
+            s.push(sub(w, 0));
+        }
+        health.lane(1).trip();
+        // Quarantined lane 1 wins over the hotter healthy lane 2.
+        assert_eq!(
+            s.steal_with_health_traced(0, 8, &health, &mut out),
+            Some(StealTrace { victim: 1, quarantined: true, n: 1 })
+        );
+        out.clear();
+        // With lane 1 drained, the classic steal reports lane 2.
+        assert_eq!(
+            s.steal_with_health_traced(0, 8, &health, &mut out),
+            Some(StealTrace { victim: 2, quarantined: false, n: 2 })
+        );
+        // The wrapper and the traced variant agree on the count.
+        out.clear();
+        assert_eq!(s.steal_with_health(0, 8, &health, &mut out), 1);
     }
 
     #[test]

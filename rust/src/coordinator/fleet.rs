@@ -1,0 +1,1134 @@
+//! The fleet coordinator: one open submission stream scheduled across a
+//! *heterogeneous* device fleet with calibrated placement and
+//! cross-device work-stealing.
+//!
+//! Where [`LaneCoordinator`] shards workers over lanes by hash
+//! (`w % L`), the fleet coordinator makes lane choice a *scheduling*
+//! decision: every worker submits to one central ingress buffer, and a
+//! single fleet proxy routes each arrival to the device whose
+//! **calibrated earliest-completion-time** grows the least
+//! ([`ShardedBuffer::push_to_lane`]). Per device it then reuses the
+//! online lane pipeline wholesale — the same
+//! `merge_arrivals` / `finalize_plan` commit/replan split over a
+//! contiguous planning cursor, the same `device_runner_loop` on a
+//! dedicated runner thread, the same recovery/watchdog handling — so a
+//! single-device fleet degenerates to the online lane proxy exactly
+//! (pinned in rust/tests/prop_fleet.rs).
+//!
+//! # Calibrated ECT placement
+//!
+//! Each device keeps its own planning model: a base [`DeviceProfile`]
+//! (or an explicit override via
+//! [`FleetCoordinator::with_plan_models`]) wrapped in a per-device
+//! [`CalibratedProfile`] that its own [`Calibrator`] refreshes at
+//! contiguous-timeline boundaries, exactly like the online lane. A
+//! candidate task is scored on device `d` by compiling a one-row table
+//! against `d`'s calibrated model and appending it to `d`'s current
+//! frontier (committed cursor + uncommitted suffix) through
+//! `sched::search_util::bounded_append_score` — the bound-gated
+//! machinery of the beam searches: admissible floor first, then a
+//! bounded rollout under the best completion seen so far this scan.
+//! Device model clocks are not aligned (each contiguous timeline starts
+//! when its device went busy), so scores are compared as *predicted
+//! remaining seconds* — completion clock minus the device's elapsed
+//! busy time — and the running cutoff is translated onto each device's
+//! local clock before pruning. Quarantined (breaker-Open) devices are
+//! skipped; with the whole fleet down, placement falls back to
+//! round-robin so arrivals still land somewhere recoverable
+//! ([`FleetHealth::n_quarantined`]).
+//!
+//! # Calibrated work-stealing
+//!
+//! An idle device steals through the breaker-aware
+//! [`ShardedBuffer::steal_with_health`] machinery (traced variant, so
+//! the victim is known), but a *healthy* victim's work moves only when
+//! the thief's own calibrated model proves a strict win:
+//! [`steal_predicts_win`] compares the thief's exact completion of the
+//! stolen rows — compiled against the thief's profile, so its own
+//! HtD/DtH link seconds (i.e. the transfer cost of moving the bytes)
+//! are priced in — against the victim's predicted remaining horizon. A
+//! rejected steal is handed back to the victim's queue front
+//! (`requeue_front`, FIFO preserved). Backlog shed by a *quarantined*
+//! victim is always accepted: its owner cannot run anything, so there
+//! is no "leave it where it is" to compare against. On quarantine the
+//! device's [`DriftGate`] also forgets its smoothed drift
+//! ([`DriftGate::reset_drift`]) — what it learned described the device
+//! before it went bad.
+//!
+//! # Threading model
+//!
+//! One proxy thread serves the whole fleet (placement needs a
+//! consistent view of every device's frontier); device execution runs
+//! on per-device runner threads, so D devices still execute
+//! concurrently and planning overlaps all of them. The trade-off is
+//! that a `Retry` backoff sleep stalls *planning* for every device for
+//! its duration (execution already in flight is unaffected) — accepted
+//! for now; retry backoffs are milliseconds while groups are typically
+//! longer. Benchmarked in `benches/fleet_throughput.rs`
+//! (`BENCH_fleet.json`).
+//!
+//! [`LaneCoordinator`]: crate::coordinator::lanes::LaneCoordinator
+//! [`ShardedBuffer::push_to_lane`]: crate::coordinator::buffer::ShardedBuffer::push_to_lane
+//! [`ShardedBuffer::steal_with_health`]: crate::coordinator::buffer::ShardedBuffer::steal_with_health
+//! [`Calibrator`]: crate::model::calibrate::Calibrator
+//! [`DriftGate`]: crate::sched::online::DriftGate
+//! [`DriftGate::reset_drift`]: crate::sched::online::DriftGate::reset_drift
+//! [`steal_predicts_win`]: crate::sched::fleet::steal_predicts_win
+//! [`FleetHealth::n_quarantined`]: crate::coordinator::recovery::FleetHealth::n_quarantined
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::config::DeviceProfile;
+use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
+use crate::coordinator::lanes::{
+    device_runner_loop, empty_lane_stats, finalize_plan, merge_arrivals,
+    record_calib_stats, InFlight, LaneStats, RunDone, RunOutcome,
+};
+use crate::coordinator::recovery::{
+    BreakerState, FailureCtx, FleetHealth, RecoveryAction, RecoveryOptions,
+};
+use crate::coordinator::runner::Policy;
+use crate::device::Device;
+use crate::model::{
+    fold_timeline_stage_secs, CalibrateOptions, CalibratedProfile, Calibrator,
+    EngineSecs, EngineState, SimCursor, TaskTable,
+};
+use crate::queue::event::Event;
+use crate::sched::fleet::steal_predicts_win;
+use crate::sched::online::{DriftGate, OnlineOptions, OnlineScratch};
+use crate::sched::search_util::{bounded_append_score, PruneCounters};
+use crate::task::TaskSpec;
+use crate::util::stats;
+
+/// Knobs of the fleet runtime. The online pipeline is not optional here
+/// — calibrated placement needs the per-device contiguous cursors the
+/// open-stream pipeline maintains.
+#[derive(Clone, Debug)]
+pub struct FleetCoordOptions {
+    pub policy: Policy,
+    /// Ingress settle window is always zero (placement is per-arrival);
+    /// this settle applies to nothing yet and is kept for parity with
+    /// [`LaneOptions`] group formation semantics.
+    ///
+    /// [`LaneOptions`]: crate::coordinator::lanes::LaneOptions
+    pub settle: Duration,
+    /// Max submissions per committed device group. 0 = `ceil(T / D)`.
+    pub group_cap: usize,
+    /// Open-stream knobs (drift gate, re-plan width, steal bound, poll).
+    pub online: OnlineOptions,
+    /// Per-device online recalibration (see `coordinator::lanes`).
+    pub recalibrate: Option<CalibrateOptions>,
+    /// Fault tolerance (see `coordinator::lanes` / `coordinator::recovery`).
+    pub recovery: Option<RecoveryOptions>,
+    /// Bound-gated placement scoring (floors + bounded rollouts).
+    /// Decisions are bit-identical either way (rust/tests/prop_fleet.rs
+    /// pins the static scheduler; the coordinator shares the scorer);
+    /// off keeps the exact full-probe scan for reference.
+    pub prune_placement: bool,
+}
+
+impl Default for FleetCoordOptions {
+    fn default() -> Self {
+        FleetCoordOptions {
+            policy: Policy::Heuristic,
+            settle: Duration::from_micros(300),
+            group_cap: 0,
+            online: OnlineOptions::default(),
+            recalibrate: None,
+            recovery: None,
+            prune_placement: true,
+        }
+    }
+}
+
+/// Aggregate metrics of one fleet run — [`LaneMetrics`] plus the
+/// placement/steal observability the fleet adds.
+///
+/// [`LaneMetrics`]: crate::coordinator::lanes::LaneMetrics
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    pub total_secs: f64,
+    /// Executed tasks per second — the paper's "tasks throughput".
+    pub tasks_per_sec: f64,
+    /// Per-task submission → completion latency (s), all devices.
+    pub latencies: Vec<f64>,
+    /// Device busy time per committed group (s), all devices.
+    pub group_makespans: Vec<f64>,
+    pub sched_overhead_secs: f64,
+    pub n_groups: usize,
+    pub n_tasks: usize,
+    /// Per-device breakdown (device index = `LaneStats::lane`). The
+    /// beam/replan prune counters in here are device-local; the
+    /// *placement* scorer's counters are in `placement_prune`.
+    pub per_device: Vec<LaneStats>,
+    /// Submissions routed by the calibrated ECT placement (including
+    /// round-robin fallbacks while the whole fleet was quarantined).
+    pub n_placements: usize,
+    /// Placement + steal-predicate pruning counters: floor rejections
+    /// and early-exited rollouts from the cross-device ECT scan and
+    /// from `steal_predicts_win`.
+    pub placement_prune: PruneCounters,
+    /// Steal-predicate consultations against a *healthy* victim
+    /// (quarantine rescues are unconditional and not counted here).
+    pub n_steal_considered: usize,
+    /// Predicate consultations that rejected the steal (work handed
+    /// back to the victim's queue front).
+    pub n_steal_rejected: usize,
+}
+
+impl FleetMetrics {
+    pub fn mean_latency(&self) -> f64 {
+        stats::mean(&self.latencies)
+    }
+
+    pub fn p50_latency(&self) -> f64 {
+        stats::percentile(&self.latencies, 50.0)
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        stats::percentile(&self.latencies, 99.0)
+    }
+
+    /// Submissions stolen across devices (sum over `per_device`).
+    pub fn n_stolen(&self) -> usize {
+        self.per_device.iter().map(|l| l.n_stolen).sum()
+    }
+
+    /// Fraction of wall-clock spent scheduling (Table-6 overhead share).
+    pub fn sched_overhead_share(&self) -> f64 {
+        if self.total_secs <= 0.0 {
+            return 0.0;
+        }
+        self.sched_overhead_secs / self.total_secs
+    }
+}
+
+/// Everything the fleet proxy tracks per device: the online lane
+/// proxy's planner state verbatim, plus the wall-clock anchor of the
+/// device's contiguous model timeline (`live_since`) that placement
+/// uses to compare devices whose clocks started at different moments.
+struct DevState {
+    base_model: DeviceProfile,
+    cal_prof: CalibratedProfile,
+    calibrator: Option<Calibrator>,
+    /// Pending-suffix table (compiled over `pending_tasks`).
+    table: TaskTable,
+    /// Scoring scratch table: one row per placement candidate, or the
+    /// stolen rows during a steal consult. Same calibrated generation
+    /// as `table`, so frontier cursors accept rows from either.
+    probe_table: TaskTable,
+    /// Contiguous planning cursor (committed prefix).
+    cursor: SimCursor,
+    scratch: OnlineScratch,
+    gate: DriftGate,
+    calib_probe: SimCursor,
+    inflight_pred: Vec<EngineSecs>,
+    pending_subs: Vec<Submission>,
+    pending_tasks: Vec<TaskSpec>,
+    incumbent: Vec<usize>,
+    order_buf: Vec<usize>,
+    planner_live: bool,
+    plan_dirty: bool,
+    suffix_planned: bool,
+    pred_done: f64,
+    last_commit_pred: f64,
+    /// Wall instant the current contiguous timeline started (valid
+    /// while `planner_live`): model clock `t` ≈ wall `live_since + t`.
+    live_since: Instant,
+    inflight: Option<InFlight>,
+    consec_failures: usize,
+    stats: LaneStats,
+}
+
+fn new_dev_state(dev: usize, base_model: DeviceProfile, opts: &FleetCoordOptions) -> DevState {
+    let cal_prof = CalibratedProfile::identity(&base_model);
+    let calibrator = opts.recalibrate.clone().map(Calibrator::new);
+    let mut calib_probe = SimCursor::detached();
+    calib_probe.set_record_timeline(true);
+    DevState {
+        base_model,
+        cal_prof,
+        calibrator,
+        table: TaskTable::new(),
+        probe_table: TaskTable::new(),
+        cursor: SimCursor::detached(),
+        scratch: OnlineScratch::new(),
+        gate: DriftGate::new(opts.online.drift_threshold),
+        calib_probe,
+        inflight_pred: Vec::new(),
+        pending_subs: Vec::new(),
+        pending_tasks: Vec::new(),
+        incumbent: Vec::new(),
+        order_buf: Vec::new(),
+        planner_live: false,
+        plan_dirty: false,
+        suffix_planned: false,
+        pred_done: 0.0,
+        last_commit_pred: 0.0,
+        live_since: Instant::now(),
+        inflight: None,
+        consec_failures: 0,
+        stats: empty_lane_stats(dev),
+    }
+}
+
+/// Merge drained/stolen submissions into a device's uncommitted suffix
+/// (the online lane's [`merge_arrivals`]), stamping the wall anchor of
+/// a freshly (re)started contiguous timeline.
+fn merge_into_device(st: &mut DevState, drained: &mut Vec<Submission>, mid_group: bool) {
+    let was_live = st.planner_live;
+    merge_arrivals(
+        &st.cal_prof,
+        mid_group,
+        drained,
+        &mut st.pending_subs,
+        &mut st.pending_tasks,
+        &mut st.incumbent,
+        &mut st.table,
+        &mut st.cursor,
+        &mut st.planner_live,
+        &mut st.last_commit_pred,
+        &mut st.plan_dirty,
+        &mut st.stats,
+    );
+    if !was_live && st.planner_live {
+        st.live_since = Instant::now();
+    }
+}
+
+fn finalize_device_plan(st: &mut DevState, policy: Policy, online: &OnlineOptions) {
+    finalize_plan(
+        policy,
+        online,
+        &st.table,
+        &mut st.cursor,
+        &mut st.incumbent,
+        &mut st.order_buf,
+        &mut st.scratch,
+        &mut st.gate,
+        &mut st.suffix_planned,
+        &mut st.stats,
+        &mut st.plan_dirty,
+        &mut st.pred_done,
+    );
+}
+
+/// Quarantine bookkeeping shared by the fault and watchdog paths: shed
+/// `back` (the failed group, when there is one) plus the unsubmitted
+/// backlog to the device's queue front (FIFO preserved, visible to
+/// thieves), clear the plan, and forget the drift the gate learned
+/// about the pre-fault device.
+fn shed_and_reset(st: &mut DevState, own: &SharedBuffer, mut back: Vec<Submission>) {
+    back.append(&mut st.pending_subs);
+    st.stats.n_requeued += back.len();
+    own.requeue_front(&mut back);
+    st.pending_tasks.clear();
+    st.incumbent.clear();
+    st.planner_live = false;
+    st.plan_dirty = false;
+    st.suffix_planned = false;
+    st.gate.reset_drift();
+}
+
+/// Score `task` on every non-quarantined device and return the one with
+/// the smallest predicted *remaining* completion (first device wins
+/// ties, exactly like the static `sched::fleet` placement). Falls back
+/// to round-robin when the whole fleet is quarantined.
+#[allow(clippy::too_many_arguments)]
+fn place_on_ect(
+    states: &mut [DevState],
+    health: &FleetHealth,
+    frontier: &mut SimCursor,
+    probe: &mut SimCursor,
+    prune: bool,
+    counters: &mut PruneCounters,
+    rr_fallback: &mut usize,
+    task: &TaskSpec,
+) -> usize {
+    let d = states.len();
+    let mut best: Option<(usize, f64)> = None;
+    for (dev, st) in states.iter_mut().enumerate() {
+        if health.is_quarantined(dev) {
+            continue;
+        }
+        st.probe_table
+            .compile_calibrated_into(std::slice::from_ref(task), &st.cal_prof);
+        // Device frontier on its own contiguous model clock: committed
+        // prefix (the cursor) plus the uncommitted pending suffix.
+        let elapsed = if st.planner_live {
+            frontier.resume_from(&st.cursor);
+            for &i in &st.incumbent {
+                frontier.push_task_compiled(&st.table, i);
+            }
+            st.live_since.elapsed().as_secs_f64()
+        } else {
+            frontier.reset_for_table(&st.probe_table, EngineState::default());
+            0.0
+        };
+        // The running best is in remaining-seconds; translate it onto
+        // this device's local clock before pruning against it.
+        let cutoff = best.map_or(f64::INFINITY, |(_, r)| r + elapsed);
+        let t = bounded_append_score(probe, frontier, &st.probe_table, 0, cutoff, prune, counters);
+        let remaining = t - elapsed;
+        // total_cmp + strict less-than: NaN never wins a placement, the
+        // INFINITY exclusion markers sort after every exact score, and
+        // ties keep the earlier device.
+        match best {
+            Some((_, r)) if !remaining.total_cmp(&r).is_lt() => {}
+            _ => best = Some((dev, remaining)),
+        }
+    }
+    match best {
+        Some((dev, _)) => dev,
+        None => {
+            // The whole fleet is breaker-Open. Round-robin: the backlog
+            // parks on quarantined queues where half-open probes or
+            // recovered thieves rescue it.
+            debug_assert_eq!(health.n_quarantined(), d);
+            let dev = *rr_fallback % d;
+            *rr_fallback = dev + 1;
+            dev
+        }
+    }
+}
+
+/// The fleet runtime (see module docs).
+pub struct FleetCoordinator {
+    devices: Vec<Arc<dyn Device>>,
+    /// Planning-model overrides, one per device (`None` plans each
+    /// device against its own profile).
+    plan_models: Option<Vec<DeviceProfile>>,
+    opts: FleetCoordOptions,
+}
+
+impl FleetCoordinator {
+    pub fn with_devices(devices: Vec<Arc<dyn Device>>, opts: FleetCoordOptions) -> Self {
+        assert!(!devices.is_empty(), "need at least one device");
+        FleetCoordinator { devices, plan_models: None, opts }
+    }
+
+    /// Plan each device against an explicit model instead of its own
+    /// profile — the deliberately-miscalibrated setup of the benches.
+    pub fn with_plan_models(mut self, models: Vec<DeviceProfile>) -> Self {
+        assert_eq!(models.len(), self.devices.len(), "one plan model per device");
+        self.plan_models = Some(models);
+        self
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Run `workloads[w]` = the dependent task batch of worker `w`.
+    pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> FleetMetrics {
+        let t_workers = workloads.len();
+        let d = self.devices.len();
+        let ingress = SharedBuffer::new();
+        let lanes = ShardedBuffer::new(d);
+        let health = FleetHealth::new(d);
+        let epoch = Instant::now();
+        let rec = self.opts.recovery.clone();
+        let cap = if self.opts.group_cap == 0 {
+            t_workers.div_ceil(d).max(1)
+        } else {
+            self.opts.group_cap.max(1)
+        };
+        let place_batch = t_workers.max(1);
+        let deadline_at = |rec: Option<&RecoveryOptions>, pred: f64| {
+            rec.and_then(|r| {
+                r.deadline.map(|dl| Instant::now() + dl.deadline_for(pred))
+            })
+        };
+
+        let mut states: Vec<DevState> = (0..d)
+            .map(|dev| {
+                let base = match &self.plan_models {
+                    Some(models) => models[dev].clone(),
+                    None => self.devices[dev].profile().clone(),
+                };
+                new_dev_state(dev, base, &self.opts)
+            })
+            .collect();
+
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut group_makespans: Vec<f64> = Vec::new();
+        let mut n_placements = 0usize;
+        let mut placement_prune = PruneCounters::default();
+        let mut n_steal_considered = 0usize;
+        let mut n_steal_rejected = 0usize;
+        let mut arrivals: Vec<Submission> = Vec::new();
+        let mut stolen: Vec<Submission> = Vec::new();
+        let mut frontier_buf = SimCursor::detached();
+        let mut probe = SimCursor::detached();
+
+        std::thread::scope(|s| {
+            // ---- workers ----------------------------------------------
+            let mut worker_handles = Vec::with_capacity(t_workers);
+            for (w, batch) in workloads.into_iter().enumerate() {
+                let ingress = ingress.clone();
+                let h = std::thread::Builder::new()
+                    .name(format!("fleet-worker-{w}"))
+                    .spawn_scoped(s, move || {
+                        for (seq, task) in batch.into_iter().enumerate() {
+                            let done = Event::new();
+                            ingress.push(Submission {
+                                worker: w,
+                                batch_seq: seq,
+                                task,
+                                done: done.clone(),
+                                submitted_at: epoch.elapsed().as_secs_f64(),
+                            });
+                            done.wait();
+                        }
+                    })
+                    .expect("spawn fleet worker");
+                worker_handles.push(h);
+            }
+
+            // ---- janitor: close the ingress once all workers exited ---
+            let ingress_j = ingress.clone();
+            std::thread::Builder::new()
+                .name("fleet-janitor".into())
+                .spawn_scoped(s, move || {
+                    let results: Vec<_> =
+                        worker_handles.into_iter().map(|h| h.join()).collect();
+                    ingress_j.close();
+                    for r in results {
+                        if let Err(payload) = r {
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                })
+                .expect("spawn fleet janitor");
+
+            // ---- per-device runner threads ----------------------------
+            let mut job_txs = Vec::with_capacity(d);
+            let mut done_rxs = Vec::with_capacity(d);
+            for dev in 0..d {
+                let (job_tx, job_rx) = mpsc::channel::<Vec<Submission>>();
+                let (done_tx, done_rx) = mpsc::channel::<RunDone>();
+                let device = Arc::clone(&self.devices[dev]);
+                std::thread::Builder::new()
+                    .name(format!("fleet-device-{dev}"))
+                    .spawn_scoped(s, move || {
+                        device_runner_loop(device.as_ref(), epoch, job_rx, done_tx)
+                    })
+                    .expect("spawn fleet device runner");
+                job_txs.push(job_tx);
+                done_rxs.push(done_rx);
+            }
+
+            // ---- the fleet proxy (this thread) ------------------------
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut closed_ingress = false;
+                let mut rr_fallback = 0usize;
+                loop {
+                    let mut progressed = false;
+
+                    // 1. Completions and the run-deadline watchdog, for
+                    //    every device with a group in flight. Mirrors the
+                    //    online lane proxy's RunDone handling exactly.
+                    for dev in 0..d {
+                        if states[dev].inflight.is_none() {
+                            continue;
+                        }
+                        match done_rxs[dev].try_recv() {
+                            Ok(done) => {
+                                progressed = true;
+                                let st = &mut states[dev];
+                                let fl = st.inflight.take().expect("inflight set");
+                                let breaker = health.lane(dev);
+                                match done.outcome {
+                                    RunOutcome::Done {
+                                        makespan,
+                                        latencies: lat,
+                                        timeline,
+                                    } => {
+                                        if !fl.timed_out
+                                            && breaker.state() != BreakerState::Closed
+                                        {
+                                            breaker.probe_succeeded();
+                                        }
+                                        if !fl.timed_out {
+                                            st.consec_failures = 0;
+                                        }
+                                        st.stats.busy_secs += makespan;
+                                        st.stats.predicted_secs += fl.pred;
+                                        if fl.attempt == 1 && !fl.timed_out {
+                                            st.gate.observe(makespan, fl.pred);
+                                            if let Some(cal) = st.calibrator.as_mut() {
+                                                cal.observe_group(
+                                                    &st.inflight_pred,
+                                                    &timeline,
+                                                );
+                                            }
+                                        }
+                                        group_makespans.push(makespan);
+                                        latencies.extend(lat);
+                                        st.stats.n_groups += 1;
+                                        st.stats.n_tasks += done.n_tasks;
+                                    }
+                                    RunOutcome::Fault {
+                                        kind,
+                                        message,
+                                        payload,
+                                        subs,
+                                    } => {
+                                        st.stats.n_faults += 1;
+                                        st.consec_failures += 1;
+                                        let action = if fl.timed_out {
+                                            RecoveryAction::Quarantine
+                                        } else {
+                                            match rec.as_ref() {
+                                                Some(r) => {
+                                                    r.policy.on_failure(&FailureCtx {
+                                                        lane: dev,
+                                                        attempt: fl.attempt,
+                                                        lane_consecutive_failures:
+                                                            st.consec_failures,
+                                                        kind,
+                                                    })
+                                                }
+                                                None => RecoveryAction::FailFast,
+                                            }
+                                        };
+                                        match action {
+                                            RecoveryAction::FailFast => {
+                                                let now =
+                                                    epoch.elapsed().as_secs_f64();
+                                                for sub in &subs {
+                                                    if !sub.done.is_complete() {
+                                                        sub.done.complete(now);
+                                                    }
+                                                }
+                                                match payload {
+                                                    Some(p) => {
+                                                        std::panic::resume_unwind(p)
+                                                    }
+                                                    None => panic!(
+                                                        "device {dev} fault after \
+                                                         {} attempt(s): {message}",
+                                                        fl.attempt
+                                                    ),
+                                                }
+                                            }
+                                            RecoveryAction::Retry { backoff } => {
+                                                st.stats.n_retries += 1;
+                                                // One proxy serves the fleet:
+                                                // this sleep stalls planning
+                                                // for every device (module
+                                                // docs; execution in flight
+                                                // is unaffected).
+                                                std::thread::sleep(backoff);
+                                                st.inflight = Some(InFlight {
+                                                    pred: fl.pred,
+                                                    deadline: deadline_at(
+                                                        rec.as_ref(),
+                                                        fl.pred,
+                                                    ),
+                                                    attempt: fl.attempt + 1,
+                                                    timed_out: false,
+                                                });
+                                                job_txs[dev]
+                                                    .send(subs)
+                                                    .expect("device runner alive");
+                                            }
+                                            RecoveryAction::Quarantine => {
+                                                if breaker.trip() {
+                                                    st.stats.n_quarantine_trips += 1;
+                                                }
+                                                shed_and_reset(
+                                                    st,
+                                                    lanes.lane(dev),
+                                                    subs,
+                                                );
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            Err(mpsc::TryRecvError::Empty) => {
+                                let st = &mut states[dev];
+                                let fl = st.inflight.as_mut().expect("inflight set");
+                                if !fl.timed_out
+                                    && fl.deadline.is_some_and(|dl| Instant::now() >= dl)
+                                {
+                                    fl.timed_out = true;
+                                    st.stats.n_timeouts += 1;
+                                    if health.lane(dev).trip() {
+                                        st.stats.n_quarantine_trips += 1;
+                                    }
+                                    shed_and_reset(st, lanes.lane(dev), Vec::new());
+                                    progressed = true;
+                                }
+                            }
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                unreachable!("fleet device runner exited early")
+                            }
+                        }
+                    }
+
+                    // 2. Ingress: place arrivals on the calibrated-ECT
+                    //    device and route them to its queue.
+                    if !closed_ingress {
+                        match ingress.drain_into_timeout(
+                            place_batch,
+                            Duration::ZERO,
+                            Duration::ZERO,
+                            &mut arrivals,
+                        ) {
+                            DrainPoll::Drained(_) => {
+                                progressed = true;
+                                for sub in arrivals.drain(..) {
+                                    let dev = place_on_ect(
+                                        &mut states,
+                                        &health,
+                                        &mut frontier_buf,
+                                        &mut probe,
+                                        self.opts.prune_placement,
+                                        &mut placement_prune,
+                                        &mut rr_fallback,
+                                        &sub.task,
+                                    );
+                                    lanes.push_to_lane(dev, sub);
+                                    n_placements += 1;
+                                }
+                            }
+                            DrainPoll::Empty => {}
+                            DrainPoll::Closed => closed_ingress = true,
+                        }
+                    }
+
+                    // 3. Service every device: busy devices absorb their
+                    //    queue into the uncommitted suffix and overlap
+                    //    planning; idle devices submit, drain, or steal.
+                    for dev in 0..d {
+                        let breaker = health.lane(dev);
+                        if states[dev].inflight.is_some() {
+                            let st = &mut states[dev];
+                            if breaker.state() == BreakerState::Closed {
+                                let room = cap.saturating_sub(st.pending_subs.len());
+                                if room > 0 {
+                                    if let DrainPoll::Drained(_) =
+                                        lanes.lane(dev).drain_into_timeout(
+                                            room,
+                                            Duration::ZERO,
+                                            Duration::ZERO,
+                                            &mut arrivals,
+                                        )
+                                    {
+                                        merge_into_device(st, &mut arrivals, true);
+                                        progressed = true;
+                                    }
+                                }
+                            }
+                            if st.plan_dirty {
+                                finalize_device_plan(
+                                    st,
+                                    self.opts.policy,
+                                    &self.opts.online,
+                                );
+                                progressed = true;
+                            }
+                            continue;
+                        }
+                        // Idle + quarantined: admit the half-open probe
+                        // after cooldown; while Open this device plans
+                        // nothing — its queue belongs to the thieves.
+                        if breaker.state() == BreakerState::Open {
+                            match rec.as_ref() {
+                                Some(r) => {
+                                    if breaker.try_half_open(r.quarantine.cooldown) {
+                                        states[dev].stats.n_halfopen_probes += 1;
+                                        progressed = true;
+                                    } else {
+                                        continue;
+                                    }
+                                }
+                                // Breakers only trip with recovery armed.
+                                None => {}
+                            }
+                        }
+                        // Idle with a pending plan: commit and submit it
+                        // (the online lane's submit block verbatim).
+                        if !states[dev].pending_subs.is_empty() {
+                            let st = &mut states[dev];
+                            if st.plan_dirty {
+                                finalize_device_plan(
+                                    st,
+                                    self.opts.policy,
+                                    &self.opts.online,
+                                );
+                            }
+                            let mut taken: Vec<Option<Submission>> =
+                                std::mem::take(&mut st.pending_subs)
+                                    .into_iter()
+                                    .map(Some)
+                                    .collect();
+                            let ordered_subs: Vec<Submission> = st
+                                .incumbent
+                                .iter()
+                                .map(|&i| {
+                                    taken[i]
+                                        .take()
+                                        .expect("incumbent is a permutation")
+                                })
+                                .collect();
+                            for &i in st.incumbent.iter() {
+                                st.cursor.push_task_compiled(&st.table, i);
+                            }
+                            st.cursor.commit_frontier();
+                            let contribution =
+                                (st.pred_done - st.last_commit_pred).max(0.0);
+                            st.last_commit_pred = st.pred_done;
+                            st.inflight = Some(InFlight {
+                                pred: contribution,
+                                deadline: deadline_at(rec.as_ref(), contribution),
+                                attempt: 1,
+                                timed_out: false,
+                            });
+                            job_txs[dev]
+                                .send(ordered_subs)
+                                .expect("device runner alive");
+                            if st.calibrator.is_some() {
+                                st.calib_probe
+                                    .reset_for_table(&st.table, EngineState::default());
+                                for &i in st.incumbent.iter() {
+                                    st.calib_probe.push_task_compiled(&st.table, i);
+                                }
+                                st.calib_probe.run_to_quiescence();
+                                fold_timeline_stage_secs(
+                                    st.incumbent.len(),
+                                    st.calib_probe.timeline(),
+                                    &mut st.inflight_pred,
+                                );
+                            }
+                            st.pending_tasks.clear();
+                            st.incumbent.clear();
+                            st.suffix_planned = false;
+                            progressed = true;
+                            continue;
+                        }
+                        // Fully idle: the contiguous timeline ends — the
+                        // only point a corrected model may be adopted.
+                        {
+                            let st = &mut states[dev];
+                            st.planner_live = false;
+                            if let Some(cal) = st.calibrator.as_mut() {
+                                if let Some(c) = cal.adopt() {
+                                    st.cal_prof =
+                                        CalibratedProfile::new(&st.base_model, c);
+                                    st.stats.n_recalibrations += 1;
+                                }
+                            }
+                            if let DrainPoll::Drained(_) =
+                                lanes.lane(dev).drain_into_timeout(
+                                    cap,
+                                    Duration::ZERO,
+                                    Duration::ZERO,
+                                    &mut arrivals,
+                                )
+                            {
+                                merge_into_device(st, &mut arrivals, false);
+                                progressed = true;
+                                continue;
+                            }
+                        }
+                        // Own queue dry: try a calibrated cross-device
+                        // steal. A quarantined victim's backlog is
+                        // rescued unconditionally; a healthy victim's
+                        // work moves only on a predicted strict win.
+                        if self.opts.online.steal_max > 0
+                            && breaker.state() == BreakerState::Closed
+                        {
+                            stolen.clear();
+                            let max = self.opts.online.steal_max.min(cap);
+                            if let Some(tr) = lanes.steal_with_health_traced(
+                                dev,
+                                max,
+                                &health,
+                                &mut stolen,
+                            ) {
+                                if tr.quarantined {
+                                    let st = &mut states[dev];
+                                    merge_into_device(st, &mut stolen, false);
+                                    st.stats.n_stolen += tr.n;
+                                    progressed = true;
+                                } else {
+                                    n_steal_considered += 1;
+                                    // The victim's predicted remaining
+                                    // horizon for everything it has
+                                    // planned, wall-normalized. Its own
+                                    // queue backlog is not in the
+                                    // horizon — conservative in the
+                                    // right direction (a busier victim
+                                    // is easier to beat, so an accept
+                                    // is still an accept).
+                                    let victim_remaining = {
+                                        let v = &states[tr.victim];
+                                        if v.planner_live {
+                                            (v.pred_done
+                                                - v.live_since
+                                                    .elapsed()
+                                                    .as_secs_f64())
+                                            .max(0.0)
+                                        } else {
+                                            0.0
+                                        }
+                                    };
+                                    let st = &mut states[dev];
+                                    let loot: Vec<TaskSpec> = stolen
+                                        .iter()
+                                        .map(|s| s.task.clone())
+                                        .collect();
+                                    st.probe_table.compile_calibrated_into(
+                                        &loot,
+                                        &st.cal_prof,
+                                    );
+                                    let elapsed = if st.planner_live {
+                                        frontier_buf.resume_from(&st.cursor);
+                                        for &i in &st.incumbent {
+                                            frontier_buf
+                                                .push_task_compiled(&st.table, i);
+                                        }
+                                        st.live_since.elapsed().as_secs_f64()
+                                    } else {
+                                        frontier_buf.reset_for_table(
+                                            &st.probe_table,
+                                            EngineState::default(),
+                                        );
+                                        0.0
+                                    };
+                                    let rows: Vec<usize> = (0..stolen.len()).collect();
+                                    let win = steal_predicts_win(
+                                        &mut probe,
+                                        &frontier_buf,
+                                        &st.probe_table,
+                                        &rows,
+                                        victim_remaining + elapsed,
+                                        &mut placement_prune,
+                                    );
+                                    if win {
+                                        st.stats.n_stolen += tr.n;
+                                        merge_into_device(st, &mut stolen, false);
+                                        progressed = true;
+                                    } else {
+                                        n_steal_rejected += 1;
+                                        lanes
+                                            .lane(tr.victim)
+                                            .requeue_front(&mut stolen);
+                                    }
+                                }
+                            }
+                        }
+                    }
+
+                    // 4. Termination: stream closed and every queue,
+                    //    suffix and device drained.
+                    if closed_ingress
+                        && lanes.is_empty()
+                        && states.iter().all(|st| {
+                            st.pending_subs.is_empty() && st.inflight.is_none()
+                        })
+                    {
+                        lanes.close_all();
+                        break;
+                    }
+                    if !progressed {
+                        std::thread::sleep(self.opts.online.poll);
+                    }
+                }
+            }));
+            drop(job_txs);
+            if let Err(payload) = result {
+                // Liveness before failure, as in the lane proxies:
+                // complete every unsignalled event and keep absorbing
+                // the ingress until all workers exited, then surface
+                // the panic. With `done_rxs` dropped, the runners
+                // complete their own fault groups' events (the
+                // failed-send path of `device_runner_loop`).
+                drop(done_rxs);
+                let now = epoch.elapsed().as_secs_f64();
+                for st in &states {
+                    for sub in &st.pending_subs {
+                        if !sub.done.is_complete() {
+                            sub.done.complete(now);
+                        }
+                    }
+                }
+                loop {
+                    let now = epoch.elapsed().as_secs_f64();
+                    for sub in arrivals.drain(..).chain(stolen.drain(..)) {
+                        if !sub.done.is_complete() {
+                            sub.done.complete(now);
+                        }
+                    }
+                    for l in 0..d {
+                        lanes.lane(l).take_into(usize::MAX, &mut arrivals);
+                    }
+                    if !arrivals.is_empty() {
+                        continue;
+                    }
+                    if ingress.drain_into(place_batch, Duration::ZERO, &mut arrivals)
+                        .is_none()
+                    {
+                        break;
+                    }
+                }
+                std::panic::resume_unwind(payload);
+            }
+        });
+
+        let total_secs = epoch.elapsed().as_secs_f64();
+        let mut per_device = Vec::with_capacity(d);
+        let (mut overhead, mut n_groups, mut n_tasks) = (0.0, 0, 0);
+        for st in states.iter_mut() {
+            let (fired, considered) = st.gate.counts();
+            st.stats.n_replans = fired;
+            st.stats.n_replan_considered = considered;
+            let pc = st.scratch.prune_counters();
+            st.stats.n_cands_pruned = pc.n_cands_pruned;
+            st.stats.n_rollouts_early_exit = pc.n_rollouts_early_exit;
+            st.stats.n_twin_collapsed = pc.n_twin_collapsed;
+            record_calib_stats(&mut st.stats, st.calibrator.as_ref());
+            overhead += st.stats.sched_overhead_secs;
+            n_groups += st.stats.n_groups;
+            n_tasks += st.stats.n_tasks;
+        }
+        for st in states {
+            per_device.push(st.stats);
+        }
+        FleetMetrics {
+            total_secs,
+            tasks_per_sec: n_tasks as f64 / total_secs,
+            latencies,
+            group_makespans,
+            sched_overhead_secs: overhead,
+            n_groups,
+            n_tasks,
+            per_device,
+            n_placements,
+            placement_prune,
+            n_steal_considered,
+            n_steal_rejected,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::device::simdev::SimDevice;
+    use crate::task::synthetic::synthetic_benchmark;
+
+    fn workload(t: usize, n: usize, scale: f64) -> Vec<Vec<TaskSpec>> {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, scale).unwrap();
+        (0..t)
+            .map(|w| (0..n).map(|i| g.tasks[(w + i) % 4].clone()).collect())
+            .collect()
+    }
+
+    fn sim_fleet(profiles: &[&str], opts: FleetCoordOptions) -> FleetCoordinator {
+        let devices: Vec<Arc<dyn Device>> = profiles
+            .iter()
+            .map(|name| {
+                Arc::new(SimDevice::new(profile_by_name(name).unwrap()))
+                    as Arc<dyn Device>
+            })
+            .collect();
+        FleetCoordinator::with_devices(devices, opts)
+    }
+
+    #[test]
+    fn heterogeneous_fleet_completes_all_tasks() {
+        let c = sim_fleet(
+            &["amd_r9", "xeon_phi", "k20c"],
+            FleetCoordOptions::default(),
+        );
+        let m = c.run(workload(6, 3, 0.1));
+        assert_eq!(m.n_tasks, 18);
+        assert_eq!(m.latencies.len(), 18);
+        assert_eq!(m.per_device.len(), 3);
+        assert_eq!(m.per_device.iter().map(|l| l.n_tasks).sum::<usize>(), 18);
+        assert_eq!(m.n_placements, 18);
+        assert!(m.tasks_per_sec > 0.0);
+    }
+
+    #[test]
+    fn single_device_fleet_terminates_and_counts() {
+        let c = sim_fleet(&["amd_r9"], FleetCoordOptions::default());
+        let m = c.run(workload(3, 2, 0.1));
+        assert_eq!(m.n_tasks, 6);
+        assert_eq!(m.n_placements, 6);
+        assert_eq!(m.per_device.len(), 1);
+        assert_eq!(m.n_stolen(), 0, "nobody to steal from");
+    }
+
+    #[test]
+    fn empty_workload_terminates() {
+        let c = sim_fleet(&["amd_r9", "k20c"], FleetCoordOptions::default());
+        let m = c.run(Vec::new());
+        assert_eq!(m.n_tasks, 0);
+        assert_eq!(m.n_groups, 0);
+        assert_eq!(m.n_placements, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "need at least one device")]
+    fn empty_fleet_panics() {
+        FleetCoordinator::with_devices(Vec::new(), FleetCoordOptions::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "one plan model per device")]
+    fn mismatched_plan_models_panic() {
+        sim_fleet(&["amd_r9", "k20c"], FleetCoordOptions::default())
+            .with_plan_models(vec![profile_by_name("amd_r9").unwrap()]);
+    }
+
+    #[test]
+    fn fleet_retries_transient_device_error_to_completion() {
+        use crate::coordinator::recovery::RetryBackoff;
+        use crate::device::{ChaosDevice, ChaosOptions};
+
+        let p = profile_by_name("amd_r9").unwrap();
+        // One flaky device in a fleet of two: every first attempt of a
+        // faulting group errors, the immediate re-run is clean — the
+        // retry policy must absorb it without losing a task.
+        let flaky: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+            Arc::new(SimDevice::new(p)),
+            ChaosOptions {
+                seed: 0xf1ee7,
+                p_error: 0.8,
+                transient: true,
+                ..ChaosOptions::default()
+            },
+        ));
+        let steady: Arc<dyn Device> =
+            Arc::new(SimDevice::new(profile_by_name("k20c").unwrap()));
+        let c = FleetCoordinator::with_devices(
+            vec![flaky, steady],
+            FleetCoordOptions {
+                recovery: Some(RecoveryOptions::retry(RetryBackoff {
+                    base: Duration::from_micros(50),
+                    cap: Duration::from_micros(200),
+                    ..RetryBackoff::default()
+                })),
+                ..FleetCoordOptions::default()
+            },
+        );
+        let m = c.run(workload(4, 3, 0.1));
+        assert_eq!(m.n_tasks, 12, "all tasks complete despite faults");
+        assert_eq!(m.latencies.len(), 12);
+        let retries: usize = m.per_device.iter().map(|l| l.n_retries).sum();
+        let faults: usize = m.per_device.iter().map(|l| l.n_faults).sum();
+        assert_eq!(retries, faults, "every fault was retried");
+        assert_eq!(
+            m.per_device.iter().map(|l| l.n_quarantine_trips).sum::<usize>(),
+            0
+        );
+    }
+}

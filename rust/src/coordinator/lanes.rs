@@ -319,7 +319,7 @@ struct LaneOutcome {
     group_makespans: Vec<f64>,
 }
 
-fn empty_lane_stats(lane: usize) -> LaneStats {
+pub(crate) fn empty_lane_stats(lane: usize) -> LaneStats {
     LaneStats {
         lane,
         n_groups: 0,
@@ -792,7 +792,10 @@ fn run_group_with_recovery(
 }
 
 /// Fold a lane's final calibration state into its [`LaneStats`].
-fn record_calib_stats(stats: &mut LaneStats, calibrator: Option<&Calibrator>) {
+pub(crate) fn record_calib_stats(
+    stats: &mut LaneStats,
+    calibrator: Option<&Calibrator>,
+) {
     if let Some(cal) = calibrator {
         let c = cal.counts();
         stats.n_calib_obs = c.n_obs;
@@ -815,12 +818,14 @@ fn record_calib_stats(stats: &mut LaneStats, calibrator: Option<&Calibrator>) {
 /// *unsignalled* submissions back so the proxy can retry or requeue them
 /// — a retried run must produce bit-identical completions, so the events
 /// stay pending until a successful attempt (or a fail-fast unwind).
-struct RunDone {
-    n_tasks: usize,
-    outcome: RunOutcome,
+/// Shared with the fleet coordinator (`coordinator::fleet`), which runs
+/// one such runner thread per device.
+pub(crate) struct RunDone {
+    pub(crate) n_tasks: usize,
+    pub(crate) outcome: RunOutcome,
 }
 
-enum RunOutcome {
+pub(crate) enum RunOutcome {
     Done {
         makespan: f64,
         latencies: Vec<f64>,
@@ -840,19 +845,100 @@ enum RunOutcome {
 }
 
 /// Proxy-side record of the group in flight on the runner thread.
-struct InFlight {
+/// Shared with the fleet coordinator, which keeps one per device.
+pub(crate) struct InFlight {
     /// Predicted makespan contribution on the contiguous lane timeline.
-    pred: f64,
+    pub(crate) pred: f64,
     /// Watchdog deadline (`predicted × slack + floor` past submit), when
     /// a run-deadline is configured.
-    deadline: Option<Instant>,
+    pub(crate) deadline: Option<Instant>,
     /// 1 on first submission; grows on same-lane retries.
-    attempt: usize,
+    pub(crate) attempt: usize,
     /// The watchdog already declared this run dead (the lane is
     /// quarantined and its backlog requeued); when the zombie run
     /// eventually surfaces, its numbers must not feed the drift gate or
     /// the calibrator.
-    timed_out: bool,
+    pub(crate) timed_out: bool,
+}
+
+/// The device-runner thread body: execute each submitted group, signal
+/// successful completions, and report a [`RunDone`] per group. Extracted
+/// from the online lane proxy so the fleet coordinator spawns the exact
+/// same runner per device. If the proxy side already unwound (receiver
+/// gone), any still-pending fault events are completed here so blocked
+/// workers can exit.
+pub(crate) fn device_runner_loop(
+    device: &dyn Device,
+    epoch: Instant,
+    job_rx: mpsc::Receiver<Vec<Submission>>,
+    done_tx: mpsc::Sender<RunDone>,
+) {
+    for subs in job_rx {
+        // Built here, off the proxy's planning path (the device API
+        // wants a contiguous TaskSpec slice).
+        let tasks: Vec<TaskSpec> = subs.iter().map(|sub| sub.task.clone()).collect();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            device.run_group(&tasks)
+        }));
+        let now = epoch.elapsed().as_secs_f64();
+        let msg = match res {
+            Ok(Ok(run)) => {
+                let mut lat = Vec::with_capacity(subs.len());
+                for (slot, sub) in subs.iter().enumerate() {
+                    sub.done.complete(now - run.makespan + run.task_end[slot]);
+                    lat.push(now - sub.submitted_at);
+                }
+                RunDone {
+                    n_tasks: subs.len(),
+                    outcome: RunOutcome::Done {
+                        makespan: run.makespan,
+                        latencies: lat,
+                        timeline: run.timeline,
+                    },
+                }
+            }
+            // Faulted runs hand their submissions back with the
+            // completion events still pending: the proxy may retry the
+            // exact group, and a re-run must be the one that signals the
+            // workers (an event can complete only once).
+            Ok(Err(e)) => RunDone {
+                n_tasks: subs.len(),
+                outcome: RunOutcome::Fault {
+                    kind: FaultKind::Error,
+                    message: format!("{e:#}"),
+                    payload: None,
+                    subs,
+                },
+            },
+            Err(p) => RunDone {
+                n_tasks: subs.len(),
+                outcome: RunOutcome::Fault {
+                    kind: FaultKind::Panic,
+                    message: "device panicked".to_string(),
+                    payload: Some(p),
+                    subs,
+                },
+            },
+        };
+        // If the proxy already unwound (receiver gone), no retry will
+        // ever happen: complete any still-pending events ourselves so
+        // blocked workers can exit.
+        let fault_events: Vec<Event> = match &msg.outcome {
+            RunOutcome::Fault { subs, .. } => {
+                subs.iter().map(|s| s.done.clone()).collect()
+            }
+            RunOutcome::Done { .. } => Vec::new(),
+        };
+        if done_tx.send(msg).is_err() {
+            let now = epoch.elapsed().as_secs_f64();
+            for ev in &fault_events {
+                if !ev.is_complete() {
+                    ev.complete(now);
+                }
+            }
+            break;
+        }
+    }
 }
 
 /// One lane's online proxy loop (see the module docs): device execution
@@ -920,75 +1006,7 @@ fn online_lane_proxy(
         std::thread::Builder::new()
             .name(format!("lane-device-{lane}"))
             .spawn_scoped(s, move || {
-                for subs in job_rx {
-                    // Built here, off the proxy's planning path (the
-                    // device API wants a contiguous TaskSpec slice).
-                    let tasks: Vec<TaskSpec> =
-                        subs.iter().map(|sub| sub.task.clone()).collect();
-                    let res = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| device.run_group(&tasks)),
-                    );
-                    let now = epoch.elapsed().as_secs_f64();
-                    let msg = match res {
-                        Ok(Ok(run)) => {
-                            let mut lat = Vec::with_capacity(subs.len());
-                            for (slot, sub) in subs.iter().enumerate() {
-                                sub.done
-                                    .complete(now - run.makespan + run.task_end[slot]);
-                                lat.push(now - sub.submitted_at);
-                            }
-                            RunDone {
-                                n_tasks: subs.len(),
-                                outcome: RunOutcome::Done {
-                                    makespan: run.makespan,
-                                    latencies: lat,
-                                    timeline: run.timeline,
-                                },
-                            }
-                        }
-                        // Faulted runs hand their submissions back with
-                        // the completion events still pending: the proxy
-                        // may retry the exact group, and a re-run must be
-                        // the one that signals the workers (an event can
-                        // complete only once).
-                        Ok(Err(e)) => RunDone {
-                            n_tasks: subs.len(),
-                            outcome: RunOutcome::Fault {
-                                kind: FaultKind::Error,
-                                message: format!("{e:#}"),
-                                payload: None,
-                                subs,
-                            },
-                        },
-                        Err(p) => RunDone {
-                            n_tasks: subs.len(),
-                            outcome: RunOutcome::Fault {
-                                kind: FaultKind::Panic,
-                                message: "device panicked".to_string(),
-                                payload: Some(p),
-                                subs,
-                            },
-                        },
-                    };
-                    // If the proxy already unwound (receiver gone), no
-                    // retry will ever happen: complete any still-pending
-                    // events ourselves so blocked workers can exit.
-                    let fault_events: Vec<Event> = match &msg.outcome {
-                        RunOutcome::Fault { subs, .. } => {
-                            subs.iter().map(|s| s.done.clone()).collect()
-                        }
-                        RunOutcome::Done { .. } => Vec::new(),
-                    };
-                    if done_tx.send(msg).is_err() {
-                        let now = epoch.elapsed().as_secs_f64();
-                        for ev in &fault_events {
-                            if !ev.is_complete() {
-                                ev.complete(now);
-                            }
-                        }
-                        break;
-                    }
-                }
+                device_runner_loop(device.as_ref(), epoch, job_rx, done_tx)
             })
             .expect("spawn lane device runner");
 
@@ -1457,9 +1475,10 @@ fn online_lane_proxy(
 /// about the model generation. `mid_group` marks arrivals that extend a
 /// live plan (suffix non-empty or a group in flight) — the "merge into
 /// the uncommitted suffix instead of queueing a fresh group" events
-/// counted by [`LaneStats::n_merges`].
+/// counted by [`LaneStats::n_merges`]. Shared with the fleet
+/// coordinator, which calls it once per device.
 #[allow(clippy::too_many_arguments)]
-fn merge_arrivals(
+pub(crate) fn merge_arrivals(
     cal_prof: &CalibratedProfile,
     mid_group: bool,
     drained: &mut Vec<Submission>,
@@ -1500,9 +1519,10 @@ fn merge_arrivals(
 /// and either re-plan through `sched::online::replan_into` (overlapped
 /// with device execution whenever possible) or keep the incumbent order,
 /// in both cases recording the exact predicted completion clock on the
-/// contiguous lane timeline.
+/// contiguous lane timeline. Shared with the fleet coordinator, which
+/// calls it once per device.
 #[allow(clippy::too_many_arguments)]
-fn finalize_plan(
+pub(crate) fn finalize_plan(
     policy: Policy,
     online: &OnlineOptions,
     table: &TaskTable,

@@ -11,6 +11,11 @@
 //!   parallel candidate scoring), paused prediction cursors, and the
 //!   online open-stream pipeline (mid-group merge, drift-gated suffix
 //!   re-plans, cross-round `EngineState` carry, lane work-stealing).
+//! * `fleet` — the heterogeneous multi-device runtime
+//!   ([`FleetCoordinator`]): one ingress stream placed across per-device
+//!   lanes by calibrated earliest-completion-time, each device running
+//!   its own online pipeline, with breaker-aware cross-device stealing
+//!   gated on the thief's calibrated win prediction.
 //! * `recovery` — fault tolerance: the pluggable [`RecoveryPolicy`]
 //!   trait (fail-fast / retry-with-backoff / blacklist-after-N), the
 //!   run-deadline watchdog formula, and the per-lane circuit breaker
@@ -19,11 +24,13 @@
 //!   facade over `lanes`.
 
 pub mod buffer;
+pub mod fleet;
 pub mod lanes;
 pub mod recovery;
 pub mod runner;
 
 pub use buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
+pub use fleet::{FleetCoordOptions, FleetCoordinator, FleetMetrics};
 pub use lanes::{LaneCoordinator, LaneMetrics, LaneOptions, LaneStats};
 pub use recovery::{
     BlacklistAfterN, BreakerState, DeadlineOptions, FailFast, FailureCtx,

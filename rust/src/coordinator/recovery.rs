@@ -350,6 +350,14 @@ impl FleetHealth {
     pub fn is_quarantined(&self, lane: usize) -> bool {
         self.lanes[lane].state() == BreakerState::Open
     }
+
+    /// How many lanes are currently quarantined (Open). The fleet
+    /// coordinator uses this to detect the everyone-is-down case, where
+    /// calibrated placement has no healthy candidate and falls back to
+    /// round-robin so arrivals still land somewhere recoverable.
+    pub fn n_quarantined(&self) -> usize {
+        (0..self.lanes.len()).filter(|&l| self.is_quarantined(l)).count()
+    }
 }
 
 #[cfg(test)]
@@ -457,6 +465,19 @@ mod tests {
         assert!(!h.is_quarantined(1), "HalfOpen keeps its backlog");
         h.lane(1).probe_succeeded();
         assert!(!h.is_quarantined(1));
+    }
+
+    #[test]
+    fn n_quarantined_counts_open_lanes_only() {
+        let h = FleetHealth::new(3);
+        assert_eq!(h.n_quarantined(), 0);
+        h.lane(0).trip();
+        h.lane(2).trip();
+        assert_eq!(h.n_quarantined(), 2);
+        h.lane(2).try_half_open(Duration::ZERO);
+        assert_eq!(h.n_quarantined(), 1, "HalfOpen is not quarantined");
+        h.lane(0).probe_succeeded();
+        assert_eq!(h.n_quarantined(), 0);
     }
 
     #[test]

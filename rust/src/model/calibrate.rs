@@ -55,6 +55,14 @@
 //! simulation must go through [`SimCursor::push_task_compiled`] — which
 //! is the only push every scheduler hot path uses.
 //!
+//! In a heterogeneous fleet each device owns one `Calibrator` and one
+//! adopted [`CalibratedProfile`] generation (`coordinator::fleet`): the
+//! fleet's earliest-completion-time placement and its steal predicate
+//! score candidates against the *destination* device's calibrated
+//! model, so systematic per-device drift (a slow PCIe link, an
+//! optimistic kernel estimate) shifts placement decisions instead of
+//! silently skewing them.
+//!
 //! [`CmdRecord`]: crate::model::timeline::CmdRecord
 //! [`LinkParams::scaled`]: crate::config::LinkParams::scaled
 //! [`TaskTable`]: crate::model::TaskTable

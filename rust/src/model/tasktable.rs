@@ -197,14 +197,72 @@ impl TaskTable {
                 self.min_tail = tail;
             }
         }
-        // Spec-twin classification: rows whose simulation-relevant
-        // encodings are byte-identical are interchangeable for the
-        // simulator; the searches collapse such candidates (one simulated
-        // representative per class per prefix) and the parallel
-        // transposition memo can only ever hit when a class has more than
-        // one member, so all-distinct groups skip key building entirely.
-        // Every class assignment is proven by full-key comparison — the
-        // FNV hash is only a prefilter.
+        self.classify_rows();
+    }
+
+    /// Gather rows of `src` (in `rows` order) into `self`, producing a
+    /// sub-table bit-identical to compiling the corresponding `TaskSpec`
+    /// subset against the same profile: per-row derived values are copied
+    /// bitwise (they were computed row-independently at `src`'s compile),
+    /// the group aggregates re-accumulate in row order with the exact
+    /// `compile_into` expressions, and twin classes are re-derived for
+    /// the sub-group (class representatives are *local* row indices).
+    /// Buffers are reused, so a warm gather allocates nothing — this is
+    /// how `sched::fleet` reorders each device's placement list without
+    /// re-resolving specs the per-device tables already hold.
+    pub fn gather_into(&mut self, src: &TaskTable, rows: &[usize]) {
+        self.prof = src.prof;
+        self.htd_raw.clear();
+        self.htd_off.clear();
+        self.dth_raw.clear();
+        self.dth_off.clear();
+        self.kernel.clear();
+        self.htd_secs.clear();
+        self.dth_secs.clear();
+        self.k_minus_htd.clear();
+        self.seq_secs.clear();
+        self.dominant_transfer.clear();
+        self.htd_off.push(0);
+        self.dth_off.push(0);
+        self.total_htd = 0.0;
+        self.total_k = 0.0;
+        self.total_dth = 0.0;
+        self.min_tail = 0.0;
+        for &r in rows {
+            self.htd_raw.extend_from_slice(src.htd_bytes(r));
+            self.htd_off.push(self.htd_raw.len() as u32);
+            self.dth_raw.extend_from_slice(src.dth_bytes(r));
+            self.dth_off.push(self.dth_raw.len() as u32);
+            let htd = src.htd_secs[r];
+            let dth = src.dth_secs[r];
+            let k = src.kernel[r];
+            self.kernel.push(k);
+            self.htd_secs.push(htd);
+            self.dth_secs.push(dth);
+            self.k_minus_htd.push(src.k_minus_htd[r]);
+            self.seq_secs.push(src.seq_secs[r]);
+            self.dominant_transfer.push(src.dominant_transfer[r]);
+            self.total_htd += htd;
+            self.total_k += k;
+            self.total_dth += dth;
+            let tail = k + dth;
+            if self.kernel.len() == 1 || tail < self.min_tail {
+                self.min_tail = tail;
+            }
+        }
+        self.classify_rows();
+    }
+
+    /// Spec-twin classification pass shared by [`TaskTable::compile_into`]
+    /// and [`TaskTable::gather_into`]: rows whose simulation-relevant
+    /// encodings are byte-identical are interchangeable for the
+    /// simulator; the searches collapse such candidates (one simulated
+    /// representative per class per prefix) and the parallel
+    /// transposition memo can only ever hit when a class has more than
+    /// one member, so all-distinct groups skip key building entirely.
+    /// Every class assignment is proven by full-key comparison — the
+    /// FNV hash is only a prefilter.
+    fn classify_rows(&mut self) {
         self.row_hash.clear();
         self.twin_class.clear();
         self.sig_off.clear();
@@ -517,6 +575,70 @@ mod tests {
             assert!((t.htd_secs(i) - 2.0 * h).abs() <= 1e-12 * h.abs());
             assert_eq!(t.dth_secs(i).to_bits(), plain.dth_secs(i).to_bits());
         }
+    }
+
+    #[test]
+    fn gather_matches_subset_compile_bitwise() {
+        let p = profile_by_name("xeon_phi").unwrap();
+        let g = synthetic_benchmark("BK75", &p, 1.0).unwrap();
+        let full = TaskTable::compile(&g.tasks, &p);
+        // A duplicated row so the sub-group has twins the full table's
+        // classes can't express with local indices.
+        let rows = [3usize, 1, 4, 1, 0];
+        let subset: Vec<TaskSpec> =
+            rows.iter().map(|&r| g.tasks[r].clone()).collect();
+        let reference = TaskTable::compile(&subset, &p);
+        let mut gathered = TaskTable::new();
+        gathered.gather_into(&full, &rows);
+        assert_eq!(gathered.len(), reference.len());
+        for i in 0..reference.len() {
+            assert_eq!(gathered.htd_bytes(i), reference.htd_bytes(i));
+            assert_eq!(gathered.dth_bytes(i), reference.dth_bytes(i));
+            assert_eq!(
+                gathered.kernel_secs(i).to_bits(),
+                reference.kernel_secs(i).to_bits()
+            );
+            assert_eq!(
+                gathered.htd_secs(i).to_bits(),
+                reference.htd_secs(i).to_bits()
+            );
+            assert_eq!(
+                gathered.dth_secs(i).to_bits(),
+                reference.dth_secs(i).to_bits()
+            );
+            assert_eq!(
+                gathered.k_minus_htd(i).to_bits(),
+                reference.k_minus_htd(i).to_bits()
+            );
+            assert_eq!(
+                gathered.sequential_secs(i).to_bits(),
+                reference.sequential_secs(i).to_bits()
+            );
+            assert_eq!(gathered.dominance(i), reference.dominance(i));
+            assert_eq!(gathered.twin_class(i), reference.twin_class(i));
+        }
+        assert_eq!(gathered.has_spec_twins(), reference.has_spec_twins());
+        assert!(gathered.has_spec_twins(), "row 1 was gathered twice");
+        assert_eq!(
+            gathered.total_htd_secs().to_bits(),
+            reference.total_htd_secs().to_bits()
+        );
+        assert_eq!(
+            gathered.total_kernel_secs().to_bits(),
+            reference.total_kernel_secs().to_bits()
+        );
+        assert_eq!(
+            gathered.total_dth_secs().to_bits(),
+            reference.total_dth_secs().to_bits()
+        );
+        assert_eq!(
+            gathered.min_kd_tail().to_bits(),
+            reference.min_kd_tail().to_bits()
+        );
+        // Empty gather leaves a valid empty table.
+        gathered.gather_into(&full, &[]);
+        assert!(gathered.is_empty());
+        assert_eq!(gathered.min_kd_tail(), 0.0);
     }
 
     #[test]

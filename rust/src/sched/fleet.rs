@@ -1,0 +1,451 @@
+//! Heterogeneous fleet scheduling: calibrated earliest-completion-time
+//! placement over per-device [`TaskTable`]s, scored through the bound-
+//! gated machinery of `sched::search_util` instead of a full
+//! `run_to_quiescence` probe per (task × device).
+//!
+//! This is the promotion of `sched::multidevice` to a first-class fleet
+//! scheduler (the old `schedule_multi` is now a thin wrapper over
+//! [`schedule_fleet`]). Two phases, as before:
+//!
+//! 1. **Placement** — tasks in descending max-solo-duration order (LPT);
+//!    each goes to the device whose simulated completion time grows the
+//!    least. Three prune mechanisms make the D-way scoring cheap while
+//!    provably never changing a decision (all markers carry a proof of
+//!    *strict* exclusion, and ties break first-device exactly as the
+//!    exact scan would):
+//!    * **floors** — `SimCursor::lower_bound_with_remaining` over the
+//!      candidate row's solo seconds, rejected via `provably_worse`
+//!      against the best exact completion seen so far this step;
+//!    * **bounded probes** — surviving candidates simulate under the
+//!      running best as an admissible early-exit cutoff;
+//!    * **twin collapse** — a device's exact score for row `i` is reused
+//!      for any later row of the same `TaskTable::twin_class` while
+//!      that device's prefix is unchanged (twin rows push byte-identical
+//!      command sequences, so the completion is bit-equal). Only *exact*
+//!      scores are memoised — `INFINITY` exclusion markers are
+//!      cutoff-dependent and never cached.
+//! 2. **Ordering** — each device's sublist is gathered into a sub-table
+//!    ([`TaskTable::gather_into`], no spec re-resolution) and reordered
+//!    by the bound-gated beam via `batch_reorder_table_into`.
+//!
+//! Per-device tables mean per-device twin classes, floors and — on the
+//! calibrated path ([`schedule_fleet_calibrated`]) — per-device
+//! `Calibrator` corrections: a task can be transfer-dominant on one
+//! device and kernel-dominant on another (the paper's Table 4 DCT/FWT
+//! flips), and measured drift is per *device*, not per fleet.
+//!
+//! [`steal_predicts_win`] is the cross-device work-stealing predicate
+//! used by `coordinator::fleet`: a thief accepts stolen work only when
+//! its own (calibrated) model proves a strict win over leaving the work
+//! where it is. Transfer cost needs no separate term — the stolen rows
+//! are compiled against the *thief's* profile, so the thief-side HtD/DtH
+//! seconds (its own links, its own calibrated rates) are already in the
+//! completion time being compared.
+
+use crate::config::DeviceProfile;
+use crate::model::calibrate::CalibratedProfile;
+use crate::model::simulator::{simulate_order_compiled, SimCursor};
+use crate::model::{EngineState, SimOptions, TaskTable};
+use crate::sched::heuristic::{batch_reorder_table_into, BeamScratch, DEFAULT_BEAM_WIDTH};
+use crate::sched::search_util::{bounded_append_score, provably_worse, PruneCounters};
+use crate::task::TaskSpec;
+
+/// Knobs for [`schedule_fleet`].
+#[derive(Clone, Copy, Debug)]
+pub struct FleetOptions {
+    /// Beam width for the per-device ordering phase.
+    pub width: usize,
+    /// Bound-gated placement (floors, bounded probes, twin collapse).
+    /// Decisions are bit-identical either way (prop_fleet.rs); off keeps
+    /// the exact full-probe scan for reference and debugging.
+    pub prune: bool,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions { width: DEFAULT_BEAM_WIDTH, prune: true }
+    }
+}
+
+/// A complete fleet schedule.
+#[derive(Clone, Debug)]
+pub struct FleetSchedule {
+    /// `assignment[i]` = device index for task `i`.
+    pub assignment: Vec<usize>,
+    /// Per-device submission order (indices into the original task slice).
+    pub orders: Vec<Vec<usize>>,
+    /// Predicted makespan per device.
+    pub device_makespans: Vec<f64>,
+    /// Placement + per-device beam pruning counters (placement floor
+    /// rejections and early-exited probes land in `n_cands_pruned` /
+    /// `n_rollouts_early_exit`; cross-device twin reuse in
+    /// `n_twin_collapsed`).
+    pub prune: PruneCounters,
+}
+
+impl FleetSchedule {
+    /// Predicted group makespan (max over devices).
+    pub fn makespan(&self) -> f64 {
+        self.device_makespans.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Schedule `tasks` across `profiles` (one entry per device), each
+/// device planning with its plain (uncalibrated) profile.
+///
+/// Panics if `profiles` is empty — same contract as
+/// `sched::multidevice::schedule_multi` / `round_robin`.
+pub fn schedule_fleet(
+    tasks: &[TaskSpec],
+    profiles: &[DeviceProfile],
+    opts: &FleetOptions,
+) -> FleetSchedule {
+    assert!(!profiles.is_empty(), "need at least one device");
+    let tables: Vec<TaskTable> =
+        profiles.iter().map(|p| TaskTable::compile(tasks, p)).collect();
+    let inits = vec![EngineState::default(); profiles.len()];
+    schedule_fleet_tables(tasks.len(), &tables, &inits, opts)
+}
+
+/// [`schedule_fleet`] with per-device *calibrated* planning models: each
+/// device's table compiles through its own `CalibratedProfile`, so
+/// placement compares corrected completion times across the fleet.
+pub fn schedule_fleet_calibrated(
+    tasks: &[TaskSpec],
+    cals: &[CalibratedProfile],
+    opts: &FleetOptions,
+) -> FleetSchedule {
+    assert!(!cals.is_empty(), "need at least one device");
+    let tables: Vec<TaskTable> = cals
+        .iter()
+        .map(|c| {
+            let mut t = TaskTable::new();
+            t.compile_calibrated_into(tasks, c);
+            t
+        })
+        .collect();
+    let inits = vec![EngineState::default(); cals.len()];
+    schedule_fleet_tables(tasks.len(), &tables, &inits, opts)
+}
+
+/// Core fleet scheduler over pre-compiled per-device tables and initial
+/// engine states (one per device — a device may already be busy). All
+/// `n` tasks must be rows `0..n` of every table. Public so property
+/// tests can drive it with randomized busy-device states.
+pub fn schedule_fleet_tables(
+    n: usize,
+    tables: &[TaskTable],
+    inits: &[EngineState],
+    opts: &FleetOptions,
+) -> FleetSchedule {
+    assert!(!tables.is_empty(), "need at least one device");
+    assert_eq!(tables.len(), inits.len(), "one init state per device");
+    let d = tables.len();
+
+    // Phase 1: LPT-style greedy placement by simulated completion time
+    // (max solo duration across devices as the LPT key; total_cmp so a
+    // NaN cannot panic).
+    let mut by_size: Vec<usize> = (0..n).collect();
+    by_size.sort_by(|&a, &b| {
+        let dur = |i: usize| -> f64 {
+            tables.iter().map(|t| t.sequential_secs(i)).fold(0.0, f64::max)
+        };
+        dur(b).total_cmp(&dur(a))
+    });
+
+    let mut counters = PruneCounters::default();
+    let mut lists: Vec<Vec<usize>> = vec![Vec::new(); d];
+    let mut device_cursors: Vec<SimCursor> = tables
+        .iter()
+        .zip(inits)
+        .map(|(t, &init)| {
+            let mut c = SimCursor::detached();
+            c.reset_for_table(t, init);
+            c
+        })
+        .collect();
+    let mut probe = SimCursor::detached();
+    // Per-device twin memo: (twin class, tasks placed on the device when
+    // the score was computed, exact completion). Valid only while the
+    // device's prefix is unchanged; never holds an exclusion marker.
+    let mut memo: Vec<Option<(u32, usize, f64)>> = vec![None; d];
+    for &i in &by_size {
+        let mut best_dev = 0;
+        let mut best_time = f64::INFINITY;
+        for dev in 0..d {
+            let t = if opts.prune {
+                let class = tables[dev].twin_class(i);
+                match memo[dev] {
+                    Some((c, placed, s))
+                        if c == class && placed == lists[dev].len() =>
+                    {
+                        counters.n_twin_collapsed += 1;
+                        s
+                    }
+                    _ => {
+                        let s = bounded_append_score(
+                            &mut probe,
+                            &device_cursors[dev],
+                            &tables[dev],
+                            i,
+                            best_time,
+                            true,
+                            &mut counters,
+                        );
+                        if s.is_finite() {
+                            memo[dev] = Some((class, lists[dev].len(), s));
+                        }
+                        s
+                    }
+                }
+            } else {
+                bounded_append_score(
+                    &mut probe,
+                    &device_cursors[dev],
+                    &tables[dev],
+                    i,
+                    f64::INFINITY,
+                    false,
+                    &mut counters,
+                )
+            };
+            // total_cmp, not `<`: a NaN completion time from a degenerate
+            // profile must lose the placement race, never win it (and the
+            // INFINITY exclusion markers sort after every exact score).
+            if t.total_cmp(&best_time).is_lt() {
+                best_time = t;
+                best_dev = dev;
+            }
+        }
+        device_cursors[best_dev].push_task_compiled(&tables[best_dev], i);
+        lists[best_dev].push(i);
+        memo[best_dev] = None;
+    }
+
+    // Phase 2: per-device bound-gated beam reordering over gathered
+    // sub-tables — no TaskSpec re-resolution, one scratch for the fleet.
+    let mut orders = Vec::with_capacity(d);
+    let mut device_makespans = Vec::with_capacity(d);
+    let mut assignment = vec![0usize; n];
+    let mut sub = TaskTable::new();
+    let mut scratch = BeamScratch::with_pruning(opts.prune);
+    let mut local: Vec<usize> = Vec::new();
+    for (dev, list) in lists.iter().enumerate() {
+        for &i in list {
+            assignment[i] = dev;
+        }
+        sub.gather_into(&tables[dev], list);
+        local.clear();
+        batch_reorder_table_into(&sub, inits[dev], opts.width, &mut scratch, &mut local);
+        let order: Vec<usize> = local.iter().map(|&j| list[j]).collect();
+        let m = simulate_order_compiled(&sub, &local, inits[dev], SimOptions::default())
+            .makespan;
+        orders.push(order);
+        device_makespans.push(m);
+    }
+    counters.merge(&scratch.prune_counters());
+    FleetSchedule { assignment, orders, device_makespans, prune: counters }
+}
+
+/// Cross-device steal predicate: would moving `rows` of `thief_table`
+/// (the stolen tasks compiled against the *thief's* calibrated profile)
+/// onto the thief's frontier finish strictly before `victim_remaining`
+/// (the victim's predicted remaining seconds for that work, on the
+/// thief's clock)?
+///
+/// One-sided soundness — pinned in prop_fleet.rs: `true` implies the
+/// thief's *exact* completion of the stolen rows is strictly below
+/// `victim_remaining`. `false` makes no claim (the floor rejection and
+/// the bounded probe may be conservative), which is the right polarity
+/// for stealing: a rejected steal only costs idle time, a wrongly
+/// accepted one costs makespan. A NaN on either side rejects the steal:
+/// `provably_worse` never fires on NaN, and the final comparison is a
+/// plain `<` — false on NaN — rather than `total_cmp` (which would sort
+/// a NaN budget *above* every exact score and wrongly accept).
+///
+/// Transfer cost enters through `thief_table` itself: the rows carry the
+/// thief's own HtD/DtH link seconds (calibrated), so the comparison is
+/// net of moving the task's bytes over the thief's links.
+pub fn steal_predicts_win(
+    probe: &mut SimCursor,
+    thief_frontier: &SimCursor,
+    thief_table: &TaskTable,
+    rows: &[usize],
+    victim_remaining: f64,
+    counters: &mut PruneCounters,
+) -> bool {
+    let (mut rem_htd, mut rem_k, mut rem_dth) = (0.0f64, 0.0f64, 0.0f64);
+    for &r in rows {
+        rem_htd += thief_table.htd_secs(r);
+        rem_k += thief_table.kernel_secs(r);
+        rem_dth += thief_table.dth_secs(r);
+    }
+    let bound = thief_frontier.lower_bound_with_remaining(rem_htd, rem_k, rem_dth);
+    if provably_worse(bound, victim_remaining) {
+        counters.n_cands_pruned += 1;
+        return false;
+    }
+    probe.resume_from(thief_frontier);
+    for &r in rows {
+        probe.push_task_compiled(thief_table, r);
+        if probe.clock() > victim_remaining {
+            counters.n_rollouts_early_exit += 1;
+            return false;
+        }
+    }
+    match probe.run_to_quiescence_bounded(victim_remaining) {
+        // Plain `<`: strict win required, and false on a NaN budget.
+        Some(t) => t < victim_remaining,
+        None => {
+            counters.n_rollouts_early_exit += 1;
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::task::real::real_benchmark;
+    use crate::task::synthetic::synthetic_benchmark;
+    use crate::util::rng::Pcg64;
+
+    fn het3() -> Vec<DeviceProfile> {
+        vec![
+            profile_by_name("amd_r9").unwrap(),
+            profile_by_name("xeon_phi").unwrap(),
+            profile_by_name("k20c").unwrap(),
+        ]
+    }
+
+    #[test]
+    fn covers_every_task_exactly_once() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut rng = Pcg64::seeded(11);
+        let g = real_benchmark("BK50", "amd_r9", &p, 12, &mut rng, 1.0).unwrap();
+        let s = schedule_fleet(&g.tasks, &het3(), &FleetOptions::default());
+        let mut seen: Vec<usize> = s.orders.concat();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..12).collect::<Vec<_>>());
+        for (dev, order) in s.orders.iter().enumerate() {
+            for &i in order {
+                assert_eq!(s.assignment[i], dev);
+            }
+        }
+    }
+
+    #[test]
+    fn prune_counters_fire_on_heterogeneous_fleet() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let g = real_benchmark("BK50", "amd_r9", &p, 16, &mut rng, 1.0).unwrap();
+        let s = schedule_fleet(&g.tasks, &het3(), &FleetOptions::default());
+        assert!(
+            s.prune.total_saved() > 0,
+            "16 tasks × 3 devices must prune or collapse something: {:?}",
+            s.prune
+        );
+    }
+
+    #[test]
+    fn pruning_never_changes_the_schedule() {
+        let p = profile_by_name("amd_r9").unwrap();
+        for seed in [1u64, 7, 42] {
+            let mut rng = Pcg64::seeded(seed);
+            let g = real_benchmark("BK50", "amd_r9", &p, 10, &mut rng, 1.0).unwrap();
+            let on = schedule_fleet(
+                &g.tasks,
+                &het3(),
+                &FleetOptions { prune: true, ..FleetOptions::default() },
+            );
+            let off = schedule_fleet(
+                &g.tasks,
+                &het3(),
+                &FleetOptions { prune: false, ..FleetOptions::default() },
+            );
+            assert_eq!(on.assignment, off.assignment, "seed {seed}");
+            assert_eq!(on.orders, off.orders, "seed {seed}");
+            for (a, b) in on.device_makespans.iter().zip(&off.device_makespans) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibrated_placement_reacts_to_corrections() {
+        use crate::model::calibrate::Corrections;
+        // Two identical devices; calibration says device 1's links are
+        // actually 4x slower. Placement must shift load to device 0.
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let mut tasks = g.tasks.clone();
+        tasks.extend(g.tasks.clone());
+        let cals = vec![
+            CalibratedProfile::identity(&p),
+            CalibratedProfile::new(&p, Corrections { htd: 4.0, k: 4.0, dth: 4.0 }),
+        ];
+        let s = schedule_fleet_calibrated(&tasks, &cals, &FleetOptions::default());
+        assert!(
+            s.orders[0].len() > s.orders[1].len(),
+            "calibration must shift load off the slow device: {:?}",
+            s.orders.iter().map(Vec::len).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn steal_predicate_is_one_sided() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let table = TaskTable::compile(&g.tasks, &p);
+        let mut frontier = SimCursor::detached();
+        frontier.reset_for_table(&table, EngineState::default());
+        let mut probe = SimCursor::detached();
+        let mut exact = SimCursor::detached();
+        let mut counters = PruneCounters::default();
+        for rows in [&[0usize][..], &[0, 1][..], &[2, 3, 1][..]] {
+            // Exact thief completion for these rows.
+            exact.resume_from(&frontier);
+            for &r in rows {
+                exact.push_task_compiled(&table, r);
+            }
+            let t_exact = exact.run_to_quiescence();
+            // Nothing wins against zero remaining work.
+            assert!(!steal_predicts_win(
+                &mut probe, &frontier, &table, rows, 0.0, &mut counters
+            ));
+            // A generous budget is accepted, and acceptance implies the
+            // exact completion beats it.
+            let generous = t_exact * 2.0;
+            assert!(steal_predicts_win(
+                &mut probe, &frontier, &table, rows, generous, &mut counters
+            ));
+            assert!(t_exact < generous);
+            // Just below the exact completion must reject.
+            assert!(!steal_predicts_win(
+                &mut probe,
+                &frontier,
+                &table,
+                rows,
+                t_exact * (1.0 - 1e-6),
+                &mut counters
+            ));
+            // NaN budget rejects.
+            assert!(!steal_predicts_win(
+                &mut probe,
+                &frontier,
+                &table,
+                rows,
+                f64::NAN,
+                &mut counters
+            ));
+        }
+        assert!(counters.n_cands_pruned + counters.n_rollouts_early_exit > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "need at least one device")]
+    fn empty_fleet_panics() {
+        schedule_fleet(&[], &[], &FleetOptions::default());
+    }
+}

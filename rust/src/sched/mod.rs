@@ -17,6 +17,13 @@
 //!   bounded rollouts, spec-twin collapse) they all consult — provably
 //!   result-invariant, so every search stays bit-identical with pruning
 //!   on or off.
+//! * `fleet` — heterogeneous multi-device scheduling: calibrated
+//!   earliest-completion-time placement over per-device `TaskTable`s,
+//!   scored through the bound-gated layer (floors, bounded probes,
+//!   cross-device twin collapse — bit-identical with pruning on or off),
+//!   plus the calibrated cross-device steal predicate.
+//! * `multidevice` — the stable `MultiSchedule` surface (now a wrapper
+//!   over `fleet`) and the `round_robin` baseline.
 //! * `bruteforce` — exhaustive / sampled permutation evaluation (the
 //!   NoReorder experimental setup of §6.2).
 //! * `baselines` — classic orderings (FIFO, random, SJF, LPT-kernel,
@@ -24,6 +31,7 @@
 
 pub mod baselines;
 pub mod bruteforce;
+pub mod fleet;
 pub mod heuristic;
 pub mod multidevice;
 pub mod online;
@@ -31,10 +39,14 @@ pub mod parallel;
 pub mod search_util;
 
 pub use bruteforce::{permutations, OrderStats};
+pub use fleet::{
+    schedule_fleet, schedule_fleet_calibrated, schedule_fleet_tables,
+    steal_predicts_win, FleetOptions, FleetSchedule,
+};
 pub use heuristic::{
     batch_reorder, batch_reorder_beam_into, batch_reorder_table_into, BeamScratch,
 };
-pub use multidevice::{schedule_multi, MultiSchedule};
+pub use multidevice::{round_robin, schedule_multi, MultiSchedule};
 pub use online::{replan_into, DriftGate, OnlineOptions, OnlineScratch, Replan};
 pub use parallel::{
     batch_reorder_beam_parallel_into, batch_reorder_table_parallel_into,

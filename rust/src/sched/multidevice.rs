@@ -2,24 +2,21 @@
 //! plan to integrate our heuristic and execution model in a multi-GPU
 //! architecture"), built on the same temporal model.
 //!
-//! Two-phase schedule for a task group over D (possibly heterogeneous)
-//! devices:
-//!
-//! 1. **Placement** — greedy earliest-completion-time: tasks are taken in
-//!    descending solo-duration order (LPT, the classic makespan
-//!    guarantee) and each goes to the device whose *simulated* completion
-//!    time grows the least, using each device's own profile (a task can
-//!    be transfer-dominant on one device and kernel-dominant on another —
-//!    Table 4's DCT/FWT flips — so placement must be model-driven).
-//! 2. **Ordering** — each device's sublist is reordered with the Batch
-//!    Reordering heuristic.
+//! [`schedule_multi`] is now a thin wrapper over the fleet scheduler
+//! ([`crate::sched::fleet::schedule_fleet`]): same two-phase shape
+//! (earliest-completion-time LPT placement, then per-device Batch
+//! Reordering), with placement scored through the bound-gated pruning
+//! layer instead of a full probe per (task × device) — decisions are
+//! bit-identical (see `sched::fleet` and rust/tests/prop_fleet.rs).
+//! This module keeps the stable `MultiSchedule` surface and the
+//! [`round_robin`] baseline.
 //!
 //! The group makespan is the max over devices.
 
 use crate::config::DeviceProfile;
-use crate::model::simulator::{simulate_order, simulate_order_compiled, SimCursor};
-use crate::model::{EngineState, SimOptions, TaskTable};
-use crate::sched::heuristic::batch_reorder;
+use crate::model::simulator::simulate_order;
+use crate::model::{EngineState, SimOptions};
+use crate::sched::fleet::{schedule_fleet, FleetOptions};
 use crate::task::TaskSpec;
 
 /// A complete multi-device schedule.
@@ -41,87 +38,26 @@ impl MultiSchedule {
 }
 
 /// Schedule `tasks` across `profiles` (one entry per device).
+///
+/// Panics if `profiles` is empty ("need at least one device") — the same
+/// documented contract as [`round_robin`].
 pub fn schedule_multi(tasks: &[TaskSpec], profiles: &[DeviceProfile]) -> MultiSchedule {
-    assert!(!profiles.is_empty(), "need at least one device");
-    let n = tasks.len();
-    let d = profiles.len();
-
-    // Compile the whole group once per device: placement scoring and the
-    // final makespan checks all run over SoA rows (a task's bytes/kernel
-    // row is read D times per placement step — the table makes those
-    // reads contiguous and profile-resolved).
-    let tables: Vec<TaskTable> =
-        profiles.iter().map(|p| TaskTable::compile(tasks, p)).collect();
-
-    // Phase 1: LPT-style greedy placement by simulated completion time.
-    let mut by_size: Vec<usize> = (0..n).collect();
-    by_size.sort_by(|&a, &b| {
-        // Use the max solo duration across devices as the LPT key
-        // (precomputed per table; total_cmp so a NaN cannot panic).
-        let dur = |i: usize| -> f64 {
-            tables
-                .iter()
-                .map(|t| t.sequential_secs(i))
-                .fold(0.0, f64::max)
-        };
-        dur(b).total_cmp(&dur(a))
-    });
-    // Each device keeps a paused SimCursor over its assigned sublist;
-    // scoring "append task i to device dev" is resume + push + finish on
-    // a probe cursor instead of re-simulating the whole sublist from
-    // scratch — O(n) incremental placement work per device instead of the
-    // old O(n^2) full replays, and no allocation once probes are warm.
-    let mut lists: Vec<Vec<usize>> = vec![Vec::new(); d];
-    let mut device_cursors: Vec<SimCursor> = profiles
-        .iter()
-        .map(|p| SimCursor::new(p, EngineState::default()))
-        .collect();
-    let mut probe = SimCursor::detached();
-    for &i in &by_size {
-        let mut best_dev = 0;
-        let mut best_time = f64::INFINITY;
-        for dev in 0..d {
-            probe.resume_from(&device_cursors[dev]);
-            probe.push_task_compiled(&tables[dev], i);
-            let t = probe.run_to_quiescence();
-            // total_cmp, not `<`: a NaN completion time from a degenerate
-            // profile must lose the placement race, never win it by
-            // making every comparison false.
-            if t.total_cmp(&best_time).is_lt() {
-                best_time = t;
-                best_dev = dev;
-            }
-        }
-        device_cursors[best_dev].push_task_compiled(&tables[best_dev], i);
-        lists[best_dev].push(i);
+    let f = schedule_fleet(tasks, profiles, &FleetOptions::default());
+    MultiSchedule {
+        assignment: f.assignment,
+        orders: f.orders,
+        device_makespans: f.device_makespans,
     }
-
-    // Phase 2: per-device Batch Reordering.
-    let mut orders = Vec::with_capacity(d);
-    let mut device_makespans = Vec::with_capacity(d);
-    let mut assignment = vec![0usize; n];
-    for (dev, list) in lists.iter().enumerate() {
-        for &i in list {
-            assignment[i] = dev;
-        }
-        let sub: Vec<TaskSpec> = list.iter().map(|&i| tasks[i].clone()).collect();
-        let local = batch_reorder(&sub, &profiles[dev], EngineState::default());
-        let order: Vec<usize> = local.iter().map(|&j| list[j]).collect();
-        let m = simulate_order_compiled(
-            &tables[dev],
-            &order,
-            EngineState::default(),
-            SimOptions::default(),
-        )
-        .makespan;
-        orders.push(order);
-        device_makespans.push(m);
-    }
-    MultiSchedule { assignment, orders, device_makespans }
 }
 
 /// Baseline: round-robin placement, arrival order per device.
+///
+/// Panics if `profiles` is empty ("need at least one device") — the
+/// modulo routing would otherwise divide by zero; this is the same
+/// contract as [`schedule_multi`], asserted instead of left to the
+/// arithmetic panic.
 pub fn round_robin(tasks: &[TaskSpec], profiles: &[DeviceProfile]) -> MultiSchedule {
+    assert!(!profiles.is_empty(), "need at least one device");
     let d = profiles.len();
     let mut orders: Vec<Vec<usize>> = vec![Vec::new(); d];
     let mut assignment = vec![0usize; tasks.len()];
@@ -230,5 +166,38 @@ mod tests {
         let s = schedule_multi(&[], &two_r9());
         assert_eq!(s.makespan(), 0.0);
         assert!(s.orders.iter().all(|o| o.is_empty()));
+    }
+
+    #[test]
+    #[should_panic(expected = "need at least one device")]
+    fn round_robin_empty_profiles_panics() {
+        // Regression: used to reach `i % 0` on a non-empty task list.
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK25", &p, 1.0).unwrap();
+        round_robin(&g.tasks, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "need at least one device")]
+    fn schedule_multi_empty_profiles_panics() {
+        schedule_multi(&[], &[]);
+    }
+
+    #[test]
+    fn wrapper_matches_fleet_bitwise() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut rng = Pcg64::seeded(9);
+        let g = real_benchmark("BK50", "amd_r9", &p, 9, &mut rng, 1.0).unwrap();
+        let profiles = vec![
+            profile_by_name("amd_r9").unwrap(),
+            profile_by_name("xeon_phi").unwrap(),
+        ];
+        let m = schedule_multi(&g.tasks, &profiles);
+        let f = schedule_fleet(&g.tasks, &profiles, &FleetOptions::default());
+        assert_eq!(m.assignment, f.assignment);
+        assert_eq!(m.orders, f.orders);
+        for (a, b) in m.device_makespans.iter().zip(&f.device_makespans) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

@@ -160,6 +160,16 @@ impl DriftGate {
         self.ewma.unwrap_or(f64::INFINITY)
     }
 
+    /// Forget the smoothed drift (back to the pre-first-observation
+    /// state) while keeping the considered/fired counters. The fleet
+    /// coordinator calls this when a device is quarantined: whatever the
+    /// EWMA had learned described the device *before* it went bad, and a
+    /// recovered device should re-plan eagerly rather than coast on a
+    /// stale low-drift reading.
+    pub fn reset_drift(&mut self) {
+        self.ewma = None;
+    }
+
     /// Consult the gate for one changed suffix whose incumbent was
     /// already beam-planned. Counts the consultation and, when admitted,
     /// the firing.
@@ -855,5 +865,18 @@ mod tests {
         }
         assert!(g.drift() < 0.2, "gate recovered: {}", g.drift());
         assert!(!g.should_replan());
+    }
+
+    #[test]
+    fn drift_gate_reset_forgets_ewma_keeps_counters() {
+        let mut g = DriftGate::new(0.2);
+        g.observe(1.0, 1.0);
+        assert!(!g.should_replan());
+        let counts = g.counts();
+        // Quarantine recovery path: the learned (low) drift is stale.
+        g.reset_drift();
+        assert!(g.drift().is_infinite(), "back to the unmeasured state");
+        assert!(g.should_replan(), "recovered device re-plans eagerly");
+        assert_eq!(g.counts(), (counts.0 + 1, counts.1 + 1));
     }
 }

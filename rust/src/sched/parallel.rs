@@ -47,6 +47,12 @@
 //! `ParBeamScratch::prune_counters` into `LaneStats` and the
 //! BENCH_*.json trajectories.
 //!
+//! The same bound-gated scorer (`search_util::bounded_append_score`)
+//! also drives the fleet layer's cross-device placement scans
+//! (`sched::fleet`, `coordinator::fleet`), so placement decisions share
+//! the bit-exactness guarantee: pruned and unpruned fleets place every
+//! task on the same device (rust/tests/prop_fleet.rs).
+//!
 //! # Determinism
 //!
 //! Work is partitioned by candidate index (stride = stripe count), every

@@ -422,6 +422,50 @@ pub(crate) fn score_candidate_bounded(
     probe.run_to_quiescence_bounded(cutoff)
 }
 
+/// Bound-gated single-append completion score, shared by the fleet
+/// placement loop (`sched::fleet`) and the fleet coordinator's
+/// earliest-completion-time scoring: extend the paused `prefix` by table
+/// row `row` alone and finish. With `prune` on, the candidate is first
+/// rejected by its admissible floor (`lower_bound_with_remaining` over
+/// the single row's solo seconds, via `provably_worse` — so NaN never
+/// admits a prune), then simulated under `cutoff` with admissible early
+/// exit. Returns the exact completion time, or the `f64::INFINITY`
+/// exclusion marker with a proof that the exact score strictly exceeds
+/// `cutoff` — which is why fleet placement decisions are bit-identical
+/// with pruning on or off. With `prune` off the simulation runs
+/// unbounded (a NaN cutoff never aborts) and the result is exact.
+pub(crate) fn bounded_append_score(
+    probe: &mut SimCursor,
+    prefix: &SimCursor,
+    table: &TaskTable,
+    row: usize,
+    cutoff: f64,
+    prune: bool,
+    counters: &mut PruneCounters,
+) -> f64 {
+    if prune {
+        let bound = prefix.lower_bound_with_remaining(
+            table.htd_secs(row),
+            table.kernel_secs(row),
+            table.dth_secs(row),
+        );
+        if provably_worse(bound, cutoff) {
+            counters.n_cands_pruned += 1;
+            return f64::INFINITY;
+        }
+    }
+    probe.resume_from(prefix);
+    probe.push_task_compiled(table, row);
+    let thr = if prune { cutoff } else { f64::NAN };
+    match probe.run_to_quiescence_bounded(thr) {
+        Some(t) => t,
+        None => {
+            counters.n_rollouts_early_exit += 1;
+            f64::INFINITY
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

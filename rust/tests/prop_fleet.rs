@@ -1,0 +1,388 @@
+//! Properties of the heterogeneous fleet layer (seeded-random harness,
+//! like prop_bounds.rs: every failure prints the generating seed).
+//!
+//! Pins the fleet scheduler and coordinator to exactness:
+//!
+//! * `schedule_fleet` (pruned and unpruned) matches an independently
+//!   coded reference — LPT placement by full from-scratch per-device
+//!   probes, then per-device beam ordering — **bit for bit** on
+//!   assignment, orders and device makespans;
+//! * pruned and unpruned placement make identical decisions across all
+//!   three device profiles and random busy-device initial states, and
+//!   the placement pruning layer actually fires somewhere over the run;
+//! * `steal_predicts_win` is one-sided: `true` implies the thief's
+//!   *exact* completion of the stolen rows beats the victim's budget
+//!   strictly (a steal never makes the fleet later);
+//! * the fleet coordinator loses no task (and duplicates none) when a
+//!   device faults persistently and quarantines mid-run — the healthy
+//!   sibling rescues the shed backlog through health-aware stealing;
+//! * a single-device fleet with a strictly serial submitter degenerates
+//!   to the sequential online pipeline: one group per task, each group
+//!   makespan bit-identical to the solo model prediction.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oclcc::config::{profile_by_name, DeviceProfile};
+use oclcc::coordinator::recovery::{
+    BlacklistAfterN, QuarantineOptions, RecoveryOptions,
+};
+use oclcc::coordinator::{FleetCoordOptions, FleetCoordinator};
+use oclcc::device::{ChaosDevice, ChaosOptions, Device, SimDevice};
+use oclcc::model::simulator::{simulate_order_compiled, SimCursor, SimOptions};
+use oclcc::model::{EngineState, TaskTable};
+use oclcc::sched::fleet::{
+    schedule_fleet_tables, steal_predicts_win, FleetOptions, FleetSchedule,
+};
+use oclcc::sched::heuristic::{batch_reorder_table_into, BeamScratch};
+use oclcc::sched::search_util::PruneCounters;
+use oclcc::task::{KernelSpec, TaskSpec};
+use oclcc::util::rng::Pcg64;
+
+const CASES: u64 = 16;
+
+fn profiles() -> Vec<DeviceProfile> {
+    vec![
+        profile_by_name("amd_r9").unwrap(),
+        profile_by_name("xeon_phi").unwrap(),
+        profile_by_name("k20c").unwrap(),
+    ]
+}
+
+/// Random task group, twin-rich so the placement memo engages (same
+/// generator shape as prop_bounds.rs).
+fn random_group(rng: &mut Pcg64) -> Vec<TaskSpec> {
+    let n = 2 + rng.below(10) as usize;
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && rng.below(2) == 0 {
+            let src = rng.below(i as u64) as usize;
+            let mut dup = tasks[src].clone();
+            dup.name = format!("t{i}");
+            tasks.push(dup);
+            continue;
+        }
+        let n_htd = rng.below(3) as usize;
+        let n_dth = rng.below(3) as usize;
+        let htd: Vec<u64> =
+            (0..n_htd).map(|_| rng.below(30_000_000) + 10_000).collect();
+        let dth: Vec<u64> =
+            (0..n_dth).map(|_| rng.below(30_000_000) + 10_000).collect();
+        tasks.push(TaskSpec {
+            name: format!("t{i}"),
+            htd_bytes: htd,
+            kernel: KernelSpec::Timed { secs: rng.uniform(0.05e-3, 10e-3) },
+            dth_bytes: dth,
+        });
+    }
+    tasks
+}
+
+fn random_init(rng: &mut Pcg64) -> EngineState {
+    EngineState {
+        htd_free: rng.uniform(0.0, 4e-3),
+        k_free: rng.uniform(0.0, 4e-3),
+        dth_free: rng.uniform(0.0, 4e-3),
+    }
+}
+
+/// Independently coded reference fleet scheduler: LPT placement scored
+/// by **full** from-scratch `run_to_quiescence` probes per
+/// (task × device) — the quadratic scan the bound-gated production path
+/// replaces — then the same per-device beam phase.
+fn reference_fleet(
+    n: usize,
+    tables: &[TaskTable],
+    inits: &[EngineState],
+    width: usize,
+) -> FleetSchedule {
+    let d = tables.len();
+    let mut by_size: Vec<usize> = (0..n).collect();
+    by_size.sort_by(|&a, &b| {
+        let dur = |i: usize| -> f64 {
+            tables.iter().map(|t| t.sequential_secs(i)).fold(0.0, f64::max)
+        };
+        dur(b).total_cmp(&dur(a))
+    });
+    let mut lists: Vec<Vec<usize>> = vec![Vec::new(); d];
+    for &i in &by_size {
+        let mut best_dev = 0;
+        let mut best_time = f64::INFINITY;
+        for dev in 0..d {
+            // From scratch: replay the device's whole current list plus
+            // the candidate on a fresh cursor.
+            let mut probe = SimCursor::detached();
+            probe.reset_for_table(&tables[dev], inits[dev]);
+            for &j in &lists[dev] {
+                probe.push_task_compiled(&tables[dev], j);
+            }
+            probe.push_task_compiled(&tables[dev], i);
+            let t = probe.run_to_quiescence();
+            if t.total_cmp(&best_time).is_lt() {
+                best_time = t;
+                best_dev = dev;
+            }
+        }
+        lists[best_dev].push(i);
+    }
+    let mut orders = Vec::with_capacity(d);
+    let mut device_makespans = Vec::with_capacity(d);
+    let mut assignment = vec![0usize; n];
+    let mut sub = TaskTable::new();
+    let mut scratch = BeamScratch::with_pruning(false);
+    let mut local: Vec<usize> = Vec::new();
+    for (dev, list) in lists.iter().enumerate() {
+        for &i in list {
+            assignment[i] = dev;
+        }
+        sub.gather_into(&tables[dev], list);
+        local.clear();
+        batch_reorder_table_into(&sub, inits[dev], width, &mut scratch, &mut local);
+        orders.push(local.iter().map(|&j| list[j]).collect());
+        device_makespans.push(
+            simulate_order_compiled(&sub, &local, inits[dev], SimOptions::default())
+                .makespan,
+        );
+    }
+    FleetSchedule {
+        assignment,
+        orders,
+        device_makespans,
+        prune: PruneCounters::default(),
+    }
+}
+
+#[test]
+fn fleet_matches_reference_full_probes_bit_for_bit() {
+    let profs = profiles();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xf1ee7_0000 + seed);
+        let tasks = random_group(&mut rng);
+        let tables: Vec<TaskTable> =
+            profs.iter().map(|p| TaskTable::compile(&tasks, p)).collect();
+        let inits: Vec<EngineState> =
+            (0..profs.len()).map(|_| random_init(&mut rng)).collect();
+        let reference = reference_fleet(tasks.len(), &tables, &inits, 3);
+        for prune in [false, true] {
+            let got = schedule_fleet_tables(
+                tasks.len(),
+                &tables,
+                &inits,
+                &FleetOptions { width: 3, prune },
+            );
+            assert_eq!(
+                got.assignment, reference.assignment,
+                "seed {seed} prune {prune}: placement diverged"
+            );
+            assert_eq!(
+                got.orders, reference.orders,
+                "seed {seed} prune {prune}: device orders diverged"
+            );
+            for (a, b) in
+                got.device_makespans.iter().zip(&reference.device_makespans)
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed} prune {prune}: makespan not bitwise equal"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_and_unpruned_placement_decide_identically_and_pruning_fires() {
+    let profs = profiles();
+    let mut total = PruneCounters::default();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xbeef_0000 + seed);
+        let tasks = random_group(&mut rng);
+        let tables: Vec<TaskTable> =
+            profs.iter().map(|p| TaskTable::compile(&tasks, p)).collect();
+        let inits: Vec<EngineState> =
+            (0..profs.len()).map(|_| random_init(&mut rng)).collect();
+        let on = schedule_fleet_tables(
+            tasks.len(),
+            &tables,
+            &inits,
+            &FleetOptions { width: 3, prune: true },
+        );
+        let off = schedule_fleet_tables(
+            tasks.len(),
+            &tables,
+            &inits,
+            &FleetOptions { width: 3, prune: false },
+        );
+        assert_eq!(on.assignment, off.assignment, "seed {seed}");
+        assert_eq!(on.orders, off.orders, "seed {seed}");
+        for (a, b) in on.device_makespans.iter().zip(&off.device_makespans) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+        assert_eq!(off.prune.total_saved(), 0, "seed {seed}: off still pruned");
+        total.merge(&on.prune);
+    }
+    assert!(
+        total.total_saved() > 0,
+        "placement pruning never fired over {CASES} twin-rich cases: {total:?}"
+    );
+}
+
+#[test]
+fn steal_prediction_never_overclaims() {
+    let profs = profiles();
+    let mut accepts = 0usize;
+    let mut rejects = 0usize;
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x57ea1_0000 + seed);
+        let backlog = random_group(&mut rng);
+        let loot = random_group(&mut rng);
+        for p in &profs {
+            // Warm thief: a committed prefix already on its cursor.
+            let warm = TaskTable::compile(&backlog, p);
+            let mut frontier = SimCursor::detached();
+            frontier.reset_for_table(&warm, random_init(&mut rng));
+            for j in 0..backlog.len().min(3) {
+                frontier.push_task_compiled(&warm, j);
+            }
+            let thief_table = TaskTable::compile(&loot, p);
+            // NOTE: pushing rows of `thief_table` onto a cursor seeded
+            // from `warm` is valid because both compiled against the
+            // same profile (same `ProfileParams` generation).
+            let rows: Vec<usize> = (0..loot.len()).collect();
+            // Exact completion of the move, unbounded — the ground truth
+            // the predicate must never overclaim against.
+            let mut exact = SimCursor::detached();
+            exact.resume_from(&frontier);
+            for &r in &rows {
+                exact.push_task_compiled(&thief_table, r);
+            }
+            let t = exact.run_to_quiescence();
+            // Budgets deliberately straddle the truth (×0.6..0.9 and
+            // ×1.1..1.4) so both polarities are exercised every case.
+            for factor in [rng.uniform(0.6, 0.9), rng.uniform(1.1, 1.4)] {
+                let budget = t * factor;
+                let mut probe = SimCursor::detached();
+                let mut counters = PruneCounters::default();
+                let win = steal_predicts_win(
+                    &mut probe,
+                    &frontier,
+                    &thief_table,
+                    &rows,
+                    budget,
+                    &mut counters,
+                );
+                if win {
+                    accepts += 1;
+                    assert!(
+                        t < budget,
+                        "seed {seed}: predicate accepted a losing steal \
+                         (exact {t}, budget {budget})"
+                    );
+                } else {
+                    rejects += 1;
+                    assert!(
+                        t >= budget * (1.0 - 1e-9),
+                        "seed {seed}: predicate rejected a clear win \
+                         (exact {t}, budget {budget})"
+                    );
+                }
+            }
+        }
+    }
+    // The harness must exercise both sides of the predicate.
+    assert!(accepts > 0, "no steal ever accepted — budgets miscalibrated");
+    assert!(rejects > 0, "no steal ever rejected — budgets miscalibrated");
+}
+
+#[test]
+fn quarantined_device_loses_no_tasks_mid_run() {
+    // Device 0 fails persistently and quarantines on its first fault
+    // (BlacklistAfterN(1), cooldown far longer than the test); device 1
+    // is clean. ECT placement routes the first arrival to device 0
+    // (tie, first wins), so a fault is guaranteed; after the trip its
+    // shed backlog must complete on device 1 via quarantine-rescue
+    // stealing — no task lost, none duplicated.
+    let p = profile_by_name("amd_r9").unwrap();
+    for seed in [1u64, 7, 23] {
+        let flaky: Arc<dyn Device> = Arc::new(ChaosDevice::new(
+            Arc::new(SimDevice::new(p.clone())),
+            ChaosOptions {
+                seed,
+                p_error: 1.0,
+                transient: false,
+                ..ChaosOptions::default()
+            },
+        ));
+        let steady: Arc<dyn Device> = Arc::new(SimDevice::new(p.clone()));
+        let c = FleetCoordinator::with_devices(
+            vec![flaky, steady],
+            FleetCoordOptions {
+                recovery: Some(RecoveryOptions {
+                    deadline: None,
+                    quarantine: QuarantineOptions {
+                        cooldown: Duration::from_secs(600),
+                    },
+                    ..RecoveryOptions::blacklist(BlacklistAfterN {
+                        n_failures: 1,
+                        ..BlacklistAfterN::default()
+                    })
+                }),
+                ..FleetCoordOptions::default()
+            },
+        );
+        let g = oclcc::task::synthetic::synthetic_benchmark("BK50", &p, 0.1)
+            .unwrap();
+        let wl: Vec<Vec<TaskSpec>> = (0..4)
+            .map(|w| (0..3).map(|i| g.tasks[(w + i) % 4].clone()).collect())
+            .collect();
+        let m = c.run(wl);
+        assert_eq!(m.n_tasks, 12, "seed {seed}: lost tasks");
+        assert_eq!(m.latencies.len(), 12, "seed {seed}: completions");
+        let d0 = &m.per_device[0];
+        let d1 = &m.per_device[1];
+        assert_eq!(d0.n_tasks, 0, "seed {seed}: flaky device completed work");
+        assert_eq!(d1.n_tasks, 12, "seed {seed}: sibling ran everything");
+        assert!(d0.n_quarantine_trips >= 1, "seed {seed}: {d0:?}");
+        assert!(d0.n_requeued >= 1, "seed {seed}: {d0:?}");
+        assert!(d1.n_stolen >= 1, "seed {seed}: {d1:?}");
+    }
+}
+
+#[test]
+fn single_device_fleet_reduces_to_sequential_online_pipeline() {
+    // One device, one worker submitting strictly serially (each push
+    // waits for the previous completion): the fleet must degenerate to
+    // the sequential online pipeline — one group per task, and each
+    // measured group makespan bit-identical to the solo model
+    // prediction (SimDevice *is* the model).
+    let p = profile_by_name("amd_r9").unwrap();
+    let g = oclcc::task::synthetic::synthetic_benchmark("BK50", &p, 0.1).unwrap();
+    let tasks: Vec<TaskSpec> = (0..6).map(|i| g.tasks[i % 4].clone()).collect();
+    let dev: Arc<dyn Device> = Arc::new(SimDevice::new(p.clone()));
+    let c = FleetCoordinator::with_devices(
+        vec![dev],
+        FleetCoordOptions::default(),
+    );
+    let m = c.run(vec![tasks.clone()]);
+    assert_eq!(m.n_tasks, 6);
+    assert_eq!(m.n_groups, 6, "serial submitter must yield singleton groups");
+    assert_eq!(m.n_placements, 6);
+    assert_eq!(m.group_makespans.len(), 6);
+    for (k, task) in tasks.iter().enumerate() {
+        // Exactly the computation `SimDevice::run_group` performs for a
+        // singleton group (recording does not perturb the makespan).
+        let pred = oclcc::model::simulate(
+            std::slice::from_ref(task),
+            &p,
+            EngineState::default(),
+            SimOptions { record_timeline: true },
+        )
+        .makespan;
+        assert_eq!(
+            m.group_makespans[k].to_bits(),
+            pred.to_bits(),
+            "group {k}: device-measured makespan != solo model prediction"
+        );
+    }
+}

@@ -16,7 +16,11 @@ its own key fields, metric, direction and regression threshold (see
   (workload, shape, workers, lanes), lower is better, 30%;
 * ``BENCH_recovery.json`` — goodput under injected faults per
   (policy, fault_pct), higher is better, 30% (chaos cells inherit the
-  live-pipeline noise floor plus backoff-sleep jitter).
+  live-pipeline noise floor plus backoff-sleep jitter);
+* ``BENCH_fleet.json`` — fleet throughput per (cell, impl), tasks/sec,
+  higher is better, 30% (the static cells are model-time and bit-stable;
+  the live steal/miscalibration cells inherit the coordinator noise
+  floor).
 
 Invocation: ``bench_diff.py PREVIOUS CURRENT`` where both arguments are
 either two files (config picked by basename) or two directories (every
@@ -78,6 +82,13 @@ TRAJECTORIES = (
     Trajectory(
         name="BENCH_recovery.json",
         key_fields=("policy", "fault_pct"),
+        metric_path=("tasks_per_sec",),
+        higher_is_better=True,
+        threshold=0.30,
+    ),
+    Trajectory(
+        name="BENCH_fleet.json",
+        key_fields=("cell", "impl"),
         metric_path=("tasks_per_sec",),
         higher_is_better=True,
         threshold=0.30,

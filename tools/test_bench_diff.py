@@ -19,6 +19,7 @@ T6 = traj("BENCH_sched_overhead.json")
 COORD = traj("BENCH_coordinator_throughput.json")
 ONLINE = traj("BENCH_online_resched.json")
 REC = traj("BENCH_recovery.json")
+FLEET = traj("BENCH_fleet.json")
 
 
 def write_doc(path, mode, rows):
@@ -55,6 +56,17 @@ def recovery_row(policy="retry", fault_pct=10, tps=800.0, n_retries=3):
         "fault_pct": fault_pct,
         "tasks_per_sec": tps,
         "n_retries": n_retries,
+    }
+
+
+def fleet_row(cell="het3", impl="fleet", tps=1200.0, n_stolen=0):
+    # dict literal: ``impl`` is a Python keyword-adjacent name kept as a
+    # plain key, matching the emitted BENCH_fleet.json rows.
+    return {
+        "cell": cell,
+        "impl": impl,
+        "tasks_per_sec": tps,
+        "n_stolen": n_stolen,
     }
 
 
@@ -185,6 +197,54 @@ def test_recovery_goodput_drop_regresses_per_cell(tmp_path):
         ],
     )
     assert bd.compare_files(prev, better, REC) == 0
+
+
+def test_fleet_trajectory_is_recognized_by_basename(tmp_path):
+    assert bd.trajectory_for("artifacts/" + FLEET.name) is FLEET
+    assert FLEET.higher_is_better and FLEET.threshold == 0.30
+    p = write_doc(
+        tmp_path / FLEET.name,
+        "fast",
+        [fleet_row(), fleet_row(cell="steal_rescue", tps=500.0, n_stolen=6)],
+    )
+    mode, cells = bd.load_rows(p, FLEET)
+    assert mode == "fast"
+    assert cells == {("het3", "fleet"): 1200.0, ("steal_rescue", "fleet"): 500.0}
+
+
+def test_fleet_throughput_drop_regresses_per_cell(tmp_path):
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [
+            fleet_row(),
+            fleet_row(impl="round_robin", tps=700.0),
+            fleet_row(cell="miscal_het3", impl="calibrated", tps=900.0),
+        ],
+    )
+    # The fleet het3 cell collapses; the baselines hold. Steal-counter
+    # drift alone never gates.
+    curr = write_doc(
+        tmp_path / "curr.json",
+        "fast",
+        [
+            fleet_row(tps=400.0, n_stolen=40),
+            fleet_row(impl="round_robin", tps=700.0),
+            fleet_row(cell="miscal_het3", impl="calibrated", tps=900.0),
+        ],
+    )
+    assert bd.compare_files(prev, curr, FLEET) == 1
+    # Higher throughput is never a regression.
+    better = write_doc(
+        tmp_path / "better.json",
+        "fast",
+        [
+            fleet_row(tps=2400.0),
+            fleet_row(impl="round_robin", tps=700.0),
+            fleet_row(cell="miscal_het3", impl="calibrated", tps=900.0),
+        ],
+    )
+    assert bd.compare_files(prev, better, FLEET) == 0
 
 
 # ---- main / directory discovery -------------------------------------------
