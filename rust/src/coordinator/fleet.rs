@@ -55,17 +55,46 @@
 //! ([`DriftGate::reset_drift`]) — what it learned described the device
 //! before it went bad.
 //!
+//! # Batched joint placement
+//!
+//! Arrivals are not placed one at a time: the proxy drains up to
+//! [`FleetCoordOptions::place_batch`] submissions from the ingress and
+//! hands the whole batch to [`BatchPlacer`] (`sched::fleet`), which
+//! scores every (candidate × device) pair against *cached* per-device
+//! frontiers — each device's committed cursor + incumbent suffix is
+//! resumed once per scoring stripe, not re-derived per candidate — in
+//! parallel over the PR-2 `ScoringPool`
+//! ([`FleetCoordOptions::placement_threads`]), then compares the old
+//! per-arrival greedy against two frontier-extending assignment trials
+//! on a replayed model clock. A batch of one (and any tie) reproduces
+//! the per-arrival decisions bit-identically, and the joint objective
+//! is never worse than the greedy baseline by construction — both
+//! pinned in rust/tests/prop_fleet.rs.
+//!
 //! # Threading model
 //!
 //! One proxy thread serves the whole fleet (placement needs a
 //! consistent view of every device's frontier); device execution runs
 //! on per-device runner threads, so D devices still execute
-//! concurrently and planning overlaps all of them. The trade-off is
-//! that a `Retry` backoff sleep stalls *planning* for every device for
-//! its duration (execution already in flight is unaffected) — accepted
-//! for now; retry backoffs are milliseconds while groups are typically
-//! longer. Benchmarked in `benches/fleet_throughput.rs`
-//! (`BENCH_fleet.json`).
+//! concurrently and planning overlaps all of them — and the proxy
+//! itself never sleeps while there is planning to do:
+//!
+//! * a `Retry` backoff never blocks the proxy. The group parks on a
+//!   **deadline wheel** (a due-time min-heap polled alongside ingress)
+//!   and is re-dispatched when its backoff expires; every other
+//!   device's placement, merging and stealing proceeds in between.
+//! * at the idle edge the proxy parks on a [`WakeSignal`] shared with
+//!   the workers and every device runner, so an ingress push or a
+//!   `RunDone` wakes planning immediately; `OnlineOptions::poll` (and
+//!   the nearest retry due-time) only bounds the park for purely
+//!   time-driven work such as breaker cooldown expiry.
+//!
+//! Benchmarked in `benches/fleet_throughput.rs` (`BENCH_fleet.json`),
+//! including a chaos cell asserting placements keep advancing while a
+//! device sits in a retry backoff.
+//!
+//! [`WakeSignal`]: crate::coordinator::lanes::WakeSignal
+//! [`BatchPlacer`]: crate::sched::fleet::BatchPlacer
 //!
 //! [`LaneCoordinator`]: crate::coordinator::lanes::LaneCoordinator
 //! [`ShardedBuffer::push_to_lane`]: crate::coordinator::buffer::ShardedBuffer::push_to_lane
@@ -76,6 +105,8 @@
 //! [`steal_predicts_win`]: crate::sched::fleet::steal_predicts_win
 //! [`FleetHealth::n_quarantined`]: crate::coordinator::recovery::FleetHealth::n_quarantined
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -83,7 +114,7 @@ use crate::config::DeviceProfile;
 use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
 use crate::coordinator::lanes::{
     device_runner_loop, empty_lane_stats, finalize_plan, merge_arrivals,
-    record_calib_stats, InFlight, LaneStats, RunDone, RunOutcome,
+    record_calib_stats, InFlight, LaneStats, RunDone, RunOutcome, WakeSignal,
 };
 use crate::coordinator::recovery::{
     BreakerState, FailureCtx, FleetHealth, RecoveryAction, RecoveryOptions,
@@ -95,9 +126,9 @@ use crate::model::{
     EngineSecs, EngineState, SimCursor, TaskTable,
 };
 use crate::queue::event::Event;
-use crate::sched::fleet::steal_predicts_win;
+use crate::sched::fleet::{steal_predicts_win, BatchPlacer};
 use crate::sched::online::{DriftGate, OnlineOptions, OnlineScratch};
-use crate::sched::search_util::{bounded_append_score, PruneCounters};
+use crate::sched::search_util::PruneCounters;
 use crate::task::TaskSpec;
 use crate::util::stats;
 
@@ -126,6 +157,20 @@ pub struct FleetCoordOptions {
     /// pins the static scheduler; the coordinator shares the scorer);
     /// off keeps the exact full-probe scan for reference.
     pub prune_placement: bool,
+    /// Max ingress submissions drained into one joint placement round.
+    /// Must be ≥ 1 (`run` rejects 0). The default `usize::MAX` drains
+    /// the whole available backlog, which matches the pre-batching
+    /// behavior of draining up to one submission per worker: a worker
+    /// blocks on its previous submission's completion event, so the
+    /// ingress never holds more than one entry per worker either way.
+    /// `1` degenerates to per-arrival greedy placement exactly.
+    pub place_batch: usize,
+    /// Scoring stripes for the placement grid (worker threads + the
+    /// proxy itself, [`ScoringPool`] contract); results are
+    /// bit-identical for any value. 1 = fully serial on the proxy.
+    ///
+    /// [`ScoringPool`]: crate::sched::parallel::ScoringPool
+    pub placement_threads: usize,
 }
 
 impl Default for FleetCoordOptions {
@@ -138,6 +183,8 @@ impl Default for FleetCoordOptions {
             recalibrate: None,
             recovery: None,
             prune_placement: true,
+            place_batch: usize::MAX,
+            placement_threads: 1,
         }
     }
 }
@@ -175,11 +222,29 @@ pub struct FleetMetrics {
     /// Predicate consultations that rejected the steal (work handed
     /// back to the victim's queue front).
     pub n_steal_rejected: usize,
+    /// Measured ingress-to-placement latency per routed submission (s):
+    /// `submitted_at` → the instant its batch's assignments were pushed
+    /// onto device queues. The scheduling-decision latency HTS calls the
+    /// throughput ceiling at high task rates — measured, not derived.
+    pub placement_latencies: Vec<f64>,
+    /// Joint placement rounds executed (one round places one drained
+    /// batch; `n_placements / n_place_rounds` ≈ mean batch size).
+    pub n_place_rounds: usize,
 }
 
 impl FleetMetrics {
     pub fn mean_latency(&self) -> f64 {
         stats::mean(&self.latencies)
+    }
+
+    /// Median measured ingress-to-placement latency (s).
+    pub fn placement_p50_s(&self) -> f64 {
+        stats::percentile(&self.placement_latencies, 50.0)
+    }
+
+    /// Tail measured ingress-to-placement latency (s).
+    pub fn placement_p99_s(&self) -> f64 {
+        stats::percentile(&self.placement_latencies, 99.0)
     }
 
     pub fn p50_latency(&self) -> f64 {
@@ -237,6 +302,11 @@ struct DevState {
     /// while `planner_live`): model clock `t` ≈ wall `live_since + t`.
     live_since: Instant,
     inflight: Option<InFlight>,
+    /// The device's failed group is parked on the retry deadline wheel
+    /// until this instant — the device must not be treated as idle
+    /// (its committed work is coming back), and the watchdog must not
+    /// run (nothing is on the device). Cleared at re-dispatch.
+    retry_due: Option<Instant>,
     consec_failures: usize,
     stats: LaneStats,
 }
@@ -268,6 +338,7 @@ fn new_dev_state(dev: usize, base_model: DeviceProfile, opts: &FleetCoordOptions
         last_commit_pred: 0.0,
         live_since: Instant::now(),
         inflight: None,
+        retry_due: None,
         consec_failures: 0,
         stats: empty_lane_stats(dev),
     }
@@ -331,65 +402,32 @@ fn shed_and_reset(st: &mut DevState, own: &SharedBuffer, mut back: Vec<Submissio
     st.gate.reset_drift();
 }
 
-/// Score `task` on every non-quarantined device and return the one with
-/// the smallest predicted *remaining* completion (first device wins
-/// ties, exactly like the static `sched::fleet` placement). Falls back
-/// to round-robin when the whole fleet is quarantined.
-#[allow(clippy::too_many_arguments)]
-fn place_on_ect(
-    states: &mut [DevState],
-    health: &FleetHealth,
-    frontier: &mut SimCursor,
-    probe: &mut SimCursor,
-    prune: bool,
-    counters: &mut PruneCounters,
-    rr_fallback: &mut usize,
-    task: &TaskSpec,
-) -> usize {
-    let d = states.len();
-    let mut best: Option<(usize, f64)> = None;
-    for (dev, st) in states.iter_mut().enumerate() {
-        if health.is_quarantined(dev) {
-            continue;
-        }
-        st.probe_table
-            .compile_calibrated_into(std::slice::from_ref(task), &st.cal_prof);
-        // Device frontier on its own contiguous model clock: committed
-        // prefix (the cursor) plus the uncommitted pending suffix.
-        let elapsed = if st.planner_live {
-            frontier.resume_from(&st.cursor);
-            for &i in &st.incumbent {
-                frontier.push_task_compiled(&st.table, i);
-            }
-            st.live_since.elapsed().as_secs_f64()
-        } else {
-            frontier.reset_for_table(&st.probe_table, EngineState::default());
-            0.0
-        };
-        // The running best is in remaining-seconds; translate it onto
-        // this device's local clock before pruning against it.
-        let cutoff = best.map_or(f64::INFINITY, |(_, r)| r + elapsed);
-        let t = bounded_append_score(probe, frontier, &st.probe_table, 0, cutoff, prune, counters);
-        let remaining = t - elapsed;
-        // total_cmp + strict less-than: NaN never wins a placement, the
-        // INFINITY exclusion markers sort after every exact score, and
-        // ties keep the earlier device.
-        match best {
-            Some((_, r)) if !remaining.total_cmp(&r).is_lt() => {}
-            _ => best = Some((dev, remaining)),
-        }
+/// A failed group parked on the retry deadline wheel: re-dispatched to
+/// its device when `due` passes, so the backoff never blocks the proxy.
+/// Ordered by `(due, dev)` — the wheel is a `BinaryHeap<Reverse<..>>`
+/// min-heap and `dev` breaks exact due-time ties deterministically.
+struct RetryEntry {
+    due: Instant,
+    dev: usize,
+    pred: f64,
+    attempt: usize,
+    subs: Vec<Submission>,
+}
+
+impl PartialEq for RetryEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.dev == other.dev
     }
-    match best {
-        Some((dev, _)) => dev,
-        None => {
-            // The whole fleet is breaker-Open. Round-robin: the backlog
-            // parks on quarantined queues where half-open probes or
-            // recovered thieves rescue it.
-            debug_assert_eq!(health.n_quarantined(), d);
-            let dev = *rr_fallback % d;
-            *rr_fallback = dev + 1;
-            dev
-        }
+}
+impl Eq for RetryEntry {}
+impl PartialOrd for RetryEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RetryEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.due, self.dev).cmp(&(other.due, other.dev))
     }
 }
 
@@ -434,7 +472,12 @@ impl FleetCoordinator {
         } else {
             self.opts.group_cap.max(1)
         };
-        let place_batch = t_workers.max(1);
+        assert!(
+            self.opts.place_batch > 0,
+            "FleetCoordOptions::place_batch must be >= 1 \
+             (1 = per-arrival greedy, usize::MAX = drain the backlog)"
+        );
+        let place_batch = self.opts.place_batch;
         let deadline_at = |rec: Option<&RecoveryOptions>, pred: f64| {
             rec.and_then(|r| {
                 r.deadline.map(|dl| Instant::now() + dl.deadline_for(pred))
@@ -454,6 +497,8 @@ impl FleetCoordinator {
         let mut latencies: Vec<f64> = Vec::new();
         let mut group_makespans: Vec<f64> = Vec::new();
         let mut n_placements = 0usize;
+        let mut n_place_rounds = 0usize;
+        let mut placement_latencies: Vec<f64> = Vec::new();
         let mut placement_prune = PruneCounters::default();
         let mut n_steal_considered = 0usize;
         let mut n_steal_rejected = 0usize;
@@ -461,12 +506,29 @@ impl FleetCoordinator {
         let mut stolen: Vec<Submission> = Vec::new();
         let mut frontier_buf = SimCursor::detached();
         let mut probe = SimCursor::detached();
+        // Joint batch placement scratch: the placer (scoring pool +
+        // cached probes), per-device batch frontiers/elapsed/availability
+        // and the round's task list + chosen assignment.
+        let mut placer = BatchPlacer::new(self.opts.placement_threads);
+        let mut batch_tasks: Vec<TaskSpec> = Vec::new();
+        let mut batch_frontiers: Vec<SimCursor> =
+            (0..d).map(|_| SimCursor::detached()).collect();
+        let mut batch_elapsed: Vec<f64> = vec![0.0; d];
+        let mut batch_avail: Vec<bool> = vec![false; d];
+        let mut assignment: Vec<usize> = Vec::new();
+        // Failed groups waiting out their retry backoff (min-heap on
+        // due-time) — planning continues while they park here.
+        let mut retry_wheel: BinaryHeap<Reverse<RetryEntry>> = BinaryHeap::new();
+        // Edge-triggered wakeups for the idle park: workers notify per
+        // ingress push (and close), device runners per RunDone.
+        let wake = Arc::new(WakeSignal::new());
 
         std::thread::scope(|s| {
             // ---- workers ----------------------------------------------
             let mut worker_handles = Vec::with_capacity(t_workers);
             for (w, batch) in workloads.into_iter().enumerate() {
                 let ingress = ingress.clone();
+                let wake = Arc::clone(&wake);
                 let h = std::thread::Builder::new()
                     .name(format!("fleet-worker-{w}"))
                     .spawn_scoped(s, move || {
@@ -479,6 +541,7 @@ impl FleetCoordinator {
                                 done: done.clone(),
                                 submitted_at: epoch.elapsed().as_secs_f64(),
                             });
+                            wake.notify();
                             done.wait();
                         }
                     })
@@ -488,12 +551,14 @@ impl FleetCoordinator {
 
             // ---- janitor: close the ingress once all workers exited ---
             let ingress_j = ingress.clone();
+            let wake_j = Arc::clone(&wake);
             std::thread::Builder::new()
                 .name("fleet-janitor".into())
                 .spawn_scoped(s, move || {
                     let results: Vec<_> =
                         worker_handles.into_iter().map(|h| h.join()).collect();
                     ingress_j.close();
+                    wake_j.notify();
                     for r in results {
                         if let Err(payload) = r {
                             std::panic::resume_unwind(payload);
@@ -509,10 +574,17 @@ impl FleetCoordinator {
                 let (job_tx, job_rx) = mpsc::channel::<Vec<Submission>>();
                 let (done_tx, done_rx) = mpsc::channel::<RunDone>();
                 let device = Arc::clone(&self.devices[dev]);
+                let wake = Arc::clone(&wake);
                 std::thread::Builder::new()
                     .name(format!("fleet-device-{dev}"))
                     .spawn_scoped(s, move || {
-                        device_runner_loop(device.as_ref(), epoch, job_rx, done_tx)
+                        device_runner_loop(
+                            device.as_ref(),
+                            epoch,
+                            job_rx,
+                            done_tx,
+                            Some(wake),
+                        )
                     })
                     .expect("spawn fleet device runner");
                 job_txs.push(job_tx);
@@ -525,6 +597,31 @@ impl FleetCoordinator {
                 let mut rr_fallback = 0usize;
                 loop {
                     let mut progressed = false;
+                    // Snapshot before scanning: a notify landing anywhere
+                    // past this line turns the idle park below into an
+                    // immediate return instead of being lost.
+                    let wake_seen = wake.epoch();
+
+                    // 0. Retry deadline wheel: re-dispatch every parked
+                    //    group whose backoff has expired. The proxy never
+                    //    sleeps a backoff — parked groups wait here while
+                    //    placement and planning continue fleet-wide.
+                    while retry_wheel
+                        .peek()
+                        .is_some_and(|Reverse(e)| e.due <= Instant::now())
+                    {
+                        let Reverse(e) = retry_wheel.pop().expect("peeked");
+                        let st = &mut states[e.dev];
+                        st.retry_due = None;
+                        st.inflight = Some(InFlight {
+                            pred: e.pred,
+                            deadline: deadline_at(rec.as_ref(), e.pred),
+                            attempt: e.attempt,
+                            timed_out: false,
+                        });
+                        job_txs[e.dev].send(e.subs).expect("device runner alive");
+                        progressed = true;
+                    }
 
                     // 1. Completions and the run-deadline watchdog, for
                     //    every device with a group in flight. Mirrors the
@@ -615,24 +712,29 @@ impl FleetCoordinator {
                                             }
                                             RecoveryAction::Retry { backoff } => {
                                                 st.stats.n_retries += 1;
-                                                // One proxy serves the fleet:
-                                                // this sleep stalls planning
-                                                // for every device (module
-                                                // docs; execution in flight
-                                                // is unaffected).
-                                                std::thread::sleep(backoff);
-                                                st.inflight = Some(InFlight {
-                                                    pred: fl.pred,
-                                                    deadline: deadline_at(
-                                                        rec.as_ref(),
-                                                        fl.pred,
-                                                    ),
-                                                    attempt: fl.attempt + 1,
-                                                    timed_out: false,
-                                                });
-                                                job_txs[dev]
-                                                    .send(subs)
-                                                    .expect("device runner alive");
+                                                // Park the group on the
+                                                // deadline wheel instead of
+                                                // sleeping: planning for
+                                                // every other device
+                                                // continues through the
+                                                // backoff. `retry_due`
+                                                // keeps this device out of
+                                                // the idle path (and the
+                                                // watchdog stays off:
+                                                // `inflight` is None until
+                                                // re-dispatch).
+                                                let due =
+                                                    Instant::now() + backoff;
+                                                st.retry_due = Some(due);
+                                                retry_wheel.push(Reverse(
+                                                    RetryEntry {
+                                                        due,
+                                                        dev,
+                                                        pred: fl.pred,
+                                                        attempt: fl.attempt + 1,
+                                                        subs,
+                                                    },
+                                                ));
                                             }
                                             RecoveryAction::Quarantine => {
                                                 if breaker.trip() {
@@ -669,8 +771,12 @@ impl FleetCoordinator {
                         }
                     }
 
-                    // 2. Ingress: place arrivals on the calibrated-ECT
-                    //    device and route them to its queue.
+                    // 2. Ingress: drain a batch of arrivals and place it
+                    //    *jointly* on calibrated-ECT frontiers — one grid
+                    //    scan over cached per-device frontier resumes,
+                    //    fanned across the scoring pool, then the best of
+                    //    {frozen greedy, extending greedy, extending LPT}
+                    //    on a replayed model clock (`BatchPlacer`).
                     if !closed_ingress {
                         match ingress.drain_into_timeout(
                             place_batch,
@@ -680,19 +786,84 @@ impl FleetCoordinator {
                         ) {
                             DrainPoll::Drained(_) => {
                                 progressed = true;
-                                for sub in arrivals.drain(..) {
-                                    let dev = place_on_ect(
-                                        &mut states,
-                                        &health,
-                                        &mut frontier_buf,
-                                        &mut probe,
-                                        self.opts.prune_placement,
-                                        &mut placement_prune,
-                                        &mut rr_fallback,
-                                        &sub.task,
+                                let n = arrivals.len();
+                                batch_tasks.clear();
+                                batch_tasks
+                                    .extend(arrivals.iter().map(|s| s.task.clone()));
+                                // Per-device batch table + cached frontier:
+                                // committed cursor plus the uncommitted
+                                // incumbent suffix, resumed once per round
+                                // (the placer's stripes re-resume from
+                                // these, never from the live states).
+                                for (dev, st) in states.iter_mut().enumerate() {
+                                    batch_avail[dev] = !health.is_quarantined(dev);
+                                    if !batch_avail[dev] {
+                                        continue;
+                                    }
+                                    st.probe_table.compile_calibrated_into(
+                                        &batch_tasks,
+                                        &st.cal_prof,
                                     );
-                                    lanes.push_to_lane(dev, sub);
-                                    n_placements += 1;
+                                    batch_elapsed[dev] = if st.planner_live {
+                                        batch_frontiers[dev].resume_from(&st.cursor);
+                                        for &i in &st.incumbent {
+                                            batch_frontiers[dev]
+                                                .push_task_compiled(&st.table, i);
+                                        }
+                                        st.live_since.elapsed().as_secs_f64()
+                                    } else {
+                                        batch_frontiers[dev].reset_for_table(
+                                            &st.probe_table,
+                                            EngineState::default(),
+                                        );
+                                        0.0
+                                    };
+                                }
+                                let tables: Vec<&TaskTable> =
+                                    states.iter().map(|st| &st.probe_table).collect();
+                                let placed = placer.place_batch(
+                                    n,
+                                    &tables,
+                                    &batch_frontiers,
+                                    &batch_elapsed,
+                                    &batch_avail,
+                                    self.opts.prune_placement,
+                                    &mut assignment,
+                                );
+                                let placed_at = epoch.elapsed().as_secs_f64();
+                                match placed {
+                                    Some(_) => {
+                                        n_place_rounds += 1;
+                                        for (k, sub) in
+                                            arrivals.drain(..).enumerate()
+                                        {
+                                            placement_latencies.push(
+                                                placed_at - sub.submitted_at,
+                                            );
+                                            lanes.push_to_lane(assignment[k], sub);
+                                            n_placements += 1;
+                                        }
+                                    }
+                                    None => {
+                                        // The whole fleet is breaker-Open.
+                                        // Round-robin: the backlog parks on
+                                        // quarantined queues where half-open
+                                        // probes or recovered thieves rescue
+                                        // it.
+                                        debug_assert_eq!(
+                                            health.n_quarantined(),
+                                            d
+                                        );
+                                        for sub in arrivals.drain(..) {
+                                            let dev = rr_fallback % d;
+                                            rr_fallback = dev + 1;
+                                            placement_latencies.push(
+                                                placed_at - sub.submitted_at,
+                                            );
+                                            lanes.push_to_lane(dev, sub);
+                                            n_placements += 1;
+                                        }
+                                    }
                                 }
                             }
                             DrainPoll::Empty => {}
@@ -704,6 +875,13 @@ impl FleetCoordinator {
                     //    queue into the uncommitted suffix and overlap
                     //    planning; idle devices submit, drain, or steal.
                     for dev in 0..d {
+                        // Parked on the retry wheel: the failed group is
+                        // coming back, so the device is neither idle (no
+                        // submit/steal) nor watchable (nothing on the
+                        // device). Its queue stays visible to thieves.
+                        if states[dev].retry_due.is_some() {
+                            continue;
+                        }
                         let breaker = health.lane(dev);
                         if states[dev].inflight.is_some() {
                             let st = &mut states[dev];
@@ -925,9 +1103,10 @@ impl FleetCoordinator {
                     }
 
                     // 4. Termination: stream closed and every queue,
-                    //    suffix and device drained.
+                    //    suffix, device and parked retry drained.
                     if closed_ingress
                         && lanes.is_empty()
+                        && retry_wheel.is_empty()
                         && states.iter().all(|st| {
                             st.pending_subs.is_empty() && st.inflight.is_none()
                         })
@@ -935,8 +1114,18 @@ impl FleetCoordinator {
                         lanes.close_all();
                         break;
                     }
+                    // Idle edge: park until a producer notifies (ingress
+                    // push, RunDone, close) instead of sleeping a fixed
+                    // poll. The deadline — the nearest retry due-time,
+                    // bounded by `poll` — keeps purely time-driven work
+                    // (wheel expiry, breaker cooldowns, the watchdog)
+                    // flowing with no producer awake.
                     if !progressed {
-                        std::thread::sleep(self.opts.online.poll);
+                        let mut deadline = Instant::now() + self.opts.online.poll;
+                        if let Some(Reverse(e)) = retry_wheel.peek() {
+                            deadline = deadline.min(e.due);
+                        }
+                        wake.wait_past(wake_seen, deadline);
                     }
                 }
             }));
@@ -952,6 +1141,16 @@ impl FleetCoordinator {
                 let now = epoch.elapsed().as_secs_f64();
                 for st in &states {
                     for sub in &st.pending_subs {
+                        if !sub.done.is_complete() {
+                            sub.done.complete(now);
+                        }
+                    }
+                }
+                // Groups parked on the retry wheel hold un-completed
+                // events (their fault returned the subs for re-dispatch);
+                // no re-dispatch is coming — release their workers.
+                for Reverse(e) in retry_wheel.drain() {
+                    for sub in &e.subs {
                         if !sub.done.is_complete() {
                             sub.done.complete(now);
                         }
@@ -981,6 +1180,9 @@ impl FleetCoordinator {
         });
 
         let total_secs = epoch.elapsed().as_secs_f64();
+        // Grid-scan + trial pruning lives in the placer; the steal
+        // predicate wrote `placement_prune` directly.
+        placement_prune.merge(&placer.prune_counters());
         let mut per_device = Vec::with_capacity(d);
         let (mut overhead, mut n_groups, mut n_tasks) = (0.0, 0, 0);
         for st in states.iter_mut() {
@@ -1012,6 +1214,8 @@ impl FleetCoordinator {
             placement_prune,
             n_steal_considered,
             n_steal_rejected,
+            placement_latencies,
+            n_place_rounds,
         }
     }
 }
@@ -1087,6 +1291,43 @@ mod tests {
     fn mismatched_plan_models_panic() {
         sim_fleet(&["amd_r9", "k20c"], FleetCoordOptions::default())
             .with_plan_models(vec![profile_by_name("amd_r9").unwrap()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "place_batch must be >= 1")]
+    fn zero_place_batch_rejected() {
+        let c = sim_fleet(
+            &["amd_r9"],
+            FleetCoordOptions { place_batch: 0, ..FleetCoordOptions::default() },
+        );
+        c.run(workload(1, 1, 0.1));
+    }
+
+    #[test]
+    fn small_place_batch_and_parallel_scoring_complete_all_tasks() {
+        // place_batch=1 degenerates to per-arrival greedy; 2 exercises
+        // partial drains; parallel stripes exercise the scoring pool.
+        for (batch, threads) in [(1usize, 1usize), (2, 1), (2, 3), (usize::MAX, 3)] {
+            let c = sim_fleet(
+                &["amd_r9", "xeon_phi", "k20c"],
+                FleetCoordOptions {
+                    place_batch: batch,
+                    placement_threads: threads,
+                    ..FleetCoordOptions::default()
+                },
+            );
+            let m = c.run(workload(6, 3, 0.1));
+            assert_eq!(m.n_tasks, 18, "batch {batch} threads {threads}");
+            assert_eq!(m.n_placements, 18, "batch {batch} threads {threads}");
+            assert!(m.n_place_rounds > 0, "batch {batch} threads {threads}");
+            assert_eq!(
+                m.placement_latencies.len(),
+                18,
+                "every routed submission gets a measured placement latency"
+            );
+            assert!(m.placement_latencies.iter().all(|&l| l >= 0.0));
+            assert!(m.placement_p99_s() >= m.placement_p50_s());
+        }
     }
 
     #[test]

@@ -121,7 +121,7 @@
 //! [`RecoveryPolicy`]: crate::coordinator::recovery::RecoveryPolicy
 //! [`FleetHealth`]: crate::coordinator::recovery::FleetHealth
 
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::config::DeviceProfile;
@@ -861,17 +861,72 @@ pub(crate) struct InFlight {
     pub(crate) timed_out: bool,
 }
 
+/// Edge-triggered wakeup channel for a planning loop that would otherwise
+/// sleep a fixed `poll` at its idle edge. Producers (workers pushing into
+/// ingress, device runners posting `RunDone`) bump an epoch and notify;
+/// the planner snapshots the epoch at the top of its iteration and parks
+/// in [`WakeSignal::wait_past`] only while the epoch is unchanged — an
+/// event that lands anywhere between snapshot and park is therefore never
+/// lost, it just turns the park into an immediate return. The deadline
+/// keeps time-driven work (retry due-times, breaker cooldowns, the `poll`
+/// backstop) flowing with no producer awake.
+pub(crate) struct WakeSignal {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl WakeSignal {
+    pub(crate) fn new() -> WakeSignal {
+        WakeSignal { epoch: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Snapshot the current epoch (take before scanning for work).
+    pub(crate) fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Signal that new work may exist (push, completion, close).
+    pub(crate) fn notify(&self) {
+        let mut g = self.epoch.lock().unwrap_or_else(PoisonError::into_inner);
+        *g = g.wrapping_add(1);
+        self.cv.notify_all();
+    }
+
+    /// Park until the epoch moves past `seen` or `deadline` passes.
+    /// Returns immediately if a notify already landed since the snapshot.
+    pub(crate) fn wait_past(&self, seen: u64, deadline: Instant) {
+        let mut g = self.epoch.lock().unwrap_or_else(PoisonError::into_inner);
+        while *g == seen {
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            g = guard;
+            if timeout.timed_out() {
+                return;
+            }
+        }
+    }
+}
+
 /// The device-runner thread body: execute each submitted group, signal
 /// successful completions, and report a [`RunDone`] per group. Extracted
 /// from the online lane proxy so the fleet coordinator spawns the exact
-/// same runner per device. If the proxy side already unwound (receiver
-/// gone), any still-pending fault events are completed here so blocked
-/// workers can exit.
+/// same runner per device. `wake`, when provided, is notified after every
+/// posted `RunDone` so a parked planning loop resumes immediately instead
+/// of sleeping out its poll interval. If the proxy side already unwound
+/// (receiver gone), any still-pending fault events are completed here so
+/// blocked workers can exit.
 pub(crate) fn device_runner_loop(
     device: &dyn Device,
     epoch: Instant,
     job_rx: mpsc::Receiver<Vec<Submission>>,
     done_tx: mpsc::Sender<RunDone>,
+    wake: Option<Arc<WakeSignal>>,
 ) {
     for subs in job_rx {
         // Built here, off the proxy's planning path (the device API
@@ -937,6 +992,9 @@ pub(crate) fn device_runner_loop(
                 }
             }
             break;
+        }
+        if let Some(w) = &wake {
+            w.notify();
         }
     }
 }
@@ -1006,7 +1064,7 @@ fn online_lane_proxy(
         std::thread::Builder::new()
             .name(format!("lane-device-{lane}"))
             .spawn_scoped(s, move || {
-                device_runner_loop(device.as_ref(), epoch, job_rx, done_tx)
+                device_runner_loop(device.as_ref(), epoch, job_rx, done_tx, None)
             })
             .expect("spawn lane device runner");
 

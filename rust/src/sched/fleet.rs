@@ -42,11 +42,15 @@
 //! seconds (its own links, its own calibrated rates) are already in the
 //! completion time being compared.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
 use crate::config::DeviceProfile;
 use crate::model::calibrate::CalibratedProfile;
 use crate::model::simulator::{simulate_order_compiled, SimCursor};
 use crate::model::{EngineState, SimOptions, TaskTable};
 use crate::sched::heuristic::{batch_reorder_table_into, BeamScratch, DEFAULT_BEAM_WIDTH};
+use crate::sched::parallel::ScoringPool;
 use crate::sched::search_util::{bounded_append_score, provably_worse, PruneCounters};
 use crate::task::TaskSpec;
 
@@ -303,6 +307,435 @@ pub fn steal_predicts_win(
     }
 }
 
+/// Result of a [`BatchPlacer::place_batch`] round.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPlaceOutcome {
+    /// Model-clock objective of the chosen assignment: max over available
+    /// devices of (replayed completion − device elapsed), i.e. the worst
+    /// remaining work across the fleet after the batch lands.
+    pub objective: f64,
+    /// Objective of the per-arrival frozen-frontier greedy baseline (the
+    /// exact decisions the pre-batching coordinator would have made for
+    /// this batch). `objective <= greedy_objective` always holds — the
+    /// greedy assignment is one of the candidates.
+    pub greedy_objective: f64,
+}
+
+/// Joint placement of a drained ingress batch over per-device frontiers.
+///
+/// Reusable scratch for the fleet coordinator's hot path: one persistent
+/// [`ScoringPool`] plus per-stripe probe cursors, an atomic score grid,
+/// and trial frontiers. A placement round runs in two phases:
+///
+/// 1. **Parallel grid scan** — every (batch task × device) pair is scored
+///    by resuming the device's *cached* batch-start frontier (resumed once
+///    per probe, not re-derived per candidate) and bound-gating the append
+///    through `search_util`. Tasks are striped over the pool
+///    (`i % stripes`), and each stripe performs the same serial per-task
+///    device scan the per-arrival path used — task-local running cutoff,
+///    first-device ties — so every slot holds either the *exact* bit-equal
+///    completion clock or an `INFINITY` marker carrying a proof of strict
+///    exclusion relative to that task's own scan. Slots are written by
+///    exactly one stripe each, which makes the grid (and everything
+///    derived from it) bit-identical for any stripe count, pruned or not.
+/// 2. **Serial assignment trials** — three candidate assignments are
+///    built from the grid and compared on a replayed model clock:
+///    * *frozen greedy*: per-task argmin over the frozen-frontier grid in
+///      arrival order — exactly the old per-arrival decisions;
+///    * *extending greedy, arrival order*: each placement extends the
+///      winner's trial frontier, so later tasks see the batch's own load;
+///    * *extending greedy, LPT order*: same, visiting tasks in descending
+///      max-solo-seconds order (the static fleet scheduler's key).
+///    Each trial's objective is evaluated by one uniform replay per
+///    device — frontier resume + pushes in **arrival order** (the order
+///    the lane will actually enqueue) — and the minimum wins, ties
+///    preferring the earlier trial. A batch of one makes all three trials
+///    identical, so the frozen greedy wins the tie and the placement is
+///    bit-identical to the per-arrival path (pinned in prop_fleet.rs).
+///
+/// Grid exclusion markers are *cutoff-dependent* proofs: they are only
+/// reused where the frozen-frontier context still holds (a device with no
+/// trial placements and a finite slot). An extending trial re-scores
+/// anything else against its own frontiers and running cutoff — so
+/// pruned-on and pruned-off rounds still make bit-identical decisions.
+pub struct BatchPlacer {
+    pool: ScoringPool,
+    /// One probe cursor per stripe: holds the resumed frontier across the
+    /// stripe's whole scan of a device (the placement-cursor cache).
+    probes: Vec<Mutex<SimCursor>>,
+    /// Per-stripe cumulative prune counters (merged on demand).
+    stripe_counters: Vec<Mutex<PruneCounters>>,
+    /// Coordinator-side counters: serial trials + objective replays.
+    counters: PruneCounters,
+    /// `(task × device)` completion clocks from the grid scan, stored as
+    /// `f64::to_bits` so stripes can publish without locking.
+    scores: Vec<AtomicU64>,
+    /// Coordinator-side probe for the serial trials and replays.
+    probe: SimCursor,
+    /// Per-device trial frontiers (frozen frontier + trial placements).
+    ext: Vec<SimCursor>,
+    placed: Vec<usize>,
+    memo: Vec<Option<(u32, usize, f64)>>,
+    lpt: Vec<usize>,
+    assign_frozen: Vec<usize>,
+    assign_trial: Vec<usize>,
+}
+
+impl BatchPlacer {
+    /// `threads` is the total stripe count including the calling thread,
+    /// same contract as [`ScoringPool::new`] (`new(1)` is fully serial).
+    pub fn new(threads: usize) -> BatchPlacer {
+        let pool = ScoringPool::new(threads);
+        let stripes = pool.stripes();
+        BatchPlacer {
+            pool,
+            probes: (0..stripes).map(|_| Mutex::new(SimCursor::detached())).collect(),
+            stripe_counters: (0..stripes)
+                .map(|_| Mutex::new(PruneCounters::default()))
+                .collect(),
+            counters: PruneCounters::default(),
+            scores: Vec::new(),
+            probe: SimCursor::detached(),
+            ext: Vec::new(),
+            placed: Vec::new(),
+            memo: Vec::new(),
+            lpt: Vec::new(),
+            assign_frozen: Vec::new(),
+            assign_trial: Vec::new(),
+        }
+    }
+
+    /// Total parallel stripes (worker threads + the calling thread).
+    pub fn stripes(&self) -> usize {
+        self.pool.stripes()
+    }
+
+    /// Cumulative pruning counters across all placement rounds so far
+    /// (coordinator-side trials plus every stripe's grid-scan share).
+    pub fn prune_counters(&self) -> PruneCounters {
+        let mut total = self.counters;
+        for c in &self.stripe_counters {
+            total.merge(&c.lock().unwrap_or_else(PoisonError::into_inner));
+        }
+        total
+    }
+
+    /// Jointly place batch rows `0..n` (rows of every device's table)
+    /// onto `d` devices. `frontiers[dev]` is the device's batch-start
+    /// frontier (committed prefix + incumbent plan already pushed);
+    /// `elapsed[dev]` is how much of that frontier's clock has already
+    /// passed in wall time, so devices are compared on *remaining* work;
+    /// `available[dev] == false` excludes a device (quarantined).
+    ///
+    /// On success fills `assignment[k]` = device for batch task `k` and
+    /// returns the chosen + baseline objectives. Returns `None` (and an
+    /// empty `assignment`) when `n == 0` or no device is available — the
+    /// caller falls back to its round-robin path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn place_batch(
+        &mut self,
+        n: usize,
+        tables: &[&TaskTable],
+        frontiers: &[SimCursor],
+        elapsed: &[f64],
+        available: &[bool],
+        prune: bool,
+        assignment: &mut Vec<usize>,
+    ) -> Option<BatchPlaceOutcome> {
+        let d = tables.len();
+        assert_eq!(d, frontiers.len(), "one frontier per device");
+        assert_eq!(d, elapsed.len(), "one elapsed clock per device");
+        assert_eq!(d, available.len(), "one availability flag per device");
+        assignment.clear();
+        if n == 0 || !available.iter().any(|&a| a) {
+            return None;
+        }
+        let BatchPlacer {
+            pool,
+            probes,
+            stripe_counters,
+            counters,
+            scores,
+            probe,
+            ext,
+            placed,
+            memo,
+            lpt,
+            assign_frozen,
+            assign_trial,
+        } = self;
+
+        // Phase 1: parallel grid scan against the cached frozen frontiers.
+        if scores.len() < n * d {
+            scores.resize_with(n * d, || AtomicU64::new(0));
+        }
+        {
+            let scores: &[AtomicU64] = scores;
+            let probes: &[Mutex<SimCursor>] = probes;
+            let stripe_counters: &[Mutex<PruneCounters>] = stripe_counters;
+            let stripes = pool.stripes();
+            let job = move |stripe: usize| {
+                let mut probe =
+                    probes[stripe].lock().unwrap_or_else(PoisonError::into_inner);
+                let mut ctr = stripe_counters[stripe]
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                // Per-device twin memo, valid for the stripe's whole scan
+                // because the frozen frontiers never move during phase 1.
+                // Exact scores only — exclusion markers are never cached.
+                let mut twin: Vec<Option<(u32, f64)>> = vec![None; d];
+                let mut i = stripe;
+                while i < n {
+                    let mut best_rem = f64::INFINITY;
+                    for dev in 0..d {
+                        let slot = &scores[i * d + dev];
+                        if !available[dev] {
+                            slot.store(f64::INFINITY.to_bits(), Ordering::Relaxed);
+                            continue;
+                        }
+                        let t = if prune {
+                            let class = tables[dev].twin_class(i);
+                            match twin[dev] {
+                                Some((c, s)) if c == class => {
+                                    ctr.n_twin_collapsed += 1;
+                                    s
+                                }
+                                _ => {
+                                    let s = bounded_append_score(
+                                        &mut probe,
+                                        &frontiers[dev],
+                                        tables[dev],
+                                        i,
+                                        best_rem + elapsed[dev],
+                                        true,
+                                        &mut ctr,
+                                    );
+                                    if s.is_finite() {
+                                        twin[dev] = Some((class, s));
+                                    }
+                                    s
+                                }
+                            }
+                        } else {
+                            bounded_append_score(
+                                &mut probe,
+                                &frontiers[dev],
+                                tables[dev],
+                                i,
+                                f64::INFINITY,
+                                false,
+                                &mut ctr,
+                            )
+                        };
+                        slot.store(t.to_bits(), Ordering::Relaxed);
+                        let rem = t - elapsed[dev];
+                        if rem.total_cmp(&best_rem).is_lt() {
+                            best_rem = rem;
+                        }
+                    }
+                    i += stripes;
+                }
+            };
+            pool.run(&job);
+        }
+
+        // Phase 2a: frozen-frontier greedy in arrival order — bit-identical
+        // to the per-arrival decisions the batching replaced.
+        assign_frozen.clear();
+        for i in 0..n {
+            assign_frozen.push(grid_argmin(&scores[i * d..(i + 1) * d], elapsed, available));
+        }
+        let o_frozen =
+            replay_objective(n, tables, frontiers, elapsed, available, assign_frozen, probe);
+        assignment.clone_from(assign_frozen);
+        let mut best_obj = o_frozen;
+
+        // Phase 2b/2c: extending-greedy trials (arrival order, then LPT).
+        lpt.clear();
+        lpt.extend(0..n);
+        lpt.sort_by(|&a, &b| {
+            let solo = |i: usize| -> f64 {
+                tables
+                    .iter()
+                    .zip(available)
+                    .filter(|&(_, &av)| av)
+                    .map(|(t, _)| t.sequential_secs(i))
+                    .fold(0.0, f64::max)
+            };
+            solo(b).total_cmp(&solo(a))
+        });
+        for trial in 0..2 {
+            let order: Option<&[usize]> = if trial == 0 { None } else { Some(lpt) };
+            ext_greedy_trial(
+                n, tables, frontiers, elapsed, available, prune, order, scores, ext,
+                placed, memo, probe, counters, assign_trial,
+            );
+            let o = replay_objective(
+                n, tables, frontiers, elapsed, available, assign_trial, probe,
+            );
+            // Strict improvement required: ties keep the earlier trial, so
+            // a batch of one always resolves to the frozen greedy.
+            if o.total_cmp(&best_obj).is_lt() {
+                assignment.clone_from(assign_trial);
+                best_obj = o;
+            }
+        }
+        Some(BatchPlaceOutcome { objective: best_obj, greedy_objective: o_frozen })
+    }
+}
+
+/// Argmin over one grid row: the available device minimizing
+/// (completion − elapsed) under `total_cmp`, first device winning ties —
+/// the exact tie/NaN semantics of the per-arrival scan. Falls back to the
+/// first available device if every slot is non-finite (degenerate
+/// profiles); callers guarantee at least one device is available.
+fn grid_argmin(row: &[AtomicU64], elapsed: &[f64], available: &[bool]) -> usize {
+    let mut best_dev = usize::MAX;
+    let mut best_rem = f64::INFINITY;
+    for (dev, slot) in row.iter().enumerate() {
+        if !available[dev] {
+            continue;
+        }
+        if best_dev == usize::MAX {
+            best_dev = dev;
+        }
+        let rem = f64::from_bits(slot.load(Ordering::Relaxed)) - elapsed[dev];
+        if rem.total_cmp(&best_rem).is_lt() {
+            best_rem = rem;
+            best_dev = dev;
+        }
+    }
+    best_dev
+}
+
+/// One extending-greedy trial: visit the batch in `order` (arrival order
+/// when `None`), scoring each task against per-device *trial* frontiers
+/// that accumulate this trial's own placements. Grid scores are reused
+/// only where their frozen-frontier context still holds — a device with
+/// no trial placements and a finite (exact) slot; anything else, in
+/// particular every cutoff-dependent `INFINITY` exclusion marker, is
+/// re-scored against the trial frontier under the trial's own running
+/// cutoff. Fills `assign[i]` = device, indexed by original batch index.
+#[allow(clippy::too_many_arguments)]
+fn ext_greedy_trial(
+    n: usize,
+    tables: &[&TaskTable],
+    frontiers: &[SimCursor],
+    elapsed: &[f64],
+    available: &[bool],
+    prune: bool,
+    order: Option<&[usize]>,
+    grid: &[AtomicU64],
+    ext: &mut Vec<SimCursor>,
+    placed: &mut Vec<usize>,
+    memo: &mut Vec<Option<(u32, usize, f64)>>,
+    probe: &mut SimCursor,
+    counters: &mut PruneCounters,
+    assign: &mut Vec<usize>,
+) {
+    let d = tables.len();
+    if ext.len() < d {
+        ext.resize_with(d, SimCursor::detached);
+    }
+    for dev in 0..d {
+        if available[dev] {
+            ext[dev].resume_from(&frontiers[dev]);
+        }
+    }
+    placed.clear();
+    placed.resize(d, 0);
+    memo.clear();
+    memo.resize(d, None);
+    assign.clear();
+    assign.resize(n, usize::MAX);
+    for k in 0..n {
+        let i = order.map_or(k, |o| o[k]);
+        let mut best_dev = usize::MAX;
+        let mut best_rem = f64::INFINITY;
+        for dev in 0..d {
+            if !available[dev] {
+                continue;
+            }
+            if best_dev == usize::MAX {
+                best_dev = dev;
+            }
+            let cached = if placed[dev] == 0 {
+                let g = f64::from_bits(grid[i * d + dev].load(Ordering::Relaxed));
+                g.is_finite().then_some(g)
+            } else {
+                None
+            };
+            let t = match cached {
+                Some(g) => g,
+                None => {
+                    let class = tables[dev].twin_class(i);
+                    match memo[dev] {
+                        Some((c, p, s)) if prune && c == class && p == placed[dev] => {
+                            counters.n_twin_collapsed += 1;
+                            s
+                        }
+                        _ => {
+                            let cutoff =
+                                if prune { best_rem + elapsed[dev] } else { f64::INFINITY };
+                            let s = bounded_append_score(
+                                probe, &ext[dev], tables[dev], i, cutoff, prune, counters,
+                            );
+                            if s.is_finite() {
+                                memo[dev] = Some((class, placed[dev], s));
+                            }
+                            s
+                        }
+                    }
+                }
+            };
+            let rem = t - elapsed[dev];
+            if rem.total_cmp(&best_rem).is_lt() {
+                best_rem = rem;
+                best_dev = dev;
+            }
+        }
+        ext[best_dev].push_task_compiled(tables[best_dev], i);
+        placed[best_dev] += 1;
+        memo[best_dev] = None;
+        assign[i] = best_dev;
+    }
+}
+
+/// Uniform objective for one candidate assignment: per available device,
+/// resume the frozen frontier, push that device's batch rows **in arrival
+/// order** (the order the lane will actually enqueue them), run to
+/// quiescence, and take the worst (completion − elapsed) across the
+/// fleet. Every trial is judged by this same replay, so the comparison
+/// between trials is exact regardless of how their scans were pruned.
+fn replay_objective(
+    n: usize,
+    tables: &[&TaskTable],
+    frontiers: &[SimCursor],
+    elapsed: &[f64],
+    available: &[bool],
+    assign: &[usize],
+    probe: &mut SimCursor,
+) -> f64 {
+    let d = tables.len();
+    let mut obj = f64::NEG_INFINITY;
+    for dev in 0..d {
+        if !available[dev] {
+            continue;
+        }
+        probe.resume_from(&frontiers[dev]);
+        for i in 0..n {
+            if assign[i] == dev {
+                probe.push_task_compiled(tables[dev], i);
+            }
+        }
+        let rem = probe.run_to_quiescence() - elapsed[dev];
+        if rem.total_cmp(&obj).is_gt() {
+            obj = rem;
+        }
+    }
+    obj
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -447,5 +880,152 @@ mod tests {
     #[should_panic(expected = "need at least one device")]
     fn empty_fleet_panics() {
         schedule_fleet(&[], &[], &FleetOptions::default());
+    }
+
+    fn fresh_frontiers(tables: &[TaskTable]) -> Vec<SimCursor> {
+        tables
+            .iter()
+            .map(|t| {
+                let mut c = SimCursor::detached();
+                c.reset_for_table(t, EngineState::default());
+                c
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_of_one_matches_exact_serial_scan() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut rng = Pcg64::seeded(21);
+        let g = real_benchmark("BK50", "amd_r9", &p, 8, &mut rng, 1.0).unwrap();
+        let tables: Vec<TaskTable> =
+            het3().iter().map(|pr| TaskTable::compile(&g.tasks, pr)).collect();
+        let mut frontiers = fresh_frontiers(&tables);
+        let elapsed = [0.0; 3];
+        let available = [true; 3];
+        let mut placer = BatchPlacer::new(3);
+        let mut probe = SimCursor::detached();
+        let mut assignment = Vec::new();
+        for i in 0..8 {
+            // Per-device one-row sub-tables whose row 0 is task `i`, like
+            // a coordinator batch of one.
+            let subs: Vec<TaskTable> = tables
+                .iter()
+                .map(|t| {
+                    let mut s = TaskTable::new();
+                    s.gather_into(t, &[i]);
+                    s
+                })
+                .collect();
+            // Reference: the exact per-arrival scan (full probe, no
+            // pruning), first-device ties under total_cmp.
+            let mut best_dev = 0;
+            let mut best_rem = f64::INFINITY;
+            for dev in 0..3 {
+                probe.resume_from(&frontiers[dev]);
+                probe.push_task_compiled(&subs[dev], 0);
+                let rem = probe.run_to_quiescence() - elapsed[dev];
+                if rem.total_cmp(&best_rem).is_lt() {
+                    best_rem = rem;
+                    best_dev = dev;
+                }
+            }
+            let refs: Vec<&TaskTable> = subs.iter().collect();
+            let out = placer
+                .place_batch(1, &refs, &frontiers, &elapsed, &available, true, &mut assignment)
+                .unwrap();
+            assert_eq!(assignment, vec![best_dev], "task {i}");
+            // A batch of one has nothing to improve jointly.
+            assert_eq!(out.objective.to_bits(), out.greedy_objective.to_bits());
+            frontiers[best_dev].push_task_compiled(&subs[best_dev], 0);
+        }
+    }
+
+    #[test]
+    fn batched_placement_joint_not_worse_and_deterministic() {
+        let p = profile_by_name("amd_r9").unwrap();
+        for seed in [5u64, 9, 33] {
+            let mut rng = Pcg64::seeded(seed);
+            let g = real_benchmark("BK50", "amd_r9", &p, 10, &mut rng, 1.0).unwrap();
+            let tables: Vec<TaskTable> =
+                het3().iter().map(|pr| TaskTable::compile(&g.tasks, pr)).collect();
+            let frontiers = fresh_frontiers(&tables);
+            let refs: Vec<&TaskTable> = tables.iter().collect();
+            let elapsed = [0.0; 3];
+            let available = [true; 3];
+            let mut base: Option<(Vec<usize>, u64, u64)> = None;
+            for stripes in [1usize, 2, 4, 8] {
+                for prune in [true, false] {
+                    let mut placer = BatchPlacer::new(stripes);
+                    let mut assignment = Vec::new();
+                    let out = placer
+                        .place_batch(
+                            10, &refs, &frontiers, &elapsed, &available, prune,
+                            &mut assignment,
+                        )
+                        .unwrap();
+                    assert!(
+                        out.objective.total_cmp(&out.greedy_objective).is_le(),
+                        "seed {seed}: joint {} > greedy {}",
+                        out.objective,
+                        out.greedy_objective
+                    );
+                    let key = (
+                        assignment.clone(),
+                        out.objective.to_bits(),
+                        out.greedy_objective.to_bits(),
+                    );
+                    match &base {
+                        None => base = Some(key),
+                        Some(b) => assert_eq!(
+                            &key, b,
+                            "seed {seed} stripes {stripes} prune {prune}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_placer_counters_fire() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let g = real_benchmark("BK50", "amd_r9", &p, 16, &mut rng, 1.0).unwrap();
+        let tables: Vec<TaskTable> =
+            het3().iter().map(|pr| TaskTable::compile(&g.tasks, pr)).collect();
+        let frontiers = fresh_frontiers(&tables);
+        let refs: Vec<&TaskTable> = tables.iter().collect();
+        let mut placer = BatchPlacer::new(2);
+        let mut assignment = Vec::new();
+        placer
+            .place_batch(
+                16, &refs, &frontiers, &[0.0; 3], &[true; 3], true, &mut assignment,
+            )
+            .unwrap();
+        assert!(
+            placer.prune_counters().total_saved() > 0,
+            "16 tasks × 3 devices must prune or collapse something: {:?}",
+            placer.prune_counters()
+        );
+    }
+
+    #[test]
+    fn batch_placer_declines_empty_and_unavailable() {
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 1.0).unwrap();
+        let tables = vec![TaskTable::compile(&g.tasks, &p)];
+        let frontiers = fresh_frontiers(&tables);
+        let refs: Vec<&TaskTable> = tables.iter().collect();
+        let mut placer = BatchPlacer::new(1);
+        let mut assignment = vec![7usize];
+        assert!(placer
+            .place_batch(0, &refs, &frontiers, &[0.0], &[true], true, &mut assignment)
+            .is_none());
+        assert!(assignment.is_empty());
+        assert!(placer
+            .place_batch(2, &refs, &frontiers, &[0.0], &[false], true, &mut assignment)
+            .is_none());
+        assert!(assignment.is_empty());
     }
 }

@@ -160,8 +160,10 @@ impl ScoringPool {
 
     /// Run `job(stripe)` for every stripe in `0..stripes()`; blocks until
     /// all stripes completed. Allocation-free: the job reference is parked
-    /// as a raw pointer, workers are woken via condvar.
-    fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+    /// as a raw pointer, workers are woken via condvar. Crate-visible so
+    /// the fleet `BatchPlacer` can fan its placement grid over the same
+    /// stripes the beam scorer uses.
+    pub(crate) fn run(&self, job: &(dyn Fn(usize) + Sync)) {
         let inline = self.stripes == 1 || self.shared.lock().broken;
         if inline {
             for s in 0..self.stripes {

@@ -32,7 +32,8 @@ use oclcc::device::{ChaosDevice, ChaosOptions, Device, SimDevice};
 use oclcc::model::simulator::{simulate_order_compiled, SimCursor, SimOptions};
 use oclcc::model::{EngineState, TaskTable};
 use oclcc::sched::fleet::{
-    schedule_fleet_tables, steal_predicts_win, FleetOptions, FleetSchedule,
+    schedule_fleet_tables, steal_predicts_win, BatchPlacer, FleetOptions,
+    FleetSchedule,
 };
 use oclcc::sched::heuristic::{batch_reorder_table_into, BeamScratch};
 use oclcc::sched::search_util::PruneCounters;
@@ -346,6 +347,254 @@ fn quarantined_device_loses_no_tasks_mid_run() {
         assert!(d0.n_quarantine_trips >= 1, "seed {seed}: {d0:?}");
         assert!(d0.n_requeued >= 1, "seed {seed}: {d0:?}");
         assert!(d1.n_stolen >= 1, "seed {seed}: {d1:?}");
+    }
+}
+
+/// Random per-device placement context for the `BatchPlacer` properties:
+/// warm frontiers (a committed prefix of pushed rows), per-device elapsed
+/// clocks and an availability mask with at least one device up.
+#[allow(clippy::type_complexity)]
+fn random_placement_ctx(
+    rng: &mut Pcg64,
+    tables: &[TaskTable],
+) -> (Vec<SimCursor>, Vec<f64>, Vec<bool>) {
+    let d = tables.len();
+    let mut frontiers = Vec::with_capacity(d);
+    let mut elapsed = Vec::with_capacity(d);
+    let mut available = Vec::with_capacity(d);
+    for t in tables {
+        let mut c = SimCursor::detached();
+        c.reset_for_table(t, random_init(rng));
+        for j in 0..(rng.below(3) as usize).min(t.len()) {
+            c.push_task_compiled(t, j);
+        }
+        frontiers.push(c);
+        elapsed.push(rng.uniform(0.0, 2e-3));
+        available.push(rng.below(8) != 0);
+    }
+    if !available.iter().any(|&a| a) {
+        available[0] = true;
+    }
+    (frontiers, elapsed, available)
+}
+
+#[test]
+fn batch_of_one_is_bit_identical_to_per_arrival_reference() {
+    // A stream placed one task at a time through `place_batch(1, ..)`
+    // must make exactly the decisions of an independently coded exact
+    // per-arrival scan (full probes, no pruning): resume the device
+    // frontier, append the candidate, compare *remaining* seconds under
+    // total_cmp with first-device ties — the pinned `place_on_ect`
+    // semantics the batched path replaced. Pruned/unpruned and every
+    // stripe count must agree bit for bit at every step.
+    let profs = profiles();
+    let mut placers: Vec<BatchPlacer> =
+        [1usize, 2, 4].iter().map(|&t| BatchPlacer::new(t)).collect();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0xba7c4_0000 + seed);
+        let tasks = random_group(&mut rng);
+        let streams: Vec<TaskTable> =
+            profs.iter().map(|p| TaskTable::compile(&tasks, p)).collect();
+        let (mut frontiers, mut elapsed, available) =
+            random_placement_ctx(&mut rng, &streams);
+        let d = streams.len();
+        let mut probe = SimCursor::detached();
+        let mut assignment = Vec::new();
+        for i in 0..tasks.len() {
+            // One-row sub-tables whose row 0 is task `i` — a coordinator
+            // batch of one, per device.
+            let subs: Vec<TaskTable> = streams
+                .iter()
+                .map(|t| {
+                    let mut s = TaskTable::new();
+                    s.gather_into(t, &[i]);
+                    s
+                })
+                .collect();
+            let mut ref_dev = usize::MAX;
+            let mut ref_rem = f64::INFINITY;
+            for dev in 0..d {
+                if !available[dev] {
+                    continue;
+                }
+                if ref_dev == usize::MAX {
+                    ref_dev = dev;
+                }
+                probe.resume_from(&frontiers[dev]);
+                probe.push_task_compiled(&subs[dev], 0);
+                let rem = probe.run_to_quiescence() - elapsed[dev];
+                if rem.total_cmp(&ref_rem).is_lt() {
+                    ref_rem = rem;
+                    ref_dev = dev;
+                }
+            }
+            let refs: Vec<&TaskTable> = subs.iter().collect();
+            for placer in placers.iter_mut() {
+                for prune in [false, true] {
+                    let out = placer
+                        .place_batch(
+                            1,
+                            &refs,
+                            &frontiers,
+                            &elapsed,
+                            &available,
+                            prune,
+                            &mut assignment,
+                        )
+                        .expect("a device is available");
+                    assert_eq!(
+                        assignment,
+                        vec![ref_dev],
+                        "seed {seed} task {i} stripes {} prune {prune}",
+                        placer.stripes()
+                    );
+                    assert_eq!(
+                        out.objective.to_bits(),
+                        out.greedy_objective.to_bits(),
+                        "seed {seed} task {i}: a batch of one has no joint slack"
+                    );
+                }
+            }
+            // Advance the stream like the coordinator would: the winner's
+            // frontier absorbs the placed task, clocks drift a little.
+            frontiers[ref_dev].push_task_compiled(&streams[ref_dev], i);
+            elapsed[ref_dev] += rng.uniform(0.0, 0.5e-3);
+        }
+    }
+}
+
+#[test]
+fn batched_joint_placement_beats_greedy_and_prunes_exactly() {
+    // Joint batch placement must (a) never be worse than the frozen
+    // per-arrival greedy on the replayed model clock, (b) make bitwise
+    // identical decisions pruned and unpruned, (c) report an objective
+    // that bitwise matches an independent arrival-order replay of its
+    // chosen assignment, and (d) actually engage the pruning layer
+    // somewhere across twin-rich cases.
+    let profs = profiles();
+    let mut placer_on = BatchPlacer::new(2);
+    let mut placer_off = BatchPlacer::new(2);
+    let mut joint_wins = 0usize;
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x10177_0000 + seed);
+        let tasks = random_group(&mut rng);
+        let n = tasks.len();
+        let tables: Vec<TaskTable> =
+            profs.iter().map(|p| TaskTable::compile(&tasks, p)).collect();
+        let (frontiers, elapsed, available) =
+            random_placement_ctx(&mut rng, &tables);
+        let refs: Vec<&TaskTable> = tables.iter().collect();
+        let mut a_on = Vec::new();
+        let mut a_off = Vec::new();
+        let on = placer_on
+            .place_batch(n, &refs, &frontiers, &elapsed, &available, true, &mut a_on)
+            .expect("a device is available");
+        let off = placer_off
+            .place_batch(n, &refs, &frontiers, &elapsed, &available, false, &mut a_off)
+            .expect("a device is available");
+        assert_eq!(a_on, a_off, "seed {seed}: pruning changed the assignment");
+        assert_eq!(
+            on.objective.to_bits(),
+            off.objective.to_bits(),
+            "seed {seed}: pruning changed the objective"
+        );
+        assert_eq!(
+            on.greedy_objective.to_bits(),
+            off.greedy_objective.to_bits(),
+            "seed {seed}: pruning changed the greedy baseline"
+        );
+        assert!(
+            on.objective.total_cmp(&on.greedy_objective).is_le(),
+            "seed {seed}: joint {} worse than greedy {}",
+            on.objective,
+            on.greedy_objective
+        );
+        if on.objective.total_cmp(&on.greedy_objective).is_lt() {
+            joint_wins += 1;
+        }
+        // Independent replay of the chosen assignment, arrival order.
+        let mut probe = SimCursor::detached();
+        let mut replayed = f64::NEG_INFINITY;
+        for dev in 0..tables.len() {
+            if !available[dev] {
+                continue;
+            }
+            probe.resume_from(&frontiers[dev]);
+            for (i, &a) in a_on.iter().enumerate() {
+                if a == dev {
+                    probe.push_task_compiled(&tables[dev], i);
+                }
+            }
+            let rem = probe.run_to_quiescence() - elapsed[dev];
+            if rem.total_cmp(&replayed).is_gt() {
+                replayed = rem;
+            }
+        }
+        assert_eq!(
+            on.objective.to_bits(),
+            replayed.to_bits(),
+            "seed {seed}: reported objective is not the replayed model clock"
+        );
+        for &a in &a_on {
+            assert!(available[a], "seed {seed}: placed on an unavailable device");
+        }
+    }
+    assert!(
+        placer_on.prune_counters().total_saved() > 0,
+        "batched placement never pruned/collapsed over {CASES} twin-rich cases: {:?}",
+        placer_on.prune_counters()
+    );
+    assert_eq!(
+        placer_off.prune_counters().total_saved(),
+        0,
+        "unpruned placer still pruned"
+    );
+    assert!(
+        joint_wins > 0,
+        "joint placement never beat per-arrival greedy over {CASES} cases"
+    );
+}
+
+#[test]
+fn batched_placement_is_deterministic_across_stripe_counts() {
+    let profs = profiles();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::seeded(0x57417e_0000 + seed);
+        let tasks = random_group(&mut rng);
+        let n = tasks.len();
+        let tables: Vec<TaskTable> =
+            profs.iter().map(|p| TaskTable::compile(&tasks, p)).collect();
+        let (frontiers, elapsed, available) =
+            random_placement_ctx(&mut rng, &tables);
+        let refs: Vec<&TaskTable> = tables.iter().collect();
+        let mut base: Option<(Vec<usize>, u64, u64)> = None;
+        for stripes in 1..=8usize {
+            let mut placer = BatchPlacer::new(stripes);
+            let mut assignment = Vec::new();
+            let out = placer
+                .place_batch(
+                    n,
+                    &refs,
+                    &frontiers,
+                    &elapsed,
+                    &available,
+                    true,
+                    &mut assignment,
+                )
+                .expect("a device is available");
+            let key = (
+                assignment,
+                out.objective.to_bits(),
+                out.greedy_objective.to_bits(),
+            );
+            match &base {
+                None => base = Some(key),
+                Some(b) => assert_eq!(
+                    &key, b,
+                    "seed {seed}: stripes {stripes} diverged from stripes 1"
+                ),
+            }
+        }
     }
 }
 

@@ -17,10 +17,17 @@ its own key fields, metric, direction and regression threshold (see
 * ``BENCH_recovery.json`` — goodput under injected faults per
   (policy, fault_pct), higher is better, 30% (chaos cells inherit the
   live-pipeline noise floor plus backoff-sleep jitter);
-* ``BENCH_fleet.json`` — fleet throughput per (cell, impl), tasks/sec,
-  higher is better, 30% (the static cells are model-time and bit-stable;
-  the live steal/miscalibration cells inherit the coordinator noise
-  floor).
+* ``BENCH_fleet.json`` — two gated trajectories over the same rows,
+  both keyed (cell, impl): fleet throughput in tasks/sec, higher is
+  better, 30% (the static cells are model-time and bit-stable; the live
+  steal/placement/miscalibration cells inherit the coordinator noise
+  floor), and measured ingress-to-placement ``placement_p99_us``, lower
+  is better, 150%. The latency gate is deliberately loose: p99 tails of
+  microsecond-scale wall timings jitter freely under CI schedulers, and
+  the failure it exists to catch — a blocking backoff or poll sleep
+  reintroduced into the planning loop — inflates p99 by orders of
+  magnitude, not fractions. Static rows carry no latency field and are
+  skipped by that trajectory.
 
 Invocation: ``bench_diff.py PREVIOUS CURRENT`` where both arguments are
 either two files (config picked by basename) or two directories (every
@@ -93,16 +100,26 @@ TRAJECTORIES = (
         higher_is_better=True,
         threshold=0.30,
     ),
+    # Second gate over the same file: measured ingress-to-placement p99.
+    # Rows without the field (static model-time cells) soft-skip via
+    # metric_of. The loose threshold tolerates scheduler jitter on
+    # microsecond tails while still failing hard if a blocking sleep
+    # lands back in the planning loop (that costs 100x+, not 2.5x).
+    Trajectory(
+        name="BENCH_fleet.json",
+        key_fields=("cell", "impl"),
+        metric_path=("placement_p99_us",),
+        higher_is_better=False,
+        threshold=1.50,
+    ),
 )
 
 
-def trajectory_for(path):
-    """Config matching a file's basename, or None."""
+def trajectories_for(path):
+    """Every config matching a file's basename (a file may carry several
+    gated metrics, e.g. BENCH_fleet.json); empty for unknown names."""
     base = os.path.basename(path)
-    for traj in TRAJECTORIES:
-        if traj.name == base:
-            return traj
-    return None
+    return [traj for traj in TRAJECTORIES if traj.name == base]
 
 
 def metric_of(row, metric_path):
@@ -178,6 +195,8 @@ def diff_cells(prev_cells, curr_cells, traj, threshold):
 def fmt_value(traj, v):
     if v is None:
         return "-"
+    if traj.metric_path[-1].endswith("_us"):
+        return f"{v:.1f}us"
     if traj.metric_path[-1].endswith("_s"):
         return f"{v * 1e6:.1f}us"
     return f"{v:.1f}/s"
@@ -259,16 +278,17 @@ def main(argv=None):
                 continue
             pairs.append((prev, curr, traj))
     else:
-        traj = trajectory_for(args.current) or trajectory_for(args.previous)
-        if traj is None:
+        trajs = trajectories_for(args.current) or trajectories_for(args.previous)
+        if not trajs:
             # Unknown basename: fall back to the table6 config, matching
             # the pre-multi-trajectory behavior for ad-hoc file names.
-            traj = TRAJECTORIES[0]
+            trajs = [TRAJECTORIES[0]]
             print(
                 f"bench-diff: unrecognized file name, defaulting to the "
-                f"{traj.name} configuration"
+                f"{trajs[0].name} configuration"
             )
-        pairs.append((args.previous, args.current, traj))
+        for traj in trajs:
+            pairs.append((args.previous, args.current, traj))
 
     total = 0
     compared = 0

@@ -8,9 +8,9 @@ import json
 import bench_diff as bd
 
 
-def traj(name):
+def traj(name, metric=None):
     for t in bd.TRAJECTORIES:
-        if t.name == name:
+        if t.name == name and (metric is None or t.metric_path == metric):
             return t
     raise AssertionError(f"unknown trajectory {name}")
 
@@ -19,10 +19,13 @@ T6 = traj("BENCH_sched_overhead.json")
 COORD = traj("BENCH_coordinator_throughput.json")
 ONLINE = traj("BENCH_online_resched.json")
 REC = traj("BENCH_recovery.json")
-FLEET = traj("BENCH_fleet.json")
+FLEET = traj("BENCH_fleet.json", metric=("tasks_per_sec",))
+FLEET_LAT = traj("BENCH_fleet.json", metric=("placement_p99_us",))
 
 
-def write_doc(path, mode, rows):
+def write_doc(path, mode, rows, mkdir=False):
+    if mkdir:
+        path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps({"bench_mode": mode, "rows": rows}))
     return str(path)
 
@@ -59,15 +62,19 @@ def recovery_row(policy="retry", fault_pct=10, tps=800.0, n_retries=3):
     }
 
 
-def fleet_row(cell="het3", impl="fleet", tps=1200.0, n_stolen=0):
+def fleet_row(cell="het3", impl="fleet", tps=1200.0, n_stolen=0, p99_us=None):
     # dict literal: ``impl`` is a Python keyword-adjacent name kept as a
-    # plain key, matching the emitted BENCH_fleet.json rows.
-    return {
+    # plain key, matching the emitted BENCH_fleet.json rows. Static
+    # model-time rows carry no placement_p99_us, so it stays optional.
+    row = {
         "cell": cell,
         "impl": impl,
         "tasks_per_sec": tps,
         "n_stolen": n_stolen,
     }
+    if p99_us is not None:
+        row["placement_p99_us"] = p99_us
+    return row
 
 
 # ---- loading & key extraction ---------------------------------------------
@@ -162,7 +169,7 @@ def test_online_trajectory_keys_include_shape(tmp_path):
 
 
 def test_recovery_trajectory_is_recognized_by_basename(tmp_path):
-    assert bd.trajectory_for("artifacts/" + REC.name) is REC
+    assert bd.trajectories_for("artifacts/" + REC.name) == [REC]
     assert REC.higher_is_better and REC.threshold == 0.30
     p = write_doc(tmp_path / REC.name, "fast", [recovery_row()])
     mode, cells = bd.load_rows(p, REC)
@@ -200,8 +207,10 @@ def test_recovery_goodput_drop_regresses_per_cell(tmp_path):
 
 
 def test_fleet_trajectory_is_recognized_by_basename(tmp_path):
-    assert bd.trajectory_for("artifacts/" + FLEET.name) is FLEET
+    # One basename, two gated metrics: throughput and placement latency.
+    assert bd.trajectories_for("artifacts/" + FLEET.name) == [FLEET, FLEET_LAT]
     assert FLEET.higher_is_better and FLEET.threshold == 0.30
+    assert not FLEET_LAT.higher_is_better and FLEET_LAT.threshold == 1.50
     p = write_doc(
         tmp_path / FLEET.name,
         "fast",
@@ -245,6 +254,84 @@ def test_fleet_throughput_drop_regresses_per_cell(tmp_path):
         ],
     )
     assert bd.compare_files(prev, better, FLEET) == 0
+
+
+def test_fleet_latency_trajectory_skips_rows_without_the_metric(tmp_path):
+    # Static model-time rows never grow a placement_p99_us field; the
+    # latency trajectory must see only the live rows.
+    p = write_doc(
+        tmp_path / FLEET.name,
+        "fast",
+        [
+            fleet_row(),  # static-style row, no latency field
+            fleet_row(cell="place_het3", impl="batched", tps=800.0, p99_us=40.0),
+        ],
+    )
+    _, cells = bd.load_rows(p, FLEET_LAT)
+    assert cells == {("place_het3", "batched"): 40.0}
+
+
+def test_fleet_placement_p99_blowup_regresses(tmp_path):
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [fleet_row(cell="retry_liveness", tps=600.0, p99_us=50.0)],
+    )
+    # 2x jitter stays inside the deliberately loose 150% gate...
+    noisy = write_doc(
+        tmp_path / "noisy.json",
+        "fast",
+        [fleet_row(cell="retry_liveness", tps=600.0, p99_us=100.0)],
+    )
+    assert bd.compare_files(prev, noisy, FLEET_LAT) == 0
+    # ...a reintroduced backoff sleep (orders of magnitude) does not.
+    stalled = write_doc(
+        tmp_path / "stalled.json",
+        "fast",
+        [fleet_row(cell="retry_liveness", tps=600.0, p99_us=10_000.0)],
+    )
+    assert bd.compare_files(prev, stalled, FLEET_LAT) == 1
+
+
+def test_fleet_batched_cells_gate_on_tasks_per_sec(tmp_path):
+    # The new batched-placement cells ride the existing throughput gate.
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [
+            fleet_row(cell="place_het3", impl="batch1", tps=900.0, p99_us=30.0),
+            fleet_row(cell="place_het3", impl="batched", tps=1000.0, p99_us=35.0),
+        ],
+    )
+    curr = write_doc(
+        tmp_path / "curr.json",
+        "fast",
+        [
+            fleet_row(cell="place_het3", impl="batch1", tps=880.0, p99_us=30.0),
+            fleet_row(cell="place_het3", impl="batched", tps=300.0, p99_us=35.0),
+        ],
+    )
+    assert bd.compare_files(prev, curr, FLEET) == 1
+
+
+def test_main_single_fleet_file_runs_both_gates(tmp_path):
+    # Throughput holds but p99 explodes: the second trajectory over the
+    # same file pair must catch it even in single-file mode.
+    prev = write_doc(
+        tmp_path / "prev" / FLEET.name,
+        "fast",
+        [fleet_row(cell="place_het3", impl="batched", tps=1000.0, p99_us=40.0)],
+        mkdir=True,
+    )
+    curr = write_doc(
+        tmp_path / "curr" / FLEET.name,
+        "fast",
+        [fleet_row(cell="place_het3", impl="batched", tps=1000.0, p99_us=9000.0)],
+        mkdir=True,
+    )
+    assert bd.main([prev, curr]) == 1
+    # Directory mode walks TRAJECTORIES and reaches the same verdict.
+    assert bd.main([str(tmp_path / "prev"), str(tmp_path / "curr")]) == 1
 
 
 # ---- main / directory discovery -------------------------------------------
