@@ -94,6 +94,7 @@ fn run_cell(workers: usize, lanes: usize, group_cap: usize, reps: usize) -> Cell
                 online: None,
                 recalibrate: None,
                 recovery: None,
+                admission: None,
             },
         );
         let m = coord.run(workloads(workers, SCALE));

@@ -1,0 +1,401 @@
+//! `cargo bench --bench multitenant` — QoS under multi-tenant overload,
+//! per (cell) on the admission-armed online lane pipeline.
+//!
+//! Cells:
+//!
+//! * `hi_solo` — the two Hi tenants alone (no contention): the baseline
+//!   their overload p99 is bounded against;
+//! * `overload_shed` — the same Hi tenants while a saturating pack of
+//!   BestEffort workers crowds one shared tenant past its backlog cap
+//!   under `ShedLowest` + strict-priority draining. In-bench asserts:
+//!   the exactly-once ledger identity (`executed + shed == submitted`),
+//!   Hi work is never shed, the overload actually sheds (> 0 receipts),
+//!   and Hi p99 stays inside a bounded multiple of `hi_solo`;
+//! * `overload_block` — the same saturating load under `Block`: nothing
+//!   is shed, every task completes (backpressure trades throughput for
+//!   completeness — the block-vs-shed comparison cell);
+//! * `overload_reject` — the same load under `RejectNew`;
+//! * `fairness8` — 8 identical tenants under weighted-fair draining:
+//!   Jain fairness over per-tenant mean latency must be >= 0.9;
+//! * `collapse` — byte-identical submissions from 4 tenants on the
+//!   legacy batch path with `collapse_twins`: cross-tenant spec twins
+//!   execute once per drained batch (`n_xtenant_collapsed > 0`).
+//!
+//! Emits `BENCH_multitenant.json`; CI's bench-smoke job gates
+//! `tasks_per_sec` per cell (higher is better, 30%) and `hi_p99_us` on
+//! the Hi-bearing cells (lower is better, 150% — wall-clock p99 tails
+//! jitter; the gate exists to catch priority inversion, which costs
+//! orders of magnitude, not fractions).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oclcc::config::profile_by_name;
+use oclcc::coordinator::lanes::{
+    LaneCoordinator, LaneMetrics, LaneOptions, TenantWorkload,
+};
+use oclcc::coordinator::runner::Policy;
+use oclcc::coordinator::{
+    AdmissionOptions, DrainPolicyKind, Overflow, Priority, TenantId,
+};
+use oclcc::device::executor::SpinExecutor;
+use oclcc::device::vdev::VirtualDevice;
+use oclcc::device::Device;
+use oclcc::sched::online::OnlineOptions;
+use oclcc::task::synthetic::synthetic_benchmark;
+use oclcc::task::TaskSpec;
+use oclcc::util::bench::{bench_mode, fast_mode_from_env};
+use oclcc::util::json::Json;
+use oclcc::util::stats;
+
+const OUT_PATH: &str = "BENCH_multitenant.json";
+
+/// Time compression (same rationale as the other coordinator benches).
+const SCALE: f64 = 0.05;
+
+const LANES: usize = 2;
+/// Hi tenant ids (one worker each; nothing outranks them).
+const HI_TENANTS: [u32; 2] = [100, 101];
+/// The shared tenant the BestEffort pack crowds past its cap.
+const BE_TENANT: u32 = 9;
+
+fn devices() -> Vec<Arc<dyn Device>> {
+    (0..LANES)
+        .map(|_| {
+            let p = profile_by_name("amd_r9").unwrap();
+            Arc::new(VirtualDevice::new(p, Arc::new(SpinExecutor)))
+                as Arc<dyn Device>
+        })
+        .collect()
+}
+
+fn tasks(n: usize, offset: usize) -> Vec<TaskSpec> {
+    let p = profile_by_name("amd_r9").unwrap();
+    let g = synthetic_benchmark("BK50", &p, SCALE).unwrap();
+    (0..n).map(|i| g.tasks[(offset + i) % g.len()].clone()).collect()
+}
+
+fn hi_workloads(batch: usize) -> Vec<TenantWorkload> {
+    HI_TENANTS
+        .iter()
+        .map(|&t| TenantWorkload {
+            tenant: TenantId(t),
+            class: Priority::Hi,
+            deadline: None,
+            tasks: tasks(batch, t as usize),
+        })
+        .collect()
+}
+
+fn be_workloads(workers: usize, batch: usize) -> Vec<TenantWorkload> {
+    (0..workers)
+        .map(|w| TenantWorkload {
+            tenant: TenantId(BE_TENANT),
+            class: Priority::BestEffort,
+            deadline: None,
+            tasks: tasks(batch, w),
+        })
+        .collect()
+}
+
+fn coordinator(admission: AdmissionOptions) -> LaneCoordinator {
+    LaneCoordinator::with_devices(
+        devices(),
+        LaneOptions {
+            lanes: LANES,
+            policy: Policy::Heuristic,
+            settle: Duration::from_micros(200),
+            group_cap: 2,
+            online: Some(OnlineOptions::default()),
+            admission: Some(admission),
+            ..LaneOptions::default()
+        },
+    )
+}
+
+fn overload_admission(overflow: Overflow) -> AdmissionOptions {
+    AdmissionOptions {
+        per_tenant_cap: 1,
+        global_cap: 16,
+        overflow,
+        policy: DrainPolicyKind::StrictPriority,
+        collapse_twins: false,
+        ..AdmissionOptions::default()
+    }
+}
+
+struct CellResult {
+    tasks_per_sec: f64,
+    /// p99 completion latency over the Hi tenants' tasks (None when the
+    /// cell has no Hi tenant).
+    hi_p99: Option<f64>,
+    n_shed: usize,
+    n_block_waits: usize,
+    jain: f64,
+    n_collapsed: u64,
+    n_tasks: usize,
+}
+
+fn summarize(m: &LaneMetrics) -> CellResult {
+    let rep = m.admission.as_ref().expect("every cell is admission-armed");
+    let hi: Vec<f64> = m
+        .latencies
+        .iter()
+        .zip(&m.latency_tenants)
+        .filter(|&(_, &t)| HI_TENANTS.contains(&t))
+        .map(|(&l, _)| l)
+        .collect();
+    CellResult {
+        tasks_per_sec: m.tasks_per_sec,
+        hi_p99: (!hi.is_empty()).then(|| stats::percentile(&hi, 99.0)),
+        n_shed: rep.n_shed,
+        n_block_waits: rep.n_block_waits,
+        jain: rep.jain_fairness,
+        n_collapsed: m.per_lane.iter().map(|l| l.n_xtenant_collapsed).sum(),
+        n_tasks: m.n_tasks,
+    }
+}
+
+/// Median-of-reps run of one cell; per-rep invariants checked by
+/// `check` (ledger identities, QoS asserts).
+fn run_cell(
+    mk: impl Fn() -> (LaneCoordinator, Vec<TenantWorkload>),
+    reps: usize,
+    check: impl Fn(&LaneMetrics),
+) -> CellResult {
+    let mut tps = Vec::with_capacity(reps);
+    let mut p99 = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let (c, wl) = mk();
+        let m = c.run_tenants(wl);
+        check(&m);
+        let r = summarize(&m);
+        tps.push(r.tasks_per_sec);
+        if let Some(v) = r.hi_p99 {
+            p99.push(v);
+        }
+        last = Some(r);
+    }
+    let mut r = last.expect("reps >= 1");
+    r.tasks_per_sec = stats::median(&tps);
+    if !p99.is_empty() {
+        r.hi_p99 = Some(stats::median(&p99));
+    }
+    r
+}
+
+fn main() {
+    let fast = fast_mode_from_env();
+    let reps = if fast { 2 } else { 5 };
+    let be_workers = if fast { 4 } else { 8 };
+    let batch = if fast { 3 } else { 4 };
+    let hi_total = HI_TENANTS.len() * batch;
+
+    println!("== multi-tenant admission under overload (per cell) ==");
+    println!(
+        "{:>15} {:>12} {:>10} {:>7} {:>7} {:>6} {:>9}",
+        "cell", "goodput", "hi_p99", "shed", "blocked", "jain", "collapsed"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    // hi_solo: the two Hi tenants alone — the p99 baseline.
+    let solo = run_cell(
+        || (coordinator(overload_admission(Overflow::ShedLowest)), hi_workloads(batch)),
+        reps,
+        |m| {
+            assert_eq!(m.n_tasks, hi_total, "solo Hi run lost tasks");
+            let rep = m.admission.as_ref().unwrap();
+            assert_eq!(rep.n_shed, 0, "uncontended Hi tenants can never shed");
+        },
+    );
+    emit(&mut rows, "hi_solo", &solo);
+    let solo_p99 = solo.hi_p99.expect("hi_solo has Hi latencies");
+    // Bounded threshold for the overload cells: a generous multiple of
+    // the uncontended baseline with an absolute floor so scheduler
+    // jitter on millisecond tails cannot trip it — priority inversion
+    // (Hi queued behind a saturating BestEffort backlog) costs far more.
+    let hi_bound = (10.0 * solo_p99).max(0.025);
+
+    let overload =
+        |overflow| move || -> (LaneCoordinator, Vec<TenantWorkload>) {
+            let mut wl = hi_workloads(batch);
+            wl.extend(be_workloads(be_workers, batch));
+            (coordinator(overload_admission(overflow)), wl)
+        };
+    let total = hi_total + be_workers * batch;
+
+    let hi_all_complete = |m: &LaneMetrics| {
+        let rep = m.admission.as_ref().unwrap();
+        for t in &rep.per_tenant {
+            if HI_TENANTS.contains(&t.tenant) {
+                assert_eq!(t.n_shed, 0, "Hi tenant {} was shed", t.tenant);
+                assert_eq!(
+                    t.n_completed, batch,
+                    "Hi tenant {} lost work",
+                    t.tenant
+                );
+            }
+        }
+    };
+
+    // overload_shed: saturating BestEffort pack vs bounded Hi p99.
+    let shed = run_cell(overload(Overflow::ShedLowest), reps, |m| {
+        let rep = m.admission.as_ref().unwrap();
+        assert_eq!(
+            m.n_tasks + rep.n_shed,
+            total,
+            "ledger identity: executed + shed == submitted"
+        );
+        assert!(rep.n_shed > 0, "the overload cell must actually shed");
+        hi_all_complete(m);
+        let hi: Vec<f64> = m
+            .latencies
+            .iter()
+            .zip(&m.latency_tenants)
+            .filter(|&(_, &t)| HI_TENANTS.contains(&t))
+            .map(|(&l, _)| l)
+            .collect();
+        let hi_p99 = stats::percentile(&hi, 99.0);
+        assert!(
+            hi_p99 <= hi_bound,
+            "saturating BestEffort pushed Hi p99 to {:.2}ms \
+             (bound {:.2}ms, solo {:.2}ms)",
+            hi_p99 * 1e3,
+            hi_bound * 1e3,
+            solo_p99 * 1e3
+        );
+    });
+    emit(&mut rows, "overload_shed", &shed);
+
+    // overload_block: backpressure — nothing shed, everything completes.
+    let block = run_cell(overload(Overflow::Block), reps, |m| {
+        let rep = m.admission.as_ref().unwrap();
+        assert_eq!(rep.n_shed, 0, "Block never sheds");
+        assert_eq!(m.n_tasks, total, "blocked producers must all finish");
+        hi_all_complete(m);
+    });
+    emit(&mut rows, "overload_block", &block);
+
+    // overload_reject: immediate typed rejection.
+    let reject = run_cell(overload(Overflow::RejectNew), reps, |m| {
+        let rep = m.admission.as_ref().unwrap();
+        assert_eq!(m.n_tasks + rep.n_shed, total, "ledger identity");
+        hi_all_complete(m);
+    });
+    emit(&mut rows, "overload_reject", &reject);
+
+    // fairness8: 8 identical tenants under weighted-fair draining.
+    let fair = run_cell(
+        || {
+            let wl: Vec<TenantWorkload> = (0..8)
+                .map(|t| TenantWorkload {
+                    tenant: TenantId(t),
+                    class: Priority::Normal,
+                    deadline: None,
+                    tasks: tasks(batch, t as usize),
+                })
+                .collect();
+            let adm = AdmissionOptions {
+                per_tenant_cap: 4,
+                global_cap: 64,
+                overflow: Overflow::Block,
+                policy: DrainPolicyKind::WeightedFair,
+                collapse_twins: false,
+                ..AdmissionOptions::default()
+            };
+            (coordinator(adm), wl)
+        },
+        reps,
+        |m| {
+            assert_eq!(m.n_tasks, 8 * batch, "fairness cell lost tasks");
+            let rep = m.admission.as_ref().unwrap();
+            assert!(
+                rep.jain_fairness >= 0.9,
+                "Jain fairness {:.3} < 0.9 across 8 equal tenants",
+                rep.jain_fairness
+            );
+        },
+    );
+    emit(&mut rows, "fairness8", &fair);
+
+    // collapse: byte-identical submissions across tenants, legacy path.
+    let collapse = run_cell(
+        || {
+            let spec = tasks(1, 0).remove(0);
+            let wl: Vec<TenantWorkload> = (0..4)
+                .map(|t| TenantWorkload {
+                    tenant: TenantId(t),
+                    class: Priority::Normal,
+                    deadline: None,
+                    tasks: vec![spec.clone(); 2],
+                })
+                .collect();
+            let c = LaneCoordinator::with_devices(
+                vec![devices().remove(0)],
+                LaneOptions {
+                    lanes: 1,
+                    policy: Policy::NoReorder,
+                    // A wide straggler window so all 4 tenants' identical
+                    // submissions land in the same drained batch.
+                    settle: Duration::from_millis(5),
+                    admission: Some(AdmissionOptions {
+                        per_tenant_cap: 4,
+                        global_cap: 64,
+                        overflow: Overflow::Block,
+                        policy: DrainPolicyKind::Fifo,
+                        collapse_twins: true,
+                        ..AdmissionOptions::default()
+                    }),
+                    ..LaneOptions::default()
+                },
+            );
+            (c, wl)
+        },
+        reps,
+        |m| {
+            assert_eq!(m.n_tasks, 8, "every collapsed twin still completes");
+            let n: u64 =
+                m.per_lane.iter().map(|l| l.n_xtenant_collapsed).sum();
+            assert!(n > 0, "identical cross-tenant rows must collapse");
+        },
+    );
+    emit(&mut rows, "collapse", &collapse);
+
+    let doc = Json::obj(vec![
+        ("bench_mode", Json::str(bench_mode())),
+        ("rows", Json::arr(rows)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}, mode={}]", bench_mode()),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
+}
+
+fn emit(rows: &mut Vec<Json>, cell: &str, r: &CellResult) {
+    let hi_p99_s = r.hi_p99.unwrap_or(f64::NAN);
+    println!(
+        "{:>15} {:>9.1}/s {:>8} {:>7} {:>7} {:>6.3} {:>9}",
+        cell,
+        r.tasks_per_sec,
+        r.hi_p99
+            .map_or_else(|| "-".to_string(), |v| format!("{:.2}ms", v * 1e3)),
+        r.n_shed,
+        r.n_block_waits,
+        r.jain,
+        r.n_collapsed,
+    );
+    let mut fields = vec![
+        ("cell", Json::str(cell)),
+        ("n_tasks", Json::num(r.n_tasks as f64)),
+        ("tasks_per_sec", Json::num(r.tasks_per_sec)),
+        ("n_shed", Json::num(r.n_shed as f64)),
+        ("n_block_waits", Json::num(r.n_block_waits as f64)),
+        ("jain_fairness", Json::num(r.jain)),
+        ("n_xtenant_collapsed", Json::num(r.n_collapsed as f64)),
+    ];
+    if hi_p99_s.is_finite() {
+        fields.push(("hi_p99_us", Json::num(hi_p99_s * 1e6)));
+    }
+    rows.push(Json::obj(fields));
+}

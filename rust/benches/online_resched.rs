@@ -107,6 +107,7 @@ fn coordinator_calibrated(
             online,
             recalibrate,
             recovery: None,
+            admission: None,
         },
     );
     match plan_model {

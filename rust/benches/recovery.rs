@@ -93,6 +93,7 @@ fn coordinator(
             online: Some(OnlineOptions::default()),
             recalibrate: None,
             recovery,
+            admission: None,
         },
     )
 }

@@ -1,0 +1,1043 @@
+//! Multi-tenant admission control: bounded per-tenant backlogs,
+//! explicit backpressure, and QoS-aware shedding under overload.
+//!
+//! The paper's premise is many independent clients funnelling tasks into
+//! one accelerator; PySchedCL and HTS both argue the admission/scheduling
+//! policy must be a *pluggable* component. This module is that layer for
+//! the lane/fleet coordinators:
+//!
+//! * [`TenantId`] / [`Priority`] / a per-task deadline annotate every
+//!   [`Submission`]; untagged paths default to one tenant per worker at
+//!   [`Priority::Normal`].
+//! * [`AdmissionCtl`] holds the validated [`AdmissionOptions`] and the
+//!   reservation ledger: a submission *reserves* a slot against its
+//!   tenant's cap and the global cap when admitted, holds it while queued
+//!   in **any** buffer (so steals and explicit placement move work between
+//!   lanes without ever changing a tenant's total — steals cannot violate
+//!   caps), and releases it when drained for execution or evicted.
+//! * [`AdmissionGate::submit`] is the producer-side choke point. On a full
+//!   backlog the [`Overflow`] policy decides: `Block` parks the producer
+//!   on an epoch condvar ([`WakeSignal`]-style — no spin, no sleep loop)
+//!   until a release makes room; `RejectNew` returns a typed [`Shed`]
+//!   receipt immediately; `ShedLowest` evicts the lowest-priority queued
+//!   submission (strictly below the incoming class) to make room,
+//!   completing the victim's event and stamping its [`ShedSlot`] so the
+//!   blocked producer observes the receipt, never a hang.
+//! * [`AdmissionPolicy`] orders *drains* of admitted work: FIFO
+//!   (bit-identical to the admission-off pipeline), deficit-round-robin
+//!   weighted fairness over tenants, strict priority classes, and
+//!   deadline-EDF within a class — one impl per policy, selected by
+//!   [`DrainPolicyKind`].
+//!
+//! Exactly-once: an admitted submission lives in exactly one queue at a
+//! time, and both draining and eviction remove it under that queue's
+//! lock, so a task is either executed (completed by the device path) or
+//! shed (completed by the gate with a receipt) — never both. `Event`
+//! asserts on double-completion, which the property tests lean on.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::buffer::{SharedBuffer, Submission};
+use crate::coordinator::lanes::WakeSignal;
+use crate::util::stats;
+
+/// A tenant: one independent client (host application / cluster node)
+/// submitting work through the shared coordinator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u32);
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant{}", self.0)
+    }
+}
+
+/// Priority class of a submission. Classes are *strictly* ordered by the
+/// priority-aware drain policies: no `Normal` work runs while `Hi` work
+/// is queued on the same lane, and `BestEffort` is the shed victim pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive; drained first, never shed by `ShedLowest`
+    /// (nothing outranks it).
+    Hi,
+    #[default]
+    Normal,
+    /// Throughput filler; first to be evicted under overload.
+    BestEffort,
+}
+
+impl Priority {
+    /// Drain rank: lower drains first, higher sheds first.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Hi => 0,
+            Priority::Normal => 1,
+            Priority::BestEffort => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Hi => "hi",
+            Priority::Normal => "normal",
+            Priority::BestEffort => "besteffort",
+        }
+    }
+}
+
+/// Why a submission was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The submitting tenant's own backlog cap was full (`RejectNew`, or
+    /// `ShedLowest` with no lower-priority victim of the same tenant).
+    TenantCapFull,
+    /// The global backlog cap was full.
+    GlobalCapFull,
+    /// A queued submission was evicted by a higher-priority arrival
+    /// (`ShedLowest`).
+    Evicted,
+}
+
+/// Typed receipt handed to the producer of a shed submission. The task
+/// was **not** executed; its completion event fires (so a blocked worker
+/// always wakes) with this receipt stamped in the submission's
+/// [`ShedSlot`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shed {
+    pub tenant: TenantId,
+    pub class: Priority,
+    pub reason: ShedReason,
+}
+
+/// Write-once, shareable shed receipt slot carried by every
+/// [`Submission`]. Empty means the task ran (or is still queued); set
+/// means it was shed and the completion timestamp is an eviction time,
+/// not a device time.
+#[derive(Clone, Debug, Default)]
+pub struct ShedSlot(Arc<OnceLock<Shed>>);
+
+impl ShedSlot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stamp the receipt; returns false if one was already set.
+    pub fn set(&self, s: Shed) -> bool {
+        self.0.set(s).is_ok()
+    }
+
+    pub fn get(&self) -> Option<Shed> {
+        self.0.get().copied()
+    }
+
+    pub fn is_shed(&self) -> bool {
+        self.0.get().is_some()
+    }
+}
+
+/// What `submit` does when a cap is hit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Overflow {
+    /// Park the producer on the admission epoch condvar until a release
+    /// makes room (explicit backpressure; no spin, no sleep loop).
+    #[default]
+    Block,
+    /// Evict the lowest-priority queued submission strictly below the
+    /// incoming class to make room; if no such victim exists the
+    /// *incoming* submission is shed instead. Never blocks.
+    ShedLowest,
+    /// Shed the incoming submission immediately with a typed receipt.
+    RejectNew,
+}
+
+/// Which [`AdmissionPolicy`] orders drains of admitted work.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DrainPolicyKind {
+    /// Arrival order — bit-identical to the admission-off pipeline.
+    Fifo,
+    /// Deficit-round-robin over tenants ([`AdmissionOptions::weights`],
+    /// default weight 1): every non-empty tenant is served within one
+    /// ring rotation (Σ weights picks), the starvation bound.
+    #[default]
+    WeightedFair,
+    /// Strictly ordered priority classes, FIFO within a class.
+    StrictPriority,
+    /// Strict classes, earliest absolute deadline first within a class
+    /// (deadline-less submissions sort last, FIFO among themselves).
+    DeadlineEdf,
+}
+
+impl DrainPolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DrainPolicyKind::Fifo => "fifo",
+            DrainPolicyKind::WeightedFair => "weighted_fair",
+            DrainPolicyKind::StrictPriority => "strict_priority",
+            DrainPolicyKind::DeadlineEdf => "deadline_edf",
+        }
+    }
+
+    /// Instantiate the policy. Each armed buffer owns an independent
+    /// instance (DRR ring state is per-queue, protected by that queue's
+    /// own lock).
+    pub fn build(self, weights: &[(TenantId, u32)]) -> Box<dyn AdmissionPolicy> {
+        match self {
+            DrainPolicyKind::Fifo => Box::new(FifoPolicy),
+            DrainPolicyKind::WeightedFair => {
+                Box::new(WeightedFairPolicy::new(weights))
+            }
+            DrainPolicyKind::StrictPriority => Box::new(StrictPriorityPolicy),
+            DrainPolicyKind::DeadlineEdf => Box::new(DeadlineEdfPolicy),
+        }
+    }
+}
+
+/// Validated admission configuration (`LaneOptions::admission` /
+/// `FleetCoordOptions::admission`; `None` keeps today's unbounded
+/// behavior bit-for-bit).
+#[derive(Clone, Debug)]
+pub struct AdmissionOptions {
+    /// Max queued (admitted, not yet drained for execution) submissions
+    /// per tenant. Must be >= 1.
+    pub per_tenant_cap: usize,
+    /// Max queued submissions across all tenants. Must be >=
+    /// `per_tenant_cap`.
+    pub global_cap: usize,
+    pub overflow: Overflow,
+    pub policy: DrainPolicyKind,
+    /// DRR weights for [`DrainPolicyKind::WeightedFair`]; unlisted
+    /// tenants weigh 1. Weights must be non-zero and tenants unique.
+    pub weights: Vec<(TenantId, u32)>,
+    /// Collapse byte-identical spec twins across tenants before
+    /// compilation on the batch (legacy lane) path, counted in
+    /// `LaneStats::n_xtenant_collapsed`.
+    pub collapse_twins: bool,
+}
+
+impl Default for AdmissionOptions {
+    fn default() -> Self {
+        AdmissionOptions {
+            per_tenant_cap: 64,
+            global_cap: 1024,
+            overflow: Overflow::default(),
+            policy: DrainPolicyKind::default(),
+            weights: Vec::new(),
+            collapse_twins: true,
+        }
+    }
+}
+
+impl AdmissionOptions {
+    /// Check the invariants; `Err` carries a human-readable reason.
+    pub fn validated(self) -> Result<Self, String> {
+        if self.per_tenant_cap == 0 {
+            return Err("per_tenant_cap must be >= 1".into());
+        }
+        if self.global_cap < self.per_tenant_cap {
+            return Err(format!(
+                "global_cap ({}) must be >= per_tenant_cap ({})",
+                self.global_cap, self.per_tenant_cap
+            ));
+        }
+        let mut seen = Vec::with_capacity(self.weights.len());
+        for &(t, w) in &self.weights {
+            if w == 0 {
+                return Err(format!("weight for {t} must be >= 1"));
+            }
+            if seen.contains(&t) {
+                return Err(format!("duplicate weight entry for {t}"));
+            }
+            seen.push(t);
+        }
+        Ok(self)
+    }
+}
+
+/// Which cap a reservation attempt hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CapHit {
+    Tenant,
+    Global,
+}
+
+impl CapHit {
+    fn reason(self) -> ShedReason {
+        match self {
+            CapHit::Tenant => ShedReason::TenantCapFull,
+            CapHit::Global => ShedReason::GlobalCapFull,
+        }
+    }
+}
+
+/// Drain-ordering policy over one queue of admitted submissions: `pick`
+/// returns the index of the next submission to remove. Implementations
+/// must serve each tenant oldest-first (per-tenant FIFO) — every policy
+/// below scans first-occurrence within its selection class.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, queue: &VecDeque<Submission>) -> Option<usize>;
+}
+
+struct FifoPolicy;
+
+impl AdmissionPolicy for FifoPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, queue: &VecDeque<Submission>) -> Option<usize> {
+        (!queue.is_empty()).then_some(0)
+    }
+}
+
+/// Deficit-round-robin: tenants join a rotation ring in first-appearance
+/// order; the front tenant is served (oldest submission first) until its
+/// per-visit credit — its weight — is spent, then the ring rotates.
+/// Starvation bound: any non-empty tenant is served within Σ weights
+/// consecutive picks.
+struct WeightedFairPolicy {
+    weights: Vec<(u32, u32)>,
+    ring: VecDeque<u32>,
+    credit: u32,
+}
+
+impl WeightedFairPolicy {
+    fn new(weights: &[(TenantId, u32)]) -> Self {
+        WeightedFairPolicy {
+            weights: weights.iter().map(|&(t, w)| (t.0, w)).collect(),
+            ring: VecDeque::new(),
+            credit: 0,
+        }
+    }
+
+    fn weight(&self, t: u32) -> u32 {
+        self.weights
+            .iter()
+            .find(|&&(id, _)| id == t)
+            .map_or(1, |&(_, w)| w)
+            .max(1)
+    }
+}
+
+impl AdmissionPolicy for WeightedFairPolicy {
+    fn name(&self) -> &'static str {
+        "weighted_fair"
+    }
+
+    fn pick(&mut self, queue: &VecDeque<Submission>) -> Option<usize> {
+        if queue.is_empty() {
+            return None;
+        }
+        for s in queue {
+            let t = s.tenant.0;
+            if !self.ring.contains(&t) {
+                self.ring.push_back(t);
+                if self.ring.len() == 1 {
+                    self.credit = self.weight(t);
+                }
+            }
+        }
+        // Bounded: each iteration either returns or shrinks/rotates the
+        // ring, and every queued tenant is in the ring.
+        let mut guard = 0usize;
+        loop {
+            let t = *self.ring.front()?;
+            match queue.iter().position(|s| s.tenant.0 == t) {
+                Some(i) if self.credit > 0 => {
+                    self.credit -= 1;
+                    return Some(i);
+                }
+                Some(_) => {
+                    // Quantum spent: rotate to the next tenant.
+                    let t = self.ring.pop_front().expect("ring non-empty");
+                    self.ring.push_back(t);
+                    self.credit = self.weight(*self.ring.front().expect("ring non-empty"));
+                }
+                None => {
+                    // Tenant fully drained away: drop it from the ring.
+                    self.ring.pop_front();
+                    if let Some(&n) = self.ring.front() {
+                        self.credit = self.weight(n);
+                    }
+                }
+            }
+            guard += 1;
+            if guard > 2 * self.ring.len() + 4 {
+                // Unreachable by construction; fail soft to FIFO rather
+                // than looping a proxy thread.
+                return Some(0);
+            }
+        }
+    }
+}
+
+struct StrictPriorityPolicy;
+
+impl AdmissionPolicy for StrictPriorityPolicy {
+    fn name(&self) -> &'static str {
+        "strict_priority"
+    }
+
+    fn pick(&mut self, queue: &VecDeque<Submission>) -> Option<usize> {
+        queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, s)| (s.class.rank(), *i))
+            .map(|(i, _)| i)
+    }
+}
+
+struct DeadlineEdfPolicy;
+
+impl AdmissionPolicy for DeadlineEdfPolicy {
+    fn name(&self) -> &'static str {
+        "deadline_edf"
+    }
+
+    fn pick(&mut self, queue: &VecDeque<Submission>) -> Option<usize> {
+        queue
+            .iter()
+            .enumerate()
+            .min_by(|(i, a), (j, b)| {
+                let da = a.deadline.unwrap_or(f64::INFINITY);
+                let db = b.deadline.unwrap_or(f64::INFINITY);
+                a.class
+                    .rank()
+                    .cmp(&b.class.rank())
+                    .then(da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal))
+                    .then(i.cmp(j))
+            })
+            .map(|(i, _)| i)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct TenantAcct {
+    queued: usize,
+    n_admitted: usize,
+    n_shed: usize,
+    n_blocked: usize,
+}
+
+#[derive(Debug, Default)]
+struct Accounts {
+    global: usize,
+    tenants: HashMap<u32, TenantAcct>,
+    n_evicted: usize,
+    n_block_waits: usize,
+}
+
+/// The admission controller: validated options + the reservation ledger.
+/// One per coordinator run, shared by every armed buffer and every
+/// producer gate.
+pub struct AdmissionCtl {
+    opts: AdmissionOptions,
+    state: Mutex<Accounts>,
+    /// Epoch condvar blocked producers park on; bumped by every release.
+    wake: WakeSignal,
+}
+
+impl AdmissionCtl {
+    /// Panics on invalid options (see [`AdmissionOptions::validated`]) —
+    /// admission is armed at coordinator construction, where a bad
+    /// config is a programming error, not a runtime condition.
+    pub fn new(opts: AdmissionOptions) -> Arc<AdmissionCtl> {
+        let opts = opts.validated().expect("invalid AdmissionOptions");
+        Arc::new(AdmissionCtl {
+            opts,
+            state: Mutex::new(Accounts::default()),
+            wake: WakeSignal::new(),
+        })
+    }
+
+    pub fn opts(&self) -> &AdmissionOptions {
+        &self.opts
+    }
+
+    // The ledger is always consistent at lock release, so a poisoned
+    // mutex (holder panicked for unrelated reasons) recovers — same
+    // idiom as `SharedBuffer::lock_state`.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Accounts> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Reserve one backlog slot for `t`, or report which cap is full.
+    pub fn try_reserve(&self, t: TenantId) -> Result<(), CapHit> {
+        let mut g = self.lock();
+        let acct = g.tenants.entry(t.0).or_default();
+        if acct.queued >= self.opts.per_tenant_cap {
+            return Err(CapHit::Tenant);
+        }
+        if g.global >= self.opts.global_cap {
+            return Err(CapHit::Global);
+        }
+        let acct = g.tenants.entry(t.0).or_default();
+        acct.queued += 1;
+        acct.n_admitted += 1;
+        g.global += 1;
+        Ok(())
+    }
+
+    /// Release `n` slots held by `t` (drained for execution or evicted)
+    /// and wake blocked producers.
+    pub fn release(&self, t: TenantId, n: usize) {
+        if n == 0 {
+            return;
+        }
+        {
+            let mut g = self.lock();
+            let acct = g.tenants.entry(t.0).or_default();
+            acct.queued = acct.queued.saturating_sub(n);
+            g.global = g.global.saturating_sub(n);
+        }
+        self.wake.notify();
+    }
+
+    /// Batch [`AdmissionCtl::release`] for a drained slice: one lock,
+    /// one wakeup.
+    pub(crate) fn release_subs(&self, subs: &[Submission]) {
+        if subs.is_empty() {
+            return;
+        }
+        {
+            let mut g = self.lock();
+            for s in subs {
+                let acct = g.tenants.entry(s.tenant.0).or_default();
+                acct.queued = acct.queued.saturating_sub(1);
+                g.global = g.global.saturating_sub(1);
+            }
+        }
+        self.wake.notify();
+    }
+
+    /// Re-reserve slots for requeued (already-admitted) work, bypassing
+    /// the caps: accepted tasks are never lost, so a quarantine requeue
+    /// must succeed even into a momentarily full backlog.
+    pub(crate) fn reserve_requeued(&self, subs: &[Submission]) {
+        if subs.is_empty() {
+            return;
+        }
+        let mut g = self.lock();
+        for s in subs {
+            g.tenants.entry(s.tenant.0).or_default().queued += 1;
+            g.global += 1;
+        }
+    }
+
+    fn note_shed(&self, t: TenantId) {
+        self.lock().tenants.entry(t.0).or_default().n_shed += 1;
+    }
+
+    fn note_evicted(&self, t: TenantId) {
+        let mut g = self.lock();
+        g.tenants.entry(t.0).or_default().n_shed += 1;
+        g.n_evicted += 1;
+    }
+
+    fn note_blocked(&self, t: TenantId) {
+        let mut g = self.lock();
+        g.tenants.entry(t.0).or_default().n_blocked += 1;
+        g.n_block_waits += 1;
+    }
+
+    /// Currently queued (reserved, undrained) submissions for `t`.
+    pub fn queued(&self, t: TenantId) -> usize {
+        self.lock().tenants.get(&t.0).map_or(0, |a| a.queued)
+    }
+
+    /// Currently queued submissions across all tenants.
+    pub fn queued_total(&self) -> usize {
+        self.lock().global
+    }
+
+    pub(crate) fn wake(&self) -> &WakeSignal {
+        &self.wake
+    }
+
+    /// Snapshot the per-tenant admission telemetry, joining the tagged
+    /// completion latencies (`latencies[i]` belongs to `tenants[i]`).
+    pub fn report(&self, latencies: &[f64], tenants: &[u32]) -> AdmissionReport {
+        debug_assert_eq!(latencies.len(), tenants.len());
+        let mut lat_by: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+        for (&t, &l) in tenants.iter().zip(latencies.iter()) {
+            lat_by.entry(t).or_default().push(l);
+        }
+        let g = self.lock();
+        let mut ids: Vec<u32> = g.tenants.keys().copied().collect();
+        for &t in lat_by.keys() {
+            if !ids.contains(&t) {
+                ids.push(t);
+            }
+        }
+        ids.sort_unstable();
+        let empty: Vec<f64> = Vec::new();
+        let per_tenant: Vec<TenantReport> = ids
+            .iter()
+            .map(|&t| {
+                let acct = g.tenants.get(&t).copied().unwrap_or_default();
+                let lats = lat_by.get(&t).unwrap_or(&empty);
+                TenantReport {
+                    tenant: t,
+                    n_admitted: acct.n_admitted,
+                    n_completed: lats.len(),
+                    n_shed: acct.n_shed,
+                    n_blocked: acct.n_blocked,
+                    mean_latency: if lats.is_empty() { 0.0 } else { stats::mean(lats) },
+                    p50_latency: percentile_or_zero(lats, 50.0),
+                    p99_latency: percentile_or_zero(lats, 99.0),
+                }
+            })
+            .collect();
+        let means: Vec<f64> = per_tenant
+            .iter()
+            .filter(|r| r.n_completed > 0)
+            .map(|r| r.mean_latency)
+            .collect();
+        AdmissionReport {
+            n_shed: per_tenant.iter().map(|r| r.n_shed).sum(),
+            n_evicted: g.n_evicted,
+            n_block_waits: g.n_block_waits,
+            jain_fairness: stats::jain_index(&means),
+            per_tenant,
+        }
+    }
+}
+
+fn percentile_or_zero(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        stats::percentile(xs, p)
+    }
+}
+
+/// Per-tenant slice of an [`AdmissionReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantReport {
+    pub tenant: u32,
+    /// Submissions that passed admission (reserved a slot).
+    pub n_admitted: usize,
+    /// Submissions that ran on a device (one tagged latency each).
+    pub n_completed: usize,
+    /// Rejected at the gate + evicted from a backlog.
+    pub n_shed: usize,
+    /// Distinct submissions that blocked at least once (`Block`).
+    pub n_blocked: usize,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+}
+
+/// End-of-run multi-tenant telemetry, surfaced as
+/// `LaneMetrics::admission` / `FleetMetrics::admission`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionReport {
+    /// Sorted by tenant id.
+    pub per_tenant: Vec<TenantReport>,
+    /// Total shed (rejections + evictions) across tenants.
+    pub n_shed: usize,
+    /// Evictions only (subset of `n_shed`).
+    pub n_evicted: usize,
+    /// Distinct submissions that blocked at least once.
+    pub n_block_waits: usize,
+    /// Jain fairness index over per-tenant mean completion latencies
+    /// (tenants with >= 1 completion); 1.0 = perfectly fair.
+    pub jain_fairness: f64,
+}
+
+/// Outcome of [`AdmissionGate::submit`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitOutcome {
+    /// Queued; the producer should wait on the submission's `done` event
+    /// (which may complete with a [`ShedSlot`] receipt if later evicted).
+    Admitted,
+    /// Not queued; the receipt is also stamped in the submission's slot.
+    Shed(Shed),
+}
+
+/// Backstop for the `Block` park. Correctness does not depend on it —
+/// the epoch is snapshotted *before* the failed reservation, so a
+/// concurrent release always either frees the slot before the retry or
+/// bumps the epoch after the snapshot — it only bounds the damage of a
+/// future bug to a periodic re-check instead of a hang.
+const BLOCK_BACKSTOP: Duration = Duration::from_millis(50);
+
+/// Producer-side admission gate: every tenant submission enters the
+/// coordinator through [`AdmissionGate::submit`].
+pub struct AdmissionGate {
+    ctl: Arc<AdmissionCtl>,
+    /// Where admitted submissions are enqueued.
+    entry: SharedBuffer,
+    /// Queues scanned for `ShedLowest` victims (the entry buffer plus
+    /// every lane the coordinator may have moved admitted work to).
+    evict_from: Vec<SharedBuffer>,
+    epoch: Instant,
+}
+
+impl AdmissionGate {
+    pub fn new(
+        ctl: Arc<AdmissionCtl>,
+        entry: SharedBuffer,
+        evict_from: Vec<SharedBuffer>,
+        epoch: Instant,
+    ) -> AdmissionGate {
+        AdmissionGate { ctl, entry, evict_from, epoch }
+    }
+
+    /// Admit, block, or shed `s` per the configured [`Overflow`] policy.
+    pub fn submit(&self, s: Submission) -> SubmitOutcome {
+        let mut blocked = false;
+        loop {
+            // Snapshot before the reservation attempt: a release landing
+            // after this line bumps the epoch and turns the park into an
+            // immediate retry — no lost wakeup.
+            let seen = self.ctl.wake.epoch();
+            let hit = match self.ctl.try_reserve(s.tenant) {
+                Ok(()) => {
+                    self.entry.push(s);
+                    return SubmitOutcome::Admitted;
+                }
+                Err(hit) => hit,
+            };
+            match self.ctl.opts.overflow {
+                Overflow::RejectNew => {
+                    return self.shed_incoming(s, hit.reason());
+                }
+                Overflow::Block => {
+                    if !blocked {
+                        blocked = true;
+                        self.ctl.note_blocked(s.tenant);
+                    }
+                    self.ctl
+                        .wake
+                        .wait_past(seen, Instant::now() + BLOCK_BACKSTOP);
+                }
+                Overflow::ShedLowest => {
+                    if !self.evict_one(&s, hit) {
+                        return self.shed_incoming(s, hit.reason());
+                    }
+                    // Victim released a slot; retry the reservation.
+                }
+            }
+        }
+    }
+
+    fn shed_incoming(&self, s: Submission, reason: ShedReason) -> SubmitOutcome {
+        let receipt = Shed { tenant: s.tenant, class: s.class, reason };
+        s.shed.set(receipt);
+        self.ctl.note_shed(s.tenant);
+        SubmitOutcome::Shed(receipt)
+    }
+
+    /// Evict the lowest-priority queued submission strictly below the
+    /// incoming class. A tenant-cap hit may only evict the same tenant's
+    /// work (evicting a peer would not free the right cap); a global-cap
+    /// hit considers every tenant. Returns whether a slot was freed.
+    fn evict_one(&self, incoming: &Submission, hit: CapHit) -> bool {
+        let tenant = match hit {
+            CapHit::Tenant => Some(incoming.tenant),
+            CapHit::Global => None,
+        };
+        // Two passes: find the queue holding the globally worst victim,
+        // then evict from it. A race that drains the victim in between
+        // simply reports no eviction and the submit loop re-checks caps.
+        let mut best: Option<(usize, Priority)> = None;
+        for (i, buf) in self.evict_from.iter().enumerate() {
+            if let Some(c) = buf.peek_lowest_below(incoming.class, tenant) {
+                if best.map_or(true, |(_, b)| c.rank() > b.rank()) {
+                    best = Some((i, c));
+                }
+            }
+        }
+        let Some((i, _)) = best else { return false };
+        let Some(victim) = self.evict_from[i].evict_lowest(incoming.class, tenant)
+        else {
+            return false;
+        };
+        let receipt = Shed {
+            tenant: victim.tenant,
+            class: victim.class,
+            reason: ShedReason::Evicted,
+        };
+        // Stamp the receipt before completing: the victim's worker wakes
+        // from `done.wait()` and must observe it.
+        victim.shed.set(receipt);
+        self.ctl.note_evicted(victim.tenant);
+        self.ctl.release(victim.tenant, 1);
+        victim.done.complete(self.epoch.elapsed().as_secs_f64());
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::event::Event;
+    use crate::task::{KernelSpec, TaskSpec};
+    use std::sync::Barrier;
+
+    fn sub_t(tenant: u32, class: Priority, seq: usize) -> Submission {
+        Submission {
+            worker: tenant as usize,
+            batch_seq: seq,
+            task: TaskSpec::simple("t", 10, KernelSpec::Timed { secs: 1e-4 }, 10),
+            done: Event::new(),
+            submitted_at: 0.0,
+            tenant: TenantId(tenant),
+            class,
+            deadline: None,
+            shed: ShedSlot::new(),
+        }
+    }
+
+    fn queue_of(subs: Vec<Submission>) -> VecDeque<Submission> {
+        subs.into()
+    }
+
+    #[test]
+    fn options_validation_rejects_bad_configs() {
+        let ok = AdmissionOptions::default().validated();
+        assert!(ok.is_ok());
+        let zero_cap =
+            AdmissionOptions { per_tenant_cap: 0, ..AdmissionOptions::default() };
+        assert!(zero_cap.validated().is_err());
+        let inverted = AdmissionOptions {
+            per_tenant_cap: 8,
+            global_cap: 4,
+            ..AdmissionOptions::default()
+        };
+        assert!(inverted.validated().is_err());
+        let zero_weight = AdmissionOptions {
+            weights: vec![(TenantId(0), 0)],
+            ..AdmissionOptions::default()
+        };
+        assert!(zero_weight.validated().is_err());
+        let dup = AdmissionOptions {
+            weights: vec![(TenantId(0), 1), (TenantId(0), 2)],
+            ..AdmissionOptions::default()
+        };
+        assert!(dup.validated().is_err());
+    }
+
+    #[test]
+    fn reserve_respects_both_caps_and_release_frees() {
+        let ctl = AdmissionCtl::new(AdmissionOptions {
+            per_tenant_cap: 2,
+            global_cap: 3,
+            ..AdmissionOptions::default()
+        });
+        assert!(ctl.try_reserve(TenantId(0)).is_ok());
+        assert!(ctl.try_reserve(TenantId(0)).is_ok());
+        assert_eq!(ctl.try_reserve(TenantId(0)), Err(CapHit::Tenant));
+        assert!(ctl.try_reserve(TenantId(1)).is_ok());
+        assert_eq!(ctl.try_reserve(TenantId(1)), Err(CapHit::Global));
+        ctl.release(TenantId(0), 1);
+        assert!(ctl.try_reserve(TenantId(1)).is_ok());
+        assert_eq!(ctl.queued_total(), 3);
+        assert_eq!(ctl.queued(TenantId(0)), 1);
+        assert_eq!(ctl.queued(TenantId(1)), 2);
+    }
+
+    #[test]
+    fn weighted_fair_serves_every_tenant_within_sum_of_weights() {
+        // Tenant 0 floods; 1..=3 hold one submission each. With weights
+        // (t0: 2, rest 1) every tenant must be served within Σw = 5 picks.
+        let weights = vec![(TenantId(0), 2u32)];
+        let mut policy = DrainPolicyKind::WeightedFair.build(&weights);
+        let mut q = queue_of(
+            (0..8)
+                .map(|i| sub_t(0, Priority::Normal, i))
+                .chain((1..4).map(|t| sub_t(t, Priority::Normal, 0)))
+                .collect(),
+        );
+        let mut first_seen: HashMap<u32, usize> = HashMap::new();
+        for round in 0..q.len() {
+            let i = policy.pick(&q).expect("non-empty");
+            let s = q.remove(i).expect("picked a live index");
+            first_seen.entry(s.tenant.0).or_insert(round);
+        }
+        let k = 5; // sum of weights over the 4 tenants
+        for t in 0..4u32 {
+            assert!(
+                first_seen[&t] < k,
+                "tenant {t} first served at round {} (bound {k})",
+                first_seen[&t]
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_fair_preserves_per_tenant_fifo() {
+        let mut policy = DrainPolicyKind::WeightedFair.build(&[]);
+        let mut q = queue_of(
+            (0..6).map(|i| sub_t(i % 3, Priority::Normal, i / 3)).collect(),
+        );
+        let mut last_seq: HashMap<u32, usize> = HashMap::new();
+        while let Some(i) = policy.pick(&q) {
+            let s = q.remove(i).unwrap();
+            if let Some(&prev) = last_seq.get(&s.tenant.0) {
+                assert!(s.batch_seq > prev, "per-tenant FIFO violated");
+            }
+            last_seq.insert(s.tenant.0, s.batch_seq);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn strict_priority_orders_classes_fifo_within() {
+        let mut policy = DrainPolicyKind::StrictPriority.build(&[]);
+        let q = queue_of(vec![
+            sub_t(0, Priority::BestEffort, 0),
+            sub_t(1, Priority::Normal, 0),
+            sub_t(2, Priority::Hi, 0),
+            sub_t(3, Priority::Hi, 1),
+        ]);
+        assert_eq!(policy.pick(&q), Some(2), "first Hi wins");
+    }
+
+    #[test]
+    fn deadline_edf_orders_within_class_only() {
+        let mut policy = DrainPolicyKind::DeadlineEdf.build(&[]);
+        let mut early = sub_t(0, Priority::Normal, 0);
+        early.deadline = Some(1.0);
+        let mut late = sub_t(1, Priority::Normal, 0);
+        late.deadline = Some(5.0);
+        let none = sub_t(2, Priority::Normal, 0);
+        let hi = sub_t(3, Priority::Hi, 0);
+        // Hi beats every Normal deadline; within Normal, EDF; deadline-less last.
+        let q = queue_of(vec![none.clone(), late.clone(), early.clone(), hi]);
+        assert_eq!(policy.pick(&q), Some(3));
+        let q = queue_of(vec![none.clone(), late, early]);
+        assert_eq!(policy.pick(&q), Some(2));
+        let q = queue_of(vec![none]);
+        assert_eq!(policy.pick(&q), Some(0));
+    }
+
+    #[test]
+    fn gate_reject_new_staples_receipt() {
+        let ctl = AdmissionCtl::new(AdmissionOptions {
+            per_tenant_cap: 1,
+            global_cap: 1,
+            overflow: Overflow::RejectNew,
+            ..AdmissionOptions::default()
+        });
+        let entry = SharedBuffer::new();
+        let gate = AdmissionGate::new(
+            ctl.clone(),
+            entry.clone(),
+            vec![entry.clone()],
+            Instant::now(),
+        );
+        assert_eq!(gate.submit(sub_t(0, Priority::Normal, 0)), SubmitOutcome::Admitted);
+        let s = sub_t(0, Priority::Normal, 1);
+        let slot = s.shed.clone();
+        let out = gate.submit(s);
+        let expect = Shed {
+            tenant: TenantId(0),
+            class: Priority::Normal,
+            reason: ShedReason::TenantCapFull,
+        };
+        assert_eq!(out, SubmitOutcome::Shed(expect));
+        assert_eq!(slot.get(), Some(expect));
+        assert_eq!(entry.len(), 1, "shed submission never queued");
+        let rep = ctl.report(&[], &[]);
+        assert_eq!(rep.n_shed, 1);
+        assert_eq!(rep.n_evicted, 0);
+    }
+
+    #[test]
+    fn gate_shed_lowest_evicts_strictly_lower_class() {
+        let ctl = AdmissionCtl::new(AdmissionOptions {
+            per_tenant_cap: 1,
+            global_cap: 1,
+            overflow: Overflow::ShedLowest,
+            ..AdmissionOptions::default()
+        });
+        let entry = SharedBuffer::new();
+        let gate = AdmissionGate::new(
+            ctl.clone(),
+            entry.clone(),
+            vec![entry.clone()],
+            Instant::now(),
+        );
+        let be = sub_t(0, Priority::BestEffort, 0);
+        let (be_done, be_slot) = (be.done.clone(), be.shed.clone());
+        assert_eq!(gate.submit(be), SubmitOutcome::Admitted);
+        // Same-class arrival cannot evict (strictly lower only): it sheds.
+        let peer = sub_t(1, Priority::BestEffort, 0);
+        assert!(matches!(gate.submit(peer), SubmitOutcome::Shed(_)));
+        assert!(!be_done.is_complete());
+        // A Hi arrival evicts the queued BestEffort: receipt + completion.
+        assert_eq!(gate.submit(sub_t(1, Priority::Hi, 0)), SubmitOutcome::Admitted);
+        assert!(be_done.is_complete(), "evicted worker must be unblocked");
+        assert_eq!(
+            be_slot.get(),
+            Some(Shed {
+                tenant: TenantId(0),
+                class: Priority::BestEffort,
+                reason: ShedReason::Evicted,
+            })
+        );
+        assert_eq!(entry.len(), 1);
+        let g = entry.drain(4, Duration::ZERO).unwrap();
+        assert_eq!(g[0].class, Priority::Hi);
+        let rep = ctl.report(&[], &[]);
+        assert_eq!(rep.n_evicted, 1);
+        assert_eq!(rep.n_shed, 2, "one rejection + one eviction");
+    }
+
+    #[test]
+    fn gate_block_parks_until_release_barrier_rendezvous() {
+        let ctl = AdmissionCtl::new(AdmissionOptions {
+            per_tenant_cap: 1,
+            global_cap: 1,
+            overflow: Overflow::Block,
+            ..AdmissionOptions::default()
+        });
+        // The entry must be armed: draining it is what releases the
+        // reservation the parked submit below is waiting on.
+        let entry = SharedBuffer::with_admission(ctl.clone(), true);
+        let gate = Arc::new(AdmissionGate::new(
+            ctl.clone(),
+            entry.clone(),
+            vec![entry.clone()],
+            Instant::now(),
+        ));
+        assert_eq!(gate.submit(sub_t(0, Priority::Normal, 0)), SubmitOutcome::Admitted);
+        let barrier = Arc::new(Barrier::new(2));
+        let (g2, b2) = (gate.clone(), barrier.clone());
+        // Whichever side wins after the barrier, the blocked submit must
+        // eventually admit once the drain below releases the slot.
+        let h = std::thread::spawn(move || {
+            b2.wait();
+            g2.submit(sub_t(0, Priority::Normal, 1))
+        });
+        barrier.wait();
+        let mut out = Vec::new();
+        let drained = entry.drain_into(4, Duration::ZERO, &mut out).unwrap();
+        assert_eq!(drained, 1);
+        assert_eq!(h.join().unwrap(), SubmitOutcome::Admitted);
+        assert_eq!(entry.len(), 1);
+        assert_eq!(ctl.report(&[], &[]).n_shed, 0);
+    }
+
+    #[test]
+    fn report_joins_tagged_latencies_and_jain() {
+        let ctl = AdmissionCtl::new(AdmissionOptions::default());
+        for _ in 0..2 {
+            ctl.try_reserve(TenantId(0)).unwrap();
+            ctl.try_reserve(TenantId(1)).unwrap();
+        }
+        let latencies = [1.0, 3.0, 1.0, 3.0];
+        let tenants = [0u32, 1, 0, 1];
+        let rep = ctl.report(&latencies, &tenants);
+        assert_eq!(rep.per_tenant.len(), 2);
+        assert_eq!(rep.per_tenant[0].n_completed, 2);
+        assert_eq!(rep.per_tenant[0].mean_latency, 1.0);
+        assert_eq!(rep.per_tenant[1].mean_latency, 3.0);
+        // J([1, 3]) = 16 / (2 * 10) = 0.8.
+        assert!((rep.jain_fairness - 0.8).abs() < 1e-12);
+    }
+}

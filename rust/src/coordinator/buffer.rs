@@ -26,11 +26,25 @@
 //! maps to the `Closed` drain outcome instead of cascading the panic
 //! across every thread parked on the condvar; non-draining operations
 //! recover the guard, since the queue itself is never left mid-mutation.
+//!
+//! Multi-tenancy (see `coordinator::admission`): a buffer built with
+//! [`SharedBuffer::with_admission`] carries the shared [`AdmissionCtl`]
+//! ledger and an [`AdmissionPolicy`] instance that orders its drains
+//! (weighted-fair / strict-priority / EDF instead of raw FIFO). The
+//! reservation a submission holds against its tenant's cap follows the
+//! submission itself, not the queue it sits in: drains for *execution*
+//! release it (`release_on_drain`), while `steal_*`/`take_into` moving
+//! work between lanes and the fleet's ingress→lane transfer keep it —
+//! so steals never violate tenant caps — and [`SharedBuffer::requeue_front`]
+//! re-reserves unconditionally (accepted work is never lost to a cap).
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
+use crate::coordinator::admission::{
+    AdmissionCtl, AdmissionPolicy, Priority, ShedSlot, TenantId,
+};
 use crate::coordinator::recovery::FleetHealth;
 use crate::queue::event::Event;
 use crate::task::TaskSpec;
@@ -47,12 +61,45 @@ pub struct Submission {
     pub done: Event,
     /// Wall-clock submission time (secs since coordinator epoch).
     pub submitted_at: f64,
+    /// Submitting tenant (defaults to one tenant per worker).
+    pub tenant: TenantId,
+    /// QoS class consulted by the priority-aware drain policies and the
+    /// `ShedLowest` eviction scan.
+    pub class: Priority,
+    /// Absolute deadline (secs since coordinator epoch) for
+    /// deadline-EDF draining; `None` sorts after every deadline.
+    pub deadline: Option<f64>,
+    /// Stamped with the typed receipt if this submission is shed instead
+    /// of executed; its `done` event still fires (eviction time).
+    pub shed: ShedSlot,
 }
 
 #[derive(Default)]
 struct State {
     queue: VecDeque<Submission>,
     closed: bool,
+    /// Drain-ordering policy for admitted work; `None` = raw FIFO,
+    /// bit-identical to the pre-admission pipeline.
+    policy: Option<Box<dyn AdmissionPolicy>>,
+}
+
+impl State {
+    /// Remove up to `take` submissions in policy order (FIFO when no
+    /// policy is armed) and append them to `out`.
+    fn take_ordered(&mut self, take: usize, out: &mut Vec<Submission>) {
+        match self.policy.as_mut() {
+            None => out.extend(self.queue.drain(..take)),
+            Some(policy) => {
+                for _ in 0..take {
+                    let i = policy.pick(&self.queue).unwrap_or(0);
+                    match self.queue.remove(i) {
+                        Some(s) => out.push(s),
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Outcome of a bounded-wait drain ([`SharedBuffer::drain_into_timeout`]).
@@ -70,11 +117,47 @@ pub enum DrainPoll {
 #[derive(Clone, Default)]
 pub struct SharedBuffer {
     inner: Arc<(Mutex<State>, Condvar)>,
+    /// Shared reservation ledger when admission is armed.
+    ctl: Option<Arc<AdmissionCtl>>,
+    /// Whether draining this buffer hands work to *execution* (release
+    /// the tenant reservation) or merely transfers it to another
+    /// admission-tracked queue (the fleet's ingress — keep it).
+    release_on_drain: bool,
 }
 
 impl SharedBuffer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An admission-armed buffer: drains are ordered by the controller's
+    /// [`AdmissionPolicy`] (an independent instance per buffer — DRR ring
+    /// state is per-queue) and, when `release_on_drain`, every
+    /// submission leaving through `drain_*`/`steal_*`/`take_into`
+    /// releases its tenant reservation back to the ledger.
+    pub fn with_admission(
+        ctl: Arc<AdmissionCtl>,
+        release_on_drain: bool,
+    ) -> Self {
+        let state = State {
+            policy: Some(ctl.opts().policy.build(&ctl.opts().weights)),
+            ..State::default()
+        };
+        SharedBuffer {
+            inner: Arc::new((Mutex::new(state), Condvar::new())),
+            ctl: Some(ctl),
+            release_on_drain,
+        }
+    }
+
+    /// Release drained submissions' reservations (no-op on untracked or
+    /// transfer buffers). Called with the state lock already dropped.
+    fn note_drained(&self, subs: &[Submission]) {
+        if self.release_on_drain {
+            if let Some(ctl) = &self.ctl {
+                ctl.release_subs(subs);
+            }
+        }
     }
 
     // Recovering lock for non-draining operations: every critical
@@ -157,7 +240,9 @@ impl SharedBuffer {
             }
         }
         let take = g.queue.len().min(max);
-        out.extend(g.queue.drain(..take));
+        g.take_ordered(take, out);
+        drop(g);
+        self.note_drained(out);
         Some(take)
     }
 
@@ -219,7 +304,9 @@ impl SharedBuffer {
             }
         }
         let take = g.queue.len().min(max);
-        out.extend(g.queue.drain(..take));
+        g.take_ordered(take, out);
+        drop(g);
+        self.note_drained(out);
         DrainPoll::Drained(take)
     }
 
@@ -232,7 +319,13 @@ impl SharedBuffer {
         let (m, _cv) = &*self.inner;
         let Ok(mut g) = m.lock() else { return 0 };
         let take = max.min(g.queue.len() / 2);
+        let start = out.len();
         out.extend(g.queue.drain(..take));
+        drop(g);
+        // The thief executes the loot immediately, so this is a drain
+        // for execution: the tenants' reservations are released. Totals
+        // never grow on a steal, so caps cannot be violated by one.
+        self.note_drained(&out[start..]);
         take
     }
 
@@ -246,7 +339,10 @@ impl SharedBuffer {
         let (m, _cv) = &*self.inner;
         let Ok(mut g) = m.lock() else { return 0 };
         let take = max.min(g.queue.len());
+        let start = out.len();
         out.extend(g.queue.drain(..take));
+        drop(g);
+        self.note_drained(&out[start..]);
         take
     }
 
@@ -257,6 +353,15 @@ impl SharedBuffer {
     /// close only promises no *new* worker submissions, and requeued
     /// work is not new. Drains `subs` and returns the count.
     pub fn requeue_front(&self, subs: &mut Vec<Submission>) -> usize {
+        // Requeued work was already admitted once: re-reserve its slots
+        // unconditionally (never against the caps) so accepted tasks are
+        // never lost to a momentarily full backlog, keeping the ledger
+        // consistent with the release their earlier drain performed.
+        if self.release_on_drain {
+            if let Some(ctl) = &self.ctl {
+                ctl.reserve_requeued(subs);
+            }
+        }
         let (_, cv) = &*self.inner;
         let mut g = self.lock_state();
         let n = subs.len();
@@ -267,6 +372,59 @@ impl SharedBuffer {
             cv.notify_all();
         }
         n
+    }
+
+    /// Worst (highest-rank) priority class queued strictly below
+    /// `below`, optionally restricted to one tenant — the `ShedLowest`
+    /// victim scan's first pass. `None` when no evictable entry exists
+    /// (or the lock is poisoned — a dying run sheds nothing).
+    pub(crate) fn peek_lowest_below(
+        &self,
+        below: Priority,
+        tenant: Option<TenantId>,
+    ) -> Option<Priority> {
+        let (m, _cv) = &*self.inner;
+        let Ok(g) = m.lock() else { return None };
+        g.queue
+            .iter()
+            .filter(|s| s.class.rank() > below.rank())
+            .filter(|s| tenant.map_or(true, |t| s.tenant == t))
+            .map(|s| s.class)
+            .max_by_key(|c| c.rank())
+    }
+
+    /// Remove and return the most-recently-enqueued submission of the
+    /// worst priority class strictly below `below` (optionally one
+    /// tenant's): the `ShedLowest` eviction. Newest-first among equals
+    /// keeps the oldest queued work — closest to running — intact. The
+    /// caller (the admission gate) owns the receipt + release + event
+    /// completion; this only removes under the queue lock, which is what
+    /// makes eviction and draining mutually exclusive per submission.
+    pub(crate) fn evict_lowest(
+        &self,
+        below: Priority,
+        tenant: Option<TenantId>,
+    ) -> Option<Submission> {
+        let (m, _cv) = &*self.inner;
+        let Ok(mut g) = m.lock() else { return None };
+        let mut best: Option<(usize, u8)> = None;
+        for (i, s) in g.queue.iter().enumerate() {
+            if s.class.rank() <= below.rank() {
+                continue;
+            }
+            if let Some(t) = tenant {
+                if s.tenant != t {
+                    continue;
+                }
+            }
+            let r = s.class.rank();
+            match best {
+                Some((_, br)) if r < br => {}
+                _ => best = Some((i, r)),
+            }
+        }
+        let (i, _) = best?;
+        g.queue.remove(i)
     }
 
     /// Whether no submission will ever be drained from this buffer again
@@ -313,6 +471,22 @@ impl ShardedBuffer {
         let lanes: Vec<SharedBuffer> =
             (0..lanes.max(1)).map(|_| SharedBuffer::new()).collect();
         ShardedBuffer { lanes: lanes.into() }
+    }
+
+    /// Admission-armed sharding: every lane shares `ctl` (one ledger,
+    /// per-lane policy instances) and releases tenant reservations on
+    /// drain — lane drains feed execution.
+    pub fn with_admission(lanes: usize, ctl: Arc<AdmissionCtl>) -> Self {
+        let lanes: Vec<SharedBuffer> = (0..lanes.max(1))
+            .map(|_| SharedBuffer::with_admission(ctl.clone(), true))
+            .collect();
+        ShardedBuffer { lanes: lanes.into() }
+    }
+
+    /// Clones of every lane buffer — the admission gate's `ShedLowest`
+    /// eviction scan domain.
+    pub(crate) fn lanes_vec(&self) -> Vec<SharedBuffer> {
+        self.lanes.to_vec()
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -489,6 +663,10 @@ mod tests {
             ),
             done: Event::new(),
             submitted_at: 0.0,
+            tenant: TenantId(worker as u32),
+            class: Priority::Normal,
+            deadline: None,
+            shed: ShedSlot::new(),
         }
     }
 
@@ -826,6 +1004,55 @@ mod tests {
         // The wrapper and the traced variant agree on the count.
         out.clear();
         assert_eq!(s.steal_with_health(0, 8, &health, &mut out), 1);
+    }
+
+    #[test]
+    fn admission_armed_drain_orders_by_policy_and_releases() {
+        use crate::coordinator::admission::{
+            AdmissionCtl, AdmissionOptions, DrainPolicyKind,
+        };
+        let ctl = AdmissionCtl::new(AdmissionOptions {
+            policy: DrainPolicyKind::StrictPriority,
+            ..AdmissionOptions::default()
+        });
+        let b = SharedBuffer::with_admission(ctl.clone(), true);
+        let mut hi = sub(0, 0);
+        hi.class = Priority::Hi;
+        let lo = sub(1, 0); // Normal
+        ctl.try_reserve(lo.tenant).unwrap();
+        ctl.try_reserve(hi.tenant).unwrap();
+        b.push(lo);
+        b.push(hi);
+        assert_eq!(ctl.queued_total(), 2);
+        let got = b.drain(1, Duration::ZERO).unwrap();
+        assert_eq!(got[0].class, Priority::Hi, "policy orders the drain");
+        assert_eq!(ctl.queued_total(), 1, "drain released the reservation");
+        // Requeueing hands the reservation back unconditionally.
+        let mut back = b.drain(1, Duration::ZERO).unwrap();
+        assert_eq!(ctl.queued_total(), 0);
+        b.requeue_front(&mut back);
+        assert_eq!(ctl.queued_total(), 1);
+        // A transfer buffer (fleet ingress) keeps reservations on drain.
+        let t = SharedBuffer::with_admission(ctl.clone(), false);
+        ctl.try_reserve(TenantId(2)).unwrap();
+        t.push(sub(2, 0));
+        let _ = t.drain(4, Duration::ZERO).unwrap();
+        assert_eq!(ctl.queued_total(), 2, "ingress drain is a transfer");
+    }
+
+    #[test]
+    fn admission_off_buffer_is_plain_fifo() {
+        // The default-constructed buffer has no policy box and no ctl:
+        // the admission-off path is byte-for-byte the PR-8 pipeline.
+        let b = SharedBuffer::new();
+        for w in 0..4 {
+            let mut s = sub(w, 0);
+            s.class = if w % 2 == 0 { Priority::Hi } else { Priority::BestEffort };
+            b.push(s);
+        }
+        let got = b.drain(8, Duration::ZERO).unwrap();
+        let order: Vec<usize> = got.iter().map(|s| s.worker).collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "classes ignored without admission");
     }
 
     #[test]

@@ -111,10 +111,15 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::DeviceProfile;
+use crate::coordinator::admission::{
+    AdmissionCtl, AdmissionGate, AdmissionOptions, AdmissionReport, ShedSlot,
+    SubmitOutcome,
+};
 use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
 use crate::coordinator::lanes::{
     device_runner_loop, empty_lane_stats, finalize_plan, merge_arrivals,
-    record_calib_stats, InFlight, LaneStats, RunDone, RunOutcome, WakeSignal,
+    record_calib_stats, InFlight, LaneStats, RunDone, RunOutcome,
+    TenantWorkload, WakeSignal,
 };
 use crate::coordinator::recovery::{
     BreakerState, FailureCtx, FleetHealth, RecoveryAction, RecoveryOptions,
@@ -171,6 +176,13 @@ pub struct FleetCoordOptions {
     ///
     /// [`ScoringPool`]: crate::sched::parallel::ScoringPool
     pub placement_threads: usize,
+    /// `Some` arms multi-tenant admission control at the fleet ingress
+    /// (`coordinator::admission`): bounded per-tenant backlogs, overflow
+    /// policy at the submit gate (ShedLowest evictions scan the ingress
+    /// *and* every device queue), and per-tenant telemetry in
+    /// [`FleetMetrics::admission`]. `None` (the default) keeps the
+    /// untracked unbounded pipeline bit-for-bit.
+    pub admission: Option<AdmissionOptions>,
 }
 
 impl Default for FleetCoordOptions {
@@ -185,6 +197,7 @@ impl Default for FleetCoordOptions {
             prune_placement: true,
             place_batch: usize::MAX,
             placement_threads: 1,
+            admission: None,
         }
     }
 }
@@ -200,6 +213,9 @@ pub struct FleetMetrics {
     pub tasks_per_sec: f64,
     /// Per-task submission → completion latency (s), all devices.
     pub latencies: Vec<f64>,
+    /// Tenant id of each entry of `latencies` (index-aligned) — the
+    /// per-tenant breakdown in [`FleetMetrics::admission`] joins on this.
+    pub latency_tenants: Vec<u32>,
     /// Device busy time per committed group (s), all devices.
     pub group_makespans: Vec<f64>,
     pub sched_overhead_secs: f64,
@@ -230,6 +246,8 @@ pub struct FleetMetrics {
     /// Joint placement rounds executed (one round places one drained
     /// batch; `n_placements / n_place_rounds` ≈ mean batch size).
     pub n_place_rounds: usize,
+    /// Per-tenant admission telemetry (`None` with `admission: None`).
+    pub admission: Option<AdmissionReport>,
 }
 
 impl FleetMetrics {
@@ -459,11 +477,43 @@ impl FleetCoordinator {
     }
 
     /// Run `workloads[w]` = the dependent task batch of worker `w`.
+    /// Workers are anonymous tenants ([`TenantWorkload::for_worker`]),
+    /// so with `admission: None` this is exactly the classic pipeline.
     pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> FleetMetrics {
+        self.run_tenants(
+            workloads
+                .into_iter()
+                .enumerate()
+                .map(|(w, tasks)| TenantWorkload::for_worker(w, tasks))
+                .collect(),
+        )
+    }
+
+    /// [`FleetCoordinator::run`] with tenant attribution: each worker
+    /// submits on behalf of its tenant/class through the admission gate
+    /// when [`FleetCoordOptions::admission`] is armed. The ingress is a
+    /// *transfer* queue — an admitted submission keeps its backlog
+    /// reservation while it flows ingress → placement → device queue and
+    /// releases it only when a device drains it for execution, so tenant
+    /// caps bound the whole queued backlog, not just the ingress.
+    pub fn run_tenants(&self, workloads: Vec<TenantWorkload>) -> FleetMetrics {
         let t_workers = workloads.len();
         let d = self.devices.len();
-        let ingress = SharedBuffer::new();
-        let lanes = ShardedBuffer::new(d);
+        let ctl = self
+            .opts
+            .admission
+            .as_ref()
+            .map(|a| AdmissionCtl::new(a.clone()));
+        let ingress = match &ctl {
+            // Reservation is *held* across the ingress drain (the proxy
+            // transfers to device queues, nothing executes yet).
+            Some(c) => SharedBuffer::with_admission(c.clone(), false),
+            None => SharedBuffer::new(),
+        };
+        let lanes = match &ctl {
+            Some(c) => ShardedBuffer::with_admission(d, c.clone()),
+            None => ShardedBuffer::new(d),
+        };
         let health = FleetHealth::new(d);
         let epoch = Instant::now();
         let rec = self.opts.recovery.clone();
@@ -495,6 +545,7 @@ impl FleetCoordinator {
             .collect();
 
         let mut latencies: Vec<f64> = Vec::new();
+        let mut latency_tenants: Vec<u32> = Vec::new();
         let mut group_makespans: Vec<f64> = Vec::new();
         let mut n_placements = 0usize;
         let mut n_place_rounds = 0usize;
@@ -526,23 +577,52 @@ impl FleetCoordinator {
         std::thread::scope(|s| {
             // ---- workers ----------------------------------------------
             let mut worker_handles = Vec::with_capacity(t_workers);
-            for (w, batch) in workloads.into_iter().enumerate() {
+            for (w, tw) in workloads.into_iter().enumerate() {
                 let ingress = ingress.clone();
                 let wake = Arc::clone(&wake);
+                // Entry queue is the ingress; the ShedLowest eviction
+                // scan covers the ingress and every device queue (an
+                // admitted-but-unexecuted victim may sit in either).
+                let gate = ctl.as_ref().map(|c| {
+                    let mut evict_from = vec![ingress.clone()];
+                    evict_from.extend(lanes.lanes_vec());
+                    AdmissionGate::new(c.clone(), ingress.clone(), evict_from, epoch)
+                });
                 let h = std::thread::Builder::new()
                     .name(format!("fleet-worker-{w}"))
                     .spawn_scoped(s, move || {
-                        for (seq, task) in batch.into_iter().enumerate() {
+                        for (seq, task) in tw.tasks.into_iter().enumerate() {
                             let done = Event::new();
-                            ingress.push(Submission {
+                            let submitted_at = epoch.elapsed().as_secs_f64();
+                            let sub = Submission {
                                 worker: w,
                                 batch_seq: seq,
                                 task,
                                 done: done.clone(),
-                                submitted_at: epoch.elapsed().as_secs_f64(),
-                            });
-                            wake.notify();
-                            done.wait();
+                                submitted_at,
+                                tenant: tw.tenant,
+                                class: tw.class,
+                                deadline: tw
+                                    .deadline
+                                    .map(|dl| submitted_at + dl),
+                                shed: ShedSlot::new(),
+                            };
+                            match &gate {
+                                None => {
+                                    ingress.push(sub);
+                                    wake.notify();
+                                    done.wait();
+                                }
+                                Some(g) => match g.submit(sub) {
+                                    SubmitOutcome::Admitted => {
+                                        wake.notify();
+                                        done.wait();
+                                    }
+                                    // Shed at the gate: receipt returned,
+                                    // nothing queued, nothing to wait on.
+                                    SubmitOutcome::Shed(_) => {}
+                                },
+                            }
                         }
                     })
                     .expect("spawn fleet worker");
@@ -619,7 +699,21 @@ impl FleetCoordinator {
                             attempt: e.attempt,
                             timed_out: false,
                         });
-                        job_txs[e.dev].send(e.subs).expect("device runner alive");
+                        if let Err(mpsc::SendError(subs)) =
+                            job_txs[e.dev].send(e.subs)
+                        {
+                            // Runner thread died: unblock the parked
+                            // group's workers, then surface the failure
+                            // (liveness before failure — the catch_unwind
+                            // tail absorbs the rest of the backlog).
+                            let now = epoch.elapsed().as_secs_f64();
+                            for sub in &subs {
+                                if !sub.done.is_complete() {
+                                    sub.done.complete(now);
+                                }
+                            }
+                            panic!("device {} runner died mid-retry", e.dev);
+                        }
                         progressed = true;
                     }
 
@@ -662,7 +756,10 @@ impl FleetCoordinator {
                                             }
                                         }
                                         group_makespans.push(makespan);
-                                        latencies.extend(lat);
+                                        for (t, l) in lat {
+                                            latency_tenants.push(t);
+                                            latencies.push(l);
+                                        }
                                         st.stats.n_groups += 1;
                                         st.stats.n_tasks += done.n_tasks;
                                     }
@@ -966,9 +1063,19 @@ impl FleetCoordinator {
                                 attempt: 1,
                                 timed_out: false,
                             });
-                            job_txs[dev]
-                                .send(ordered_subs)
-                                .expect("device runner alive");
+                            if let Err(mpsc::SendError(subs)) =
+                                job_txs[dev].send(ordered_subs)
+                            {
+                                // Runner thread died: unblock the group's
+                                // workers before surfacing the failure.
+                                let now = epoch.elapsed().as_secs_f64();
+                                for sub in &subs {
+                                    if !sub.done.is_complete() {
+                                        sub.done.complete(now);
+                                    }
+                                }
+                                panic!("device {dev} runner died mid-commit");
+                            }
                             if st.calibrator.is_some() {
                                 st.calib_probe
                                     .reset_for_table(&st.table, EngineState::default());
@@ -1201,10 +1308,12 @@ impl FleetCoordinator {
         for st in states {
             per_device.push(st.stats);
         }
+        let admission = ctl.map(|c| c.report(&latencies, &latency_tenants));
         FleetMetrics {
             total_secs,
             tasks_per_sec: n_tasks as f64 / total_secs,
             latencies,
+            latency_tenants,
             group_makespans,
             sched_overhead_secs: overhead,
             n_groups,
@@ -1216,6 +1325,7 @@ impl FleetCoordinator {
             n_steal_rejected,
             placement_latencies,
             n_place_rounds,
+            admission,
         }
     }
 }
@@ -1371,5 +1481,69 @@ mod tests {
             m.per_device.iter().map(|l| l.n_quarantine_trips).sum::<usize>(),
             0
         );
+    }
+
+    #[test]
+    fn admission_armed_fleet_accounts_every_submission() {
+        use crate::coordinator::admission::{
+            AdmissionOptions, DrainPolicyKind, Overflow, Priority, TenantId,
+        };
+        let c = sim_fleet(
+            &["amd_r9", "k20c"],
+            FleetCoordOptions {
+                admission: Some(AdmissionOptions {
+                    per_tenant_cap: 1,
+                    overflow: Overflow::ShedLowest,
+                    policy: DrainPolicyKind::StrictPriority,
+                    ..AdmissionOptions::default()
+                }),
+                ..FleetCoordOptions::default()
+            },
+        );
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 0.1).unwrap();
+        // Two hi-priority tenants (one worker each, so their one-deep
+        // outstanding never hits the cap of 1) + four best-effort workers
+        // all submitting as tenant 9 over that same cap: any overflow
+        // sheds best-effort, and accepted work is never lost — the
+        // completion/shed ledger must account for every submission.
+        let mut workloads = Vec::new();
+        for w in 0..2u32 {
+            workloads.push(TenantWorkload {
+                tenant: TenantId(w),
+                class: Priority::Hi,
+                deadline: None,
+                tasks: (0..3)
+                    .map(|i| g.tasks[(w as usize + i) % 4].clone())
+                    .collect(),
+            });
+        }
+        for w in 0..4usize {
+            workloads.push(TenantWorkload {
+                tenant: TenantId(9),
+                class: Priority::BestEffort,
+                deadline: None,
+                tasks: (0..3).map(|i| g.tasks[(w + i) % 4].clone()).collect(),
+            });
+        }
+        let total = 6 * 3;
+        let m = c.run_tenants(workloads);
+        let rep = m.admission.as_ref().expect("armed run carries a report");
+        assert_eq!(
+            m.n_tasks + rep.n_shed,
+            total,
+            "every submission completes exactly once or sheds: {rep:?}"
+        );
+        assert_eq!(m.latencies.len(), m.n_tasks);
+        assert_eq!(m.latency_tenants.len(), m.n_tasks);
+        // A hi tenant never sheds: its single worker fits its cap, a
+        // tenant-cap eviction only targets the overflowing tenant, and
+        // nothing outranks Hi for a global-cap eviction.
+        for t in &rep.per_tenant {
+            if t.tenant != 9 {
+                assert_eq!(t.n_shed, 0, "{t:?}");
+                assert_eq!(t.n_completed, 3, "{t:?}");
+            }
+        }
     }
 }

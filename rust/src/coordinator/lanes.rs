@@ -125,6 +125,10 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::config::DeviceProfile;
+use crate::coordinator::admission::{
+    AdmissionCtl, AdmissionGate, AdmissionOptions, AdmissionReport, Priority,
+    ShedSlot, SubmitOutcome, TenantId,
+};
 use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
 use crate::coordinator::recovery::{
     BreakerState, FailureCtx, FaultKind, FleetHealth, LaneBreaker,
@@ -187,6 +191,13 @@ pub struct LaneOptions {
     ///
     /// [`RecoveryPolicy`]: crate::coordinator::recovery::RecoveryPolicy
     pub recovery: Option<RecoveryOptions>,
+    /// `Some` arms multi-tenant admission control
+    /// (`coordinator::admission`): bounded per-tenant backlogs, the
+    /// configured overflow policy at the submit gate, policy-ordered
+    /// drains, and per-tenant telemetry in
+    /// [`LaneMetrics::admission`]. `None` (the default) keeps the
+    /// untracked unbounded pipeline bit-for-bit.
+    pub admission: Option<AdmissionOptions>,
 }
 
 impl Default for LaneOptions {
@@ -200,6 +211,7 @@ impl Default for LaneOptions {
             online: None,
             recalibrate: None,
             recovery: None,
+            admission: None,
         }
     }
 }
@@ -268,6 +280,13 @@ pub struct LaneStats {
     pub n_quarantine_trips: usize,
     /// Recovery: Open → HalfOpen probe admissions after cooldown.
     pub n_halfopen_probes: usize,
+    /// Admission: submissions whose compiled row signature was
+    /// byte-identical to an earlier submission in the same drained batch
+    /// (`TaskTable` spec twins, typically *across* tenants) and were
+    /// therefore collapsed onto the representative's device slot instead
+    /// of compiled and executed separately. 0 unless
+    /// `AdmissionOptions::collapse_twins` is armed on the legacy path.
+    pub n_xtenant_collapsed: u64,
 }
 
 /// Aggregate metrics of one sharded run (single-lane degenerates to the
@@ -281,12 +300,18 @@ pub struct LaneMetrics {
     pub tasks_per_sec: f64,
     /// Per-task submission → completion latency (s), all lanes.
     pub latencies: Vec<f64>,
+    /// Tenant id of each entry of `latencies` (index-aligned) — the
+    /// per-tenant p50/p99 breakdown in [`LaneMetrics::admission`] joins
+    /// on this.
+    pub latency_tenants: Vec<u32>,
     /// Device busy time per group (s), all lanes.
     pub group_makespans: Vec<f64>,
     pub sched_overhead_secs: f64,
     pub n_groups: usize,
     pub n_tasks: usize,
     pub per_lane: Vec<LaneStats>,
+    /// Per-tenant admission telemetry (`None` with `admission: None`).
+    pub admission: Option<AdmissionReport>,
 }
 
 impl LaneMetrics {
@@ -315,7 +340,8 @@ impl LaneMetrics {
 /// What one lane proxy hands back when its buffer closes.
 struct LaneOutcome {
     stats: LaneStats,
-    latencies: Vec<f64>,
+    /// (tenant, submission → completion latency) per executed task.
+    latencies: Vec<(u32, f64)>,
     group_makespans: Vec<f64>,
 }
 
@@ -347,6 +373,35 @@ pub(crate) fn empty_lane_stats(lane: usize) -> LaneStats {
         n_requeued: 0,
         n_quarantine_trips: 0,
         n_halfopen_probes: 0,
+        n_xtenant_collapsed: 0,
+    }
+}
+
+/// One tenant-attributed worker workload for
+/// [`LaneCoordinator::run_tenants`] /
+/// [`FleetCoordinator::run_tenants`](crate::coordinator::fleet::FleetCoordinator::run_tenants):
+/// a dependent task batch submitted by one worker thread on behalf of
+/// `tenant` at QoS class `class`.
+#[derive(Clone, Debug)]
+pub struct TenantWorkload {
+    pub tenant: TenantId,
+    pub class: Priority,
+    /// Relative deadline applied to every task of this workload (secs
+    /// from its submission instant), consulted by deadline-EDF draining.
+    pub deadline: Option<f64>,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl TenantWorkload {
+    /// The untagged default the anonymous `run` path uses: one tenant
+    /// per worker, `Normal` class, no deadline.
+    pub fn for_worker(w: usize, tasks: Vec<TaskSpec>) -> Self {
+        TenantWorkload {
+            tenant: TenantId(w as u32),
+            class: Priority::Normal,
+            deadline: None,
+            tasks,
+        }
     }
 }
 
@@ -399,10 +454,37 @@ impl LaneCoordinator {
 
     /// Run `workloads[w]` = the dependent task batch of worker `w` (each
     /// worker submits its next task only after the previous completed).
+    /// Workers are anonymous tenants (`TenantWorkload::for_worker`), so
+    /// with `admission: None` this is exactly the classic pipeline.
     pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> LaneMetrics {
+        self.run_tenants(
+            workloads
+                .into_iter()
+                .enumerate()
+                .map(|(w, tasks)| TenantWorkload::for_worker(w, tasks))
+                .collect(),
+        )
+    }
+
+    /// [`LaneCoordinator::run`] with tenant attribution: worker `w`
+    /// submits `workloads[w].tasks` on behalf of its tenant/class, every
+    /// submission passing the admission gate when
+    /// [`LaneOptions::admission`] is armed. A worker whose submission is
+    /// shed receives the typed receipt (stamped in the submission's
+    /// [`ShedSlot`]) and moves on to its next task; admitted work is
+    /// never lost.
+    pub fn run_tenants(&self, workloads: Vec<TenantWorkload>) -> LaneMetrics {
         let t_workers = workloads.len();
         let lanes = self.devices.len();
-        let sharded = ShardedBuffer::new(lanes);
+        let ctl = self
+            .opts
+            .admission
+            .as_ref()
+            .map(|a| AdmissionCtl::new(a.clone()));
+        let sharded = match &ctl {
+            Some(c) => ShardedBuffer::with_admission(lanes, c.clone()),
+            None => ShardedBuffer::new(lanes),
+        };
         let health = FleetHealth::new(lanes);
         let epoch = Instant::now();
 
@@ -410,22 +492,56 @@ impl LaneCoordinator {
         std::thread::scope(|s| {
             // ---- workers ------------------------------------------------
             let mut worker_handles = Vec::with_capacity(t_workers);
-            for (w, batch) in workloads.into_iter().enumerate() {
+            for (w, tw) in workloads.into_iter().enumerate() {
                 let sharded = sharded.clone();
+                // Producers enter through the admission gate when armed:
+                // their entry queue is their own lane, and the ShedLowest
+                // eviction scan covers every lane's backlog.
+                let gate = ctl.as_ref().map(|c| {
+                    AdmissionGate::new(
+                        c.clone(),
+                        sharded.lane_for_worker(w).clone(),
+                        sharded.lanes_vec(),
+                        epoch,
+                    )
+                });
                 let h = std::thread::Builder::new()
                     .name(format!("worker-{w}"))
                     .spawn_scoped(s, move || {
-                        for (seq, task) in batch.into_iter().enumerate() {
+                        for (seq, task) in tw.tasks.into_iter().enumerate() {
                             let done = Event::new();
-                            sharded.push(Submission {
+                            let submitted_at = epoch.elapsed().as_secs_f64();
+                            let sub = Submission {
                                 worker: w,
                                 batch_seq: seq,
                                 task,
                                 done: done.clone(),
-                                submitted_at: epoch.elapsed().as_secs_f64(),
-                            });
-                            // Dependency: wait before submitting the next.
-                            done.wait();
+                                submitted_at,
+                                tenant: tw.tenant,
+                                class: tw.class,
+                                deadline: tw
+                                    .deadline
+                                    .map(|d| submitted_at + d),
+                                shed: ShedSlot::new(),
+                            };
+                            match &gate {
+                                None => {
+                                    sharded.push(sub);
+                                    // Dependency: wait before the next.
+                                    done.wait();
+                                }
+                                Some(g) => match g.submit(sub) {
+                                    // Admitted work completes exactly
+                                    // once — by the device, or by an
+                                    // eviction receipt.
+                                    SubmitOutcome::Admitted => {
+                                        done.wait();
+                                    }
+                                    // Shed at the gate: receipt returned,
+                                    // nothing queued, nothing to wait on.
+                                    SubmitOutcome::Shed(_) => {}
+                                },
+                            }
                         }
                     })
                     .expect("spawn worker");
@@ -522,26 +638,34 @@ impl LaneCoordinator {
 
         let total_secs = epoch.elapsed().as_secs_f64();
         let mut latencies = Vec::new();
+        let mut latency_tenants = Vec::new();
         let mut group_makespans = Vec::new();
         let mut per_lane = Vec::with_capacity(lanes);
         let (mut overhead, mut n_groups, mut n_tasks) = (0.0, 0, 0);
         for o in outcomes {
-            latencies.extend(o.latencies);
+            for (t, l) in o.latencies {
+                latency_tenants.push(t);
+                latencies.push(l);
+            }
             group_makespans.extend(o.group_makespans);
             overhead += o.stats.sched_overhead_secs;
             n_groups += o.stats.n_groups;
             n_tasks += o.stats.n_tasks;
             per_lane.push(o.stats);
         }
+        let admission =
+            ctl.map(|c| c.report(&latencies, &latency_tenants));
         LaneMetrics {
             total_secs,
             tasks_per_sec: n_tasks as f64 / total_secs,
             latencies,
+            latency_tenants,
             group_makespans,
             sched_overhead_secs: overhead,
             n_groups,
             n_tasks,
             per_lane,
+            admission,
         }
     }
 }
@@ -571,6 +695,15 @@ fn lane_proxy(
     let mut drained: Vec<Submission> = Vec::new();
     let mut tasks: Vec<TaskSpec> = Vec::new();
     let mut ordered: Vec<TaskSpec> = Vec::new();
+    // Cross-tenant spec-twin collapse scratch (admission's
+    // `collapse_twins`): maps drained rows onto their unique compiled
+    // representatives. All reused; zero cost when no twins are drained.
+    let collapse_twins =
+        opts.admission.as_ref().map_or(false, |a| a.collapse_twins);
+    let mut rep_of: Vec<usize> = Vec::new();
+    let mut pos_of: Vec<usize> = Vec::new();
+    let mut inv_slot: Vec<usize> = Vec::new();
+    let mut exec_tasks: Vec<TaskSpec> = Vec::new();
     // Persistent paused-cursor pair: the table is compiled once per
     // drained group (shared with the search); the cursor replays
     // NoReorder orders for the predicted-makespan record (the heuristic
@@ -608,10 +741,42 @@ fn lane_proxy(
             // Compiled once per drained group; shared by the search and
             // the prediction bookkeeping.
             lane_table.compile_calibrated_into(&tasks, &cal_prof);
+            // Cross-tenant spec-twin collapse: when several drained
+            // submissions compiled to byte-identical rows (typically the
+            // same kernel + sizes arriving from different tenants), run
+            // one representative per class and fan its completion out to
+            // every twin — the ROADMAP "free throughput" note.
+            let mut collapsed = false;
+            if collapse_twins {
+                rep_of.clear();
+                rep_of.extend(
+                    (0..tasks.len()).map(|i| lane_table.twin_class(i) as usize),
+                );
+                let n_unique =
+                    rep_of.iter().enumerate().filter(|&(i, &r)| r == i).count();
+                if n_unique < tasks.len() {
+                    stats.n_xtenant_collapsed += (tasks.len() - n_unique) as u64;
+                    pos_of.clear();
+                    pos_of.resize(tasks.len(), usize::MAX);
+                    exec_tasks.clear();
+                    for i in 0..tasks.len() {
+                        if rep_of[i] == i {
+                            pos_of[i] = exec_tasks.len();
+                            exec_tasks.push(tasks[i].clone());
+                        }
+                    }
+                    // Recompile over the representatives only: search,
+                    // prediction replay and device all see the collapsed
+                    // group. Twin-free groups never reach this recompile.
+                    lane_table.compile_calibrated_into(&exec_tasks, &cal_prof);
+                    collapsed = true;
+                }
+            }
+            let n_rows = if collapsed { exec_tasks.len() } else { tasks.len() };
             match opts.policy {
                 Policy::NoReorder => {
                     order.clear();
-                    order.extend(0..tasks.len());
+                    order.extend(0..n_rows);
                     // Model prediction for the arrival order
                     // (allocation-free replay through the lane cursor).
                     lane_cursor.reset_for_table(&lane_table, EngineState::default());
@@ -634,8 +799,10 @@ fn lane_proxy(
                 }
             }
 
+            let run_tasks: &[TaskSpec] =
+                if collapsed { &exec_tasks } else { &tasks };
             ordered.clear();
-            ordered.extend(order.iter().map(|&i| tasks[i].clone()));
+            ordered.extend(order.iter().map(|&i| run_tasks[i].clone()));
             let (run, attempts) = match opts.recovery.as_ref() {
                 Some(rec) => run_group_with_recovery(
                     device.as_ref(),
@@ -656,10 +823,25 @@ fn lane_proxy(
             let now = epoch.elapsed().as_secs_f64();
             // Signal completions (device timestamps are group-relative;
             // the workers only need the ordering, latency uses wall time).
-            for (slot, &orig) in order.iter().enumerate() {
-                let sub = &drained[orig];
-                sub.done.complete(now - run.makespan + run.task_end[slot]);
-                latencies.push(now - sub.submitted_at);
+            if collapsed {
+                // Fan the representative's completion out to every twin:
+                // `drained[i]` finished when its class rep's slot did.
+                inv_slot.clear();
+                inv_slot.resize(order.len(), 0);
+                for (slot, &row) in order.iter().enumerate() {
+                    inv_slot[row] = slot;
+                }
+                for (i, sub) in drained.iter().enumerate() {
+                    let slot = inv_slot[pos_of[rep_of[i]]];
+                    sub.done.complete(now - run.makespan + run.task_end[slot]);
+                    latencies.push((sub.tenant.0, now - sub.submitted_at));
+                }
+            } else {
+                for (slot, &orig) in order.iter().enumerate() {
+                    let sub = &drained[orig];
+                    sub.done.complete(now - run.makespan + run.task_end[slot]);
+                    latencies.push((sub.tenant.0, now - sub.submitted_at));
+                }
             }
             // Measured-rate feedback, after the completion signals so
             // the replay never delays worker unblocking: predicted
@@ -828,7 +1010,8 @@ pub(crate) struct RunDone {
 pub(crate) enum RunOutcome {
     Done {
         makespan: f64,
-        latencies: Vec<f64>,
+        /// `(tenant id, wall latency)` per completed submission.
+        latencies: Vec<(u32, f64)>,
         /// Measured per-command records (slot-indexed in submitted
         /// order) — the calibrator's feedback substrate.
         timeline: Vec<CmdRecord>,
@@ -941,7 +1124,7 @@ pub(crate) fn device_runner_loop(
                 let mut lat = Vec::with_capacity(subs.len());
                 for (slot, sub) in subs.iter().enumerate() {
                     sub.done.complete(now - run.makespan + run.task_end[slot]);
-                    lat.push(now - sub.submitted_at);
+                    lat.push((sub.tenant.0, now - sub.submitted_at));
                 }
                 RunDone {
                     n_tasks: subs.len(),
@@ -1054,7 +1237,7 @@ fn online_lane_proxy(
     let mut order_buf: Vec<usize> = Vec::new();
     let mut drained: Vec<Submission> = Vec::new();
 
-    let mut latencies: Vec<f64> = Vec::new();
+    let mut latencies: Vec<(u32, f64)> = Vec::new();
     let mut group_makespans: Vec<f64> = Vec::new();
     let mut stats = empty_lane_stats(lane);
 
@@ -1184,9 +1367,28 @@ fn online_lane_proxy(
                                                 attempt: fl.attempt + 1,
                                                 timed_out: false,
                                             });
-                                            job_tx
-                                                .send(subs)
-                                                .expect("lane device runner alive");
+                                            if let Err(mpsc::SendError(subs)) =
+                                                job_tx.send(subs)
+                                            {
+                                                // Runner thread died:
+                                                // unblock the group's
+                                                // workers, then surface the
+                                                // failure (liveness before
+                                                // failure).
+                                                let now = epoch
+                                                    .elapsed()
+                                                    .as_secs_f64();
+                                                for sub in &subs {
+                                                    if !sub.done.is_complete()
+                                                    {
+                                                        sub.done.complete(now);
+                                                    }
+                                                }
+                                                panic!(
+                                                    "lane {lane} device \
+                                                     runner died mid-retry"
+                                                );
+                                            }
                                         }
                                         RecoveryAction::Quarantine => {
                                             if breaker.trip() {
@@ -1386,7 +1588,20 @@ fn online_lane_proxy(
                         attempt: 1,
                         timed_out: false,
                     });
-                    job_tx.send(ordered_subs).expect("lane device runner alive");
+                    if let Err(mpsc::SendError(subs)) = job_tx.send(ordered_subs)
+                    {
+                        // Runner thread died: unblock the group's workers,
+                        // then surface the failure (liveness before
+                        // failure — the catch_unwind tail completes the
+                        // rest of the backlog).
+                        let now = epoch.elapsed().as_secs_f64();
+                        for sub in &subs {
+                            if !sub.done.is_complete() {
+                                sub.done.complete(now);
+                            }
+                        }
+                        panic!("lane {lane} device runner died mid-commit");
+                    }
                     // Capture the order's predicted per-slot stage
                     // seconds for calibration feedback via a recorded
                     // model replay — AFTER the send, so the replay
@@ -2074,5 +2289,109 @@ mod tests {
         // Retried groups are excluded from calibration (none armed here,
         // but the quarantine machinery must have stayed silent).
         assert_eq!(l.n_quarantine_trips, 0, "{l:?}");
+    }
+
+    // ---- multi-tenant admission -------------------------------------
+
+    #[test]
+    fn wake_signal_survives_poisoning() {
+        // A producer panicking inside notify() poisons the epoch mutex;
+        // a parked planner must still wake and later waits must not
+        // panic — the poison-recovery liveness regression test.
+        let w = Arc::new(WakeSignal::new());
+        let w2 = w.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _g = w2.epoch.lock().unwrap();
+            panic!("poison the wake-signal lock");
+        })
+        .join();
+        assert!(poisoner.is_err());
+        let seen = w.epoch();
+        let w3 = w.clone();
+        let parker = std::thread::spawn(move || {
+            w3.wait_past(seen, Instant::now() + Duration::from_secs(5));
+        });
+        w.notify();
+        parker.join().expect("parked waiter woke across poisoning");
+        assert!(w.epoch() > seen);
+    }
+
+    #[test]
+    fn admission_armed_lanes_complete_and_report() {
+        use crate::coordinator::admission::{
+            AdmissionOptions, DrainPolicyKind, Priority, TenantId,
+        };
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 0.05).unwrap();
+        let c = LaneCoordinator::homogeneous(
+            p,
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 1,
+                policy: Policy::NoReorder,
+                admission: Some(AdmissionOptions {
+                    policy: DrainPolicyKind::StrictPriority,
+                    ..AdmissionOptions::default()
+                }),
+                ..LaneOptions::default()
+            },
+        );
+        let workloads: Vec<TenantWorkload> = (0..3)
+            .map(|w| TenantWorkload {
+                tenant: TenantId(w as u32),
+                class: if w == 0 { Priority::Hi } else { Priority::BestEffort },
+                deadline: None,
+                tasks: (0..2).map(|i| g.tasks[(w + i) % 4].clone()).collect(),
+            })
+            .collect();
+        let m = c.run_tenants(workloads);
+        assert_eq!(m.n_tasks, 6, "caps are ample: nothing sheds or blocks");
+        assert_eq!(m.latency_tenants.len(), m.latencies.len());
+        let rep = m.admission.as_ref().expect("armed run carries a report");
+        assert_eq!(rep.n_shed, 0);
+        assert_eq!(rep.per_tenant.len(), 3);
+        for t in &rep.per_tenant {
+            assert_eq!(t.n_completed, 2, "{t:?}");
+            assert!(t.p99_latency >= t.p50_latency - 1e-12);
+        }
+        assert!(rep.jain_fairness > 0.0 && rep.jain_fairness <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn collapse_twins_dedups_identical_rows_across_tenants() {
+        use crate::coordinator::admission::{
+            AdmissionOptions, Priority, TenantId,
+        };
+        let p = profile_by_name("amd_r9").unwrap();
+        let g = synthetic_benchmark("BK50", &p, 0.05).unwrap();
+        let c = LaneCoordinator::homogeneous(
+            p,
+            Arc::new(SpinExecutor),
+            LaneOptions {
+                lanes: 1,
+                policy: Policy::NoReorder,
+                // Let all four workers' submissions settle into one group
+                // so the cross-tenant twins actually meet in a drain.
+                settle: Duration::from_millis(40),
+                admission: Some(AdmissionOptions::default()),
+                ..LaneOptions::default()
+            },
+        );
+        // Four tenants submit the *same* task spec: one representative
+        // should execute per drained group, completions fan out to all.
+        let workloads: Vec<TenantWorkload> = (0..4)
+            .map(|w| TenantWorkload {
+                tenant: TenantId(w as u32),
+                class: Priority::Normal,
+                deadline: None,
+                tasks: vec![g.tasks[0].clone()],
+            })
+            .collect();
+        let m = c.run_tenants(workloads);
+        assert_eq!(m.n_tasks, 4, "every submission completes");
+        assert_eq!(m.latencies.len(), 4);
+        let collapsed: u64 =
+            m.per_lane.iter().map(|l| l.n_xtenant_collapsed).sum();
+        assert!(collapsed > 0, "identical rows never collapsed: {m:?}");
     }
 }

@@ -16,6 +16,15 @@
 //!   lanes by calibrated earliest-completion-time, each device running
 //!   its own online pipeline, with breaker-aware cross-device stealing
 //!   gated on the thief's calibrated win prediction.
+//! * `admission` — the multi-tenant ingress-robustness layer: bounded
+//!   per-tenant backlogs with a validated [`AdmissionOptions`]
+//!   (per-tenant and global caps, `Block` / `ShedLowest` / `RejectNew`
+//!   overflow), pluggable drain ordering ([`AdmissionPolicy`]:
+//!   weighted-fair DRR over tenants, strict priority classes,
+//!   deadline-EDF), typed [`Shed`] receipts, and the reservation ledger
+//!   ([`AdmissionCtl`]) that makes steals cap-neutral and accepted
+//!   tasks lose-proof. `admission: None` keeps the untracked pipeline
+//!   bit-for-bit.
 //! * `recovery` — fault tolerance: the pluggable [`RecoveryPolicy`]
 //!   trait (fail-fast / retry-with-backoff / blacklist-after-N), the
 //!   run-deadline watchdog formula, and the per-lane circuit breaker
@@ -23,12 +32,18 @@
 //! * `runner` — the classic single-proxy harness, now a single-lane
 //!   facade over `lanes`.
 
+pub mod admission;
 pub mod buffer;
 pub mod fleet;
 pub mod lanes;
 pub mod recovery;
 pub mod runner;
 
+pub use admission::{
+    AdmissionCtl, AdmissionGate, AdmissionOptions, AdmissionPolicy,
+    AdmissionReport, CapHit, DrainPolicyKind, Overflow, Priority, Shed,
+    ShedReason, ShedSlot, SubmitOutcome, TenantId, TenantReport,
+};
 pub use buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
 pub use fleet::{FleetCoordOptions, FleetCoordinator, FleetMetrics};
 pub use lanes::{LaneCoordinator, LaneMetrics, LaneOptions, LaneStats};

@@ -79,6 +79,7 @@ impl Coordinator {
                 online: None,
                 recalibrate: None,
                 recovery: None,
+                admission: None,
             },
         );
         let m = lane.run(workloads);

@@ -3,8 +3,15 @@
 //! The host proxy associates an event with each submitted command; later
 //! commands in *other* queues list events as wait conditions, reproducing
 //! the red/green dependency arrows of Figs. 2-4.
+//!
+//! Every lock below recovers from poisoning (`PoisonError::into_inner`):
+//! the guarded `Option<f64>` is written in one assignment, so a holder
+//! that panics for unrelated reasons never leaves it mid-mutation, and a
+//! worker parked in `wait` must still be woken by whichever thread
+//! completes the event during panic unwinding — the recovery layer's
+//! liveness guarantee.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug, Default)]
@@ -26,26 +33,36 @@ impl Event {
     /// Signal completion at `timestamp` (seconds on the device clock).
     /// Signalling twice is a bug in the caller.
     pub fn complete(&self, timestamp: f64) {
-        let mut g = self.inner.done.lock().unwrap();
+        let mut g =
+            self.inner.done.lock().unwrap_or_else(PoisonError::into_inner);
         assert!(g.is_none(), "event completed twice");
         *g = Some(timestamp);
         self.inner.cv.notify_all();
     }
 
     pub fn is_complete(&self) -> bool {
-        self.inner.done.lock().unwrap().is_some()
+        self.inner
+            .done
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .is_some()
     }
 
     /// Completion timestamp if signalled.
     pub fn timestamp(&self) -> Option<f64> {
-        *self.inner.done.lock().unwrap()
+        *self.inner.done.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Block until completion; returns the completion timestamp.
     pub fn wait(&self) -> f64 {
-        let mut g = self.inner.done.lock().unwrap();
+        let mut g =
+            self.inner.done.lock().unwrap_or_else(PoisonError::into_inner);
         while g.is_none() {
-            g = self.inner.cv.wait(g).unwrap();
+            g = self
+                .inner
+                .cv
+                .wait(g)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         g.unwrap()
     }
@@ -53,10 +70,15 @@ impl Event {
     /// Block with a timeout; None on timeout.
     pub fn wait_timeout(&self, d: Duration) -> Option<f64> {
         let deadline = Instant::now() + d;
-        let mut g = self.inner.done.lock().unwrap();
+        let mut g =
+            self.inner.done.lock().unwrap_or_else(PoisonError::into_inner);
         while g.is_none() {
             let left = deadline.checked_duration_since(Instant::now())?;
-            let (ng, res) = self.inner.cv.wait_timeout(g, left).unwrap();
+            let (ng, res) = self
+                .inner
+                .cv
+                .wait_timeout(g, left)
+                .unwrap_or_else(PoisonError::into_inner);
             g = ng;
             if res.timed_out() && g.is_none() {
                 return None;
@@ -97,5 +119,28 @@ mod tests {
         let e = Event::new();
         e.complete(0.0);
         e.complete(1.0);
+    }
+
+    #[test]
+    fn poisoned_event_stays_live() {
+        // A thread panics while holding the event mutex (the Option is
+        // never mid-mutation, so poisoning carries no information). A
+        // waiter blocked across the poisoning must still complete — this
+        // is the liveness regression test for the poison-recovery sweep.
+        let e = Event::new();
+        let e2 = e.clone();
+        let poisoner = thread::spawn(move || {
+            let _g = e2.inner.done.lock().unwrap();
+            panic!("poison the event lock");
+        })
+        .join();
+        assert!(poisoner.is_err(), "the poisoning thread must have panicked");
+        assert!(!e.is_complete(), "recovered read of the untouched state");
+        let e3 = e.clone();
+        let waiter = thread::spawn(move || e3.wait());
+        e.complete(2.5);
+        assert_eq!(waiter.join().unwrap(), 2.5);
+        assert_eq!(e.timestamp(), Some(2.5));
+        assert_eq!(e.wait_timeout(Duration::from_millis(1)), Some(2.5));
     }
 }

@@ -86,6 +86,22 @@ pub fn rel_err(pred: f64, meas: f64) -> f64 {
     (pred - meas).abs() / meas.abs()
 }
 
+/// Jain's fairness index J = (Σx)² / (n · Σx²) over per-tenant
+/// allocations: 1.0 when every tenant gets the same share, → 1/n when
+/// one tenant takes everything. Empty or all-zero inputs report 1.0
+/// (nothing was allocated unfairly).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    (s * s) / (xs.len() as f64 * sq)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +111,18 @@ mod tests {
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert_eq!(jain_index(&[2.0, 2.0, 2.0, 2.0]), 1.0);
+        // One tenant takes everything: J = 1/n.
+        let j = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12);
+        // J([1, 3]) = 16 / (2 * 10) = 0.8.
+        assert!((jain_index(&[1.0, 3.0]) - 0.8).abs() < 1e-12);
     }
 
     #[test]

@@ -260,6 +260,10 @@ fn sub(worker: usize, seq: usize) -> Submission {
         task: TaskSpec::simple("t", 10, KernelSpec::Timed { secs: 1e-4 }, 10),
         done: Event::new(),
         submitted_at: 0.0,
+        tenant: oclcc::coordinator::TenantId(worker as u32),
+        class: oclcc::coordinator::Priority::Normal,
+        deadline: None,
+        shed: oclcc::coordinator::ShedSlot::new(),
     }
 }
 

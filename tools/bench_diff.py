@@ -17,6 +17,13 @@ its own key fields, metric, direction and regression threshold (see
 * ``BENCH_recovery.json`` — goodput under injected faults per
   (policy, fault_pct), higher is better, 30% (chaos cells inherit the
   live-pipeline noise floor plus backoff-sleep jitter);
+* ``BENCH_multitenant.json`` — two gated trajectories keyed (cell,):
+  admission-armed throughput in tasks/sec per overload cell, higher is
+  better, 30%, and Hi-tenant ``hi_p99_us`` on the Hi-bearing cells,
+  lower is better, 150% (loose for the same reason as the fleet latency
+  gate: the inversion it guards against — Hi work queued behind a
+  saturating BestEffort backlog — costs orders of magnitude; cells
+  without Hi tenants carry no ``hi_p99_us`` and soft-skip);
 * ``BENCH_fleet.json`` — two gated trajectories over the same rows,
   both keyed (cell, impl): fleet throughput in tasks/sec, higher is
   better, 30% (the static cells are model-time and bit-stable; the live
@@ -92,6 +99,24 @@ TRAJECTORIES = (
         metric_path=("tasks_per_sec",),
         higher_is_better=True,
         threshold=0.30,
+    ),
+    Trajectory(
+        name="BENCH_multitenant.json",
+        key_fields=("cell",),
+        metric_path=("tasks_per_sec",),
+        higher_is_better=True,
+        threshold=0.30,
+    ),
+    # Second gate over the same file: Hi-tenant p99 under overload.
+    # Cells without Hi tenants (fairness8, collapse) carry no hi_p99_us
+    # and soft-skip via metric_of; the loose threshold tolerates
+    # wall-clock tail jitter while still catching priority inversion.
+    Trajectory(
+        name="BENCH_multitenant.json",
+        key_fields=("cell",),
+        metric_path=("hi_p99_us",),
+        higher_is_better=False,
+        threshold=1.50,
     ),
     Trajectory(
         name="BENCH_fleet.json",

@@ -21,6 +21,8 @@ ONLINE = traj("BENCH_online_resched.json")
 REC = traj("BENCH_recovery.json")
 FLEET = traj("BENCH_fleet.json", metric=("tasks_per_sec",))
 FLEET_LAT = traj("BENCH_fleet.json", metric=("placement_p99_us",))
+MT = traj("BENCH_multitenant.json", metric=("tasks_per_sec",))
+MT_HI = traj("BENCH_multitenant.json", metric=("hi_p99_us",))
 
 
 def write_doc(path, mode, rows, mkdir=False):
@@ -327,6 +329,108 @@ def test_main_single_fleet_file_runs_both_gates(tmp_path):
         tmp_path / "curr" / FLEET.name,
         "fast",
         [fleet_row(cell="place_het3", impl="batched", tps=1000.0, p99_us=9000.0)],
+        mkdir=True,
+    )
+    assert bd.main([prev, curr]) == 1
+    # Directory mode walks TRAJECTORIES and reaches the same verdict.
+    assert bd.main([str(tmp_path / "prev"), str(tmp_path / "curr")]) == 1
+
+
+def mt_row(cell="overload_shed", tps=900.0, n_shed=12, hi_p99_us=None):
+    # Cells without Hi tenants (fairness8, collapse) emit no hi_p99_us;
+    # the latency trajectory must soft-skip them.
+    row = {
+        "cell": cell,
+        "tasks_per_sec": tps,
+        "n_shed": n_shed,
+        "jain_fairness": 0.97,
+    }
+    if hi_p99_us is not None:
+        row["hi_p99_us"] = hi_p99_us
+    return row
+
+
+def test_multitenant_trajectories_recognized_by_basename(tmp_path):
+    # One basename, two gated metrics: throughput and Hi-tenant p99.
+    assert bd.trajectories_for("artifacts/" + MT.name) == [MT, MT_HI]
+    assert MT.higher_is_better and MT.threshold == 0.30
+    assert not MT_HI.higher_is_better and MT_HI.threshold == 1.50
+    p = write_doc(
+        tmp_path / MT.name,
+        "fast",
+        [
+            mt_row(hi_p99_us=800.0),
+            mt_row(cell="fairness8", tps=1100.0, n_shed=0),
+        ],
+    )
+    mode, cells = bd.load_rows(p, MT)
+    assert mode == "fast"
+    assert cells == {("overload_shed",): 900.0, ("fairness8",): 1100.0}
+    # The p99 gate sees only Hi-bearing rows.
+    _, hi_cells = bd.load_rows(p, MT_HI)
+    assert hi_cells == {("overload_shed",): 800.0}
+
+
+def test_multitenant_throughput_drop_regresses_per_cell(tmp_path):
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [mt_row(), mt_row(cell="overload_block", tps=600.0, n_shed=0)],
+    )
+    # The block cell collapses; the shed cell holds. Shed-counter drift
+    # alone never gates.
+    curr = write_doc(
+        tmp_path / "curr.json",
+        "fast",
+        [
+            mt_row(n_shed=30),
+            mt_row(cell="overload_block", tps=200.0, n_shed=0),
+        ],
+    )
+    assert bd.compare_files(prev, curr, MT) == 1
+    better = write_doc(
+        tmp_path / "better.json",
+        "fast",
+        [mt_row(tps=2000.0), mt_row(cell="overload_block", tps=650.0)],
+    )
+    assert bd.compare_files(prev, better, MT) == 0
+
+
+def test_multitenant_hi_p99_blowup_regresses(tmp_path):
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [mt_row(hi_p99_us=500.0)],
+    )
+    # 2x tail jitter stays inside the loose 150% gate...
+    noisy = write_doc(
+        tmp_path / "noisy.json",
+        "fast",
+        [mt_row(hi_p99_us=1000.0)],
+    )
+    assert bd.compare_files(prev, noisy, MT_HI) == 0
+    # ...priority inversion (Hi behind a saturating backlog) does not.
+    inverted = write_doc(
+        tmp_path / "inverted.json",
+        "fast",
+        [mt_row(hi_p99_us=80_000.0)],
+    )
+    assert bd.compare_files(prev, inverted, MT_HI) == 1
+
+
+def test_main_single_multitenant_file_runs_both_gates(tmp_path):
+    # Throughput holds but the Hi p99 explodes: the second trajectory
+    # over the same file pair must catch it in single-file mode.
+    prev = write_doc(
+        tmp_path / "prev" / MT.name,
+        "fast",
+        [mt_row(hi_p99_us=400.0)],
+        mkdir=True,
+    )
+    curr = write_doc(
+        tmp_path / "curr" / MT.name,
+        "fast",
+        [mt_row(hi_p99_us=90_000.0)],
         mkdir=True,
     )
     assert bd.main([prev, curr]) == 1
