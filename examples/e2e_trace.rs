@@ -17,8 +17,8 @@
 use std::sync::Arc;
 
 use oclcc::config::profile_by_name;
-use oclcc::coordinator::{Coordinator, Policy};
-use oclcc::device::VirtualDevice;
+use oclcc::coordinator::{DriverBuilder, LaneOptions, Policy};
+use oclcc::device::{Device, VirtualDevice};
 use oclcc::runtime::manifest::default_artifact_dir;
 use oclcc::runtime::{PjrtExecutor, PjrtService};
 use oclcc::task::{KernelSpec, TaskSpec};
@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     // this host's core(s) with the pacing threads, so single runs are
     // noisy — exactly like timing on a busy real machine.
     let trials: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
-    let device = Arc::new(VirtualDevice::new(
+    let device: Arc<dyn Device> = Arc::new(VirtualDevice::new(
         profile.clone(),
         Arc::new(PjrtExecutor::new(service.clone())),
     ));
@@ -99,8 +99,15 @@ fn main() -> anyhow::Result<()> {
     for trial in 0..trials {
         last_metrics.clear();
         for (i, policy) in [Policy::NoReorder, Policy::Heuristic].iter().enumerate() {
-            let coord = Coordinator::new(device.clone(), *policy);
-            let m = coord.run(batches.clone());
+            // Same stack, one entrypoint: the Driver façade builds the
+            // lane coordinator and returns the unified report.
+            let driver = DriverBuilder::lanes(LaneOptions {
+                policy: *policy,
+                ..LaneOptions::default()
+            })
+            .device(device.clone())
+            .build()?;
+            let m = driver.run(batches.clone()).metrics;
             walls[i].push(m.total_secs);
             if trial == trials - 1 {
                 println!(

@@ -7,7 +7,8 @@
 use std::sync::Arc;
 
 use oclcc::config::profile_by_name;
-use oclcc::device::{SpinExecutor, VirtualDevice};
+use oclcc::coordinator::{DriverBuilder, LaneOptions, Policy};
+use oclcc::device::{Device, SpinExecutor, VirtualDevice};
 use oclcc::model::timeline::Timeline;
 use oclcc::model::{simulate, EngineState, SimOptions};
 use oclcc::sched::bruteforce::OrderStats;
@@ -68,13 +69,24 @@ fn main() -> anyhow::Result<()> {
         (((st.worst - heur.makespan) / (st.worst - st.best)) * 100.0) as i32
     );
 
-    // 5. Verify on the virtual device (real threads, paced transfers).
-    let device = VirtualDevice::new(profile.clone(), Arc::new(SpinExecutor));
-    let run = device.run_group(&reordered);
+    // 5. Verify on the virtual device (real threads, paced transfers),
+    //    going through the unified Driver façade — the same entrypoint
+    //    the coordinators, the trace service and the CLI share.
+    let device: Arc<dyn Device> =
+        Arc::new(VirtualDevice::new(profile.clone(), Arc::new(SpinExecutor)));
+    let driver = DriverBuilder::lanes(LaneOptions {
+        policy: Policy::Heuristic,
+        ..LaneOptions::default()
+    })
+    .device(device)
+    .build()?;
+    let report = driver.run(vec![group.tasks.clone()]);
+    let measured: f64 = report.metrics.group_makespans.iter().sum();
     println!(
-        "measured on virtual device: {:.3} ms (prediction error {:.2}%)",
-        run.makespan * 1e3,
-        (run.makespan - heur.makespan).abs() / run.makespan * 100.0
+        "measured on virtual device ({} backend): {:.3} ms (prediction error {:.2}%)",
+        report.backend,
+        measured * 1e3,
+        (measured - heur.makespan).abs() / measured * 100.0
     );
     Ok(())
 }

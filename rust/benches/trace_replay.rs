@@ -1,0 +1,164 @@
+//! `cargo bench --bench trace_replay` — NDJSON trace pipeline throughput,
+//! per (cell).
+//!
+//! Cells:
+//!
+//! * `ingest` — synthetic trace text streamed through the incremental
+//!   [`TraceReader`] in 4 KiB chunks (the `serve --stdin` framing path):
+//!   `lines_per_sec` of strict parse + schema decode;
+//! * `replay_lane` — the deterministic virtual-clock replay engine on a
+//!   single amd_r9 model: `tasks_per_sec` of admission + drain + beam
+//!   ordering + temporal simulation. In-bench asserts: two replays of
+//!   the same trace are bit-identical, and the exactly-once ledger
+//!   (`executed + shed == submitted`) holds;
+//! * `replay_fleet3` — the same engine placing each drained round over
+//!   three device models via `schedule_fleet`.
+//!
+//! Emits `BENCH_trace.json`; CI's bench-smoke job gates `lines_per_sec`
+//! and `tasks_per_sec` per cell (higher is better, 30%) via
+//! `tools/bench_diff.py`.
+
+use std::time::Instant;
+
+use oclcc::config::profile_by_name;
+use oclcc::trace::{parse_trace, replay, ReplayOptions, TraceIn, TraceReader};
+use oclcc::util::bench::{bench_mode, fast_mode_from_env};
+use oclcc::util::json::Json;
+use oclcc::util::rng::Pcg64;
+use oclcc::util::stats;
+
+const OUT_PATH: &str = "BENCH_trace.json";
+
+/// Synthetic trace text: `n_tasks` task lines with mixed tags, a flush
+/// every 8 tasks (bounds each replay round), comments sprinkled in.
+fn trace_text(n_tasks: usize, seed: u64) -> String {
+    let mut rng = Pcg64::seeded(seed);
+    let mut lines = Vec::with_capacity(n_tasks + n_tasks / 8 + 2);
+    lines.push("# synthetic bench trace".to_string());
+    for i in 0..n_tasks {
+        let tenant = rng.below(4);
+        lines.push(format!(
+            "{{\"ev\":\"task\",\"name\":\"t{i}\",\"worker\":{tenant},\
+             \"tenant\":{tenant},\"class\":\"{}\",\"htd\":[{},{}],\
+             \"kernel_s\":0.00{},\"dth\":{}}}",
+            ["hi", "normal", "besteffort"][rng.below(3) as usize],
+            1024 * (1 + rng.below(256)),
+            512 * (1 + rng.below(64)),
+            1 + rng.below(9),
+            1024 * (1 + rng.below(256)),
+        ));
+        if i % 8 == 7 {
+            lines.push("{\"ev\":\"flush\"}".to_string());
+        }
+    }
+    lines.push("{\"ev\":\"end\"}".to_string());
+    lines.join("\n") + "\n"
+}
+
+/// One timed pass of the incremental reader over `text` in 4 KiB chunks;
+/// returns (events decoded, elapsed seconds).
+fn ingest_once(text: &str) -> (usize, f64) {
+    let bytes = text.as_bytes();
+    let t0 = Instant::now();
+    let mut r = TraceReader::new();
+    let mut n = 0usize;
+    for chunk in bytes.chunks(4096) {
+        r.feed(chunk);
+        while r.next_event().expect("bench trace is valid").is_some() {
+            n += 1;
+        }
+    }
+    r.end();
+    while r.next_event().expect("bench trace is valid").is_some() {
+        n += 1;
+    }
+    (n, t0.elapsed().as_secs_f64())
+}
+
+fn replay_cell(trace: &[TraceIn], opts: &ReplayOptions, reps: usize) -> f64 {
+    let submitted =
+        trace.iter().filter(|e| matches!(e, TraceIn::Task(_))).count();
+    let baseline = replay(trace, opts).expect("bench options are valid");
+    assert_eq!(
+        baseline.n_tasks + baseline.n_shed,
+        submitted,
+        "ledger identity: executed + shed == submitted"
+    );
+    let mut tps = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = replay(trace, opts).expect("bench options are valid");
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(r, baseline, "replay must be bit-identical across runs");
+        tps.push(r.n_tasks as f64 / dt.max(1e-9));
+    }
+    stats::median(&tps)
+}
+
+fn main() {
+    let fast = fast_mode_from_env();
+    let reps = if fast { 3 } else { 7 };
+    let ingest_lines = if fast { 2_000 } else { 20_000 };
+    let replay_tasks = if fast { 48 } else { 160 };
+
+    println!("== NDJSON trace pipeline throughput (per cell) ==");
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ingest: incremental strict parse + schema decode.
+    let text = trace_text(ingest_lines, 0x1e57);
+    let n_lines = text.lines().count();
+    let expect_events = parse_trace(&text).unwrap().len();
+    let mut lps = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (n, dt) = ingest_once(&text);
+        assert_eq!(n, expect_events, "chunked ingest must decode every event");
+        lps.push(n_lines as f64 / dt.max(1e-9));
+    }
+    let lines_per_sec = stats::median(&lps);
+    println!("{:>14} {:>12.0} lines/s ({n_lines} lines)", "ingest", lines_per_sec);
+    rows.push(Json::obj(vec![
+        ("cell", Json::str("ingest")),
+        ("n_lines", Json::num(n_lines as f64)),
+        ("lines_per_sec", Json::num(lines_per_sec)),
+    ]));
+
+    // replay_lane / replay_fleet3: the virtual-clock engine end to end.
+    let trace = parse_trace(&trace_text(replay_tasks, 0x4e91a)).unwrap();
+    let amd = profile_by_name("amd_r9").unwrap();
+    let lane = ReplayOptions { group_cap: 8, ..ReplayOptions::single(amd.clone()) };
+    let lane_tps = replay_cell(&trace, &lane, reps);
+    println!("{:>14} {:>12.0} tasks/s ({replay_tasks} tasks)", "replay_lane", lane_tps);
+    rows.push(Json::obj(vec![
+        ("cell", Json::str("replay_lane")),
+        ("n_tasks", Json::num(replay_tasks as f64)),
+        ("tasks_per_sec", Json::num(lane_tps)),
+    ]));
+
+    let fleet = ReplayOptions {
+        group_cap: 8,
+        ..ReplayOptions::fleet(vec![
+            amd,
+            profile_by_name("k20c").unwrap(),
+            profile_by_name("xeon_phi").unwrap(),
+        ])
+    };
+    let fleet_tps = replay_cell(&trace, &fleet, reps);
+    println!(
+        "{:>14} {:>12.0} tasks/s ({replay_tasks} tasks, 3 devices)",
+        "replay_fleet3", fleet_tps
+    );
+    rows.push(Json::obj(vec![
+        ("cell", Json::str("replay_fleet3")),
+        ("n_tasks", Json::num(replay_tasks as f64)),
+        ("tasks_per_sec", Json::num(fleet_tps)),
+    ]));
+
+    let doc = Json::obj(vec![
+        ("bench_mode", Json::str(bench_mode())),
+        ("rows", Json::arr(rows)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.to_string()) {
+        Ok(()) => println!("[saved {OUT_PATH}, mode={}]", bench_mode()),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
+}

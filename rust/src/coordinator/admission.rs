@@ -40,6 +40,7 @@ use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::buffer::{SharedBuffer, Submission};
+use crate::coordinator::driver::ConfigError;
 use crate::coordinator::lanes::WakeSignal;
 use crate::util::stats;
 
@@ -83,6 +84,18 @@ impl Priority {
             Priority::Hi => "hi",
             Priority::Normal => "normal",
             Priority::BestEffort => "besteffort",
+        }
+    }
+
+    /// Inverse of [`name`](Priority::name) — the trace-protocol `class`
+    /// field decoder. `None` for unknown strings (the trace layer turns
+    /// that into a typed schema error with the line number).
+    pub fn from_name(s: &str) -> Option<Priority> {
+        match s {
+            "hi" => Some(Priority::Hi),
+            "normal" => Some(Priority::Normal),
+            "besteffort" => Some(Priority::BestEffort),
+            _ => None,
         }
     }
 }
@@ -179,6 +192,18 @@ impl DrainPolicyKind {
         }
     }
 
+    /// Inverse of [`name`](DrainPolicyKind::name) — the `--drain` /
+    /// trace-option decoder. `None` for unknown strings.
+    pub fn from_name(s: &str) -> Option<DrainPolicyKind> {
+        match s {
+            "fifo" => Some(DrainPolicyKind::Fifo),
+            "weighted_fair" => Some(DrainPolicyKind::WeightedFair),
+            "strict_priority" => Some(DrainPolicyKind::StrictPriority),
+            "deadline_edf" => Some(DrainPolicyKind::DeadlineEdf),
+            _ => None,
+        }
+    }
+
     /// Instantiate the policy. Each armed buffer owns an independent
     /// instance (DRR ring state is per-queue, protected by that queue's
     /// own lock).
@@ -230,27 +255,46 @@ impl Default for AdmissionOptions {
 }
 
 impl AdmissionOptions {
-    /// Check the invariants; `Err` carries a human-readable reason.
-    pub fn validated(self) -> Result<Self, String> {
+    /// Check the invariants; `Err` names the offending field.
+    pub fn validate(&self) -> Result<(), ConfigError> {
         if self.per_tenant_cap == 0 {
-            return Err("per_tenant_cap must be >= 1".into());
+            return Err(ConfigError::new(
+                "admission.per_tenant_cap",
+                "must be >= 1",
+            ));
         }
         if self.global_cap < self.per_tenant_cap {
-            return Err(format!(
-                "global_cap ({}) must be >= per_tenant_cap ({})",
-                self.global_cap, self.per_tenant_cap
+            return Err(ConfigError::new(
+                "admission.global_cap",
+                format!(
+                    "global_cap ({}) must be >= per_tenant_cap ({})",
+                    self.global_cap, self.per_tenant_cap
+                ),
             ));
         }
         let mut seen = Vec::with_capacity(self.weights.len());
         for &(t, w) in &self.weights {
             if w == 0 {
-                return Err(format!("weight for {t} must be >= 1"));
+                return Err(ConfigError::new(
+                    "admission.weights",
+                    format!("weight for {t} must be >= 1"),
+                ));
             }
             if seen.contains(&t) {
-                return Err(format!("duplicate weight entry for {t}"));
+                return Err(ConfigError::new(
+                    "admission.weights",
+                    format!("duplicate weight entry for {t}"),
+                ));
             }
             seen.push(t);
         }
+        Ok(())
+    }
+
+    /// By-value form of [`validate`](AdmissionOptions::validate) for
+    /// builder chains.
+    pub fn validated(self) -> Result<Self, ConfigError> {
+        self.validate()?;
         Ok(self)
     }
 }

@@ -1,0 +1,453 @@
+//! One submission/completion surface over the coordinator zoo.
+//!
+//! Four entrypoints grew over nine PRs — [`Coordinator::run`],
+//! [`LaneCoordinator::run`]/[`run_tenants`], [`FleetCoordinator::run`]/
+//! [`run_tenants`] — with three different metrics structs. Every new
+//! caller (the trace service, examples, benches) had to pick a backend
+//! at the type level and re-learn its report shape. The [`Driver`]
+//! trait collapses that: one `run`/`run_tenants` pair returning one
+//! [`RunReport`], implemented by all three coordinators as *pure
+//! delegation* — each impl calls the coordinator's own inherent method
+//! and repackages the result, so behavior through the façade is
+//! bit-identical to calling the backend directly (the existing prop
+//! suites keep pinning the inherent paths).
+//!
+//! [`DriverBuilder`] is the validated construction path: it runs the
+//! shared `validate()` sweep ([`LaneOptions::validate`],
+//! [`FleetCoordOptions::validate`], recovery + admission) and returns
+//! typed [`ConfigError`]s instead of panicking mid-run. Field-struct
+//! literals remain fully supported for direct construction — the
+//! builder is a front door, not a toll gate.
+//!
+//! [`run_tenants`]: Driver::run_tenants
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::config::DeviceProfile;
+use crate::coordinator::fleet::{
+    FleetCoordOptions, FleetCoordinator, FleetMetrics,
+};
+use crate::coordinator::lanes::{
+    LaneCoordinator, LaneMetrics, LaneOptions, TenantWorkload,
+};
+use crate::coordinator::runner::Coordinator;
+use crate::device::{Device, SimDevice};
+use crate::sched::search_util::PruneCounters;
+use crate::task::TaskSpec;
+
+/// Typed configuration rejection: which knob, and why. Returned by the
+/// shared `validate()` path on [`LaneOptions`], [`FleetCoordOptions`],
+/// [`RecoveryOptions`] and [`AdmissionOptions`] — the builder-facing
+/// replacement for the scattered `assert!`/`String` errors those
+/// options used to produce.
+///
+/// [`RecoveryOptions`]: crate::coordinator::recovery::RecoveryOptions
+/// [`AdmissionOptions`]: crate::coordinator::admission::AdmissionOptions
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigError {
+    /// Dotted path of the offending knob, e.g. `"admission.global_cap"`.
+    pub field: &'static str,
+    pub reason: String,
+}
+
+impl ConfigError {
+    pub fn new(field: &'static str, reason: impl Into<String>) -> Self {
+        ConfigError { field, reason: reason.into() }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid config `{}`: {}", self.field, self.reason)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Fleet-only telemetry carried alongside the common metrics when the
+/// backend is a [`FleetCoordinator`] (placement decisions have no lane
+/// equivalent).
+#[derive(Clone, Debug)]
+pub struct FleetExtras {
+    pub n_placements: usize,
+    pub n_place_rounds: usize,
+    pub n_steal_considered: usize,
+    pub n_steal_rejected: usize,
+    /// Measured ingress-to-placement latency per routed submission (s).
+    pub placement_latencies: Vec<f64>,
+    pub placement_prune: PruneCounters,
+}
+
+/// The unified result of one driver run: the lane-shaped common surface
+/// (identical fields for every backend; fleet `per_device` maps to
+/// `metrics.per_lane`) plus optional fleet placement extras.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Stable backend name: `"coordinator"`, `"lanes"`, `"fleet"`.
+    pub backend: &'static str,
+    pub metrics: LaneMetrics,
+    /// `Some` iff the backend was a fleet.
+    pub fleet: Option<FleetExtras>,
+}
+
+impl RunReport {
+    pub fn from_lanes(backend: &'static str, m: LaneMetrics) -> RunReport {
+        RunReport { backend, metrics: m, fleet: None }
+    }
+
+    pub fn from_fleet(m: FleetMetrics) -> RunReport {
+        let FleetMetrics {
+            total_secs,
+            tasks_per_sec,
+            latencies,
+            latency_tenants,
+            group_makespans,
+            sched_overhead_secs,
+            n_groups,
+            n_tasks,
+            per_device,
+            n_placements,
+            placement_prune,
+            n_steal_considered,
+            n_steal_rejected,
+            placement_latencies,
+            n_place_rounds,
+            admission,
+        } = m;
+        RunReport {
+            backend: "fleet",
+            metrics: LaneMetrics {
+                total_secs,
+                tasks_per_sec,
+                latencies,
+                latency_tenants,
+                group_makespans,
+                sched_overhead_secs,
+                n_groups,
+                n_tasks,
+                per_lane: per_device,
+                admission,
+            },
+            fleet: Some(FleetExtras {
+                n_placements,
+                n_place_rounds,
+                n_steal_considered,
+                n_steal_rejected,
+                placement_latencies,
+                placement_prune,
+            }),
+        }
+    }
+}
+
+/// The unified submission surface. Implementations delegate to their
+/// backend's inherent `run`/`run_tenants` — no behavior of their own —
+/// so driving a coordinator through `dyn Driver` is bit-identical to
+/// calling it directly.
+pub trait Driver {
+    /// Stable backend name for reports and event streams.
+    fn backend(&self) -> &'static str;
+
+    /// Run tenant-attributed workloads to completion.
+    fn run_tenants(&self, workloads: Vec<TenantWorkload>) -> RunReport;
+
+    /// Anonymous-tenant form: `workloads[w]` is worker `w`'s dependent
+    /// batch, wrapped per [`TenantWorkload::for_worker`] — exactly the
+    /// mapping every backend's inherent `run` applies.
+    fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> RunReport {
+        self.run_tenants(
+            workloads
+                .into_iter()
+                .enumerate()
+                .map(|(w, tasks)| TenantWorkload::for_worker(w, tasks))
+                .collect(),
+        )
+    }
+}
+
+impl Driver for LaneCoordinator {
+    fn backend(&self) -> &'static str {
+        "lanes"
+    }
+
+    fn run_tenants(&self, workloads: Vec<TenantWorkload>) -> RunReport {
+        RunReport::from_lanes("lanes", LaneCoordinator::run_tenants(self, workloads))
+    }
+}
+
+impl Driver for FleetCoordinator {
+    fn backend(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn run_tenants(&self, workloads: Vec<TenantWorkload>) -> RunReport {
+        RunReport::from_fleet(FleetCoordinator::run_tenants(self, workloads))
+    }
+}
+
+impl Driver for Coordinator {
+    fn backend(&self) -> &'static str {
+        "coordinator"
+    }
+
+    fn run_tenants(&self, workloads: Vec<TenantWorkload>) -> RunReport {
+        RunReport::from_lanes(
+            "coordinator",
+            self.as_lane().run_tenants(workloads),
+        )
+    }
+}
+
+enum BuildMode {
+    Lanes(LaneOptions),
+    Fleet(FleetCoordOptions),
+}
+
+/// Validated construction of a [`Driver`]: pick a backend, attach
+/// devices (and optional plan models), `build()`. All option structs
+/// pass their `validate()` sweep first, so a bad knob is a typed
+/// [`ConfigError`] at build time instead of a panic mid-run.
+///
+/// ```no_run
+/// use oclcc::config::profile_by_name;
+/// use oclcc::coordinator::{DriverBuilder, LaneOptions};
+///
+/// let driver = DriverBuilder::lanes(LaneOptions::default())
+///     .sim_device(profile_by_name("amd_r9").unwrap())
+///     .build()
+///     .unwrap();
+/// let report = driver.run(vec![vec![]]);
+/// assert_eq!(report.backend, "lanes");
+/// ```
+pub struct DriverBuilder {
+    mode: BuildMode,
+    devices: Vec<Arc<dyn Device>>,
+    plan_models: Vec<DeviceProfile>,
+}
+
+impl DriverBuilder {
+    /// Sharded lane backend ([`LaneCoordinator`]); one lane per device.
+    pub fn lanes(opts: LaneOptions) -> Self {
+        DriverBuilder {
+            mode: BuildMode::Lanes(opts),
+            devices: Vec::new(),
+            plan_models: Vec::new(),
+        }
+    }
+
+    /// Heterogeneous fleet backend ([`FleetCoordinator`]): one ingress
+    /// stream placed across all devices.
+    pub fn fleet(opts: FleetCoordOptions) -> Self {
+        DriverBuilder {
+            mode: BuildMode::Fleet(opts),
+            devices: Vec::new(),
+            plan_models: Vec::new(),
+        }
+    }
+
+    /// Attach one execution device (repeatable; order = lane index).
+    pub fn device(mut self, d: Arc<dyn Device>) -> Self {
+        self.devices.push(d);
+        self
+    }
+
+    /// Attach several devices at once.
+    pub fn devices(
+        mut self,
+        ds: impl IntoIterator<Item = Arc<dyn Device>>,
+    ) -> Self {
+        self.devices.extend(ds);
+        self
+    }
+
+    /// Convenience: attach a bit-deterministic model-backed
+    /// [`SimDevice`] for `profile` (the replay/test substrate).
+    pub fn sim_device(self, profile: DeviceProfile) -> Self {
+        self.device(Arc::new(SimDevice::new(profile)))
+    }
+
+    /// Planning-model override (repeatable). Lanes accept at most one
+    /// (all lanes plan against it); a fleet needs exactly one per
+    /// device or none.
+    pub fn plan_model(mut self, p: DeviceProfile) -> Self {
+        self.plan_models.push(p);
+        self
+    }
+
+    /// Validate everything and construct the backend.
+    pub fn build(self) -> Result<Box<dyn Driver>, ConfigError> {
+        if self.devices.is_empty() {
+            return Err(ConfigError::new(
+                "devices",
+                "at least one device is required",
+            ));
+        }
+        match self.mode {
+            BuildMode::Lanes(opts) => {
+                opts.validate()?;
+                if self.plan_models.len() > 1 {
+                    return Err(ConfigError::new(
+                        "plan_models",
+                        format!(
+                            "lane backend takes at most one plan model, got {}",
+                            self.plan_models.len()
+                        ),
+                    ));
+                }
+                let mut c = LaneCoordinator::with_devices(self.devices, opts);
+                if let Some(m) = self.plan_models.into_iter().next() {
+                    c = c.with_plan_model(m);
+                }
+                Ok(Box::new(c))
+            }
+            BuildMode::Fleet(opts) => {
+                opts.validate()?;
+                if !self.plan_models.is_empty()
+                    && self.plan_models.len() != self.devices.len()
+                {
+                    return Err(ConfigError::new(
+                        "plan_models",
+                        format!(
+                            "fleet backend needs one plan model per device \
+                             ({} devices, {} models)",
+                            self.devices.len(),
+                            self.plan_models.len()
+                        ),
+                    ));
+                }
+                let mut c =
+                    FleetCoordinator::with_devices(self.devices, opts);
+                if !self.plan_models.is_empty() {
+                    c = c.with_plan_models(self.plan_models);
+                }
+                Ok(Box::new(c))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::coordinator::admission::AdmissionOptions;
+
+    fn profile() -> DeviceProfile {
+        profile_by_name("amd_r9").unwrap()
+    }
+
+    fn tasks(n: usize) -> Vec<TaskSpec> {
+        let g = crate::task::synthetic::synthetic_benchmark(
+            "BK50",
+            &profile(),
+            0.02,
+        )
+        .unwrap();
+        (0..n).map(|i| g.tasks[i % g.len()].clone()).collect()
+    }
+
+    #[test]
+    fn builder_rejects_empty_devices() {
+        let e = DriverBuilder::lanes(LaneOptions::default())
+            .build()
+            .unwrap_err();
+        assert_eq!(e.field, "devices");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_options_with_typed_field() {
+        let opts = LaneOptions {
+            scoring_threads: 0,
+            ..LaneOptions::default()
+        };
+        let e = DriverBuilder::lanes(opts)
+            .sim_device(profile())
+            .build()
+            .unwrap_err();
+        assert_eq!(e.field, "scoring_threads");
+
+        let adm = AdmissionOptions {
+            per_tenant_cap: 0,
+            ..AdmissionOptions::default()
+        };
+        let opts = LaneOptions {
+            admission: Some(adm),
+            ..LaneOptions::default()
+        };
+        let e = DriverBuilder::lanes(opts)
+            .sim_device(profile())
+            .build()
+            .unwrap_err();
+        assert_eq!(e.field, "admission.per_tenant_cap");
+    }
+
+    #[test]
+    fn builder_rejects_plan_model_mismatch() {
+        let e = DriverBuilder::fleet(FleetCoordOptions::default())
+            .sim_device(profile())
+            .sim_device(profile())
+            .plan_model(profile())
+            .build()
+            .unwrap_err();
+        assert_eq!(e.field, "plan_models");
+    }
+
+    #[test]
+    fn lane_driver_runs_and_reports() {
+        let driver = DriverBuilder::lanes(LaneOptions::default())
+            .sim_device(profile())
+            .build()
+            .unwrap();
+        let report = driver.run(vec![tasks(2), tasks(2)]);
+        assert_eq!(report.backend, "lanes");
+        assert_eq!(report.metrics.n_tasks, 4);
+        assert!(report.fleet.is_none());
+    }
+
+    #[test]
+    fn fleet_driver_carries_extras() {
+        let driver = DriverBuilder::fleet(FleetCoordOptions::default())
+            .sim_device(profile())
+            .sim_device(profile())
+            .build()
+            .unwrap();
+        let report = driver.run(vec![tasks(2), tasks(2)]);
+        assert_eq!(report.backend, "fleet");
+        assert_eq!(report.metrics.n_tasks, 4);
+        let extras = report.fleet.expect("fleet extras");
+        assert!(extras.n_placements >= 4);
+        assert_eq!(report.metrics.per_lane.len(), 2);
+    }
+
+    /// The façade is pure delegation: the group makespans a driver
+    /// reports are the same simulated values the backend reports when
+    /// called directly. Single worker + NoReorder forces one group per
+    /// task (the dependent batch), so grouping is deterministic and the
+    /// two runs are comparable group-for-group.
+    #[test]
+    fn facade_round_trips_lane_behavior_bit_identically() {
+        let opts = || LaneOptions {
+            policy: crate::coordinator::runner::Policy::NoReorder,
+            ..LaneOptions::default()
+        };
+        let batch = tasks(3);
+
+        let direct = LaneCoordinator::with_devices(
+            vec![Arc::new(SimDevice::new(profile())) as Arc<dyn Device>],
+            opts(),
+        );
+        let m_direct = direct.run(vec![batch.clone()]);
+
+        let driver = DriverBuilder::lanes(opts())
+            .sim_device(profile())
+            .build()
+            .unwrap();
+        let m_facade = driver.run(vec![batch]).metrics;
+
+        assert_eq!(m_direct.n_tasks, m_facade.n_tasks);
+        assert_eq!(m_direct.n_groups, m_facade.n_groups);
+        // SimDevice makespans are model-time: bit-identical, not close.
+        assert_eq!(m_direct.group_makespans, m_facade.group_makespans);
+    }
+}

@@ -116,10 +116,11 @@ use crate::coordinator::admission::{
     SubmitOutcome,
 };
 use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
+use crate::coordinator::driver::ConfigError;
 use crate::coordinator::lanes::{
     device_runner_loop, empty_lane_stats, finalize_plan, merge_arrivals,
-    record_calib_stats, InFlight, LaneStats, RunDone, RunOutcome,
-    TenantWorkload, WakeSignal,
+    record_calib_stats, validate_online, InFlight, LaneStats, RunDone,
+    RunOutcome, TenantWorkload, WakeSignal,
 };
 use crate::coordinator::recovery::{
     BreakerState, FailureCtx, FleetHealth, RecoveryAction, RecoveryOptions,
@@ -199,6 +200,30 @@ impl Default for FleetCoordOptions {
             placement_threads: 1,
             admission: None,
         }
+    }
+}
+
+impl FleetCoordOptions {
+    /// Check every knob — including nested online / recovery / admission
+    /// config — and return the first offender as a typed [`ConfigError`].
+    /// The opt-in front door used by `DriverBuilder::build`; field-struct
+    /// literals keep working unvalidated (invalid `place_batch` still
+    /// panics inside `run`, pinned by the `should_panic` test).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.place_batch == 0 {
+            return Err(ConfigError::new("place_batch", "must be >= 1"));
+        }
+        if self.placement_threads == 0 {
+            return Err(ConfigError::new("placement_threads", "must be >= 1"));
+        }
+        validate_online(&self.online)?;
+        if let Some(recovery) = &self.recovery {
+            recovery.validate()?;
+        }
+        if let Some(admission) = &self.admission {
+            admission.validate()?;
+        }
+        Ok(())
     }
 }
 

@@ -130,6 +130,7 @@ use crate::coordinator::admission::{
     ShedSlot, SubmitOutcome, TenantId,
 };
 use crate::coordinator::buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
+use crate::coordinator::driver::ConfigError;
 use crate::coordinator::recovery::{
     BreakerState, FailureCtx, FaultKind, FleetHealth, LaneBreaker,
     RecoveryAction, RecoveryOptions,
@@ -214,6 +215,47 @@ impl Default for LaneOptions {
             admission: None,
         }
     }
+}
+
+impl LaneOptions {
+    /// Check every knob — including nested online / recovery / admission
+    /// config — and return the first offender as a typed [`ConfigError`].
+    /// This is the opt-in front door used by `DriverBuilder::build` and
+    /// the trace service; field-struct literals keep working unvalidated,
+    /// exactly as before.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.lanes == 0 {
+            return Err(ConfigError::new("lanes", "must be >= 1"));
+        }
+        if self.scoring_threads == 0 {
+            return Err(ConfigError::new("scoring_threads", "must be >= 1"));
+        }
+        if let Some(online) = &self.online {
+            validate_online(online)?;
+        }
+        if let Some(recovery) = &self.recovery {
+            recovery.validate()?;
+        }
+        if let Some(admission) = &self.admission {
+            admission.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Shared [`OnlineOptions`] check for both coordinators' validators (the
+/// struct lives in `sched::online`, which stays config-error-agnostic).
+pub(crate) fn validate_online(o: &OnlineOptions) -> Result<(), ConfigError> {
+    if !o.drift_threshold.is_finite() || o.drift_threshold < 0.0 {
+        return Err(ConfigError::new(
+            "online.drift_threshold",
+            format!("must be finite and >= 0, got {}", o.drift_threshold),
+        ));
+    }
+    if o.replan_width == 0 {
+        return Err(ConfigError::new("online.replan_width", "must be >= 1"));
+    }
+    Ok(())
 }
 
 /// Per-lane breakdown of one run.

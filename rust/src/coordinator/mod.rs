@@ -29,11 +29,18 @@
 //!   trait (fail-fast / retry-with-backoff / blacklist-after-N), the
 //!   run-deadline watchdog formula, and the per-lane circuit breaker
 //!   ([`FleetHealth`]) behind lane quarantine and health-aware stealing.
+//! * `driver` — the unified submission surface: one [`Driver`] trait
+//!   (`run` / `run_tenants` → [`RunReport`]) implemented by all three
+//!   coordinators as pure delegation, the validated [`DriverBuilder`]
+//!   construction path, and the typed [`ConfigError`] returned by the
+//!   shared `validate()` sweep on every options struct. The trace
+//!   service (`crate::trace`) and the examples target this surface.
 //! * `runner` — the classic single-proxy harness, now a single-lane
 //!   facade over `lanes`.
 
 pub mod admission;
 pub mod buffer;
+pub mod driver;
 pub mod fleet;
 pub mod lanes;
 pub mod recovery;
@@ -45,6 +52,7 @@ pub use admission::{
     ShedReason, ShedSlot, SubmitOutcome, TenantId, TenantReport,
 };
 pub use buffer::{DrainPoll, ShardedBuffer, SharedBuffer, Submission};
+pub use driver::{ConfigError, Driver, DriverBuilder, FleetExtras, RunReport};
 pub use fleet::{FleetCoordOptions, FleetCoordinator, FleetMetrics};
 pub use lanes::{LaneCoordinator, LaneMetrics, LaneOptions, LaneStats};
 pub use recovery::{

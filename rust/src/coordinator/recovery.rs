@@ -34,6 +34,8 @@ use std::fmt;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::driver::ConfigError;
+
 /// How a device run failed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultKind {
@@ -75,6 +77,12 @@ pub trait RecoveryPolicy: Send + Sync + fmt::Debug {
     fn on_failure(&self, ctx: &FailureCtx) -> RecoveryAction;
     /// Stable name for stats/bench rows.
     fn name(&self) -> &'static str;
+    /// Reject nonsense knob combinations with a typed error. Defaulted
+    /// to `Ok(())` so existing third-party impls stay source-compatible;
+    /// consulted by [`RecoveryOptions::validate`] on the builder path.
+    fn validate(&self) -> Result<(), ConfigError> {
+        Ok(())
+    }
 }
 
 /// Today's behavior: any fault aborts the coordinator run.
@@ -136,6 +144,31 @@ impl RecoveryPolicy for RetryBackoff {
     fn name(&self) -> &'static str {
         "retry_backoff"
     }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        if !self.factor.is_finite() || self.factor < 1.0 {
+            return Err(ConfigError::new(
+                "recovery.retry.factor",
+                format!("must be finite and >= 1.0, got {}", self.factor),
+            ));
+        }
+        if self.max_attempts == 0 {
+            return Err(ConfigError::new(
+                "recovery.retry.max_attempts",
+                "must be >= 1 (the first run counts as an attempt)",
+            ));
+        }
+        if self.cap < self.base {
+            return Err(ConfigError::new(
+                "recovery.retry.cap",
+                format!(
+                    "must be >= base ({:?} < {:?})",
+                    self.cap, self.base
+                ),
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Retry like [`RetryBackoff`], but quarantine a lane once it has failed
@@ -163,6 +196,16 @@ impl RecoveryPolicy for BlacklistAfterN {
 
     fn name(&self) -> &'static str {
         "blacklist_after_n"
+    }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        if self.n_failures == 0 {
+            return Err(ConfigError::new(
+                "recovery.blacklist.n_failures",
+                "must be >= 1",
+            ));
+        }
+        self.retry.validate()
     }
 }
 
@@ -236,6 +279,21 @@ impl RecoveryOptions {
 
     pub fn blacklist(b: BlacklistAfterN) -> Self {
         RecoveryOptions { policy: Arc::new(b), ..Default::default() }
+    }
+
+    /// Typed validation for the builder path: delegates to the policy's
+    /// own [`RecoveryPolicy::validate`] and checks the watchdog knobs.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        self.policy.validate()?;
+        if let Some(d) = &self.deadline {
+            if !d.slack.is_finite() || d.slack <= 0.0 {
+                return Err(ConfigError::new(
+                    "recovery.deadline.slack",
+                    format!("must be finite and > 0, got {}", d.slack),
+                ));
+            }
+        }
+        Ok(())
     }
 }
 

@@ -64,11 +64,11 @@ impl Coordinator {
         Coordinator { device, policy, settle: Duration::from_micros(300) }
     }
 
-    /// Run `workloads[w]` = the dependent task batch of worker `w`.
-    /// Each worker submits its next task only after the previous one
-    /// completed (the paper's batch dependency).
-    pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> CoordMetrics {
-        let lane = LaneCoordinator::with_devices(
+    /// The single-lane [`LaneCoordinator`] this facade delegates to —
+    /// also the delegation target of the `Driver` impl, so the facade
+    /// and the trait surface share one construction path.
+    pub(crate) fn as_lane(&self) -> LaneCoordinator {
+        LaneCoordinator::with_devices(
             vec![Arc::clone(&self.device) as Arc<dyn crate::device::Device>],
             LaneOptions {
                 lanes: 1,
@@ -81,8 +81,14 @@ impl Coordinator {
                 recovery: None,
                 admission: None,
             },
-        );
-        let m = lane.run(workloads);
+        )
+    }
+
+    /// Run `workloads[w]` = the dependent task batch of worker `w`.
+    /// Each worker submits its next task only after the previous one
+    /// completed (the paper's batch dependency).
+    pub fn run(&self, workloads: Vec<Vec<TaskSpec>>) -> CoordMetrics {
+        let m = self.as_lane().run(workloads);
         CoordMetrics {
             total_secs: m.total_secs,
             tasks_per_sec: m.tasks_per_sec,

@@ -21,7 +21,10 @@
 //!   with paced transfers and optional live PJRT kernel execution.
 //! * [`runtime`] — PJRT artifact registry (HLO text -> compiled
 //!   executables) over the `xla` crate.
-//! * [`coordinator`] — the §6.2 multi-worker proxy-thread runtime.
+//! * [`coordinator`] — the §6.2 multi-worker proxy-thread runtime, now
+//!   behind the unified [`Driver`](coordinator::Driver) façade.
+//! * [`trace`] — the streaming NDJSON trace protocol: record workloads,
+//!   replay them deterministically, or serve them live.
 //! * [`profiling`] — LogGP / Eq. 1 calibration against the virtual device.
 //! * [`bench`] — harnesses regenerating every paper table and figure.
 
@@ -35,4 +38,5 @@ pub mod queue;
 pub mod runtime;
 pub mod sched;
 pub mod task;
+pub mod trace;
 pub mod util;

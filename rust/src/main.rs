@@ -6,30 +6,43 @@
 //!   simulate --benchmark BK50    model a group; print timeline + Gantt
 //!   schedule --benchmark BK50    heuristic order + predicted speedup
 //!   run --benchmark BK50         execute on the virtual device
-//!   serve                        multi-worker proxy runtime (§6.2)
+//!   serve                        multi-worker proxy runtime (§6.2);
+//!                                with --trace FILE or --stdin: live
+//!                                NDJSON trace service (docs/TRACE.md)
+//!   replay --trace FILE          deterministic virtual-clock replay of
+//!                                a recorded NDJSON trace
 //!   profile [--loggp|--kernels]  calibrate link/kernel constants
 //!   bench <fig6|fig7|fig9|fig10|fig11|table5|table6|ablation|all>
 //!
 //! Common options: --device <amd_r9|k20c|xeon_phi|cpu_live>, --scale S,
 //! --seed N, --quick, --real (sample real tasks instead of synthetic).
+//! Trace options: --devices a,b (fleet), --policy heuristic|noreorder,
+//! --drain fifo|weighted_fair|strict_priority|deadline_edf, --width W,
+//! --group-cap N, --tenant-cap N, --global-cap N,
+//! --overflow block|shed_lowest|reject_new, --out FILE.
 
+use std::io::Write as _;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use oclcc::bench;
-use oclcc::config::{builtin_profiles, profile_by_name};
-use oclcc::coordinator::{Coordinator, Policy};
-use oclcc::device::{SpinExecutor, VirtualDevice};
+use oclcc::config::{builtin_profiles, profile_by_name, DeviceProfile};
+use oclcc::coordinator::{
+    AdmissionOptions, DrainPolicyKind, DriverBuilder, FleetCoordOptions,
+    LaneOptions, Overflow, Policy,
+};
+use oclcc::device::{Device, SpinExecutor, VirtualDevice};
 use oclcc::model::timeline::Timeline;
 use oclcc::model::{simulate, EngineState, SimOptions};
 use oclcc::runtime::manifest::default_artifact_dir;
 use oclcc::runtime::{PjrtExecutor, PjrtService};
 use oclcc::sched::bruteforce::OrderStats;
-use oclcc::sched::heuristic::batch_reorder;
+use oclcc::sched::heuristic::{batch_reorder, DEFAULT_BEAM_WIDTH};
 use oclcc::task::real::real_benchmark;
 use oclcc::task::synthetic::synthetic_benchmark;
 use oclcc::task::{TaskGroup, TaskSpec};
+use oclcc::trace::{parse_trace, ReplayOptions};
 use oclcc::util::cli::Args;
 use oclcc::util::rng::Pcg64;
 
@@ -48,6 +61,7 @@ fn main() {
         "schedule" => cmd_schedule(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "replay" => cmd_replay(&args),
         "profile" => cmd_profile(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
@@ -68,8 +82,10 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: oclcc <devices|tasks|simulate|schedule|run|serve|profile|bench> [options]\n\
-         see `oclcc help` and README.md"
+        "usage: oclcc <devices|tasks|simulate|schedule|run|serve|replay|profile|bench> [options]\n\
+         serve --trace FILE [--fleet]   live NDJSON trace service\n\
+         replay --trace FILE [--out F]  deterministic trace replay\n\
+         see `oclcc help`, README.md and docs/TRACE.md"
     );
 }
 
@@ -185,11 +201,64 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse --policy (default heuristic).
+fn policy_from_args(args: &Args) -> Result<Policy> {
+    match args.opt_or("policy", "heuristic").as_str() {
+        "heuristic" => Ok(Policy::Heuristic),
+        "noreorder" => Ok(Policy::NoReorder),
+        other => anyhow::bail!("unknown --policy '{other}' (heuristic|noreorder)"),
+    }
+}
+
+/// Device profile list for the trace subcommands: `--devices a,b,c`
+/// wins over the single `--device` (default amd_r9).
+fn trace_profiles(args: &Args) -> Result<Vec<DeviceProfile>> {
+    let spec = match args.opt("devices") {
+        Some(s) => s.to_string(),
+        None => args.opt_or("device", "amd_r9"),
+    };
+    spec.split(',')
+        .map(|name| profile_by_name(name.trim()))
+        .collect()
+}
+
+/// Admission knobs shared by `serve --trace` and `replay`. Armed only
+/// when at least one of --tenant-cap / --global-cap / --overflow is
+/// given; unset caps fall back to the library defaults.
+fn admission_from_args(args: &Args) -> Result<Option<AdmissionOptions>> {
+    let armed = args.opt("tenant-cap").is_some()
+        || args.opt("global-cap").is_some()
+        || args.opt("overflow").is_some();
+    if !armed {
+        return Ok(None);
+    }
+    let overflow = match args.opt_or("overflow", "block").as_str() {
+        "block" => Overflow::Block,
+        "shed_lowest" => Overflow::ShedLowest,
+        "reject_new" => Overflow::RejectNew,
+        other => anyhow::bail!(
+            "unknown --overflow '{other}' (block|shed_lowest|reject_new)"
+        ),
+    };
+    let defaults = AdmissionOptions::default();
+    Ok(Some(AdmissionOptions {
+        per_tenant_cap: args.opt_usize("tenant-cap", defaults.per_tenant_cap),
+        global_cap: args.opt_usize("global-cap", defaults.global_cap),
+        overflow,
+        ..defaults
+    }))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.opt("trace").is_some() || args.flag("stdin") {
+        return cmd_serve_trace(args);
+    }
+    // Legacy demo: synthetic batches through both policies, via the
+    // Driver façade so this path and the trace service share a stack.
     let (profile, group) = group_from_args(args)?;
     let t = args.opt_usize("t", 4);
     let n = args.opt_usize("n", 2);
-    let device = Arc::new(make_device(&profile)?);
+    let device: Arc<dyn Device> = Arc::new(make_device(&profile)?);
     let mut rng = Pcg64::seeded(args.opt_u64("seed", 7));
     let batches: Vec<Vec<TaskSpec>> = (0..t)
         .map(|_| {
@@ -199,16 +268,112 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     for policy in [Policy::NoReorder, Policy::Heuristic] {
-        let coord = Coordinator::new(device.clone(), policy);
-        let m = coord.run(batches.clone());
+        let driver = DriverBuilder::lanes(LaneOptions {
+            policy,
+            ..LaneOptions::default()
+        })
+        .device(device.clone())
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let m = driver.run(batches.clone()).metrics;
         println!(
-            "{policy:?}: {} tasks in {:.1} ms -> {:.1} tasks/s, mean latency {:.2} ms, sched overhead {:.3} ms",
+            "{policy:?}: {} tasks in {:.1} ms -> {:.1} tasks/s, mean latency {:.2} ms",
             m.n_tasks,
             m.total_secs * 1e3,
             m.tasks_per_sec,
             m.mean_latency() * 1e3,
-            m.sched_overhead_secs * 1e3
         );
+    }
+    Ok(())
+}
+
+/// `serve --trace FILE` / `serve --stdin`: run a recorded trace live
+/// through a lane or fleet coordinator, streaming NDJSON telemetry to
+/// stdout. Wall-clock, not bit-stable — see `oclcc replay` for the
+/// deterministic path.
+fn cmd_serve_trace(args: &Args) -> Result<()> {
+    let text = match args.opt("trace") {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => {
+            let mut s = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)?;
+            s
+        }
+    };
+    let trace = parse_trace(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let profiles = trace_profiles(args)?;
+    let policy = policy_from_args(args)?;
+    let admission = admission_from_args(args)?;
+    let fleet = args.flag("fleet") || profiles.len() > 1;
+    let driver = if fleet {
+        let mut b = DriverBuilder::fleet(FleetCoordOptions {
+            policy,
+            admission,
+            ..FleetCoordOptions::default()
+        });
+        for p in &profiles {
+            b = b.device(Arc::new(make_device(p)?) as Arc<dyn Device>);
+        }
+        b.build().map_err(|e| anyhow::anyhow!("{e}"))?
+    } else {
+        DriverBuilder::lanes(LaneOptions {
+            policy,
+            admission,
+            ..LaneOptions::default()
+        })
+        .device(Arc::new(make_device(&profiles[0])?) as Arc<dyn Device>)
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+    };
+    let mut out = std::io::stdout().lock();
+    oclcc::trace::serve(&trace, driver.as_ref(), &mut out)?;
+    Ok(())
+}
+
+/// `replay --trace FILE`: deterministic virtual-clock replay. The same
+/// trace and options reproduce the event stream bit-for-bit; write it
+/// with --out and diff runs with `cmp`.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args
+        .opt("trace")
+        .ok_or_else(|| anyhow::anyhow!("replay needs --trace FILE"))?;
+    let text = std::fs::read_to_string(path)?;
+    let trace = parse_trace(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let drain_name = args.opt_or("drain", "fifo");
+    let drain = DrainPolicyKind::from_name(&drain_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown --drain '{drain_name}' \
+             (fifo|weighted_fair|strict_priority|deadline_edf)"
+        )
+    })?;
+    let opts = ReplayOptions {
+        devices: trace_profiles(args)?,
+        policy: policy_from_args(args)?,
+        width: args.opt_usize("width", DEFAULT_BEAM_WIDTH),
+        group_cap: args.opt_usize("group-cap", 0),
+        drain,
+        admission: admission_from_args(args)?,
+    };
+    let r = oclcc::trace::replay(&trace, &opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    match args.opt("out") {
+        Some(path) => {
+            let mut body = r.events.join("\n");
+            body.push('\n');
+            std::fs::write(path, body)?;
+            eprintln!(
+                "replayed {} tasks / {} groups ({} shed), makespan {:.3} ms -> {path}",
+                r.n_tasks,
+                r.n_groups,
+                r.n_shed,
+                r.makespan_s * 1e3
+            );
+        }
+        None => {
+            let mut out = std::io::stdout().lock();
+            for line in &r.events {
+                writeln!(out, "{line}")?;
+            }
+        }
     }
     Ok(())
 }

@@ -1,0 +1,31 @@
+//! Streaming NDJSON trace protocol: record workloads as line-delimited
+//! JSON, replay them deterministically, or serve them live.
+//!
+//! Three layers:
+//!
+//! * [`protocol`] — the line grammar ([`TraceIn`] in, [`TraceOut`] out),
+//!   the incremental [`TraceReader`] (feed byte chunks, pull decoded
+//!   events; strict [`Json`](crate::util::json::Json) parsing with typed
+//!   errors carrying line numbers), and `parse_trace` for whole files.
+//! * [`replay`] — the deterministic virtual-clock engine: the same
+//!   trace through the same [`ReplayOptions`] reproduces completion
+//!   order, per-task makespans and the whole telemetry stream
+//!   bit-for-bit (`rust/tests/prop_trace.rs` pins this).
+//! * [`service`] — the live path: regroup the trace into
+//!   [`TenantWorkload`](crate::coordinator::lanes::TenantWorkload)s and
+//!   run them through any [`Driver`](crate::coordinator::Driver)
+//!   backend, streaming per-lane/per-tenant telemetry.
+//!
+//! Protocol spec and determinism contract: `docs/TRACE.md`. Drive from
+//! the CLI with `oclcc replay --trace file.ndjson` and
+//! `oclcc serve --trace file.ndjson [--fleet]`.
+
+pub mod protocol;
+pub mod replay;
+pub mod service;
+
+pub use protocol::{
+    parse_trace, TraceError, TraceIn, TraceOut, TraceReader, TraceTask,
+};
+pub use replay::{replay, ReplayOptions, ReplayResult};
+pub use service::{serve, workloads_from_trace};

@@ -1,0 +1,614 @@
+//! The NDJSON trace line protocol: input events in, telemetry events out.
+//!
+//! One JSON value per line (newline-delimited); blank lines and lines
+//! starting with `#` are comments. Every input line is parsed with the
+//! *strict* [`Json`] mode (typed [`ParseError`]s with byte positions) and
+//! then schema-checked: unknown event names and unknown keys are
+//! rejected with the line number — a malformed trace fails loudly and
+//! early instead of silently dropping work. The full grammar lives in
+//! `docs/TRACE.md`.
+//!
+//! Input events (`"ev"` selects the variant):
+//!
+//! ```text
+//! {"ev":"task","name":"q0","worker":0,"htd":[65536],"kernel_s":0.002,
+//!  "dth":65536,"tenant":0,"class":"normal","deadline_s":0.05}
+//! {"ev":"advance","dt_s":0.001}     # move the virtual clock (replay)
+//! {"ev":"flush"}                    # drain + schedule everything queued
+//! {"ev":"end"}                      # end of trace (optional; EOF implies)
+//! ```
+//!
+//! Task ids are *assigned*, not carried: the replay/service layer numbers
+//! tasks 0,1,2,… in trace order and echoes the id in every output event,
+//! so a trace file stays valid when lines are appended.
+//!
+//! Output events are single-line JSON too ([`TraceOut::to_line`]): accept
+//! / shed receipts, per-group scheduling decisions (order, predicted
+//! makespan, prune counters), fleet placement picks, per-task completions
+//! and a final summary. The replay path emits them deterministically —
+//! same trace + same options ⇒ byte-identical event stream (pinned in
+//! `rust/tests/prop_trace.rs`).
+
+use std::fmt;
+
+use crate::coordinator::admission::{Priority, ShedReason, TenantId};
+use crate::task::{KernelSpec, TaskSpec};
+use crate::util::json::{Json, ParseError};
+
+/// One task submission from a trace line.
+#[derive(Clone, Debug)]
+pub struct TraceTask {
+    /// 1-based source line (error reporting; not part of the schedule).
+    pub line: usize,
+    /// Submitting worker (dependent-batch lane on the live path).
+    pub worker: usize,
+    pub tenant: TenantId,
+    pub class: Priority,
+    /// Relative deadline in seconds from submission.
+    pub deadline_s: Option<f64>,
+    pub spec: TaskSpec,
+}
+
+/// One decoded input event.
+#[derive(Clone, Debug)]
+pub enum TraceIn {
+    Task(TraceTask),
+    /// Advance the virtual replay clock by `dt_s` seconds (ignored by the
+    /// live service, which runs on the wall clock).
+    Advance { dt_s: f64 },
+    /// Drain everything queued through the scheduler now.
+    Flush,
+    /// Explicit end-of-trace; anything after it is a schema error.
+    End,
+}
+
+/// Why a trace failed to decode. Both variants carry the 1-based line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceError {
+    /// The line is not a single valid strict-mode JSON value.
+    Json { line: usize, err: ParseError },
+    /// Valid JSON, wrong shape (unknown event/key, bad field type…).
+    Schema { line: usize, reason: String },
+}
+
+impl TraceError {
+    pub fn line(&self) -> usize {
+        match self {
+            TraceError::Json { line, .. } => *line,
+            TraceError::Schema { line, .. } => *line,
+        }
+    }
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Json { line, err } => {
+                write!(f, "trace line {line}: {err}")
+            }
+            TraceError::Schema { line, reason } => {
+                write!(f, "trace line {line}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+fn schema(line: usize, reason: impl Into<String>) -> TraceError {
+    TraceError::Schema { line, reason: reason.into() }
+}
+
+/// Incremental line-framing reader: feed arbitrary byte chunks, pull
+/// decoded events as lines complete. The byte-level strictness lives in
+/// [`Json::parse`]; this layer only frames on `\n` and schema-checks.
+#[derive(Default)]
+pub struct TraceReader {
+    buf: Vec<u8>,
+    line_no: usize,
+    ended: bool,
+    saw_end: bool,
+}
+
+impl TraceReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a chunk (any split, including mid-UTF-8 — framing is on
+    /// raw bytes).
+    pub fn feed(&mut self, bytes: &[u8]) {
+        assert!(!self.ended, "feed after end()");
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Signal EOF: a trailing line without `\n` becomes parseable.
+    pub fn end(&mut self) {
+        self.ended = true;
+    }
+
+    /// Next decoded event, or `Ok(None)` when no complete line is
+    /// buffered (more input needed, or EOF fully drained).
+    pub fn next_event(&mut self) -> Result<Option<TraceIn>, TraceError> {
+        loop {
+            let line = match self.buf.iter().position(|&b| b == b'\n') {
+                Some(idx) => {
+                    let line: Vec<u8> = self.buf.drain(..=idx).collect();
+                    let mut line = line;
+                    line.pop(); // the '\n'
+                    line
+                }
+                None if self.ended && !self.buf.is_empty() => {
+                    std::mem::take(&mut self.buf)
+                }
+                None => return Ok(None),
+            };
+            self.line_no += 1;
+            if let Some(ev) = self.parse_line(&line)? {
+                return Ok(Some(ev));
+            }
+        }
+    }
+
+    fn parse_line(&mut self, raw: &[u8]) -> Result<Option<TraceIn>, TraceError> {
+        let line = self.line_no;
+        let s = std::str::from_utf8(raw)
+            .map_err(|_| schema(line, "line is not valid UTF-8"))?;
+        let t = s.trim();
+        if t.is_empty() || t.starts_with('#') {
+            return Ok(None);
+        }
+        if self.saw_end {
+            return Err(schema(line, "event after {\"ev\":\"end\"}"));
+        }
+        let j = Json::parse(t)
+            .map_err(|err| TraceError::Json { line, err })?;
+        let ev = decode_event(line, &j)?;
+        if matches!(ev, TraceIn::End) {
+            self.saw_end = true;
+        }
+        Ok(Some(ev))
+    }
+}
+
+/// Decode a whole trace in one call (the `replay` subcommand path).
+pub fn parse_trace(text: &str) -> Result<Vec<TraceIn>, TraceError> {
+    let mut r = TraceReader::new();
+    r.feed(text.as_bytes());
+    r.end();
+    let mut out = Vec::new();
+    while let Some(ev) = r.next_event()? {
+        out.push(ev);
+    }
+    Ok(out)
+}
+
+fn decode_event(line: usize, j: &Json) -> Result<TraceIn, TraceError> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| schema(line, "trace event must be a JSON object"))?;
+    let ev = obj
+        .get("ev")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| schema(line, "missing string field \"ev\""))?;
+    let allowed: &[&str] = match ev {
+        "task" => &[
+            "ev", "name", "worker", "htd", "kernel_s", "variant", "est_s",
+            "dth", "tenant", "class", "deadline_s",
+        ],
+        "advance" => &["ev", "dt_s"],
+        "flush" | "end" => &["ev"],
+        other => {
+            return Err(schema(line, format!("unknown event \"{other}\"")));
+        }
+    };
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(schema(
+                line,
+                format!("unknown key \"{k}\" for event \"{ev}\""),
+            ));
+        }
+    }
+    match ev {
+        "task" => decode_task(line, j).map(TraceIn::Task),
+        "advance" => {
+            let dt = j
+                .get("dt_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| schema(line, "advance needs numeric \"dt_s\""))?;
+            if !dt.is_finite() || dt < 0.0 {
+                return Err(schema(
+                    line,
+                    format!("\"dt_s\" must be finite and >= 0, got {dt}"),
+                ));
+            }
+            Ok(TraceIn::Advance { dt_s: dt })
+        }
+        "flush" => Ok(TraceIn::Flush),
+        "end" => Ok(TraceIn::End),
+        _ => unreachable!("allowed-list covers all events"),
+    }
+}
+
+fn decode_task(line: usize, j: &Json) -> Result<TraceTask, TraceError> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| schema(line, "task needs string \"name\""))?
+        .to_string();
+    let worker = match j.get("worker") {
+        None => 0,
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| schema(line, "\"worker\" must be a non-negative integer"))?
+            as usize,
+    };
+    let tenant = match j.get("tenant") {
+        None => TenantId(worker as u32),
+        Some(v) => TenantId(
+            v.as_u64()
+                .ok_or_else(|| schema(line, "\"tenant\" must be a non-negative integer"))?
+                as u32,
+        ),
+    };
+    let class = match j.get("class") {
+        None => Priority::Normal,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| schema(line, "\"class\" must be a string"))?;
+            Priority::from_name(s).ok_or_else(|| {
+                schema(
+                    line,
+                    format!(
+                        "unknown class \"{s}\" (hi | normal | besteffort)"
+                    ),
+                )
+            })?
+        }
+    };
+    let deadline_s = match j.get("deadline_s") {
+        None => None,
+        Some(v) => {
+            let d = v
+                .as_f64()
+                .ok_or_else(|| schema(line, "\"deadline_s\" must be a number"))?;
+            if !d.is_finite() || d <= 0.0 {
+                return Err(schema(
+                    line,
+                    format!("\"deadline_s\" must be finite and > 0, got {d}"),
+                ));
+            }
+            Some(d)
+        }
+    };
+    let htd_bytes = bytes_field(line, j, "htd")?;
+    let dth_bytes = bytes_field(line, j, "dth")?;
+    let kernel = match (j.get("kernel_s"), j.get("variant")) {
+        (Some(k), None) => {
+            let secs = k
+                .as_f64()
+                .ok_or_else(|| schema(line, "\"kernel_s\" must be a number"))?;
+            if !secs.is_finite() || secs < 0.0 {
+                return Err(schema(
+                    line,
+                    format!("\"kernel_s\" must be finite and >= 0, got {secs}"),
+                ));
+            }
+            KernelSpec::Timed { secs }
+        }
+        (None, Some(v)) => {
+            let variant = v
+                .as_str()
+                .ok_or_else(|| schema(line, "\"variant\" must be a string"))?
+                .to_string();
+            let est = j
+                .get("est_s")
+                .and_then(|e| e.as_f64())
+                .ok_or_else(|| schema(line, "\"variant\" needs numeric \"est_s\""))?;
+            if !est.is_finite() || est < 0.0 {
+                return Err(schema(
+                    line,
+                    format!("\"est_s\" must be finite and >= 0, got {est}"),
+                ));
+            }
+            KernelSpec::Artifact { variant, est_secs: est }
+        }
+        (Some(_), Some(_)) => {
+            return Err(schema(
+                line,
+                "task has both \"kernel_s\" and \"variant\" — pick one",
+            ));
+        }
+        (None, None) => {
+            return Err(schema(
+                line,
+                "task needs \"kernel_s\" (timed) or \"variant\"+\"est_s\"",
+            ));
+        }
+    };
+    Ok(TraceTask {
+        line,
+        worker,
+        tenant,
+        class,
+        deadline_s,
+        spec: TaskSpec { name, htd_bytes, kernel, dth_bytes },
+    })
+}
+
+/// `"htd"` / `"dth"`: one number or an array of numbers, bytes per
+/// transfer command; absent = no commands in that stage.
+fn bytes_field(line: usize, j: &Json, key: &str) -> Result<Vec<u64>, TraceError> {
+    let one = |v: &Json| -> Result<u64, TraceError> {
+        v.as_u64().ok_or_else(|| {
+            schema(line, format!("\"{key}\" entries must be non-negative integers"))
+        })
+    };
+    match j.get(key) {
+        None => Ok(Vec::new()),
+        Some(Json::Arr(items)) => items.iter().map(one).collect(),
+        Some(v) => Ok(vec![one(v)?]),
+    }
+}
+
+/// One output telemetry event; [`to_line`](TraceOut::to_line) renders
+/// the single-line JSON form. Times are seconds: virtual clock on the
+/// replay path, wall clock since run start on the live path.
+#[derive(Clone, Debug)]
+pub enum TraceOut {
+    /// Task admitted into the backlog.
+    Accept { id: u64, worker: usize, tenant: u32, class: Priority, t_s: f64 },
+    /// Task shed (rejected or evicted) with the typed receipt.
+    Shed { id: u64, tenant: u32, class: Priority, reason: ShedReason, t_s: f64 },
+    /// Fleet placement decision for one task of a drained batch.
+    Place { id: u64, device: usize, t_s: f64 },
+    /// One committed device group: scheduled order + search telemetry.
+    Group {
+        device: usize,
+        /// Task ids in scheduled submission order.
+        order: Vec<u64>,
+        start_s: f64,
+        /// Model-predicted makespan of the group (s).
+        pred_s: f64,
+        pruned: u64,
+        early_exit: u64,
+        twins: u64,
+    },
+    /// Task completion. `miss` is present only when a deadline was set.
+    Done { id: u64, tenant: u32, end_s: f64, latency_s: f64, miss: Option<bool> },
+    /// End-of-run rollup.
+    Summary {
+        n_tasks: usize,
+        n_groups: usize,
+        n_shed: usize,
+        makespan_s: f64,
+        device_busy_s: Vec<f64>,
+    },
+}
+
+fn shed_reason_name(r: ShedReason) -> &'static str {
+    match r {
+        ShedReason::TenantCapFull => "tenant_cap_full",
+        ShedReason::GlobalCapFull => "global_cap_full",
+        ShedReason::Evicted => "evicted",
+    }
+}
+
+impl TraceOut {
+    pub fn to_line(&self) -> String {
+        let obj = match self {
+            TraceOut::Accept { id, worker, tenant, class, t_s } => Json::obj(vec![
+                ("ev", Json::str("accept")),
+                ("id", Json::num(*id as f64)),
+                ("worker", Json::num(*worker as f64)),
+                ("tenant", Json::num(*tenant as f64)),
+                ("class", Json::str(class.name())),
+                ("t_s", Json::num(*t_s)),
+            ]),
+            TraceOut::Shed { id, tenant, class, reason, t_s } => Json::obj(vec![
+                ("ev", Json::str("shed")),
+                ("id", Json::num(*id as f64)),
+                ("tenant", Json::num(*tenant as f64)),
+                ("class", Json::str(class.name())),
+                ("reason", Json::str(shed_reason_name(*reason))),
+                ("t_s", Json::num(*t_s)),
+            ]),
+            TraceOut::Place { id, device, t_s } => Json::obj(vec![
+                ("ev", Json::str("place")),
+                ("id", Json::num(*id as f64)),
+                ("device", Json::num(*device as f64)),
+                ("t_s", Json::num(*t_s)),
+            ]),
+            TraceOut::Group {
+                device,
+                order,
+                start_s,
+                pred_s,
+                pruned,
+                early_exit,
+                twins,
+            } => Json::obj(vec![
+                ("ev", Json::str("group")),
+                ("device", Json::num(*device as f64)),
+                (
+                    "order",
+                    Json::arr(order.iter().map(|&i| Json::num(i as f64)).collect()),
+                ),
+                ("start_s", Json::num(*start_s)),
+                ("pred_s", Json::num(*pred_s)),
+                ("pruned", Json::num(*pruned as f64)),
+                ("early_exit", Json::num(*early_exit as f64)),
+                ("twins", Json::num(*twins as f64)),
+            ]),
+            TraceOut::Done { id, tenant, end_s, latency_s, miss } => {
+                let mut fields = vec![
+                    ("ev", Json::str("done")),
+                    ("id", Json::num(*id as f64)),
+                    ("tenant", Json::num(*tenant as f64)),
+                    ("end_s", Json::num(*end_s)),
+                    ("latency_s", Json::num(*latency_s)),
+                ];
+                if let Some(m) = miss {
+                    fields.push(("miss", Json::Bool(*m)));
+                }
+                Json::obj(fields)
+            }
+            TraceOut::Summary {
+                n_tasks,
+                n_groups,
+                n_shed,
+                makespan_s,
+                device_busy_s,
+            } => Json::obj(vec![
+                ("ev", Json::str("summary")),
+                ("n_tasks", Json::num(*n_tasks as f64)),
+                ("n_groups", Json::num(*n_groups as f64)),
+                ("n_shed", Json::num(*n_shed as f64)),
+                ("makespan_s", Json::num(*makespan_s)),
+                (
+                    "device_busy_s",
+                    Json::arr(device_busy_s.iter().map(|&b| Json::num(b)).collect()),
+                ),
+            ]),
+        };
+        obj.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_task_with_defaults() {
+        let evs = parse_trace(
+            r#"{"ev":"task","name":"t0","kernel_s":0.001}
+{"ev":"flush"}"#,
+        )
+        .unwrap();
+        assert_eq!(evs.len(), 2);
+        match &evs[0] {
+            TraceIn::Task(t) => {
+                assert_eq!(t.worker, 0);
+                assert_eq!(t.tenant, TenantId(0));
+                assert_eq!(t.class, Priority::Normal);
+                assert!(t.deadline_s.is_none());
+                assert!(t.spec.htd_bytes.is_empty());
+                assert_eq!(t.spec.kernel, KernelSpec::Timed { secs: 0.001 });
+            }
+            other => panic!("expected task, got {other:?}"),
+        }
+        assert!(matches!(evs[1], TraceIn::Flush));
+    }
+
+    #[test]
+    fn comments_blanks_and_tagged_fields() {
+        let evs = parse_trace(
+            "# a comment\n\n{\"ev\":\"task\",\"name\":\"t\",\"worker\":3,\
+             \"htd\":[10,20],\"kernel_s\":0.5,\"dth\":30,\"tenant\":7,\
+             \"class\":\"hi\",\"deadline_s\":0.25}\n",
+        )
+        .unwrap();
+        assert_eq!(evs.len(), 1);
+        match &evs[0] {
+            TraceIn::Task(t) => {
+                assert_eq!(t.worker, 3);
+                assert_eq!(t.tenant, TenantId(7));
+                assert_eq!(t.class, Priority::Hi);
+                assert_eq!(t.deadline_s, Some(0.25));
+                assert_eq!(t.spec.htd_bytes, vec![10, 20]);
+                assert_eq!(t.spec.dth_bytes, vec![30]);
+            }
+            other => panic!("expected task, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn schema_errors_carry_line_numbers() {
+        let e = parse_trace("{\"ev\":\"flush\"}\n{\"ev\":\"warp\"}\n").unwrap_err();
+        assert_eq!(e.line(), 2);
+        assert!(matches!(e, TraceError::Schema { .. }));
+
+        let e = parse_trace(
+            "{\"ev\":\"task\",\"name\":\"t\",\"kernel_s\":1,\"nope\":1}\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("unknown key \"nope\""), "{e}");
+
+        let e = parse_trace("{\"ev\":\"advance\",\"dt_s\":-1}\n").unwrap_err();
+        assert!(matches!(e, TraceError::Schema { line: 1, .. }));
+    }
+
+    #[test]
+    fn json_errors_are_typed_not_panics() {
+        let e = parse_trace("{\"ev\":\"flush\"\n").unwrap_err();
+        match e {
+            TraceError::Json { line: 1, err } => assert!(err.is_incomplete()),
+            other => panic!("expected json error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nothing_after_end() {
+        let e = parse_trace("{\"ev\":\"end\"}\n{\"ev\":\"flush\"}\n").unwrap_err();
+        assert!(e.to_string().contains("after"), "{e}");
+    }
+
+    #[test]
+    fn incremental_feeds_split_anywhere() {
+        let text = "{\"ev\":\"task\",\"name\":\"t\",\"kernel_s\":0.1}\n{\"ev\":\"end\"}\n";
+        let all = parse_trace(text).unwrap();
+        for cut in 0..text.len() {
+            let mut r = TraceReader::new();
+            r.feed(&text.as_bytes()[..cut]);
+            let mut got = Vec::new();
+            while let Some(ev) = r.next_event().unwrap() {
+                got.push(ev);
+            }
+            r.feed(&text.as_bytes()[cut..]);
+            r.end();
+            while let Some(ev) = r.next_event().unwrap() {
+                got.push(ev);
+            }
+            assert_eq!(got.len(), all.len(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn out_events_render_single_lines() {
+        let lines = [
+            TraceOut::Accept {
+                id: 0,
+                worker: 1,
+                tenant: 2,
+                class: Priority::Hi,
+                t_s: 0.5,
+            }
+            .to_line(),
+            TraceOut::Shed {
+                id: 1,
+                tenant: 2,
+                class: Priority::BestEffort,
+                reason: ShedReason::Evicted,
+                t_s: 1.0,
+            }
+            .to_line(),
+            TraceOut::Done {
+                id: 0,
+                tenant: 2,
+                end_s: 1.5,
+                latency_s: 1.0,
+                miss: Some(false),
+            }
+            .to_line(),
+        ];
+        for l in &lines {
+            assert!(!l.contains('\n'));
+            Json::parse(l).unwrap();
+        }
+        assert!(lines[1].contains("\"evicted\""));
+        assert!(lines[2].contains("\"miss\":false"));
+    }
+}

@@ -1,0 +1,253 @@
+//! The live trace service: feed a decoded trace through a real
+//! coordinator (via the [`Driver`] façade) and stream NDJSON telemetry.
+//!
+//! This is the *wall-clock* path — threads, settle windows and stealing
+//! all run for real, so completion order is not bit-stable between runs
+//! (equal model cost, different interleavings). The determinism contract
+//! belongs to [`crate::trace::replay`]; this module is for driving live
+//! hardware/virtual devices from recorded workloads and watching the
+//! pipeline's decisions. Clock-control events (`advance`) and `flush`
+//! markers are ignored here: the live coordinators form groups by their
+//! own settle windows.
+//!
+//! Emitted events (one JSON object per line):
+//!
+//! * `done` — one per executed task: tenant + measured latency.
+//! * `tenant` — per-tenant admission rollup (admitted / completed /
+//!   shed / blocked, p50/p99 latency) when admission was armed.
+//! * `lane` — per-lane (or per-device) decision counters: groups,
+//!   merges, drift-gate replans, steals, retries, quarantine trips, and
+//!   the calibration factors the lane's model carried at shutdown.
+//! * `fleet` — placement totals when the backend is a fleet.
+//! * `summary` — backend name, totals, throughput.
+
+use std::io::{self, Write};
+
+use crate::coordinator::driver::{Driver, RunReport};
+use crate::coordinator::lanes::TenantWorkload;
+use crate::trace::protocol::{TraceError, TraceIn};
+use crate::util::json::Json;
+
+/// Regroup a decoded trace into the worker-batch form the coordinators
+/// consume: one [`TenantWorkload`] per distinct `worker`, in first
+/// appearance order, tasks in trace order within each worker.
+///
+/// Tenant, class and deadline are per-worker on the live path (the
+/// workload is the tagging unit); a later task that disagrees with its
+/// worker's first record is a schema error carrying that task's line.
+pub fn workloads_from_trace(
+    trace: &[TraceIn],
+) -> Result<Vec<TenantWorkload>, TraceError> {
+    let mut order: Vec<usize> = Vec::new(); // worker ids, first-appearance
+    let mut loads: Vec<TenantWorkload> = Vec::new();
+    for ev in trace {
+        let t = match ev {
+            TraceIn::Task(t) => t,
+            _ => continue,
+        };
+        let slot = match order.iter().position(|&w| w == t.worker) {
+            Some(i) => i,
+            None => {
+                order.push(t.worker);
+                loads.push(TenantWorkload {
+                    tenant: t.tenant,
+                    class: t.class,
+                    deadline: t.deadline_s,
+                    tasks: Vec::new(),
+                });
+                loads.len() - 1
+            }
+        };
+        let w = &mut loads[slot];
+        if w.tenant != t.tenant || w.class != t.class || w.deadline != t.deadline_s
+        {
+            return Err(TraceError::Schema {
+                line: t.line,
+                reason: format!(
+                    "worker {} re-tagged mid-trace (tenant/class/deadline \
+                     must be constant per worker on the live path)",
+                    t.worker
+                ),
+            });
+        }
+        w.tasks.push(t.spec.clone());
+    }
+    Ok(loads)
+}
+
+/// Run the trace's tasks through `driver` and stream telemetry lines to
+/// `out`. Returns the full [`RunReport`] for callers that want the
+/// structured metrics too.
+pub fn serve(
+    trace: &[TraceIn],
+    driver: &dyn Driver,
+    out: &mut dyn Write,
+) -> io::Result<RunReport> {
+    let loads = workloads_from_trace(trace)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    let report = driver.run_tenants(loads);
+    emit_report(&report, out)?;
+    Ok(report)
+}
+
+fn writeln_json(out: &mut dyn Write, j: Json) -> io::Result<()> {
+    writeln!(out, "{j}")
+}
+
+/// Render a finished run as the service's NDJSON event stream.
+pub fn emit_report(report: &RunReport, out: &mut dyn Write) -> io::Result<()> {
+    let m = &report.metrics;
+    for (i, (&lat, &tenant)) in
+        m.latencies.iter().zip(m.latency_tenants.iter()).enumerate()
+    {
+        writeln_json(
+            out,
+            Json::obj(vec![
+                ("ev", Json::str("done")),
+                ("id", Json::num(i as f64)),
+                ("tenant", Json::num(tenant as f64)),
+                ("latency_s", Json::num(lat)),
+            ]),
+        )?;
+    }
+    if let Some(adm) = &m.admission {
+        for t in &adm.per_tenant {
+            writeln_json(
+                out,
+                Json::obj(vec![
+                    ("ev", Json::str("tenant")),
+                    ("tenant", Json::num(t.tenant as f64)),
+                    ("admitted", Json::num(t.n_admitted as f64)),
+                    ("completed", Json::num(t.n_completed as f64)),
+                    ("shed", Json::num(t.n_shed as f64)),
+                    ("blocked", Json::num(t.n_blocked as f64)),
+                    ("p50_latency_s", Json::num(t.p50_latency)),
+                    ("p99_latency_s", Json::num(t.p99_latency)),
+                ]),
+            )?;
+        }
+    }
+    for l in &m.per_lane {
+        writeln_json(
+            out,
+            Json::obj(vec![
+                ("ev", Json::str("lane")),
+                ("lane", Json::num(l.lane as f64)),
+                ("n_groups", Json::num(l.n_groups as f64)),
+                ("n_tasks", Json::num(l.n_tasks as f64)),
+                ("busy_s", Json::num(l.busy_secs)),
+                ("predicted_s", Json::num(l.predicted_secs)),
+                ("n_merges", Json::num(l.n_merges as f64)),
+                ("n_replans", Json::num(l.n_replans as f64)),
+                ("n_stolen", Json::num(l.n_stolen as f64)),
+                ("n_retries", Json::num(l.n_retries as f64)),
+                ("n_quarantine_trips", Json::num(l.n_quarantine_trips as f64)),
+                ("calib_htd", Json::num(l.calib_htd)),
+                ("calib_kernel", Json::num(l.calib_kernel)),
+                ("calib_dth", Json::num(l.calib_dth)),
+            ]),
+        )?;
+    }
+    if let Some(fx) = &report.fleet {
+        writeln_json(
+            out,
+            Json::obj(vec![
+                ("ev", Json::str("fleet")),
+                ("n_placements", Json::num(fx.n_placements as f64)),
+                ("n_place_rounds", Json::num(fx.n_place_rounds as f64)),
+                ("n_steal_considered", Json::num(fx.n_steal_considered as f64)),
+                ("n_steal_rejected", Json::num(fx.n_steal_rejected as f64)),
+            ]),
+        )?;
+    }
+    writeln_json(
+        out,
+        Json::obj(vec![
+            ("ev", Json::str("summary")),
+            ("backend", Json::str(report.backend)),
+            ("n_tasks", Json::num(m.n_tasks as f64)),
+            ("n_groups", Json::num(m.n_groups as f64)),
+            (
+                "n_shed",
+                Json::num(
+                    m.admission.as_ref().map(|a| a.n_shed).unwrap_or(0) as f64,
+                ),
+            ),
+            ("total_s", Json::num(m.total_secs)),
+            ("tasks_per_sec", Json::num(m.tasks_per_sec)),
+        ]),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profile_by_name;
+    use crate::coordinator::driver::DriverBuilder;
+    use crate::coordinator::lanes::LaneOptions;
+    use crate::trace::protocol::parse_trace;
+
+    fn trace_text() -> String {
+        let mut lines = Vec::new();
+        for w in 0..2 {
+            for i in 0..2 {
+                lines.push(format!(
+                    "{{\"ev\":\"task\",\"name\":\"w{w}t{i}\",\"worker\":{w},\
+                     \"htd\":100000,\"kernel_s\":0.001,\"dth\":100000,\
+                     \"tenant\":{w}}}"
+                ));
+            }
+        }
+        lines.join("\n")
+    }
+
+    #[test]
+    fn workloads_group_by_worker_in_order() {
+        let trace = parse_trace(&trace_text()).unwrap();
+        let loads = workloads_from_trace(&trace).unwrap();
+        assert_eq!(loads.len(), 2);
+        assert_eq!(loads[0].tasks.len(), 2);
+        assert_eq!(loads[1].tenant.0, 1);
+    }
+
+    #[test]
+    fn retagged_worker_is_a_schema_error() {
+        let text = format!(
+            "{}\n{{\"ev\":\"task\",\"name\":\"x\",\"worker\":0,\
+             \"kernel_s\":0.001,\"tenant\":9}}",
+            trace_text()
+        );
+        let trace = parse_trace(&text).unwrap();
+        let e = workloads_from_trace(&trace).unwrap_err();
+        assert!(e.to_string().contains("re-tagged"), "{e}");
+    }
+
+    #[test]
+    fn serve_streams_valid_ndjson_and_summary() {
+        let trace = parse_trace(&trace_text()).unwrap();
+        let driver = DriverBuilder::lanes(LaneOptions::default())
+            .sim_device(profile_by_name("amd_r9").unwrap())
+            .build()
+            .unwrap();
+        let mut buf = Vec::new();
+        let report = serve(&trace, driver.as_ref(), &mut buf).unwrap();
+        assert_eq!(report.metrics.n_tasks, 4);
+        let text = String::from_utf8(buf).unwrap();
+        let mut n_done = 0;
+        let mut saw_summary = false;
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            match j.get("ev").and_then(Json::as_str).unwrap() {
+                "done" => n_done += 1,
+                "summary" => {
+                    saw_summary = true;
+                    assert_eq!(j.get("backend").unwrap().as_str(), Some("lanes"));
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(n_done, 4);
+        assert!(saw_summary);
+    }
+}

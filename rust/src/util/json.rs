@@ -1,8 +1,32 @@
-//! Minimal JSON parser + writer (serde is not in the offline registry).
+//! Minimal JSON parser + writer (serde is not in the offline registry),
+//! redesigned around typed errors and incremental parsing for the
+//! streaming trace protocol (`trace::protocol`, docs/TRACE.md).
 //!
-//! Supports the full JSON grammar minus unicode escapes beyond BMP pairs;
-//! numbers parse as f64 (with an `as_u64`/`as_i64` view). Used for the
-//! artifact manifest, device profiles and result files.
+//! Three entry points, one grammar:
+//!
+//! * [`Json::parse`] — one complete document, **strict by default**
+//!   (see the failure-mode table below); [`Json::parse_lenient`] /
+//!   [`Json::parse_with`] relax it.
+//! * [`Json::parse_stream`] — a whitespace/newline-separated
+//!   concatenation of documents (NDJSON and friends), all at once.
+//! * [`StreamParser`] — the incremental form: `feed` arbitrary byte
+//!   chunks (network reads, partial lines), pull complete values out
+//!   with `next_value`. A value split across feeds is simply not ready
+//!   yet (`Ok(None)`), never an error; a malformed byte is a typed
+//!   [`ParseError`] with an absolute stream offset.
+//!
+//! Failure modes are typed ([`ParseErrorKind`]) and documented per
+//! variant. Strict mode additionally rejects: duplicate object keys,
+//! raw control characters inside strings, lone UTF-16 surrogate
+//! escapes, and leading-zero numbers (`01`). Lenient mode keeps the
+//! last duplicate key, passes raw control characters through, and maps
+//! lone surrogates to U+FFFD. Both modes bound nesting depth
+//! ([`ParseOptions::max_depth`]) so hostile input cannot overflow the
+//! stack. Numbers parse as f64 (with a strict integral `as_u64` view);
+//! `\u` escape pairs outside the BMP combine into one scalar.
+//!
+//! Used for the artifact manifest, device profiles, bench trajectory
+//! files and the trace protocol.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -17,30 +41,170 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug)]
+/// What went wrong, as a machine-checkable enum (the pre-redesign
+/// `ParseError` carried only a free-form message).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParseErrorKind {
+    /// Input ended inside a value. For [`StreamParser`] before `end()`
+    /// this is not an error at all — it means "feed more bytes" and is
+    /// surfaced as `Ok(None)`; only a truncated *final* document
+    /// reports it.
+    UnexpectedEof,
+    /// A complete value was followed by non-whitespace ([`Json::parse`]
+    /// only; stream entry points treat the remainder as the next value).
+    TrailingBytes,
+    /// A byte that cannot start or continue the expected production.
+    UnexpectedChar,
+    /// `true` / `false` / `null` misspelled (`trux`).
+    BadLiteral,
+    /// Malformed number: no digits where required (`-`, `1.`, `2e+`),
+    /// or a leading zero (`01`) in strict mode.
+    BadNumber,
+    /// Unknown escape character, non-hex `\u` payload, or (strict mode)
+    /// a lone UTF-16 surrogate; lenient mode maps lone surrogates to
+    /// U+FFFD instead.
+    BadEscape,
+    /// Invalid UTF-8 inside a string body.
+    BadUtf8,
+    /// Raw control character (< 0x20) inside a string (strict mode;
+    /// lenient passes it through).
+    ControlChar,
+    /// Duplicate object key (strict mode; lenient keeps the last).
+    DuplicateKey,
+    /// Nesting beyond [`ParseOptions::max_depth`] (both modes — this is
+    /// the stack-overflow guard, not a style check).
+    DepthLimit,
+}
+
+impl ParseErrorKind {
+    pub fn describe(self) -> &'static str {
+        match self {
+            ParseErrorKind::UnexpectedEof => "unexpected end of input",
+            ParseErrorKind::TrailingBytes => "trailing bytes after value",
+            ParseErrorKind::UnexpectedChar => "unexpected character",
+            ParseErrorKind::BadLiteral => "malformed literal",
+            ParseErrorKind::BadNumber => "malformed number",
+            ParseErrorKind::BadEscape => "bad string escape",
+            ParseErrorKind::BadUtf8 => "invalid utf-8 in string",
+            ParseErrorKind::ControlChar => {
+                "raw control character in string"
+            }
+            ParseErrorKind::DuplicateKey => "duplicate object key",
+            ParseErrorKind::DepthLimit => "nesting depth limit exceeded",
+        }
+    }
+}
+
+impl fmt::Display for ParseErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.describe())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParseError {
+    /// Byte offset of the offending position. For [`StreamParser`] this
+    /// is absolute across every `feed` since construction.
     pub pos: usize,
-    pub msg: String,
+    pub kind: ParseErrorKind,
+}
+
+impl ParseError {
+    /// True when more input could still complete the value — the
+    /// incremental parser's "not an error yet" signal.
+    pub fn is_incomplete(&self) -> bool {
+        self.kind == ParseErrorKind::UnexpectedEof
+    }
 }
 
 impl fmt::Display for ParseError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+        write!(f, "json parse error at byte {}: {}", self.pos, self.kind)
     }
 }
 
 impl std::error::Error for ParseError {}
 
+/// Parse behavior knobs. [`Default`] is [`ParseOptions::strict`]:
+/// reject anything ambiguous so malformed producers fail loudly at the
+/// boundary instead of corrupting state later.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParseOptions {
+    /// Strict mode: duplicate keys, raw control characters in strings,
+    /// lone surrogates and leading-zero numbers are errors.
+    pub strict: bool,
+    /// Maximum container nesting (objects + arrays). Exceeding it is
+    /// [`ParseErrorKind::DepthLimit`] in both modes.
+    pub max_depth: usize,
+}
+
+impl ParseOptions {
+    pub fn strict() -> Self {
+        ParseOptions { strict: true, max_depth: 128 }
+    }
+
+    pub fn lenient() -> Self {
+        ParseOptions { strict: false, max_depth: 128 }
+    }
+}
+
+impl Default for ParseOptions {
+    fn default() -> Self {
+        ParseOptions::strict()
+    }
+}
+
 impl Json {
+    /// Parse one complete document, strict mode (see module docs for
+    /// the strictness matrix).
     pub fn parse(s: &str) -> Result<Json, ParseError> {
-        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        Json::parse_with(s, ParseOptions::strict())
+    }
+
+    /// Parse one complete document, tolerating duplicate keys, raw
+    /// control characters, lone surrogates and leading zeros.
+    pub fn parse_lenient(s: &str) -> Result<Json, ParseError> {
+        Json::parse_with(s, ParseOptions::lenient())
+    }
+
+    pub fn parse_with(s: &str, opts: ParseOptions) -> Result<Json, ParseError> {
+        let mut p = Parser::new(s.as_bytes(), opts);
         p.ws();
         let v = p.value()?;
         p.ws();
         if p.pos != p.b.len() {
-            return Err(p.err("trailing characters"));
+            return Err(ParseError {
+                pos: p.pos,
+                kind: ParseErrorKind::TrailingBytes,
+            });
         }
         Ok(v)
+    }
+
+    /// Parse the first value of `s`, returning it together with the
+    /// number of bytes consumed (leading whitespace included). The
+    /// remainder is untouched — this is the one-shot form of the
+    /// incremental loop [`StreamParser`] runs internally.
+    pub fn parse_prefix(
+        s: &str,
+        opts: ParseOptions,
+    ) -> Result<(Json, usize), ParseError> {
+        parse_prefix_bytes(s.as_bytes(), opts)
+    }
+
+    /// Parse a whitespace/newline-separated concatenation of documents
+    /// (the NDJSON shape) in one call, strict mode. Fails with the
+    /// first malformed document's typed error; a truncated final value
+    /// reports [`ParseErrorKind::UnexpectedEof`].
+    pub fn parse_stream(s: &str) -> Result<Vec<Json>, ParseError> {
+        let mut sp = StreamParser::new();
+        sp.feed(s.as_bytes());
+        sp.end();
+        let mut out = Vec::new();
+        while let Some(v) = sp.next_value()? {
+            out.push(v);
+        }
+        Ok(out)
     }
 
     // -- accessors -------------------------------------------------------
@@ -65,8 +229,22 @@ impl Json {
         }
     }
 
+    /// Integral view: `Some` only for non-negative whole numbers that
+    /// fit in `u64` — negative or fractional values return `None`
+    /// instead of silently truncating (the trace protocol depends on
+    /// this to reject `"worker": -1` with a typed schema error).
     pub fn as_u64(&self) -> Option<u64> {
-        self.as_f64().map(|x| x as u64)
+        match self.as_f64() {
+            Some(x)
+                if x.is_finite()
+                    && x >= 0.0
+                    && x.fract() == 0.0
+                    && x <= u64::MAX as f64 =>
+            {
+                Some(x as u64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -115,14 +293,130 @@ impl Json {
     }
 }
 
+fn parse_prefix_bytes(
+    b: &[u8],
+    opts: ParseOptions,
+) -> Result<(Json, usize), ParseError> {
+    let mut p = Parser::new(b, opts);
+    p.ws();
+    let v = p.value()?;
+    Ok((v, p.pos))
+}
+
+/// Incremental parser over partial buffers: `feed` bytes as they
+/// arrive, pull values with [`StreamParser::next_value`]. `Ok(None)`
+/// means "no complete value buffered yet" until [`StreamParser::end`]
+/// marks EOF, after which a partial trailing value is a typed
+/// [`ParseErrorKind::UnexpectedEof`].
+///
+/// One documented caveat, inherent to any delimiter-free framing: a
+/// top-level *number* touching the end of the buffer is held back even
+/// though it parses (the next feed could extend `12` to `123`). It is
+/// released by the next delimiter byte (whitespace, newline) or by
+/// `end()`. NDJSON producers never notice — the line's `\n` is the
+/// delimiter.
+#[derive(Debug)]
+pub struct StreamParser {
+    buf: Vec<u8>,
+    /// Consumed offset within `buf`.
+    start: usize,
+    /// Bytes discarded before `buf[0]` (keeps error positions absolute).
+    base: usize,
+    opts: ParseOptions,
+    ended: bool,
+}
+
+impl StreamParser {
+    pub fn new() -> Self {
+        StreamParser::with_options(ParseOptions::strict())
+    }
+
+    pub fn with_options(opts: ParseOptions) -> Self {
+        StreamParser { buf: Vec::new(), start: 0, base: 0, opts, ended: false }
+    }
+
+    /// Append a chunk. Chunk boundaries are arbitrary — mid-value,
+    /// mid-escape, even mid-UTF-8-character.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        assert!(!self.ended, "StreamParser::feed after end()");
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Mark end-of-input: trailing complete values (including bare
+    /// numbers) become yieldable, and a trailing *partial* value turns
+    /// into [`ParseErrorKind::UnexpectedEof`].
+    pub fn end(&mut self) {
+        self.ended = true;
+    }
+
+    /// Unconsumed bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Next complete value, or `Ok(None)` when the buffer holds no
+    /// complete value (feed more / call `end()`).
+    pub fn next_value(&mut self) -> Result<Option<Json>, ParseError> {
+        while self.start < self.buf.len()
+            && matches!(self.buf[self.start], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.start += 1;
+        }
+        self.compact();
+        if self.start == self.buf.len() {
+            return Ok(None);
+        }
+        let rest = &self.buf[self.start..];
+        match parse_prefix_bytes(rest, self.opts) {
+            Ok((v, used)) => {
+                if !self.ended
+                    && used == rest.len()
+                    && matches!(v, Json::Num(_))
+                {
+                    // `12` at the buffer end may continue as `123`.
+                    return Ok(None);
+                }
+                self.start += used;
+                Ok(Some(v))
+            }
+            Err(e) if e.is_incomplete() && !self.ended => Ok(None),
+            Err(e) => Err(ParseError {
+                pos: self.base + self.start + e.pos,
+                kind: e.kind,
+            }),
+        }
+    }
+
+    /// Reclaim consumed prefix once it dominates the buffer.
+    fn compact(&mut self) {
+        if self.start > 8192 && self.start * 2 > self.buf.len() {
+            self.buf.drain(..self.start);
+            self.base += self.start;
+            self.start = 0;
+        }
+    }
+}
+
+impl Default for StreamParser {
+    fn default() -> Self {
+        StreamParser::new()
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    opts: ParseOptions,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> ParseError {
-        ParseError { pos: self.pos, msg: msg.to_string() }
+    fn new(b: &'a [u8], opts: ParseOptions) -> Self {
+        Parser { b, pos: 0, opts, depth: 0 }
+    }
+
+    fn err(&self, kind: ParseErrorKind) -> ParseError {
+        ParseError { pos: self.pos, kind }
     }
 
     fn peek(&self) -> Option<u8> {
@@ -136,21 +430,25 @@ impl<'a> Parser<'a> {
     }
 
     fn eat(&mut self, c: u8) -> Result<(), ParseError> {
-        if self.peek() == Some(c) {
-            self.pos += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected '{}'", c as char)))
+        match self.peek() {
+            Some(x) if x == c => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(_) => Err(self.err(ParseErrorKind::UnexpectedChar)),
+            None => Err(self.err(ParseErrorKind::UnexpectedEof)),
         }
     }
 
     fn lit(&mut self, s: &str, v: Json) -> Result<Json, ParseError> {
-        if self.b[self.pos..].starts_with(s.as_bytes()) {
-            self.pos += s.len();
-            Ok(v)
-        } else {
-            Err(self.err(&format!("expected '{s}'")))
+        for &want in s.as_bytes() {
+            match self.peek() {
+                Some(got) if got == want => self.pos += 1,
+                Some(_) => return Err(self.err(ParseErrorKind::BadLiteral)),
+                None => return Err(self.err(ParseErrorKind::UnexpectedEof)),
+            }
         }
+        Ok(v)
     }
 
     fn value(&mut self) -> Result<Json, ParseError> {
@@ -162,44 +460,65 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
+            Some(_) => Err(self.err(ParseErrorKind::UnexpectedChar)),
+            None => Err(self.err(ParseErrorKind::UnexpectedEof)),
         }
+    }
+
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > self.opts.max_depth {
+            return Err(self.err(ParseErrorKind::DepthLimit));
+        }
+        Ok(())
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
             self.ws();
+            let key_pos = self.pos;
             let k = self.string()?;
             self.ws();
             self.eat(b':')?;
             self.ws();
             let v = self.value()?;
-            m.insert(k, v);
+            if m.insert(k, v).is_some() && self.opts.strict {
+                return Err(ParseError {
+                    pos: key_pos,
+                    kind: ParseErrorKind::DuplicateKey,
+                });
+            }
             self.ws();
             match self.peek() {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
-                _ => return Err(self.err("expected ',' or '}'")),
+                Some(_) => return Err(self.err(ParseErrorKind::UnexpectedChar)),
+                None => return Err(self.err(ParseErrorKind::UnexpectedEof)),
             }
         }
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -210,9 +529,11 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
-                _ => return Err(self.err("expected ',' or ']'")),
+                Some(_) => return Err(self.err(ParseErrorKind::UnexpectedChar)),
+                None => return Err(self.err(ParseErrorKind::UnexpectedEof)),
             }
         }
     }
@@ -222,14 +543,17 @@ impl<'a> Parser<'a> {
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => return Err(self.err("unterminated string")),
+                None => return Err(self.err(ParseErrorKind::UnexpectedEof)),
                 Some(b'"') => {
                     self.pos += 1;
                     return Ok(s);
                 }
                 Some(b'\\') => {
+                    let esc_pos = self.pos;
                     self.pos += 1;
-                    let c = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    let c = self
+                        .peek()
+                        .ok_or_else(|| self.err(ParseErrorKind::UnexpectedEof))?;
                     self.pos += 1;
                     match c {
                         b'"' => s.push('"'),
@@ -241,21 +565,35 @@ impl<'a> Parser<'a> {
                         b'r' => s.push('\r'),
                         b't' => s.push('\t'),
                         b'u' => {
-                            let h = self.hex4()?;
-                            s.push(
-                                char::from_u32(h as u32)
-                                    .unwrap_or(char::REPLACEMENT_CHARACTER),
-                            );
+                            let ch = self.unicode_escape(esc_pos)?;
+                            s.push(ch);
                         }
-                        _ => return Err(self.err("bad escape char")),
+                        _ => {
+                            return Err(ParseError {
+                                pos: esc_pos,
+                                kind: ParseErrorKind::BadEscape,
+                            })
+                        }
                     }
                 }
+                Some(c) if c < 0x20 => {
+                    if self.opts.strict {
+                        return Err(self.err(ParseErrorKind::ControlChar));
+                    }
+                    s.push(c as char);
+                    self.pos += 1;
+                }
                 Some(_) => {
-                    // Consume one UTF-8 scalar.
+                    // Consume one UTF-8 scalar; an incomplete trailing
+                    // sequence is "need more input", not bad bytes.
                     let rest = &self.b[self.pos..];
                     let step = utf8_len(rest[0]);
-                    let chunk = std::str::from_utf8(&rest[..step.min(rest.len())])
-                        .map_err(|_| self.err("invalid utf-8"))?;
+                    if step > rest.len() {
+                        self.pos = self.b.len();
+                        return Err(self.err(ParseErrorKind::UnexpectedEof));
+                    }
+                    let chunk = std::str::from_utf8(&rest[..step])
+                        .map_err(|_| self.err(ParseErrorKind::BadUtf8))?;
                     s.push_str(chunk);
                     self.pos += step;
                 }
@@ -263,16 +601,85 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn hex4(&mut self) -> Result<u16, ParseError> {
+    /// `\uXXXX` after the `\u` is consumed; combines UTF-16 surrogate
+    /// pairs (`\ud83d\ude00` → one U+1F600 scalar). Lone surrogates:
+    /// strict errors, lenient yields U+FFFD.
+    fn unicode_escape(&mut self, esc_pos: usize) -> Result<char, ParseError> {
+        let h = self.hex4(esc_pos)? as u32;
+        if (0xDC00..=0xDFFF).contains(&h) {
+            // Low surrogate with no preceding high surrogate.
+            return self.lone_surrogate(esc_pos);
+        }
+        if (0xD800..=0xDBFF).contains(&h) {
+            // Expect the low half: `\uDC00`..`\uDFFF`.
+            match (self.peek(), self.b.get(self.pos + 1).copied()) {
+                (Some(b'\\'), Some(b'u')) => {
+                    let pair_pos = self.pos;
+                    self.pos += 2;
+                    let l = self.hex4(esc_pos)? as u32;
+                    if !(0xDC00..=0xDFFF).contains(&l) {
+                        // Not a low half: rewind so the escape parses on
+                        // its own, and treat the high half as lone.
+                        self.pos = pair_pos;
+                        return self.lone_surrogate(esc_pos);
+                    }
+                    let c = 0x10000 + ((h - 0xD800) << 10) + (l - 0xDC00);
+                    return Ok(char::from_u32(c)
+                        .unwrap_or(char::REPLACEMENT_CHARACTER));
+                }
+                (None, _) | (Some(b'\\'), None) => {
+                    self.pos = self.b.len();
+                    return Err(self.err(ParseErrorKind::UnexpectedEof));
+                }
+                _ => return self.lone_surrogate(esc_pos),
+            }
+        }
+        Ok(char::from_u32(h).unwrap_or(char::REPLACEMENT_CHARACTER))
+    }
+
+    fn lone_surrogate(&self, esc_pos: usize) -> Result<char, ParseError> {
+        if self.opts.strict {
+            Err(ParseError { pos: esc_pos, kind: ParseErrorKind::BadEscape })
+        } else {
+            Ok(char::REPLACEMENT_CHARACTER)
+        }
+    }
+
+    fn hex4(&mut self, esc_pos: usize) -> Result<u16, ParseError> {
         if self.pos + 4 > self.b.len() {
-            return Err(self.err("short \\u escape"));
+            self.pos = self.b.len();
+            return Err(self.err(ParseErrorKind::UnexpectedEof));
         }
         let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
-            .map_err(|_| self.err("bad \\u escape"))?;
-        let v = u16::from_str_radix(hex, 16)
-            .map_err(|_| self.err("bad \\u escape"))?;
+            .map_err(|_| ParseError {
+                pos: esc_pos,
+                kind: ParseErrorKind::BadEscape,
+            })?;
+        let v = u16::from_str_radix(hex, 16).map_err(|_| ParseError {
+            pos: esc_pos,
+            kind: ParseErrorKind::BadEscape,
+        })?;
         self.pos += 4;
         Ok(v)
+    }
+
+    /// Count of digits consumed at the cursor.
+    fn digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+
+    fn num_err(&self) -> ParseError {
+        // `1.` / `-` / `2e` at end of input can still be completed by
+        // the next chunk; mid-input they are malformed.
+        if self.pos == self.b.len() {
+            self.err(ParseErrorKind::UnexpectedEof)
+        } else {
+            self.err(ParseErrorKind::BadNumber)
+        }
     }
 
     fn number(&mut self) -> Result<Json, ParseError> {
@@ -280,13 +687,23 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
+        let int_start = self.pos;
+        if self.digits() == 0 {
+            return Err(self.num_err());
+        }
+        if self.opts.strict
+            && self.pos - int_start > 1
+            && self.b[int_start] == b'0'
+        {
+            return Err(ParseError {
+                pos: int_start,
+                kind: ParseErrorKind::BadNumber,
+            });
         }
         if self.peek() == Some(b'.') {
             self.pos += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
+            if self.digits() == 0 {
+                return Err(self.num_err());
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
@@ -294,14 +711,15 @@ impl<'a> Parser<'a> {
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
             }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
+            if self.digits() == 0 {
+                return Err(self.num_err());
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        text.parse::<f64>().map(Json::Num).map_err(|_| ParseError {
+            pos: start,
+            kind: ParseErrorKind::BadNumber,
+        })
     }
 }
 
@@ -399,11 +817,82 @@ mod tests {
     }
 
     #[test]
-    fn rejects_garbage() {
-        assert!(Json::parse("{").is_err());
-        assert!(Json::parse("[1,]").is_err());
-        assert!(Json::parse("12 34").is_err());
-        assert!(Json::parse("\"unterminated").is_err());
+    fn rejects_garbage_with_typed_kinds() {
+        let kind = |s: &str| Json::parse(s).unwrap_err().kind;
+        assert_eq!(kind("{"), ParseErrorKind::UnexpectedEof);
+        assert_eq!(kind("[1,]"), ParseErrorKind::UnexpectedChar);
+        assert_eq!(kind("12 34"), ParseErrorKind::TrailingBytes);
+        assert_eq!(kind("\"unterminated"), ParseErrorKind::UnexpectedEof);
+        assert_eq!(kind("tru"), ParseErrorKind::UnexpectedEof);
+        assert_eq!(kind("trux"), ParseErrorKind::BadLiteral);
+        assert_eq!(kind("1."), ParseErrorKind::UnexpectedEof);
+        assert_eq!(kind("1.x"), ParseErrorKind::BadNumber);
+        assert_eq!(kind("2e+"), ParseErrorKind::UnexpectedEof);
+        assert_eq!(kind("@"), ParseErrorKind::UnexpectedChar);
+    }
+
+    #[test]
+    fn strict_vs_lenient() {
+        // Duplicate keys.
+        let dup = r#"{"a":1,"a":2}"#;
+        assert_eq!(
+            Json::parse(dup).unwrap_err().kind,
+            ParseErrorKind::DuplicateKey
+        );
+        let j = Json::parse_lenient(dup).unwrap();
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(2.0)); // last wins
+        // Raw control characters in strings.
+        let ctl = "\"a\nb\"";
+        assert_eq!(
+            Json::parse(ctl).unwrap_err().kind,
+            ParseErrorKind::ControlChar
+        );
+        assert_eq!(Json::parse_lenient(ctl).unwrap(), Json::Str("a\nb".into()));
+        // Leading zeros.
+        assert_eq!(
+            Json::parse("01").unwrap_err().kind,
+            ParseErrorKind::BadNumber
+        );
+        assert_eq!(Json::parse_lenient("01").unwrap(), Json::Num(1.0));
+        assert_eq!(Json::parse("0.5").unwrap(), Json::Num(0.5)); // not a leading zero
+    }
+
+    #[test]
+    fn depth_limit_guards_stack() {
+        let deep = "[".repeat(200) + &"]".repeat(200);
+        assert_eq!(
+            Json::parse(&deep).unwrap_err().kind,
+            ParseErrorKind::DepthLimit
+        );
+        let ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn surrogate_pairs() {
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+        // A literal (unescaped) astral character also round-trips.
+        assert_eq!(
+            Json::parse("\"\u{1F600}\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+        // Lone high surrogate: strict errors, lenient replaces.
+        assert_eq!(
+            Json::parse(r#""\ud83d x""#).unwrap_err().kind,
+            ParseErrorKind::BadEscape
+        );
+        assert_eq!(
+            Json::parse_lenient(r#""\ud83d x""#).unwrap(),
+            Json::Str("\u{FFFD} x".into())
+        );
+        // Lone low surrogate.
+        assert_eq!(
+            Json::parse(r#""\ude00""#).unwrap_err().kind,
+            ParseErrorKind::BadEscape
+        );
     }
 
     #[test]
@@ -421,5 +910,88 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn stream_parser_one_byte_feeds() {
+        let doc = b"{\"a\":1}\n{\"b\":[2,3]}\n";
+        let mut sp = StreamParser::new();
+        let mut got = Vec::new();
+        for &b in doc.iter() {
+            sp.feed(&[b]);
+            while let Some(v) = sp.next_value().unwrap() {
+                got.push(v);
+            }
+        }
+        sp.end();
+        while let Some(v) = sp.next_value().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(got[1].get("b").unwrap().idx(1).unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn stream_holds_back_trailing_number() {
+        let mut sp = StreamParser::new();
+        sp.feed(b"12");
+        assert_eq!(sp.next_value().unwrap(), None); // could become 123
+        sp.feed(b"3 ");
+        assert_eq!(sp.next_value().unwrap(), Some(Json::Num(123.0)));
+        sp.feed(b"4");
+        assert_eq!(sp.next_value().unwrap(), None);
+        sp.end();
+        assert_eq!(sp.next_value().unwrap(), Some(Json::Num(4.0)));
+        assert_eq!(sp.next_value().unwrap(), None);
+    }
+
+    #[test]
+    fn stream_splits_utf8_and_escapes() {
+        // "é" is two bytes; split in the middle of it and of an escape.
+        let doc = "\"é\\n\"".as_bytes();
+        for cut in 1..doc.len() {
+            let mut sp = StreamParser::new();
+            sp.feed(&doc[..cut]);
+            assert_eq!(sp.next_value().unwrap(), None, "cut at {cut}");
+            sp.feed(&doc[cut..]);
+            assert_eq!(
+                sp.next_value().unwrap(),
+                Some(Json::Str("é\n".into())),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_errors_carry_absolute_positions() {
+        let mut sp = StreamParser::new();
+        sp.feed(b"null garbage");
+        sp.end();
+        assert_eq!(sp.next_value().unwrap(), Some(Json::Null));
+        let e = sp.next_value().unwrap_err();
+        assert_eq!(e.kind, ParseErrorKind::UnexpectedChar);
+        assert_eq!(e.pos, 5);
+    }
+
+    #[test]
+    fn stream_truncated_final_value_is_typed_eof() {
+        let mut sp = StreamParser::new();
+        sp.feed(b"{\"a\":1} {\"b\":");
+        assert!(sp.next_value().unwrap().is_some());
+        assert_eq!(sp.next_value().unwrap(), None); // still feedable
+        sp.end();
+        let e = sp.next_value().unwrap_err();
+        assert!(e.is_incomplete());
+    }
+
+    #[test]
+    fn parse_stream_convenience() {
+        let vals = Json::parse_stream("1 2\n[3]\n").unwrap();
+        assert_eq!(
+            vals,
+            vec![Json::Num(1.0), Json::Num(2.0), Json::arr([Json::Num(3.0)])]
+        );
+        assert!(Json::parse_stream("1 [").unwrap_err().is_incomplete());
     }
 }

@@ -34,7 +34,12 @@ its own key fields, metric, direction and regression threshold (see
   the failure it exists to catch — a blocking backoff or poll sleep
   reintroduced into the planning loop — inflates p99 by orders of
   magnitude, not fractions. Static rows carry no latency field and are
-  skipped by that trajectory.
+  skipped by that trajectory;
+* ``BENCH_trace.json`` — two gated trajectories keyed (cell,): NDJSON
+  ingest in ``lines_per_sec`` (the ``ingest`` cell; replay cells carry
+  no such field and soft-skip), and replay-engine ``tasks_per_sec``
+  (the ``replay_*`` cells; the ingest cell soft-skips symmetrically).
+  Both higher is better, 30%.
 
 Invocation: ``bench_diff.py PREVIOUS CURRENT`` where both arguments are
 either two files (config picked by basename) or two directories (every
@@ -136,6 +141,24 @@ TRAJECTORIES = (
         metric_path=("placement_p99_us",),
         higher_is_better=False,
         threshold=1.50,
+    ),
+    # Two gates over BENCH_trace.json: each cell carries exactly one of
+    # the two metrics (ingest -> lines_per_sec, replay_* ->
+    # tasks_per_sec), so the other trajectory soft-skips it via
+    # metric_of.
+    Trajectory(
+        name="BENCH_trace.json",
+        key_fields=("cell",),
+        metric_path=("lines_per_sec",),
+        higher_is_better=True,
+        threshold=0.30,
+    ),
+    Trajectory(
+        name="BENCH_trace.json",
+        key_fields=("cell",),
+        metric_path=("tasks_per_sec",),
+        higher_is_better=True,
+        threshold=0.30,
     ),
 )
 

@@ -23,6 +23,8 @@ FLEET = traj("BENCH_fleet.json", metric=("tasks_per_sec",))
 FLEET_LAT = traj("BENCH_fleet.json", metric=("placement_p99_us",))
 MT = traj("BENCH_multitenant.json", metric=("tasks_per_sec",))
 MT_HI = traj("BENCH_multitenant.json", metric=("hi_p99_us",))
+TRACE_ING = traj("BENCH_trace.json", metric=("lines_per_sec",))
+TRACE_RPL = traj("BENCH_trace.json", metric=("tasks_per_sec",))
 
 
 def write_doc(path, mode, rows, mkdir=False):
@@ -431,6 +433,93 @@ def test_main_single_multitenant_file_runs_both_gates(tmp_path):
         tmp_path / "curr" / MT.name,
         "fast",
         [mt_row(hi_p99_us=90_000.0)],
+        mkdir=True,
+    )
+    assert bd.main([prev, curr]) == 1
+    # Directory mode walks TRAJECTORIES and reaches the same verdict.
+    assert bd.main([str(tmp_path / "prev"), str(tmp_path / "curr")]) == 1
+
+
+def trace_row(cell="replay_lane", tps=None, lps=None):
+    # Each BENCH_trace.json row carries exactly one gated metric: the
+    # ingest cell has lines_per_sec, the replay cells tasks_per_sec.
+    row = {"cell": cell}
+    if tps is not None:
+        row["tasks_per_sec"] = tps
+        row["n_tasks"] = 160
+    if lps is not None:
+        row["lines_per_sec"] = lps
+        row["n_lines"] = 20000
+    return row
+
+
+def test_trace_trajectories_recognized_by_basename(tmp_path):
+    assert bd.trajectories_for("artifacts/" + TRACE_ING.name) == [
+        TRACE_ING,
+        TRACE_RPL,
+    ]
+    assert TRACE_ING.higher_is_better and TRACE_ING.threshold == 0.30
+    assert TRACE_RPL.higher_is_better and TRACE_RPL.threshold == 0.30
+    p = write_doc(
+        tmp_path / TRACE_ING.name,
+        "fast",
+        [
+            trace_row(cell="ingest", lps=500_000.0),
+            trace_row(tps=9_000.0),
+            trace_row(cell="replay_fleet3", tps=4_000.0),
+        ],
+    )
+    # Each gate sees only its own cells; the other metric soft-skips.
+    _, ing = bd.load_rows(p, TRACE_ING)
+    assert ing == {("ingest",): 500_000.0}
+    _, rpl = bd.load_rows(p, TRACE_RPL)
+    assert rpl == {("replay_lane",): 9_000.0, ("replay_fleet3",): 4_000.0}
+
+
+def test_trace_ingest_and_replay_drops_regress_independently(tmp_path):
+    prev = write_doc(
+        tmp_path / "prev.json",
+        "fast",
+        [trace_row(cell="ingest", lps=500_000.0), trace_row(tps=9_000.0)],
+    )
+    # Ingest collapses, replay holds: only the lines_per_sec gate fires.
+    slow_parse = write_doc(
+        tmp_path / "slow_parse.json",
+        "fast",
+        [trace_row(cell="ingest", lps=100_000.0), trace_row(tps=9_000.0)],
+    )
+    assert bd.compare_files(prev, slow_parse, TRACE_ING) == 1
+    assert bd.compare_files(prev, slow_parse, TRACE_RPL) == 0
+    # Replay collapses, ingest holds: only tasks_per_sec fires.
+    slow_replay = write_doc(
+        tmp_path / "slow_replay.json",
+        "fast",
+        [trace_row(cell="ingest", lps=500_000.0), trace_row(tps=2_000.0)],
+    )
+    assert bd.compare_files(prev, slow_replay, TRACE_ING) == 0
+    assert bd.compare_files(prev, slow_replay, TRACE_RPL) == 1
+    # Faster on both axes is never a regression.
+    better = write_doc(
+        tmp_path / "better.json",
+        "fast",
+        [trace_row(cell="ingest", lps=900_000.0), trace_row(tps=20_000.0)],
+    )
+    assert bd.main([prev, better]) == 0
+
+
+def test_main_single_trace_file_runs_both_gates(tmp_path):
+    # Replay throughput holds but ingest collapses: the first trajectory
+    # over the same file pair must catch it in single-file mode.
+    prev = write_doc(
+        tmp_path / "prev" / TRACE_ING.name,
+        "fast",
+        [trace_row(cell="ingest", lps=500_000.0), trace_row(tps=9_000.0)],
+        mkdir=True,
+    )
+    curr = write_doc(
+        tmp_path / "curr" / TRACE_ING.name,
+        "fast",
+        [trace_row(cell="ingest", lps=50_000.0), trace_row(tps=9_000.0)],
         mkdir=True,
     )
     assert bd.main([prev, curr]) == 1
